@@ -1,0 +1,12 @@
+//! Bench: Fig. 4 — times the MobileNetV1 per-layer memory-access
+//! measurement (full cycle-model build: 28 layers × 4 kernel variants).
+
+use mpnn::bench::bench;
+use mpnn::exp::{fig4, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::default();
+    bench("fig4/mobilenet-mem-reduction", 2, || {
+        fig4::run(&opts).unwrap();
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: Fig. 6 — times a reduced DSE sweep (LeNet5, exhaustive pruned
+//! space, host accuracy path excluded: measures quantize+cycle+PJRT).
+
+use mpnn::bench::bench;
+use mpnn::exp::{fig6, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts { budget: 27, eval_n: 64, ..Default::default() };
+    bench("fig6/lenet5-sweep(27 cfgs, 64 imgs)", 2, || {
+        fig6::sweep_model(&opts, "lenet5").unwrap();
+    });
+}

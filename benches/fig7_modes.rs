@@ -1,0 +1,12 @@
+//! Bench: Fig. 7 — times the per-Mode ablation measurements (dense +
+//! conv layer under the 3 datapath configurations × 3 widths).
+
+use mpnn::bench::bench;
+use mpnn::exp::{fig7, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::default();
+    bench("fig7/mode-ablations(dense+conv)", 3, || {
+        fig7::run(&opts).unwrap();
+    });
+}

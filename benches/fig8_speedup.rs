@@ -1,0 +1,13 @@
+//! Bench: Fig. 8 — times sweep + threshold selection on the CIFAR CNN.
+
+use mpnn::bench::bench;
+use mpnn::exp::{fig6, fig8, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts { budget: 27, eval_n: 64, ..Default::default() };
+    bench("fig8/cifar-select(27 cfgs)", 2, || {
+        let sweep = fig6::sweep_model(&opts, "cifar_cnn").unwrap();
+        let sel = fig8::select(sweep);
+        assert!(sel.selections.iter().any(|s| s.is_some()));
+    });
+}

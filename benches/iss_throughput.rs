@@ -1,0 +1,33 @@
+//! Bench: raw ISS throughput (simulated instructions per host second) —
+//! the §Perf hot-path metric for the L3 simulator. Uses the CIFAR CNN's
+//! second conv layer as a representative kernel workload.
+
+use mpnn::bench::bench_val;
+use mpnn::dse::cycles::measure_layer;
+use mpnn::exp::ExpOpts;
+use mpnn::isa::MacMode;
+use mpnn::sim::MacUnitConfig;
+use std::time::Instant;
+
+fn main() {
+    let opts = ExpOpts::default();
+    let model = opts.load_model("cifar_cnn").unwrap();
+    let a = mpnn::models::analyze(&model.spec);
+    let conv = a.layers[1];
+
+    for (label, mode) in
+        [("baseline", None), ("mode1-w8", Some(MacMode::W8)), ("mode3-w2", Some(MacMode::W2))]
+    {
+        let t0 = Instant::now();
+        let (stats, cost) = bench_val(&format!("iss/{label}-conv-layer"), 3, || {
+            measure_layer(&conv, mode, MacUnitConfig::full(), 7)
+        });
+        let _ = t0;
+        let mips = cost.instret as f64 / stats.median().as_secs_f64() / 1e6;
+        println!(
+            "  -> {:.1}M instructions, {:.0} M simulated-instr/s (median)",
+            cost.instret as f64 / 1e6,
+            mips
+        );
+    }
+}

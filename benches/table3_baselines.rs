@@ -1,0 +1,12 @@
+//! Bench: Table 3 — times one baseline-ISS measurement pass per model
+//! and regenerates the Table-3 rows.
+
+use mpnn::bench::bench;
+use mpnn::exp::{table3, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::default();
+    bench("table3/baseline-cycles(all models)", 3, || {
+        table3::run(&opts).unwrap();
+    });
+}

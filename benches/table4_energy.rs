@@ -1,0 +1,30 @@
+//! Bench: Table 4 — times the energy-model evaluation over measured
+//! cycle counts (the platform model itself is trivially fast; the bench
+//! covers the full path including one ISS layer measurement).
+
+use mpnn::bench::bench;
+use mpnn::dse::cycles::measure_layer;
+use mpnn::energy::{ASIC_BASELINE, ASIC_MODIFIED, FPGA_BASELINE, FPGA_MODIFIED};
+use mpnn::exp::ExpOpts;
+use mpnn::sim::MacUnitConfig;
+
+fn main() {
+    let opts = ExpOpts::default();
+    let model = opts.load_model("lenet5").unwrap();
+    let a = mpnn::models::analyze(&model.spec);
+    bench("table4/lenet-layer+energy-model", 5, || {
+        let base = measure_layer(&a.layers[1], None, MacUnitConfig::full(), 1);
+        let fast = measure_layer(
+            &a.layers[1],
+            Some(mpnn::isa::MacMode::W4),
+            MacUnitConfig::full(),
+            1,
+        );
+        let rb = ASIC_BASELINE.evaluate(base.macs, base.cycles);
+        let rm = ASIC_MODIFIED.evaluate(fast.macs, fast.cycles);
+        assert!(rm.gops_per_w > rb.gops_per_w);
+        let fb = FPGA_BASELINE.evaluate(base.macs, base.cycles);
+        let fm = FPGA_MODIFIED.evaluate(fast.macs, fast.cycles);
+        assert!(fm.gops_per_w > fb.gops_per_w);
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench: Table 5 — regenerates the SOTA comparison table (literature
+//! constants + our computed row at a representative operating point).
+
+use mpnn::bench::bench;
+use mpnn::energy::sota::{competitors, ours};
+use mpnn::energy::ASIC_MODIFIED;
+
+fn main() {
+    bench("table5/sota-table", 10, || {
+        let r_lo = ASIC_MODIFIED.evaluate(2_800_000, 3_000_000);
+        let r_hi = ASIC_MODIFIED.evaluate(2_800_000, 2_000_000);
+        let mut t = competitors();
+        t.push(ours(r_lo.gops, r_hi.gops, r_lo.gops_per_w, r_hi.gops_per_w));
+        assert_eq!(t.len(), 7);
+    });
+}

@@ -1,0 +1,55 @@
+//! ISA playground: assemble a mixed-precision program with all three
+//! `nn_mac` instructions, disassemble it, execute it cycle-accurately
+//! and read the Ibex-style performance counters.
+//!
+//! Run with: `cargo run --release --example isa_playground`
+
+use mpnn::asm::Asm;
+use mpnn::isa::custom::{pack_acts, pack_weights};
+use mpnn::isa::{csr, disasm::disasm, reg, MacMode};
+use mpnn::sim::{Core, CoreConfig, ExitReason};
+
+fn main() {
+    let mut a = Asm::new();
+
+    // Accumulate the same dot product three ways: as 4 MACs of 8-bit
+    // weights, 8 MACs of 4-bit, 16 MACs of 2-bit.
+    a.li(reg::A0, 0);
+    // Activations 1..16 in four packed registers.
+    for (j, r) in [reg::A2, reg::A3, reg::A4, reg::A5].iter().enumerate() {
+        let base = 4 * j as i8;
+        a.li(*r, pack_acts([base + 1, base + 2, base + 3, base + 4]) as i32);
+    }
+    // Mode-1: 4 weights of 8-bit.
+    a.li(reg::T0, pack_weights(MacMode::W8, &[1, -1, 2, -2]) as i32);
+    a.nn_mac(MacMode::W8, reg::A0, reg::A2, reg::T0);
+    // Mode-2: 8 weights of 4-bit (register pair a2,a3).
+    a.li(reg::T0, pack_weights(MacMode::W4, &[1, 1, 1, 1, -1, -1, -1, -1]) as i32);
+    a.nn_mac(MacMode::W4, reg::A0, reg::A2, reg::T0);
+    // Mode-3: 16 weights of 2-bit (register quad a2..a5).
+    a.li(reg::T0, pack_weights(MacMode::W2, &[1; 16]) as i32);
+    a.nn_mac(MacMode::W2, reg::A0, reg::A2, reg::T0);
+    // Read the counters from CSRs like firmware would.
+    a.csrr(reg::S0, csr::MCYCLE);
+    a.csrr(reg::S1, csr::MINSTRET);
+    a.csrr(reg::S2, csr::MHPM_MACS);
+    a.halt();
+
+    let prog = a.assemble();
+    println!("--- disassembly ---");
+    for (i, ins) in prog.iter().enumerate() {
+        println!("{:4x}:  {}", 4 * i, disasm(*ins));
+    }
+
+    let mut core = Core::new(CoreConfig { mem_size: 4096, ..Default::default() }, prog, 0);
+    assert_eq!(core.run(10_000), ExitReason::Ecall);
+    println!("--- execution ---");
+    println!("accumulator a0 = {}", core.regs[reg::A0 as usize] as i32);
+    println!("mcycle   (s0) = {}", core.regs[reg::S0 as usize]);
+    println!("minstret (s1) = {}", core.regs[reg::S1 as usize]);
+    println!("MACs     (s2) = {}", core.regs[reg::S2 as usize]);
+    println!(
+        "28 MACs retired by 3 instructions — {:.1} MACs/cycle over the whole program",
+        core.perf.macs_per_cycle()
+    );
+}

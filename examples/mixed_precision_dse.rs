@@ -1,0 +1,44 @@
+//! Mixed-precision DSE on LeNet5: enumerate per-layer bit-width
+//! configurations, evaluate accuracy + cycles through the coordinator,
+//! print the Pareto front (a small-scale Fig. 6).
+//!
+//! Run with: `cargo run --release --example mixed_precision_dse`
+
+use mpnn::dse::pareto::pareto_front;
+use mpnn::dse::{default_pinned, enumerate};
+use mpnn::exp::ExpOpts;
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOpts { budget: 81, eval_n: 64, ..Default::default() };
+    let coordinator = opts.coordinator("lenet5")?;
+    let n = mpnn::models::analyze(&coordinator.model.spec).layers.len();
+    let configs = enumerate(n, &default_pinned(), opts.budget, 1);
+    println!(
+        "sweeping {} configurations of lenet5 ({} layers, first pinned to 8-bit)",
+        configs.len(),
+        n
+    );
+    let points = coordinator.run_sweep(&configs, opts.eval_n)?;
+    let front = pareto_front(&points, |p| p.cycles);
+    println!("float accuracy: {:.1}%", coordinator.model.float_acc * 100.0);
+    println!("{:>8} {:>10} {:>12} {:>8}  bits", "acc(%)", "cycles", "mac-instrs", "speedup");
+    let base = coordinator.cycle_model.baseline_total().cycles;
+    for &i in &front {
+        let p = &points[i];
+        let bits: Vec<String> = p.config.iter().map(|b| b.to_string()).collect();
+        println!(
+            "{:>8.1} {:>10} {:>12} {:>7.1}x  [{}]",
+            p.accuracy * 100.0,
+            p.cycles,
+            p.mac_instructions,
+            base as f64 / p.cycles as f64,
+            bits.join(",")
+        );
+    }
+    println!(
+        "evaluations: {} (cache hits {})",
+        coordinator.metrics.acc_evals.load(std::sync::atomic::Ordering::Relaxed),
+        coordinator.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}

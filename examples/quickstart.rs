@@ -1,0 +1,70 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. Load the AOT-compiled Pallas packed-MAC kernel (L1, lowered by
+//!    `python/compile/aot.py`) and execute it via PJRT from Rust.
+//! 2. Run the *same* computation as an `nn_mac` kernel program on the
+//!    cycle-accurate RISC-V core (L3) and compare bit-for-bit.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (needs `make artifacts` for step 1; step 2 always works).
+
+use mpnn::isa::MacMode;
+use mpnn::kernels::dense::DenseSpec;
+use mpnn::kernels::run::run_dense;
+use mpnn::nn::quant::Requant;
+use mpnn::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    // A small quantized dense layer: 256 inputs, 32 outputs, 4-bit weights.
+    let (i, o) = (256usize, 32usize);
+    let mode = MacMode::W4;
+    let acts: Vec<i8> = (0..i).map(|_| rng.i8()).collect();
+    let w: Vec<i8> = (0..o * i).map(|_| rng.int_bits(4)).collect();
+    let bias: Vec<i32> = (0..o).map(|_| rng.range_i32(-500, 500)).collect();
+    let rq = Requant::from_real_scale(0.002);
+
+    // --- L3: the RISC-V ISS running the nn_mac_4b kernel -----------------
+    let spec = DenseSpec { in_dim: i, out_dim: o, rq, relu: true, out_i32: false };
+    let (iss_out, _, perf) = run_dense(spec, Some(mode), &acts, &w, &bias);
+    let (base_out, _, base_perf) = run_dense(spec, None, &acts, &w, &bias);
+    assert_eq!(iss_out, base_out, "extended and baseline kernels agree");
+    println!("ISS: {} MACs in {} cycles (baseline {} cycles → {:.1}x speedup)",
+        perf.macs, perf.cycles, base_perf.cycles,
+        base_perf.cycles as f64 / perf.cycles as f64);
+
+    // --- L1/L2: the Pallas packed-MAC kernel via PJRT ---------------------
+    let root = mpnn::runtime::default_artifacts_dir();
+    if !root.join("kernel_packed_gemm_4b.hlo.txt").exists() {
+        println!("(skipping PJRT half — run `make artifacts` first)");
+        return Ok(());
+    }
+    let mut session = mpnn::runtime::Session::open(&root)?;
+    // The kernel artifact is fixed at M=64×I=256×O=32; replicate the
+    // activations across the batch and check row 0.
+    let m = 64usize;
+    let mut batch = Vec::with_capacity(m * i);
+    for _ in 0..m {
+        batch.extend_from_slice(&acts);
+    }
+    let mut packed = Vec::new();
+    for row in w.chunks(i) {
+        packed.extend(mpnn::isa::custom::pack_weight_stream(mode, row));
+    }
+    let exe = session.load("kernel_packed_gemm_4b")?;
+    let outs = mpnn::runtime::execute(
+        exe,
+        &[
+            mpnn::runtime::lit_i8(&[m, i], &batch)?,
+            mpnn::runtime::lit_u32(&[o, packed.len() / o], &packed)?,
+            mpnn::runtime::lit_i32(&[o], &bias)?,
+            mpnn::runtime::lit_i32(&[], &[rq.m])?,
+            mpnn::runtime::lit_i32(&[], &[rq.shift])?,
+        ],
+    )?;
+    let pjrt_out = outs[0].to_vec::<i8>()?;
+    assert_eq!(&pjrt_out[..o], &iss_out[..], "Pallas kernel == RISC-V kernel, bit-exact");
+    println!("PJRT: Pallas packed-MAC kernel output matches the ISS bit-for-bit ({o} outputs)");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts:
+
+* ``<model>_qfwd_b<B>.hlo.txt`` — each Table-3 model's integer forward
+  (weights/bias/requant params as runtime arguments: one HLO per model
+  serves every DSE configuration),
+* ``kernel_packed_gemm_{8,4,2}b.hlo.txt`` — the standalone L1 packed-MAC
+  kernels at a reference shape,
+* ``kernel_soft_simd_2b.hlo.txt`` — the Eq.(2) Mode-3 kernel,
+* ``manifest.json`` — arg shapes/dtypes for the Rust runtime,
+* ``xcheck.json`` — cross-language bit-exactness vectors (requantize,
+  packing) consumed by the Rust integration tests.
+
+Python runs ONCE at ``make artifacts``; never on the request path.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantize as Q
+from .kernels.packed_mac import packed_gemm, soft_simd_gemm_2b, vmem_bytes_estimate
+
+BATCH = 64
+
+# Reference shapes for the standalone kernel artifacts.
+KERNEL_M, KERNEL_I, KERNEL_O = 64, 256, 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def lower_model(spec, batch: int):
+    qf = M.build_qforward(spec)
+    args = M.qforward_arg_specs(spec, batch)
+    lowered = jax.jit(qf).lower(*args)
+    return to_hlo_text(lowered), [_spec_json(a) for a in args]
+
+
+def lower_kernels():
+    """Standalone packed-GEMM kernels (one per mode) + the soft-SIMD one."""
+    out = {}
+    for bits in (8, 4, 2):
+        lanes = 32 // bits
+        args = [
+            jax.ShapeDtypeStruct((KERNEL_M, KERNEL_I), jnp.int8),
+            jax.ShapeDtypeStruct((KERNEL_O, KERNEL_I // lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((KERNEL_O,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ]
+        fn = lambda a, w, b, m, s, bits=bits: (
+            packed_gemm(a, w, b, m, s, bits=bits, relu=True),
+        )
+        lowered = jax.jit(fn).lower(*args)
+        out[f"kernel_packed_gemm_{bits}b"] = (to_hlo_text(lowered), [_spec_json(a) for a in args])
+    args = [
+        jax.ShapeDtypeStruct((KERNEL_M, KERNEL_I), jnp.int8),
+        jax.ShapeDtypeStruct((KERNEL_O, KERNEL_I), jnp.int8),
+        jax.ShapeDtypeStruct((KERNEL_O,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    fn = lambda a, w, b, m, s: (soft_simd_gemm_2b(a, w, b, m, s, relu=True),)
+    lowered = jax.jit(fn).lower(*args)
+    out["kernel_soft_simd_2b"] = (to_hlo_text(lowered), [_spec_json(a) for a in args])
+    return out
+
+
+def xcheck_vectors(seed=0xC0FFEE) -> dict:
+    """Bit-exactness vectors the Rust tests replay against nn::quant."""
+    rng = np.random.default_rng(seed)
+    req = []
+    for _ in range(64):
+        scale = float(2.0 ** -(rng.random() * 14 + 0.01))
+        rq = Q.Requant.from_real_scale(scale)
+        acc = int(rng.integers(-(1 << 28), 1 << 28))
+        relu = bool(rng.integers(0, 2))
+        out = int(Q.requantize(np.array([acc]), rq, relu)[0])
+        req.append({"acc": acc, "m": rq.m, "shift": rq.shift, "relu": relu, "out": out})
+    packs = []
+    for bits in (8, 4, 2):
+        lanes = 32 // bits
+        lo, hi = Q.qrange(bits)
+        w = rng.integers(lo, hi + 1, lanes * 3).astype(np.int8)
+        words = Q.pack_weight_stream(w, bits)
+        packs.append({"bits": bits, "weights": w.tolist(), "words": [int(x) for x in words]})
+    quant = []
+    for bits in (8, 4, 2):
+        vals = (rng.random(32).astype(np.float32) * 2 - 1) * 0.7
+        q, s = Q.quantize_tensor(vals, bits)
+        quant.append({
+            "bits": bits,
+            "values": [float(v) for v in vals],
+            "q": q.tolist(),
+            "scale": float(s),
+        })
+    return {"requantize": req, "pack": packs, "quantize": quant}
+
+
+def main(out_dir: Path, only=None):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"batch": BATCH, "models": {}, "kernels": {}, "vmem": {}}
+    for name, spec in M.MODELS.items():
+        if only and name not in only:
+            continue
+        path = out_dir / f"{name}_qfwd_b{BATCH}.hlo.txt"
+        print(f"[aot] lowering {name} (batch {BATCH}) ...")
+        hlo, args = lower_model(spec, BATCH)
+        path.write_text(hlo)
+        layers, n_sites, residuals = M.analyze(spec)
+        manifest["models"][name] = {
+            "file": path.name,
+            "args": args,
+            "n_layers": len(layers),
+            "n_sites": n_sites,
+            "n_residuals": len(residuals),
+            "outputs": ["logits_i32", "preds_i32"],
+        }
+        print(f"[aot]   {path.name}: {len(hlo) / 1e6:.1f} MB, {len(args)} args")
+    if not only:
+        for kname, (hlo, args) in lower_kernels().items():
+            path = out_dir / f"{kname}.hlo.txt"
+            path.write_text(hlo)
+            manifest["kernels"][kname] = {"file": path.name, "args": args}
+            print(f"[aot]   {path.name}: {len(hlo) / 1e3:.0f} KB")
+        for bits in (8, 4, 2):
+            manifest["vmem"][f"{bits}b"] = vmem_bytes_estimate(bits, KERNEL_I)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    (out_dir / "xcheck.json").write_text(json.dumps(xcheck_vectors(), indent=1))
+    print(f"[aot] wrote manifest + xcheck to {out_dir}")
+
+
+if __name__ == "__main__":
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    out = Path(args[0]) if args else Path("../artifacts")
+    main(out, only=args[1:] or None)

@@ -1,0 +1,201 @@
+"""Layer-1 Pallas kernels: the paper's packed mixed-precision MAC.
+
+Two kernels reproduce the hardware contribution at kernel level:
+
+* :func:`packed_gemm` — the general packed GEMM. Weights arrive packed
+  4/8/16-per-uint32 exactly as the RISC-V ``nn_mac_<x>b`` instructions
+  consume them; the kernel unpacks in VMEM (shift/mask vector ops),
+  runs the int32 MAC reduction and fuses the Jacob-style requantization.
+  The HBM→VMEM weight stream is 4/8/16× smaller than an unpacked int8
+  GEMM — the Fig.-4 memory-traffic reduction expressed as bytes/tile.
+
+* :func:`soft_simd_gemm_2b` — Mode-3's guard-bit soft SIMD (paper
+  Eq. 2) demonstrated literally: each multiplier-equivalent lane performs
+  ONE multiply ``A·(W_hi·2¹¹ + W_lo)`` whose fields are extracted into
+  two products for two output channels sharing the activation, exactly
+  like the 17-bit multiplier in the modified Ibex ALU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the 32-bit packed
+register becomes an int32 VMEM lane; the four 17-bit multipliers become
+the VPU; `BlockSpec` plays the role of the paper's load/store
+minimisation schedule. Kernels run with ``interpret=True`` — real-TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SOFT_SIMD_SHIFT
+
+# Tile sizes: one weight tile must stay comfortably inside a ~16 MiB VMEM
+# budget together with the activation tile (see DESIGN.md §Perf).
+TILE_M = 128
+TILE_O = 32
+
+
+def _unpack_block(words, bits):
+    """Unpack a [TO, W] uint32 block to [TO, W·lanes] int32 (VPU ops)."""
+    lanes = 32 // bits
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = (words[..., None] >> shifts).astype(jnp.int32) & mask
+    signed = ((fields + half) & mask) - half
+    return signed.reshape(words.shape[0], words.shape[1] * lanes)
+
+
+def _requant_block(acc, m, shift, relu):
+    """Fused requantization on an int32 block (bit-exact vs ref;
+    negative shift = saturating left shift)."""
+    p = acc.astype(jnp.int64) * m.astype(jnp.int64)
+    r = ((p + (1 << 30)) >> 31).astype(jnp.int64)
+    n = shift.astype(jnp.int64)
+    pos = jnp.maximum(n, 0)
+    nudge = jnp.where(n > 0, jnp.int64(1) << jnp.maximum(n - 1, 0), 0)
+    right = (r + nudge) >> pos
+    left = jnp.clip(r << jnp.maximum(-n, 0), -(2**31), 2**31 - 1)
+    r = jnp.where(n >= 0, right, left).astype(jnp.int32)
+    lo = 0 if relu else -128
+    return jnp.clip(r, lo, 127).astype(jnp.int8)
+
+
+def _gemm_kernel(acts_ref, w_ref, bias_ref, m_ref, shift_ref, out_ref, *, bits, relu, out_i32):
+    acts = acts_ref[...].astype(jnp.int32)  # [TM, I]
+    w = _unpack_block(w_ref[...], bits)  # [TO, I]
+    acc = jax.lax.dot_general(
+        acts,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) + bias_ref[...][None, :].astype(jnp.int32)
+    if out_i32:
+        out_ref[...] = acc
+    else:
+        out_ref[...] = _requant_block(acc, m_ref[0], shift_ref[0], relu)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "relu", "out_i32"))
+def packed_gemm(acts, w_packed, bias, m, shift, *, bits, relu=False, out_i32=False):
+    """Packed-weight GEMM via the Pallas kernel.
+
+    acts: [M, I] int8 (I must be a lane multiple — pad with zeros, the
+    packed weights are zero-padded to match, exactly like the RV32
+    kernels' slack reads). w_packed: [O, I·bits/32] uint32. bias: [O]
+    int32. m/shift: scalar int32 requant parameters.
+    Returns [M, O] int8 (or int32 when ``out_i32``).
+    """
+    mdim, idim = acts.shape
+    odim, wpg = w_packed.shape
+    lanes = 32 // bits
+    assert idim == wpg * lanes, f"acts I={idim} vs packed {wpg}·{lanes}"
+    acts_p = _pad_to(acts, 0, TILE_M)
+    w_p = _pad_to(w_packed, 0, TILE_O)
+    bias_p = _pad_to(bias, 0, TILE_O)
+    mp, op = acts_p.shape[0], w_p.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, bits=bits, relu=relu, out_i32=out_i32),
+        grid=(mp // TILE_M, op // TILE_O),
+        in_specs=[
+            pl.BlockSpec((TILE_M, idim), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_O, wpg), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_O,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_O), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, op), jnp.int32 if out_i32 else jnp.int8),
+        interpret=True,
+    )(acts_p, w_p, bias_p, m.reshape(1), shift.reshape(1))
+    return out[:mdim, :odim]
+
+
+def _soft_simd_kernel(acts_ref, weven_ref, wodd_ref, bias_ref, m_ref, shift_ref, out_ref, *, relu):
+    """Mode-3 soft-SIMD GEMM tile: one composed multiply yields products
+    for TWO output channels (paper Eq. 2 / Fig. 3c)."""
+    acts = acts_ref[...].astype(jnp.int32)  # [TM, I]
+    w_even = weven_ref[...].astype(jnp.int32)  # [TOP, I] int2 grid
+    w_odd = wodd_ref[...].astype(jnp.int32)
+    # Compose: the single 17-bit-multiplier operand per (channel-pair, i).
+    composed = (w_odd << SOFT_SIMD_SHIFT) + w_even  # [TOP, I]
+    # ONE multiplication per (m, pair, i) — the hardware's single MUL.
+    p = acts[:, None, :] * composed[None, :, :]  # [TM, TOP, I]
+    lo = (p << (32 - SOFT_SIMD_SHIFT)) >> (32 - SOFT_SIMD_SHIFT)
+    hi = (p - lo) >> SOFT_SIMD_SHIFT
+    acc_even = lo.sum(axis=2, dtype=jnp.int32)  # [TM, TOP]
+    acc_odd = hi.sum(axis=2, dtype=jnp.int32)
+    acc = jnp.stack([acc_even, acc_odd], axis=2).reshape(acts.shape[0], -1)
+    acc = acc + bias_ref[...][None, :].astype(jnp.int32)
+    out_ref[...] = _requant_block(acc, m_ref[0], shift_ref[0], relu)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def soft_simd_gemm_2b(acts, w2, bias, m, shift, *, relu=False):
+    """Mode-3 GEMM where every multiply covers two output channels via
+    the Eq. (2) guard-bit composition. ``w2``: [O, I] int8 values on the
+    int2 grid, O even. Bit-exact vs :func:`ref.packed_gemm_ref` at
+    ``bits=2`` (same math, different factorisation — that is the point).
+    """
+    mdim, idim = acts.shape
+    odim = w2.shape[0]
+    assert odim % 2 == 0, "pad O to even"
+    tile_pairs = TILE_O // 2
+    w_even = w2[0::2]  # [O/2, I]
+    w_odd = w2[1::2]
+    acts_p = _pad_to(acts, 0, TILE_M)
+    w_even = _pad_to(w_even, 0, tile_pairs)
+    w_odd = _pad_to(w_odd, 0, tile_pairs)
+    bias_p = _pad_to(bias, 0, TILE_O)
+    mp, pairs_p = acts_p.shape[0], w_even.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_soft_simd_kernel, relu=relu),
+        grid=(mp // TILE_M, pairs_p // tile_pairs),
+        in_specs=[
+            pl.BlockSpec((TILE_M, idim), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_pairs, idim), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_pairs, idim), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_O,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_O), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pairs_p * 2), jnp.int8),
+        interpret=True,
+    )(acts_p, w_even, w_odd, bias_p, m.reshape(1), shift.reshape(1))
+    return out[:mdim, :odim]
+
+
+def vmem_bytes_estimate(bits: int, idim: int) -> dict:
+    """Static VMEM footprint of one grid step (DESIGN.md §Perf).
+
+    Two compression views: vs an int8 weight stream (8/bits = 1/2/4×,
+    the HBM-bytes saving) and vs the baseline core's one-load-per-weight
+    scheme (32/bits = 4/8/16×, the paper's memory-access saving).
+    """
+    act_tile = TILE_M * idim
+    w_tile_packed = TILE_O * (idim * bits // 32) * 4  # = TO·I·bits/8
+    w_tile_int8 = TILE_O * idim
+    w_loads_baseline = TILE_O * idim * 4  # lb per weight -> one 32-bit access each
+    out_tile = TILE_M * TILE_O * 4
+    return {
+        "act_tile_bytes": act_tile,
+        "w_tile_packed_bytes": w_tile_packed,
+        "w_tile_int8_bytes": w_tile_int8,
+        "weight_compression_vs_int8": w_tile_int8 / w_tile_packed,
+        "weight_compression_vs_wordloads": w_loads_baseline / w_tile_packed,
+        "out_tile_bytes": out_tile,
+        "total_bytes": act_tile + w_tile_packed + w_tile_int8 + out_tile,
+    }

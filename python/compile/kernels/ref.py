@@ -1,0 +1,104 @@
+"""Pure-jnp correctness oracle for the packed-MAC Pallas kernels.
+
+Everything here is the *specification*: the Pallas kernels
+(``packed_mac.py``) must match these functions bit-exactly on every
+shape/width (enforced by hypothesis sweeps in ``tests/test_kernel.py``),
+and these functions in turn mirror the Rust host reference
+(``rust/src/nn``) via exported cross-check vectors.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Q31 rounding nudge of the SRDHM (shared constant).
+SRDHM_NUDGE = 1 << 30
+
+# Guard-bit field offset of the paper's Eq. (2) soft-SIMD composition.
+SOFT_SIMD_SHIFT = 11
+
+
+def unpack_weights_jnp(words: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Unpack little-endian-lane packed weights: ``[..., W] uint32 →
+    [..., W·(32/bits)] int32`` (sign-extended)."""
+    lanes = 32 // bits
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = (words[..., None] >> shifts).astype(jnp.int32) & mask
+    signed = ((fields + half) & mask) - half
+    return signed.reshape(*words.shape[:-1], words.shape[-1] * lanes)
+
+
+def pack_weights_jnp(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack grid weights ``[..., N] int → [..., N/(32/bits)] uint32``
+    (N must be a lane multiple; zero-pad first)."""
+    lanes = 32 // bits
+    mask = (1 << bits) - 1
+    assert w.shape[-1] % lanes == 0, "pad to a lane multiple before packing"
+    lanes_v = w.reshape(*w.shape[:-1], -1, lanes).astype(jnp.uint32) & jnp.uint32(mask)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * jnp.uint32(bits)
+    return (lanes_v << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def srdhm_jnp(a: jnp.ndarray, m) -> jnp.ndarray:
+    """Saturating rounding doubling high multiply (int32 × int32) —
+    bit-exact twin of ``nn::quant::srdhm``."""
+    p = a.astype(jnp.int64) * jnp.asarray(m, jnp.int64)
+    return ((p + SRDHM_NUDGE) >> 31).astype(jnp.int32)
+
+
+def rounding_rshift_jnp(x: jnp.ndarray, n) -> jnp.ndarray:
+    """Rounding arithmetic right shift with a traced shift amount;
+    negative = saturating left shift (Rust twin)."""
+    n = jnp.asarray(n, jnp.int64)
+    pos = jnp.maximum(n, 0)
+    nudge = jnp.where(n > 0, jnp.int64(1) << jnp.maximum(n - 1, 0), 0)
+    right = (x.astype(jnp.int64) + nudge) >> pos
+    left = jnp.clip(
+        x.astype(jnp.int64) << jnp.maximum(-n, 0), -(2**31), 2**31 - 1
+    )
+    return jnp.where(n >= 0, right, left).astype(jnp.int32)
+
+
+def requantize_jnp(acc: jnp.ndarray, m, shift, relu: bool) -> jnp.ndarray:
+    """int32 accumulators → int8 (optional fused ReLU)."""
+    r = rounding_rshift_jnp(srdhm_jnp(acc, m), shift)
+    lo = 0 if relu else -128
+    return jnp.clip(r, lo, 127).astype(jnp.int8)
+
+
+def packed_gemm_ref(
+    acts: jnp.ndarray,  # [M, I] int8 (I a lane multiple)
+    w_packed: jnp.ndarray,  # [O, I/lanes] uint32
+    bias: jnp.ndarray,  # [O] int32
+    bits: int,
+    m,  # scalar int32
+    shift,  # scalar int32
+    relu: bool,
+    out_i32: bool,
+):
+    """Reference packed GEMM: unpack → int32 dot → bias → requantize.
+
+    The oracle for the Pallas kernel and (transitively) for the RV32
+    ``nn_mac`` kernels: ``acts @ unpack(w).T + bias``.
+    """
+    w = unpack_weights_jnp(w_packed, bits)  # [O, I]
+    acc = acts.astype(jnp.int32) @ w.T.astype(jnp.int32) + bias[None, :].astype(jnp.int32)
+    if out_i32:
+        return acc
+    return requantize_jnp(acc, m, shift, relu)
+
+
+def soft_simd_compose_ref(w_even: jnp.ndarray, w_odd: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (2) weight composition: ``W_odd·2¹¹ + W_even`` (int2 grids)."""
+    return (w_odd.astype(jnp.int32) << SOFT_SIMD_SHIFT) + w_even.astype(jnp.int32)
+
+
+def soft_simd_dual_ref(a: jnp.ndarray, composed: jnp.ndarray):
+    """Field extraction of the Eq. (2) dual product: recover
+    ``(a·w_even, a·w_odd)`` from the single composed multiply."""
+    p = a.astype(jnp.int32) * composed
+    lo = (p << (32 - SOFT_SIMD_SHIFT)) >> (32 - SOFT_SIMD_SHIFT)
+    hi = (p - lo) >> SOFT_SIMD_SHIFT
+    return lo, hi

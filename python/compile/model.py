@@ -1,0 +1,444 @@
+"""Layer-2 JAX models: the Table-3 zoo in float (training) and integer
+(inference-artifact) form.
+
+The model specs mirror ``rust/src/models/zoo.rs`` structurally (node
+lists, layer parameters, site walk) — the Rust artifact loader validates
+the exported spec against its own zoo, so any drift fails loudly.
+
+The integer forward (``build_qforward``) is the function AOT-lowered to
+HLO text: all conv and dense MACs flow through the L1 Pallas packed-MAC
+kernel (conv via im2col), depthwise uses patch-einsum with identical
+integer arithmetic, and requantization follows the shared bit-exact
+specification. Per-layer weights/biases/requant parameters are *traced
+arguments*, so one HLO per model serves every mixed-precision DSE
+configuration (bit-width only changes the weight values, which always
+ride in int8 — a 2-bit-grid weight is still an int8 value).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.packed_mac import packed_gemm
+from .kernels.ref import pack_weights_jnp, requantize_jnp, rounding_rshift_jnp, srdhm_jnp
+
+# ------------------------------------------------------------------ specs ---
+
+
+def conv(cout, k, stride, pad, relu):
+    return {"kind": "conv", "cout": cout, "k": k, "stride": stride, "pad": pad, "relu": relu}
+
+
+def dw(k, stride, pad, relu):
+    return {"kind": "dw", "k": k, "stride": stride, "pad": pad, "relu": relu}
+
+
+def dense(out, relu):
+    return {"kind": "dense", "out": out, "relu": relu}
+
+
+MAXPOOL = {"kind": "maxpool2"}
+AVGPOOL = {"kind": "avgpool"}
+
+
+def layer_node(spec):
+    return ("layer", spec)
+
+
+def residual(*specs):
+    return ("residual", list(specs))
+
+
+def _inverted_residual(nodes, cin, cout, t, s):
+    seq = [conv(cin * t, 1, 1, 0, True), dw(3, s, 1, True), conv(cout, 1, 1, 0, False)]
+    if s == 1 and cin == cout:
+        nodes.append(residual(*seq))
+    else:
+        nodes.extend(layer_node(l) for l in seq)
+
+
+def lenet5():
+    return {
+        "name": "lenet5",
+        "input": (28, 28, 1),
+        "classes": 10,
+        "nodes": [
+            layer_node(conv(6, 5, 1, 0, True)),
+            layer_node(MAXPOOL),
+            layer_node(conv(16, 5, 1, 0, True)),
+            layer_node(MAXPOOL),
+            layer_node(dense(120, True)),
+            layer_node(dense(84, True)),
+            layer_node(dense(10, False)),
+        ],
+    }
+
+
+def cifar_cnn():
+    return {
+        "name": "cifar_cnn",
+        "input": (32, 32, 3),
+        "classes": 10,
+        "nodes": [
+            layer_node(conv(16, 3, 1, 1, True)),
+            layer_node(MAXPOOL),
+            layer_node(conv(32, 3, 1, 1, True)),
+            layer_node(MAXPOOL),
+            layer_node(conv(64, 3, 1, 1, True)),
+            layer_node(MAXPOOL),
+            layer_node(dense(10, False)),
+        ],
+    }
+
+
+def mcunet_vww():
+    nodes = [layer_node(conv(8, 3, 2, 1, True))]
+    blocks = [
+        (8, 16, 2, 2), (16, 16, 2, 1), (16, 16, 2, 1),
+        (16, 24, 2, 2), (24, 24, 2, 1), (24, 24, 2, 1),
+        (24, 32, 2, 2), (32, 32, 2, 1), (32, 32, 2, 1), (32, 32, 2, 1),
+        (32, 48, 2, 2), (48, 48, 2, 1), (48, 48, 2, 1),
+        (48, 64, 2, 1), (64, 64, 2, 1),
+    ]
+    for cin, cout, t, s in blocks:
+        _inverted_residual(nodes, cin, cout, t, s)
+    nodes += [layer_node(AVGPOOL), layer_node(dense(2, False))]
+    return {"name": "mcunet_vww", "input": (64, 64, 3), "classes": 2, "nodes": nodes}
+
+
+def mobilenet_v1():
+    nodes = [layer_node(conv(8, 3, 1, 1, True))]
+    pairs = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1), (128, 2),
+             (128, 1), (128, 1), (128, 1), (128, 1), (128, 1), (256, 2), (256, 1)]
+    for cout, s in pairs:
+        nodes.append(layer_node(dw(3, s, 1, True)))
+        nodes.append(layer_node(conv(cout, 1, 1, 0, True)))
+    nodes += [layer_node(AVGPOOL), layer_node(dense(100, False))]
+    return {"name": "mobilenet_v1", "input": (32, 32, 3), "classes": 100, "nodes": nodes}
+
+
+MODELS = {m["name"]: m for m in (lenet5(), cifar_cnn(), mcunet_vww(), mobilenet_v1())}
+
+# --------------------------------------------------------------- analysis ---
+
+
+@dataclasses.dataclass
+class QInfo:
+    """Static info for one quantizable layer (Rust ``QLayerInfo`` twin)."""
+
+    kind: str
+    in_shape: tuple
+    out_shape: tuple
+    k: int
+    stride: int
+    pad: int
+    relu: bool
+    w_shape: tuple  # canonical layout: conv [O,K,K,Ci], dw [C,K,K], dense [O,I]
+    b_len: int
+    site_in: int
+    site_out: int
+    is_last: bool
+    macs: int
+
+
+def _out_shape(l, s):
+    if l["kind"] == "conv":
+        ho = (s[0] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+        wo = (s[1] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+        return (ho, wo, l["cout"])
+    if l["kind"] == "dw":
+        ho = (s[0] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+        wo = (s[1] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+        return (ho, wo, s[2])
+    if l["kind"] == "dense":
+        return (1, 1, l["out"])
+    if l["kind"] == "maxpool2":
+        return (s[0] // 2, s[1] // 2, s[2])
+    if l["kind"] == "avgpool":
+        return (1, 1, s[2])
+    raise ValueError(l)
+
+
+def _qinfo(l, s, site_in, site_out):
+    out = _out_shape(l, s)
+    if l["kind"] == "conv":
+        return QInfo("conv", s, out, l["k"], l["stride"], l["pad"], l["relu"],
+                     (l["cout"], l["k"], l["k"], s[2]), l["cout"], site_in, site_out, False,
+                     out[0] * out[1] * l["cout"] * l["k"] * l["k"] * s[2])
+    if l["kind"] == "dw":
+        return QInfo("dw", s, out, l["k"], l["stride"], l["pad"], l["relu"],
+                     (s[2], l["k"], l["k"]), s[2], site_in, site_out, False,
+                     out[0] * out[1] * s[2] * l["k"] * l["k"])
+    if l["kind"] == "dense":
+        i = s[0] * s[1] * s[2]
+        return QInfo("dense", (1, 1, i), out, 1, 1, 0, l["relu"],
+                     (l["out"], i), l["out"], site_in, site_out, False, i * l["out"])
+    return None
+
+
+def analyze(spec):
+    """Canonical site/layer walk — must agree with Rust ``models::analyze``."""
+    layers, residuals = [], []
+    shape = spec["input"]
+    site, n_sites = 0, 1
+    for node_kind, payload in spec["nodes"]:
+        if node_kind == "layer":
+            info = _qinfo(payload, shape, site, n_sites)
+            if info is not None:
+                site = n_sites
+                n_sites += 1
+                shape = info.out_shape
+                layers.append(info)
+            else:
+                shape = _out_shape(payload, shape)
+        else:  # residual
+            skip_site, in_shape = site, shape
+            bshape, bsite = shape, site
+            for l in payload:
+                info = _qinfo(l, bshape, bsite, n_sites)
+                assert info is not None
+                bsite = n_sites
+                n_sites += 1
+                bshape = info.out_shape
+                layers.append(info)
+            assert bshape == in_shape, "residual branch must preserve shape"
+            residuals.append((skip_site, bsite, n_sites))
+            site = n_sites
+            n_sites += 1
+    if layers:
+        layers[-1].is_last = True
+    return layers, n_sites, residuals
+
+# ------------------------------------------------------------ float model ---
+
+
+def init_params(spec, rng: np.random.Generator):
+    """He-init float parameters in the canonical layout."""
+    layers, _, _ = analyze(spec)
+    params = []
+    for info in layers:
+        fan_in = {"conv": info.k * info.k * info.in_shape[2],
+                  "dw": info.k * info.k,
+                  "dense": info.in_shape[2]}[info.kind]
+        std = np.sqrt(2.0 / fan_in)
+        params.append({
+            "w": jnp.asarray(rng.normal(0, std, info.w_shape).astype(np.float32)),
+            "b": jnp.asarray((rng.normal(0, 0.01, info.b_len)).astype(np.float32)),
+        })
+    return params
+
+
+def _float_layer(l, p, x):
+    if l["kind"] == "conv":
+        w = jnp.transpose(p["w"], (1, 2, 3, 0))  # [O,K,K,Ci] -> HWIO
+        y = jax.lax.conv_general_dilated(
+            x, w, (l["stride"], l["stride"]),
+            [(l["pad"], l["pad"])] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = y + p["b"][None, None, None, :]
+        return jax.nn.relu(y) if l["relu"] else y
+    if l["kind"] == "dw":
+        c = x.shape[-1]
+        w = jnp.transpose(p["w"], (1, 2, 0))[:, :, None, :]  # [C,K,K] -> [K,K,1,C]
+        y = jax.lax.conv_general_dilated(
+            x, w, (l["stride"], l["stride"]),
+            [(l["pad"], l["pad"])] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+        y = y + p["b"][None, None, None, :]
+        return jax.nn.relu(y) if l["relu"] else y
+    if l["kind"] == "dense":
+        y = x.reshape(x.shape[0], -1) @ p["w"].T + p["b"][None, :]
+        return jax.nn.relu(y) if l["relu"] else y
+    if l["kind"] == "maxpool2":
+        b, h, w_, c = x.shape
+        return x.reshape(b, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
+    if l["kind"] == "avgpool":
+        return x.mean(axis=(1, 2), keepdims=True)
+    raise ValueError(l)
+
+
+def float_forward(spec, params, x, record=None):
+    """Differentiable float forward. With ``record`` (a list), appends the
+    per-site abs-max — the calibration hook (site order == Rust walk)."""
+    def rec(t):
+        if record is not None:
+            record.append(float(jnp.abs(t).max()))
+    rec(x)
+    li = 0
+    for node_kind, payload in spec["nodes"]:
+        if node_kind == "layer":
+            is_q = payload["kind"] in ("conv", "dw", "dense")
+            if is_q:
+                x = _float_layer(payload, params[li], x)
+                li += 1
+                rec(x)
+            else:
+                x = _float_layer(payload, None, x)
+        else:
+            skip = x
+            b = x
+            for l in payload:
+                b = _float_layer(l, params[li], b)
+                li += 1
+                rec(b)
+            x = skip + b
+            rec(x)
+    return x.reshape(x.shape[0], -1)
+
+
+def float_forward_traced(spec, params, x):
+    """Record-free forward for jit/grad."""
+    return float_forward(spec, params, x, record=None)
+
+# ---------------------------------------------------------- integer model ---
+
+
+def _im2col(x, k, stride, pad):
+    """[B,H,W,C] int8 → patches [B, Ho·Wo, K·K·C] with (ky,kx,c) feature
+    order — identical to the Rust conv weight layout [oc][ky][kx][ic]."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    iy = (jnp.arange(ho) * stride)[:, None] + jnp.arange(k)[None, :]  # [ho,k]
+    ix = (jnp.arange(wo) * stride)[:, None] + jnp.arange(k)[None, :]  # [wo,k]
+    # [B, ho, k, w, C] -> [B, ho, k, wo, k, C]
+    p = x[:, iy.reshape(-1), :, :].reshape(b, ho, k, w, c)
+    p = p[:, :, :, ix.reshape(-1), :].reshape(b, ho, k, wo, k, c)
+    p = jnp.transpose(p, (0, 1, 3, 2, 4, 5))  # [B, ho, wo, ky, kx, C]
+    return p.reshape(b, ho * wo, k * k * c), ho, wo
+
+
+def _pad_lanes(a, axis, mult):
+    padw = (-a.shape[axis]) % mult
+    if padw == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, padw)
+    return jnp.pad(a, widths)
+
+
+def _q_gemm(acts_i8, w_i8, bias, m, shift, relu, out_i32=False):
+    """All conv/dense MACs route here: in-graph packing (8-bit lanes,
+    values may sit on coarser grids) + the Pallas packed GEMM."""
+    acts_p = _pad_lanes(acts_i8, 1, 4)
+    w_p = _pad_lanes(w_i8, 1, 4)
+    w_packed = pack_weights_jnp(w_p, 8)
+    return packed_gemm(acts_p, w_packed, bias, m.astype(jnp.int32),
+                       shift.astype(jnp.int32), bits=8, relu=relu, out_i32=out_i32)
+
+
+def _q_layer(l, info, x, w, bias, m, shift):
+    if l["kind"] == "conv":
+        b = x.shape[0]
+        patches, ho, wo = _im2col(x, l["k"], l["stride"], l["pad"])
+        acts = patches.reshape(-1, patches.shape[-1])  # [B·P, KKC]
+        wmat = w.reshape(w.shape[0], -1)  # [O, KKC]
+        y = _q_gemm(acts, wmat, bias, m, shift, l["relu"])
+        return y.reshape(b, ho, wo, w.shape[0])
+    if l["kind"] == "dw":
+        b = x.shape[0]
+        k = l["k"]
+        patches, ho, wo = _im2col(x, k, l["stride"], l["pad"])  # [B,P,KK·C]
+        c = x.shape[-1]
+        p4 = patches.reshape(b, ho * wo, k * k, c).astype(jnp.int32)
+        acc = jnp.einsum("bptc,ct->bpc", p4, w.reshape(c, k * k).astype(jnp.int32))
+        acc = acc + bias[None, None, :].astype(jnp.int32)
+        y = requantize_jnp(acc, m, shift, l["relu"])
+        return y.reshape(b, ho, wo, c)
+    if l["kind"] == "dense":
+        flat = x.reshape(x.shape[0], -1)
+        if info.is_last:
+            return _q_gemm(flat, w, bias, m, shift, False, out_i32=True)
+        return _q_gemm(flat, w, bias, m, shift, l["relu"])
+    if l["kind"] == "maxpool2":
+        b, h, w_, c = x.shape
+        return x.reshape(b, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
+    if l["kind"] == "avgpool":
+        s = x.astype(jnp.int32).sum(axis=(1, 2), keepdims=True)
+        n = x.shape[1] * x.shape[2]
+        return jnp.clip(jnp.floor_divide(s + n // 2, n), -128, 127).astype(jnp.int8)
+    raise ValueError(l)
+
+
+def _qadd(a, rq_a_m, rq_a_s, b, rq_b_m, rq_b_s):
+    """Residual add with per-input rescale (<<8 pre-shift) — bit-exact
+    twin of Rust ``nn::layers::qadd``."""
+    ra = rounding_rshift_jnp(srdhm_jnp(a.astype(jnp.int32) << 8, rq_a_m), rq_a_s)
+    rb = rounding_rshift_jnp(srdhm_jnp(b.astype(jnp.int32) << 8, rq_b_m), rq_b_s)
+    return jnp.clip(ra + rb, -128, 127).astype(jnp.int8)
+
+
+def build_qforward(spec) -> Callable:
+    """Build the integer inference function to be AOT-lowered.
+
+    Signature: ``f(images_i8, *w_and_b, m_vec, shift_vec[, res_m, res_shift])
+    → (logits_i32, preds_i32)`` where ``w_and_b`` interleaves each
+    quantizable layer's int8 weights and int32 bias in canonical order.
+    """
+    layers, _, residuals = analyze(spec)
+    n_res = len(residuals)
+
+    def qforward(images, *rest):
+        nl = len(layers)
+        ws = rest[0:2 * nl:2]
+        bs = rest[1:2 * nl:2]
+        m_vec, shift_vec = rest[2 * nl], rest[2 * nl + 1]
+        if n_res:
+            res_m, res_shift = rest[2 * nl + 2], rest[2 * nl + 3]
+        li = 0
+        res_i = 0
+        x = images
+        logits = None
+        for node_kind, payload in spec["nodes"]:
+            if node_kind == "layer":
+                if payload["kind"] in ("conv", "dw", "dense"):
+                    info = layers[li]
+                    y = _q_layer(payload, info, x, ws[li], bs[li], m_vec[li], shift_vec[li])
+                    li += 1
+                    if info.is_last:
+                        logits = y
+                        break
+                    x = y
+                else:
+                    x = _q_layer(payload, None, x, None, None, None, None)
+            else:
+                skip = x
+                b = x
+                for l in payload:
+                    info = layers[li]
+                    b = _q_layer(l, info, b, ws[li], bs[li], m_vec[li], shift_vec[li])
+                    li += 1
+                x = _qadd(skip, res_m[res_i, 0], res_shift[res_i, 0],
+                          b, res_m[res_i, 1], res_shift[res_i, 1])
+                res_i += 1
+        assert logits is not None, "model must end in a dense logits layer"
+        preds = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        return logits, preds
+
+    return qforward
+
+
+def qforward_arg_specs(spec, batch):
+    """ShapeDtypeStructs for AOT lowering + the runtime manifest."""
+    layers, _, residuals = analyze(spec)
+    h, w, c = spec["input"]
+    args = [jax.ShapeDtypeStruct((batch, h, w, c), jnp.int8)]
+    for info in layers:
+        args.append(jax.ShapeDtypeStruct(info.w_shape, jnp.int8))
+        args.append(jax.ShapeDtypeStruct((info.b_len,), jnp.int32))
+    nl = len(layers)
+    args.append(jax.ShapeDtypeStruct((nl,), jnp.int32))  # m_vec
+    args.append(jax.ShapeDtypeStruct((nl,), jnp.int32))  # shift_vec
+    if residuals:
+        r = len(residuals)
+        args.append(jax.ShapeDtypeStruct((r, 2), jnp.int32))  # res_m
+        args.append(jax.ShapeDtypeStruct((r, 2), jnp.int32))  # res_shift
+    return args

@@ -1,0 +1,180 @@
+"""Quantization arithmetic — the Python mirror of ``rust/src/nn/quant.rs``.
+
+Every function here is specified to be *bit-exact* against its Rust twin;
+the contract is enforced by exported test vectors (``tests/test_quantize.py``
+regenerates the vectors the Rust integration tests consume).
+
+Scheme (identical to the Rust side):
+
+* symmetric per-tensor quantization, zero point 0,
+* weight grids: int8 / int4 / int2 (the paper's 8/4/2-bit precisions),
+* int32 accumulation, Jacob-style fixed-point requantization
+  (Q31 multiplier + rounding right shift).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Signed range of a ``bits``-wide weight grid."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def symmetric_scale(abs_max: float, bits: int) -> float:
+    """Symmetric scale using the full negative range (Rust twin)."""
+    qmax = float(1 << (bits - 1))
+    return abs_max / qmax if abs_max > 0.0 else 1.0
+
+
+def round_half_away(x: np.ndarray) -> np.ndarray:
+    """Round half away from zero — matches Rust ``f32::round`` (NOT
+    numpy's banker's rounding)."""
+    return np.where(x >= 0, np.floor(x + 0.5), np.ceil(x - 0.5))
+
+
+# Candidate scale multipliers for the MSE search (Rust twin order).
+SCALE_CANDIDATES = [1.0, 0.9, 0.8, 0.7, 0.6, 1.15]
+
+
+def _quantize_at(w, s, bits):
+    lo, hi = qrange(bits)
+    q = round_half_away((w / np.float32(s)).astype(np.float32))
+    return np.clip(q, lo, hi).astype(np.int8)
+
+
+def quantize_tensor(w: np.ndarray, bits: int) -> tuple[np.ndarray, float]:
+    """Quantize a float tensor to the ``bits`` grid with an MSE-optimal
+    scale chosen over a small candidate set (Rust twin); returns
+    (int8 values on the grid, scale)."""
+    w = np.asarray(w, dtype=np.float32)
+    abs_max = float(np.abs(w).max()) if w.size else 0.0
+    base = symmetric_scale(abs_max, bits)
+    best_s, best_mse = base, np.inf
+    for mult in SCALE_CANDIDATES:
+        s = np.float32(base * mult)
+        q = _quantize_at(w, s, bits)
+        mse = float(((w - q.astype(np.float32) * s) ** 2).sum())
+        if mse < best_mse:
+            best_mse, best_s = mse, float(s)
+    return _quantize_at(w, np.float32(best_s), bits), best_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Requant:
+    """Fixed-point requantization parameters: scale ≈ m / 2^31 / 2^shift."""
+
+    m: int
+    shift: int
+
+    @staticmethod
+    def from_real_scale(real_scale: float) -> "Requant":
+        assert real_scale > 0.0, "requant scale must be positive"
+        shift = 0
+        s = float(real_scale)
+        while s < 0.5:
+            s *= 2.0
+            shift += 1
+        while s >= 1.0:  # scales >= 1 -> negative (left) shift
+            s /= 2.0
+            shift -= 1
+        m = int(round(s * (1 << 31)))
+        if m == 1 << 31:
+            m //= 2
+            shift -= 1
+        return Requant(m=m, shift=shift)
+
+    def real_scale(self) -> float:
+        return self.m / float(1 << 31) / (2.0 ** self.shift)
+
+
+def srdhm(a: np.ndarray, b: int) -> np.ndarray:
+    """Saturating rounding doubling high multiply (vectorised over `a`)."""
+    p = a.astype(np.int64) * np.int64(b)
+    return ((p + (1 << 30)) >> 31).astype(np.int32)
+
+
+def rounding_rshift(x: np.ndarray, n: int) -> np.ndarray:
+    """Rounding arithmetic right shift (round half up); negative `n`
+    shifts left (saturating int64, matching the Rust twin)."""
+    if n == 0:
+        return x.astype(np.int32)
+    if n < 0:
+        v = np.clip(x.astype(np.int64) << (-n), -(1 << 31), (1 << 31) - 1)
+        return v.astype(np.int32)
+    return ((x.astype(np.int64) + (1 << (n - 1))) >> n).astype(np.int32)
+
+
+def requantize(acc: np.ndarray, rq: Requant, relu: bool) -> np.ndarray:
+    """int32 accumulator → int8 output, optional fused ReLU."""
+    r = rounding_rshift(srdhm(np.asarray(acc, dtype=np.int32), rq.m), rq.shift)
+    lo = 0 if relu else -128
+    return np.clip(r, lo, 127).astype(np.int8)
+
+
+def quantize_layer(
+    wf: np.ndarray,
+    bf: np.ndarray,
+    s_in: float,
+    s_out: float,
+    w_bits: int,
+) -> tuple[np.ndarray, np.ndarray, Requant, float]:
+    """Quantize one layer (Rust ``nn::quantize_layer`` twin).
+
+    Returns (grid weights int8, int32 bias, requant, weight scale).
+    """
+    qw, s_w = quantize_tensor(wf, w_bits)
+    # f32 intermediate like Rust: b / (s_in * s_w) with f32 rounding.
+    denom = np.float32(s_in) * np.float32(s_w)
+    bias = round_half_away((np.asarray(bf, np.float32) / denom).astype(np.float32)).astype(
+        np.int64
+    )
+    rq = Requant.from_real_scale(float(s_in) * float(s_w) / float(s_out))
+    return qw, bias.astype(np.int32), rq, s_w
+
+
+# ---------------------------------------------------------------- packing ---
+
+
+def weights_per_word(bits: int) -> int:
+    return 32 // bits
+
+
+def pack_weight_stream(w: np.ndarray, bits: int) -> np.ndarray:
+    """Pack int-grid weights into little-endian-lane uint32 words,
+    zero-padding the tail (Rust ``isa::custom::pack_weight_stream`` twin)."""
+    w = np.asarray(w, dtype=np.int64)
+    lo, hi = qrange(bits)
+    assert w.min(initial=0) >= lo and w.max(initial=0) <= hi, "weights off grid"
+    n = weights_per_word(bits)
+    pad = (-len(w)) % n
+    w = np.concatenate([w, np.zeros(pad, dtype=np.int64)])
+    lanes = w.reshape(-1, n)
+    mask = (1 << bits) - 1
+    words = np.zeros(len(lanes), dtype=np.uint64)
+    for i in range(n):
+        words |= (lanes[:, i].astype(np.uint64) & mask) << (i * bits)
+    return words.astype(np.uint32)
+
+
+def unpack_weights(words: np.ndarray, bits: int) -> np.ndarray:
+    """Inverse of :func:`pack_weight_stream` (sign-extended)."""
+    n = weights_per_word(bits)
+    words = np.asarray(words, dtype=np.uint64)
+    lanes = np.zeros((len(words), n), dtype=np.int64)
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    for i in range(n):
+        field = (words >> (i * bits)) & mask
+        lanes[:, i] = ((field + half) & mask) - half
+    return lanes.reshape(-1).astype(np.int8)
+
+
+def pack_dense(qw: np.ndarray, o: int, i: int, bits: int) -> np.ndarray:
+    """Per-output-row packing (Rust ``nn::pack::pack_dense`` twin):
+    row `r` occupies ``ceil(i / lanes)`` words."""
+    qw = np.asarray(qw).reshape(o, i)
+    return np.stack([pack_weight_stream(row, bits) for row in qw])

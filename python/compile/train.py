@@ -1,0 +1,233 @@
+"""Build-time training on synthetic datasets + `.mpw` artifact export.
+
+Substitution note (DESIGN.md §5): MNIST/CIFAR-10/VWW/ImageNet are not
+available in this environment, so each Table-3 model is trained on a
+synthetic prototype-classification dataset whose class margin is tuned
+to give the graded bit-width sensitivity the paper's DSE relies on.
+Quantization here is post-training (the paper's fine-tuning step is
+per-DSE-config and is replaced by PTQ over calibrated scales).
+
+The exported `.mpw` byte format is specified in
+``rust/src/models/format.rs``; the Rust loader validates the embedded
+spec against its own zoo, so structural drift fails loudly.
+
+Python runs ONCE (``make artifacts``); nothing here is on the request
+path.
+"""
+
+from __future__ import annotations
+
+import struct
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+# ------------------------------------------------------------- synthetic ---
+
+
+def smooth(img: np.ndarray, passes: int = 2) -> np.ndarray:
+    """3×3 box blur, edge-clipped — same construction as the Rust twin."""
+    out = img.copy()
+    h, w, _ = img.shape
+    for _ in range(passes):
+        src = out.copy()
+        acc = np.zeros_like(src)
+        cnt = np.zeros(src.shape[:2] + (1,), dtype=np.float32)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                ys = slice(max(dy, 0), h + min(dy, 0))
+                yd = slice(max(-dy, 0), h + min(-dy, 0))
+                xs = slice(max(dx, 0), w + min(dx, 0))
+                xd = slice(max(-dx, 0), w + min(-dx, 0))
+                acc[yd, xd] += src[ys, xs]
+                cnt[yd, xd] += 1
+        out = acc / cnt
+    return out
+
+
+def synth_dataset(proto_seed: int, sample_seed: int, n: int, shape, classes: int,
+                  noise: float):
+    """Prototype + noise classification set; images in [-1, 1].
+
+    Prototypes (the *task*) come from ``proto_seed``; sample noise from
+    ``sample_seed`` — train/test splits share prototypes and differ only
+    in samples.
+    """
+    prng = np.random.default_rng(proto_seed)
+    protos = []
+    for _ in range(classes):
+        p = smooth(prng.normal(0, 1, shape).astype(np.float32))
+        p = np.clip(p / max(np.abs(p).max(), 1e-6), -1, 1)
+        protos.append(p)
+    rng = np.random.default_rng(sample_seed)
+    images = np.zeros((n, *shape), dtype=np.float32)
+    labels = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        c = i % classes
+        gain = 0.8 + 0.4 * rng.random()
+        images[i] = np.clip(protos[c] * gain + rng.normal(0, noise, shape), -1, 1)
+        labels[i] = c
+    return images, labels
+
+# ---------------------------------------------------------------- training ---
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_model(spec, seed=0, n_train=2048, n_test=512, epochs=6, batch=64, noise=0.35,
+                lr=2e-3, log=print):
+    """Train the float model; returns (params, test set, float accuracy)."""
+    shape = spec["input"]
+    classes = spec["classes"]
+    xs, ys = synth_dataset(seed, seed + 1, n_train, shape, classes, noise)
+    xt, yt = synth_dataset(seed, seed + 2, n_test, shape, classes, noise)
+    rng = np.random.default_rng(seed + 2)
+    params = M.init_params(spec, rng)
+
+    @jax.jit
+    def loss_fn(params, x, y):
+        logits = M.float_forward_traced(spec, params, x)
+        return cross_entropy(logits, y)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def acc_fn(params, x, y):
+        logits = M.float_forward_traced(spec, params, x)
+        return (jnp.argmax(logits, axis=1) == y).mean()
+
+    state = adam_init(params)
+    steps = n_train // batch
+    order = np.arange(n_train)
+    for ep in range(epochs):
+        rng.shuffle(order)
+        tot = 0.0
+        for s in range(steps):
+            idx = order[s * batch:(s + 1) * batch]
+            loss, grads = grad_fn(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+            params, state = adam_step(params, grads, state, lr=lr)
+            tot += float(loss)
+        acc = float(acc_fn(params, jnp.asarray(xt), jnp.asarray(yt)))
+        log(f"  epoch {ep + 1}/{epochs}: loss {tot / steps:.4f} test-acc {acc:.3f}")
+    float_acc = float(acc_fn(params, jnp.asarray(xt), jnp.asarray(yt)))
+    return params, (xt, yt), float_acc
+
+
+def calibrate(spec, params, images: np.ndarray) -> np.ndarray:
+    """Per-site int8 scales from abs-max over the calibration batch
+    (site walk identical to Rust ``models::infer::calibrate``)."""
+    layers, n_sites, _ = M.analyze(spec)
+    maxes = np.zeros(n_sites, dtype=np.float64)
+    for i in range(len(images)):
+        rec = []
+        M.float_forward(spec, params, jnp.asarray(images[i:i + 1]), record=rec)
+        assert len(rec) == n_sites, (len(rec), n_sites)
+        maxes = np.maximum(maxes, rec)
+    return (np.maximum(maxes, 1e-6) / 128.0).astype(np.float32)
+
+# ------------------------------------------------------------------ export ---
+
+_LKIND = {"conv": 0, "dw": 1, "dense": 2, "maxpool2": 3, "avgpool": 4}
+
+
+def _pack_layer(l) -> bytes:
+    out = struct.pack("<B", _LKIND[l["kind"]])
+    if l["kind"] == "conv":
+        out += struct.pack("<IIIIB", l["cout"], l["k"], l["stride"], l["pad"], int(l["relu"]))
+    elif l["kind"] == "dw":
+        out += struct.pack("<IIIB", l["k"], l["stride"], l["pad"], int(l["relu"]))
+    elif l["kind"] == "dense":
+        out += struct.pack("<IB", l["out"], int(l["relu"]))
+    return out
+
+
+def export_mpw(path: Path, spec, params, sites, float_acc, test_images, test_labels):
+    """Serialize the `.mpw` artifact (see rust/src/models/format.rs)."""
+    name = spec["name"].encode()
+    h, w, c = spec["input"]
+    out = bytearray()
+    out += b"MPW1"
+    out += struct.pack("<I", len(name)) + name
+    out += struct.pack("<IIII", h, w, c, spec["classes"])
+    out += struct.pack("<I", len(spec["nodes"]))
+    for kind, payload in spec["nodes"]:
+        if kind == "layer":
+            out += b"\x00" + _pack_layer(payload)
+        else:
+            out += b"\x01" + struct.pack("<I", len(payload))
+            for l in payload:
+                out += _pack_layer(l)
+    out += struct.pack("<I", len(params))
+    for p in params:
+        wf = np.asarray(p["w"], dtype=np.float32).reshape(-1)
+        bf = np.asarray(p["b"], dtype=np.float32).reshape(-1)
+        out += struct.pack("<II", wf.size, bf.size)
+        out += wf.tobytes() + bf.tobytes()
+    sites = np.asarray(sites, dtype=np.float32)
+    out += struct.pack("<I", sites.size) + sites.tobytes()
+    out += struct.pack("<f", float_acc)
+    imgs = np.asarray(test_images, dtype=np.float32)
+    out += struct.pack("<I", imgs.shape[0]) + imgs.tobytes()
+    out += np.asarray(test_labels, dtype=np.uint8).tobytes()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_bytes(bytes(out))
+
+
+# Per-model training budgets (tuned for single-core CPU build time).
+TRAIN_CFG = {
+    "lenet5": dict(epochs=6, n_train=2048, noise=0.45, lr=2e-3),
+    "cifar_cnn": dict(epochs=6, n_train=2048, noise=0.40, lr=2e-3),
+    "mcunet_vww": dict(epochs=5, n_train=1536, noise=0.40, lr=2e-3),
+    "mobilenet_v1": dict(epochs=8, n_train=3000, noise=0.30, lr=2e-3),
+}
+
+
+def main(out_dir: Path, only=None):
+    for name, spec in M.MODELS.items():
+        if only and name not in only:
+            continue
+        path = out_dir / "weights" / f"{name}.mpw"
+        if path.exists():
+            print(f"[train] {name}: artifact exists, skipping")
+            continue
+        cfg = TRAIN_CFG[name]
+        print(f"[train] {name} {spec['input']} classes={spec['classes']} {cfg}")
+        t0 = time.time()
+        params, (xt, yt), facc = train_model(spec, seed=sum(name.encode()) * 7919, **cfg)
+        sites = calibrate(spec, params, xt[:32])
+        export_mpw(path, spec, params, sites, facc, xt, yt)
+        print(f"[train] {name}: float acc {facc:.3f}, {time.time() - t0:.0f}s -> {path}")
+
+
+if __name__ == "__main__":
+    out = Path(sys.argv[1]) if len(sys.argv) > 1 else Path("../artifacts")
+    main(out, only=sys.argv[2:] or None)

@@ -1,0 +1,9 @@
+import sys
+from pathlib import Path
+
+import jax
+
+# The quantization spec is 64-bit-exact; enable x64 before any tracing.
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

@@ -1,0 +1,41 @@
+"""AOT path tests: HLO text emission + manifest/xcheck generation."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_lower_lenet_hlo_text():
+    hlo, args = aot.lower_model(M.lenet5(), 2)
+    assert hlo.startswith("HloModule")
+    assert "s8[2,28,28,1]" in hlo
+    assert len(args) == 1 + 5 * 2 + 2
+
+
+def test_lower_kernels_smoke():
+    out = aot.lower_kernels()
+    assert set(out) == {
+        "kernel_packed_gemm_8b", "kernel_packed_gemm_4b",
+        "kernel_packed_gemm_2b", "kernel_soft_simd_2b",
+    }
+    for name, (hlo, args) in out.items():
+        assert hlo.startswith("HloModule"), name
+        assert "u32" in hlo or "s8" in hlo
+
+
+def test_xcheck_vectors_selfconsistent():
+    from compile import quantize as Q
+    v = aot.xcheck_vectors()
+    assert len(v["requantize"]) == 64
+    for case in v["requantize"][:8]:
+        got = int(Q.requantize(np.array([case["acc"]]),
+                               Q.Requant(case["m"], case["shift"]), case["relu"])[0])
+        assert got == case["out"]
+    for p in v["pack"]:
+        words = Q.pack_weight_stream(np.array(p["weights"], np.int8), p["bits"])
+        assert [int(x) for x in words] == p["words"]

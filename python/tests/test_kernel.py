@@ -1,0 +1,138 @@
+"""L1 correctness: the Pallas packed-MAC kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, widths and requant parameters; every
+comparison is exact (integer kernels admit no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.packed_mac import (
+    packed_gemm,
+    soft_simd_gemm_2b,
+    vmem_bytes_estimate,
+)
+from compile import quantize as Q
+
+
+def _pad_lanes(a, lanes):
+    pad = (-a.shape[1]) % lanes
+    return np.pad(a, ((0, 0), (0, pad)))
+
+
+def run_case(bits, m_dim, i_dim, o_dim, relu, out_i32, seed):
+    rng = np.random.default_rng(seed)
+    lanes = 32 // bits
+    lo, hi = Q.qrange(bits)
+    acts = rng.integers(-128, 128, (m_dim, i_dim)).astype(np.int8)
+    w = rng.integers(lo, hi + 1, (o_dim, i_dim)).astype(np.int8)
+    bias = rng.integers(-1000, 1000, o_dim).astype(np.int32)
+    acts_p = _pad_lanes(acts, lanes)
+    w_p = _pad_lanes(w, lanes)
+    wp = ref.pack_weights_jnp(jnp.asarray(w_p), bits)
+    m = jnp.int32(rng.integers(1 << 30, 1 << 31))
+    shift = jnp.int32(rng.integers(0, 12))
+    got = packed_gemm(jnp.asarray(acts_p), wp, jnp.asarray(bias), m, shift,
+                      bits=bits, relu=relu, out_i32=out_i32)
+    want = ref.packed_gemm_ref(jnp.asarray(acts_p), wp, jnp.asarray(bias),
+                               bits, m, shift, relu, out_i32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([8, 4, 2]),
+    m_dim=st.integers(1, 40),
+    i_dim=st.integers(1, 96),
+    o_dim=st.integers(1, 48),
+    relu=st.booleans(),
+    out_i32=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_packed_gemm_matches_ref(bits, m_dim, i_dim, o_dim, relu, out_i32, seed):
+    run_case(bits, m_dim, i_dim, o_dim, relu, out_i32, seed)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_packed_gemm_tile_boundaries(bits):
+    # Shapes exactly on / just over the Pallas tile sizes.
+    from compile.kernels.packed_mac import TILE_M, TILE_O
+    run_case(bits, TILE_M, 64, TILE_O, True, False, 1)
+    run_case(bits, TILE_M + 1, 64, TILE_O + 1, False, False, 2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_dim=st.integers(1, 24),
+    i_dim=st.integers(1, 64),
+    pairs=st.integers(1, 12),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_soft_simd_gemm_matches_packed_ref(m_dim, i_dim, pairs, relu, seed):
+    """Mode-3 factorised via Eq.(2) == the plain packed 2-bit GEMM."""
+    rng = np.random.default_rng(seed)
+    o_dim = pairs * 2
+    acts = rng.integers(-128, 128, (m_dim, i_dim)).astype(np.int8)
+    w2 = rng.integers(-2, 2, (o_dim, i_dim)).astype(np.int8)
+    bias = rng.integers(-500, 500, o_dim).astype(np.int32)
+    m = jnp.int32(rng.integers(1 << 30, 1 << 31))
+    shift = jnp.int32(rng.integers(0, 10))
+    got = soft_simd_gemm_2b(jnp.asarray(acts), jnp.asarray(w2), jnp.asarray(bias),
+                            m, shift, relu=relu)
+    acts_p = _pad_lanes(acts, 16)
+    w_p = _pad_lanes(w2, 16)
+    wp = ref.pack_weights_jnp(jnp.asarray(w_p), 2)
+    want = ref.packed_gemm_ref(jnp.asarray(acts_p), wp, jnp.asarray(bias),
+                               2, m, shift, relu, False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    a=st.integers(-128, 127),
+    we=st.integers(-2, 1),
+    wo=st.integers(-2, 1),
+)
+def test_eq2_dual_product_exact(a, we, wo):
+    """The guard-bit field extraction recovers both products exactly."""
+    composed = ref.soft_simd_compose_ref(jnp.int8(we), jnp.int8(wo))
+    lo, hi = ref.soft_simd_dual_ref(jnp.int8(a), composed)
+    assert int(lo) == a * we
+    assert int(hi) == a * wo
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([8, 4, 2]), n=st.integers(1, 64), seed=st.integers(0, 2**31))
+def test_pack_unpack_round_trip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = Q.qrange(bits)
+    lanes = 32 // bits
+    n_pad = -(-n // lanes) * lanes
+    w = np.zeros(n_pad, dtype=np.int8)
+    w[:n] = rng.integers(lo, hi + 1, n)
+    words = ref.pack_weights_jnp(jnp.asarray(w)[None, :], bits)
+    back = ref.unpack_weights_jnp(words, bits)[0]
+    np.testing.assert_array_equal(np.asarray(back), w.astype(np.int32))
+
+
+def test_jnp_and_numpy_packers_agree():
+    rng = np.random.default_rng(0)
+    for bits in (8, 4, 2):
+        lo, hi = Q.qrange(bits)
+        lanes = 32 // bits
+        w = rng.integers(lo, hi + 1, lanes * 5).astype(np.int8)
+        a = np.asarray(ref.pack_weights_jnp(jnp.asarray(w), bits))
+        b = Q.pack_weight_stream(w, bits)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_vmem_estimate_compression_factors():
+    for bits, vs_int8, vs_loads in ((8, 1.0, 4.0), (4, 2.0, 8.0), (2, 4.0, 16.0)):
+        est = vmem_bytes_estimate(bits, 256)
+        assert est["weight_compression_vs_int8"] == pytest.approx(vs_int8)
+        assert est["weight_compression_vs_wordloads"] == pytest.approx(vs_loads)
+        assert est["total_bytes"] < 16 << 20, "tile must fit VMEM"

@@ -1,0 +1,111 @@
+"""L2 model tests: spec walk parity, shapes, float/int forward sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import quantize as Q
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_analyze_shapes(name):
+    spec = M.MODELS[name]
+    layers, n_sites, residuals = M.analyze(spec)
+    assert layers[-1].is_last
+    assert layers[-1].out_shape[2] == spec["classes"]
+    # Site counts: input + one per quantizable layer + one per residual.
+    assert n_sites == 1 + len(layers) + len(residuals)
+
+
+def test_zoo_matches_rust_counts():
+    # Mirrors the Rust zoo tests: layer counts per model.
+    assert len(M.analyze(M.lenet5())[0]) == 5
+    assert len(M.analyze(M.cifar_cnn())[0]) == 4
+    assert len(M.analyze(M.mcunet_vww())[0]) == 47
+    assert len(M.analyze(M.mobilenet_v1())[0]) == 28
+    assert len(M.analyze(M.mcunet_vww())[2]) == 10
+
+
+@pytest.mark.parametrize("name", ["lenet5", "cifar_cnn"])
+def test_float_forward_shapes_and_record(name):
+    spec = M.MODELS[name]
+    rng = np.random.default_rng(0)
+    params = M.init_params(spec, rng)
+    x = jnp.asarray(rng.normal(0, 0.5, (2, *spec["input"])).astype(np.float32))
+    rec = []
+    out = M.float_forward(spec, params, x, record=rec)
+    assert out.shape == (2, spec["classes"])
+    assert len(rec) == M.analyze(spec)[1]
+
+
+def _quantize_all(spec, params, sites, bits):
+    layers, _, _ = M.analyze(spec)
+    args = []
+    ms, ss = [], []
+    for info, p, b in zip(layers, params, [bits] * len(layers)):
+        qw, bias, rq, _ = Q.quantize_layer(
+            np.asarray(p["w"]), np.asarray(p["b"]),
+            sites[info.site_in], sites[info.site_out], b)
+        args += [jnp.asarray(qw.reshape(info.w_shape)), jnp.asarray(bias)]
+        ms.append(rq.m)
+        ss.append(rq.shift)
+    args.append(jnp.asarray(np.array(ms, np.int32)))
+    args.append(jnp.asarray(np.array(ss, np.int32)))
+    return args
+
+
+def test_qforward_tracks_float_lenet():
+    """Int8 inference must agree with float inference on most samples."""
+    spec = M.lenet5()
+    rng = np.random.default_rng(1)
+    params = M.init_params(spec, rng)
+    x = rng.normal(0, 0.4, (16, *spec["input"])).astype(np.float32)
+    # Calibrate sites.
+    layers, n_sites, _ = M.analyze(spec)
+    maxes = np.zeros(n_sites)
+    for i in range(4):
+        rec = []
+        M.float_forward(spec, params, jnp.asarray(x[i:i+1]), record=rec)
+        maxes = np.maximum(maxes, rec)
+    sites = np.maximum(maxes, 1e-6) / 128.0
+    fl = np.asarray(M.float_forward(spec, params, jnp.asarray(x)))
+    qf = M.build_qforward(spec)
+    imgs = np.clip(Q.round_half_away(x / sites[0]), -128, 127).astype(np.int8)
+    args = _quantize_all(spec, params, sites, 8)
+    logits, preds = qf(jnp.asarray(imgs), *args)
+    agree = (np.asarray(preds) == fl.argmax(1)).mean()
+    assert agree >= 0.8, f"int8 vs float prediction agreement {agree}"
+
+
+def test_qforward_residual_model_runs():
+    spec = M.mcunet_vww()
+    rng = np.random.default_rng(2)
+    params = M.init_params(spec, rng)
+    layers, n_sites, residuals = M.analyze(spec)
+    sites = np.full(n_sites, 0.02, np.float32)
+    args = _quantize_all(spec, params, sites, 4)
+    r = len(residuals)
+    args.append(jnp.full((r, 2), 1 << 30, jnp.int32))
+    args.append(jnp.full((r, 2), 8, jnp.int32))
+    imgs = rng.integers(-128, 128, (2, *spec["input"])).astype(np.int8)
+    qf = M.build_qforward(spec)
+    logits, preds = qf(jnp.asarray(imgs), *args)
+    assert logits.shape == (2, 2)
+    assert preds.shape == (2,)
+
+
+def test_im2col_matches_conv():
+    """Patch order must equal the Rust weight layout (ky, kx, ic)."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (1, 6, 6, 3)).astype(np.int8)
+    w = rng.integers(-8, 8, (4, 3, 3, 3)).astype(np.int8)
+    patches, ho, wo = M._im2col(jnp.asarray(x), 3, 1, 1)
+    acc = np.asarray(patches).astype(np.int64) @ w.reshape(4, -1).T.astype(np.int64)
+    # Reference: plain lax conv in float (values are small — exact).
+    import jax.lax as lax
+    ref = lax.conv_general_dilated(
+        x.astype(np.float32), np.transpose(w, (1, 2, 3, 0)).astype(np.float32),
+        (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(
+        acc.reshape(1, 6, 6, 4), np.asarray(ref).astype(np.int64))

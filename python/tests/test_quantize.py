@@ -1,0 +1,76 @@
+"""Quantization spec tests (the Python mirror of rust/src/nn/quant.rs)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def test_qranges():
+    assert Q.qrange(8) == (-128, 127)
+    assert Q.qrange(4) == (-8, 7)
+    assert Q.qrange(2) == (-2, 1)
+
+
+def test_round_half_away_matches_rust_round():
+    x = np.array([0.5, 1.5, -0.5, -1.5, 2.49, -2.49])
+    np.testing.assert_array_equal(Q.round_half_away(x), [1, 2, -1, -2, 2, -2])
+
+
+@settings(max_examples=40, deadline=None)
+@given(scale=st.floats(1e-6, 0.999))
+def test_requant_decomposition(scale):
+    rq = Q.Requant.from_real_scale(scale)
+    assert (1 << 30) <= rq.m < (1 << 31)
+    assert abs(rq.real_scale() - scale) / scale < 1e-8
+
+
+def test_srdhm_known():
+    assert Q.srdhm(np.array([10]), 1 << 30)[0] == 5
+    assert Q.srdhm(np.array([-10]), 1 << 30)[0] == -5
+    assert Q.srdhm(np.array([3]), 1 << 30)[0] == 2  # 1.5 rounds up
+
+
+def test_requantize_clamps_and_relu():
+    rq = Q.Requant.from_real_scale(0.5)
+    acc = np.array([10, -10, 1000, -1000])
+    np.testing.assert_array_equal(Q.requantize(acc, rq, False), [5, -5, 127, -128])
+    np.testing.assert_array_equal(Q.requantize(acc, rq, True), [5, 0, 127, 0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([8, 4, 2]), seed=st.integers(0, 2**31))
+def test_quantize_tensor_on_grid(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, 50).astype(np.float32)
+    q, s = Q.quantize_tensor(w, bits)
+    lo, hi = Q.qrange(bits)
+    assert q.min() >= lo and q.max() <= hi
+    if np.abs(w).max() > 0:
+        err = np.abs(q.astype(np.float32) * s - w)
+        inside = np.abs(w / s) < hi
+        assert (err[inside] <= s / 2 + 1e-5).all()
+
+
+def test_quantize_layer_bias_scale():
+    qw, bias, rq, s_w = Q.quantize_layer(
+        np.array([1.0]), np.array([0.7]), 0.1, 1.0, 8)
+    # bias_q = b / (s_in · s_w) with the MSE-searched scale.
+    want = round(0.7 / (0.1 * s_w))
+    assert abs(int(bias[0]) - want) <= 1
+    assert abs(qw[0] * s_w - 1.0) < 0.05  # weight dequantizes near 1.0
+
+
+def test_mse_scale_search_improves_int2():
+    # The candidate search must beat (or match) plain abs-max scaling on
+    # a heavy-tailed weight distribution at 2-bit.
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.2, 256).astype(np.float32)
+    w[0] = 1.0  # outlier drives abs-max scaling off
+    q, s = Q.quantize_tensor(w, 2)
+    base = Q.symmetric_scale(float(np.abs(w).max()), 2)
+    q0 = Q._quantize_at(w, np.float32(base), 2)
+    mse_search = float(((w - q.astype(np.float32) * s) ** 2).sum())
+    mse_naive = float(((w - q0.astype(np.float32) * base) ** 2).sum())
+    assert mse_search <= mse_naive + 1e-6

@@ -1,0 +1,455 @@
+//! Macro-assembler: the program-builder the NN kernel code generators
+//! target (the reproduction equivalent of the paper's GCC-binutils
+//! intrinsics — it splices the Table-2 encodings into generated kernels).
+//!
+//! Features: string labels, branch/jump resolution with automatic
+//! **branch relaxation** (out-of-range conditional branches are rewritten
+//! as an inverted branch over a `jal`), `li` immediate splitting, and the
+//! usual pseudo-instructions (`mv`, `nop`, `j`, `call`, `ret`).
+
+use crate::isa::*;
+use std::collections::HashMap;
+
+/// Opaque label handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Label(usize);
+
+#[derive(Debug, Clone, Copy)]
+enum Item {
+    /// A fully-formed instruction.
+    Instr(Instr),
+    /// Conditional branch to a label (may relax to 2 instructions).
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, target: Label },
+    /// `jal rd, label`.
+    Jump { rd: Reg, target: Label },
+}
+
+/// The assembler/program builder.
+#[derive(Debug, Default)]
+pub struct Asm {
+    items: Vec<Item>,
+    /// label id -> item index it is bound to (usize::MAX = unbound).
+    label_pos: Vec<usize>,
+    names: HashMap<String, Label>,
+}
+
+impl Asm {
+    /// New empty program.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create (or look up) a named label. Labels may be referenced before
+    /// they are placed.
+    pub fn label(&mut self, name: &str) -> Label {
+        if let Some(&l) = self.names.get(name) {
+            return l;
+        }
+        let l = Label(self.label_pos.len());
+        self.label_pos.push(usize::MAX);
+        self.names.insert(name.to_string(), l);
+        l
+    }
+
+    /// Create a fresh anonymous label.
+    pub fn new_label(&mut self) -> Label {
+        let l = Label(self.label_pos.len());
+        self.label_pos.push(usize::MAX);
+        l
+    }
+
+    /// Bind `label` to the current position.
+    pub fn bind(&mut self, label: Label) {
+        assert_eq!(self.label_pos[label.0], usize::MAX, "label bound twice");
+        self.label_pos[label.0] = self.items.len();
+    }
+
+    /// Bind a named label here (creating it if needed).
+    pub fn here(&mut self, name: &str) -> Label {
+        let l = self.label(name);
+        self.bind(l);
+        l
+    }
+
+    /// Emit a raw instruction.
+    pub fn emit(&mut self, i: Instr) -> &mut Self {
+        self.items.push(Item::Instr(i));
+        self
+    }
+
+    // ---- pseudo-instructions -------------------------------------------
+
+    /// Load a full 32-bit immediate (1 or 2 instructions).
+    pub fn li(&mut self, rd: Reg, imm: i32) -> &mut Self {
+        if (-2048..=2047).contains(&imm) {
+            self.addi(rd, reg::ZERO, imm)
+        } else {
+            let hi = imm.wrapping_add(0x800) & !0xfff;
+            let lo = imm.wrapping_sub(hi);
+            self.emit(Instr::Lui { rd, imm: hi });
+            if lo != 0 {
+                self.addi(rd, rd, lo);
+            }
+            self
+        }
+    }
+
+    /// Register move.
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    /// No-op.
+    pub fn nop(&mut self) -> &mut Self {
+        self.addi(reg::ZERO, reg::ZERO, 0)
+    }
+
+    /// Unconditional jump to label.
+    pub fn j(&mut self, target: Label) -> &mut Self {
+        self.items.push(Item::Jump { rd: reg::ZERO, target });
+        self
+    }
+
+    /// Call (jal ra, label).
+    pub fn call(&mut self, target: Label) -> &mut Self {
+        self.items.push(Item::Jump { rd: reg::RA, target });
+        self
+    }
+
+    /// Return (jalr x0, 0(ra)).
+    pub fn ret(&mut self) -> &mut Self {
+        self.emit(Instr::Jalr { rd: reg::ZERO, rs1: reg::RA, offset: 0 })
+    }
+
+    // ---- ALU ------------------------------------------------------------
+
+    /// `addi rd, rs1, imm`.
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.emit(Instr::OpImm { op: AluOp::Add, rd, rs1, imm })
+    }
+
+    /// `add rd, rs1, rs2`.
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::Add, rd, rs1, rs2 })
+    }
+
+    /// `sub rd, rs1, rs2`.
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::Sub, rd, rs1, rs2 })
+    }
+
+    /// `slli rd, rs1, shamt`.
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, shamt: i32) -> &mut Self {
+        self.emit(Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: shamt })
+    }
+
+    /// `srai rd, rs1, shamt`.
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, shamt: i32) -> &mut Self {
+        self.emit(Instr::OpImm { op: AluOp::Sra, rd, rs1, imm: shamt })
+    }
+
+    /// `srli rd, rs1, shamt`.
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, shamt: i32) -> &mut Self {
+        self.emit(Instr::OpImm { op: AluOp::Srl, rd, rs1, imm: shamt })
+    }
+
+    /// `andi rd, rs1, imm`.
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.emit(Instr::OpImm { op: AluOp::And, rd, rs1, imm })
+    }
+
+    /// `sra rd, rs1, rs2`.
+    pub fn sra(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::Sra, rd, rs1, rs2 })
+    }
+
+    /// `mul rd, rs1, rs2`.
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::MulDiv { op: MulOp::Mul, rd, rs1, rs2 })
+    }
+
+    /// `mulh rd, rs1, rs2` (signed high half).
+    pub fn mulh(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::MulDiv { op: MulOp::Mulh, rd, rs1, rs2 })
+    }
+
+    // ---- memory ----------------------------------------------------------
+
+    /// `lw rd, offset(rs1)`.
+    pub fn lw(&mut self, rd: Reg, rs1: Reg, offset: i32) -> &mut Self {
+        self.emit(Instr::Load { op: LoadOp::Lw, rd, rs1, offset })
+    }
+
+    /// `lb rd, offset(rs1)` (sign-extending byte load — int8 operands).
+    pub fn lb(&mut self, rd: Reg, rs1: Reg, offset: i32) -> &mut Self {
+        self.emit(Instr::Load { op: LoadOp::Lb, rd, rs1, offset })
+    }
+
+    /// `lbu rd, offset(rs1)`.
+    pub fn lbu(&mut self, rd: Reg, rs1: Reg, offset: i32) -> &mut Self {
+        self.emit(Instr::Load { op: LoadOp::Lbu, rd, rs1, offset })
+    }
+
+    /// `sw rs2, offset(rs1)`.
+    pub fn sw(&mut self, rs1: Reg, rs2: Reg, offset: i32) -> &mut Self {
+        self.emit(Instr::Store { op: StoreOp::Sw, rs1, rs2, offset })
+    }
+
+    /// `sb rs2, offset(rs1)`.
+    pub fn sb(&mut self, rs1: Reg, rs2: Reg, offset: i32) -> &mut Self {
+        self.emit(Instr::Store { op: StoreOp::Sb, rs1, rs2, offset })
+    }
+
+    // ---- control flow -----------------------------------------------------
+
+    /// Conditional branch to a label.
+    pub fn branch(&mut self, op: BranchOp, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.items.push(Item::Branch { op, rs1, rs2, target });
+        self
+    }
+
+    /// `bne rs1, rs2, label`.
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.branch(BranchOp::Bne, rs1, rs2, target)
+    }
+
+    /// `beq rs1, rs2, label`.
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.branch(BranchOp::Beq, rs1, rs2, target)
+    }
+
+    /// `blt rs1, rs2, label`.
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.branch(BranchOp::Blt, rs1, rs2, target)
+    }
+
+    /// `bge rs1, rs2, label`.
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.branch(BranchOp::Bge, rs1, rs2, target)
+    }
+
+    /// `bltu rs1, rs2, label`.
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.branch(BranchOp::Bltu, rs1, rs2, target)
+    }
+
+    // ---- custom extension -------------------------------------------------
+
+    /// `nn_mac_<x>b rd, rs1, rs2` — the paper's mixed-precision MAC.
+    pub fn nn_mac(&mut self, mode: MacMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        assert!(
+            rs1 as u32 + mode.activation_regs() <= NUM_REGS as u32,
+            "nn_mac activation register group x{}..x{} overruns the register file",
+            rs1,
+            rs1 as u32 + mode.activation_regs() - 1
+        );
+        self.emit(Instr::NnMac { mode, rd, rs1, rs2 })
+    }
+
+    /// CSR read: `csrrs rd, csr, x0`.
+    pub fn csrr(&mut self, rd: Reg, csr: u16) -> &mut Self {
+        self.emit(Instr::Csr { op: CsrOp::Rs, rd, rs1: reg::ZERO, csr })
+    }
+
+    /// Halt (`ecall`).
+    pub fn halt(&mut self) -> &mut Self {
+        self.emit(Instr::Ecall)
+    }
+
+    // ---- assembly ----------------------------------------------------------
+
+    /// Resolve labels and produce the final instruction stream.
+    ///
+    /// Runs an iterative relaxation fixpoint: conditional branches whose
+    /// resolved offset exceeds ±4 KiB become `b!cond +8; jal x0, target`.
+    pub fn assemble(&mut self) -> Vec<Instr> {
+        for (name, l) in &self.names {
+            assert_ne!(self.label_pos[l.0], usize::MAX, "label `{name}` was never bound");
+        }
+        // long[i]: item i is a relaxed (2-instruction) branch.
+        let mut long = vec![false; self.items.len()];
+        loop {
+            // addr[i] = instruction index of item i under current relaxation.
+            let mut addr = Vec::with_capacity(self.items.len() + 1);
+            let mut a = 0usize;
+            for (i, item) in self.items.iter().enumerate() {
+                addr.push(a);
+                a += match item {
+                    Item::Branch { .. } if long[i] => 2,
+                    _ => 1,
+                };
+            }
+            addr.push(a);
+            let label_addr =
+                |l: Label| -> i64 { 4 * addr[self.label_pos[l.0]] as i64 };
+
+            let mut changed = false;
+            for (i, item) in self.items.iter().enumerate() {
+                if let Item::Branch { target, .. } = item {
+                    if !long[i] {
+                        let off = label_addr(*target) - 4 * addr[i] as i64;
+                        if !(-4096..=4094).contains(&off) {
+                            long[i] = true;
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            if changed {
+                continue;
+            }
+
+            // Emit.
+            let mut out = Vec::with_capacity(a);
+            for (i, item) in self.items.iter().enumerate() {
+                let pc = 4 * addr[i] as i64;
+                match *item {
+                    Item::Instr(ins) => out.push(ins),
+                    Item::Jump { rd, target } => {
+                        let off = label_addr(target) - pc;
+                        out.push(Instr::Jal { rd, offset: off as i32 });
+                    }
+                    Item::Branch { op, rs1, rs2, target } => {
+                        let off = label_addr(target) - pc;
+                        if long[i] {
+                            out.push(Instr::Branch {
+                                op: invert(op),
+                                rs1,
+                                rs2,
+                                offset: 8,
+                            });
+                            out.push(Instr::Jal { rd: reg::ZERO, offset: (off - 4) as i32 });
+                        } else {
+                            out.push(Instr::Branch { op, rs1, rs2, offset: off as i32 });
+                        }
+                    }
+                }
+            }
+            return out;
+        }
+    }
+
+    /// Assemble and encode into machine words.
+    pub fn assemble_words(&mut self) -> Vec<u32> {
+        crate::isa::encode::encode_program(&self.assemble())
+    }
+
+    /// Current item count (upper bound on instruction index).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if no instructions were emitted.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+fn invert(op: BranchOp) -> BranchOp {
+    match op {
+        BranchOp::Beq => BranchOp::Bne,
+        BranchOp::Bne => BranchOp::Beq,
+        BranchOp::Blt => BranchOp::Bge,
+        BranchOp::Bge => BranchOp::Blt,
+        BranchOp::Bltu => BranchOp::Bgeu,
+        BranchOp::Bgeu => BranchOp::Bltu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Core, CoreConfig, ExitReason};
+
+    fn run(asm: &mut Asm) -> Core {
+        let prog = asm.assemble();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 16, ..Default::default() }, prog, 0);
+        assert_eq!(core.run(10_000_000), ExitReason::Ecall);
+        core
+    }
+
+    #[test]
+    fn countdown_loop() {
+        let mut a = Asm::new();
+        a.li(reg::T0, 10).li(reg::T1, 0);
+        let top = a.here("loop");
+        a.add(reg::T1, reg::T1, reg::T0);
+        a.addi(reg::T0, reg::T0, -1);
+        a.bne(reg::T0, reg::ZERO, top);
+        a.halt();
+        let core = run(&mut a);
+        assert_eq!(core.regs[reg::T1 as usize], 55);
+    }
+
+    #[test]
+    fn li_splits_large_immediates() {
+        for imm in [0, 1, -1, 2047, -2048, 2048, -2049, 0x12345678, i32::MIN, i32::MAX, -0x800_0000]
+        {
+            let mut a = Asm::new();
+            a.li(reg::A0, imm);
+            a.halt();
+            let core = run(&mut a);
+            assert_eq!(core.regs[reg::A0 as usize] as i32, imm, "imm {imm:#x}");
+        }
+    }
+
+    #[test]
+    fn forward_references_resolve() {
+        let mut a = Asm::new();
+        let end = a.label("end");
+        a.li(reg::A0, 1);
+        a.j(end);
+        a.li(reg::A0, 2); // skipped
+        a.bind(end);
+        a.halt();
+        let core = run(&mut a);
+        assert_eq!(core.regs[reg::A0 as usize], 1);
+    }
+
+    #[test]
+    fn branch_relaxation_over_4k() {
+        // A conditional branch across > 1024 instructions must relax.
+        let mut a = Asm::new();
+        let far = a.label("far");
+        a.li(reg::A0, 5);
+        a.beq(reg::A0, reg::A0, far); // taken, out of short range
+        for _ in 0..2000 {
+            a.addi(reg::A1, reg::A1, 1); // must be skipped
+        }
+        a.bind(far);
+        a.halt();
+        let core = run(&mut a);
+        assert_eq!(core.regs[reg::A1 as usize], 0, "relaxed branch must skip the filler");
+    }
+
+    #[test]
+    fn call_ret() {
+        let mut a = Asm::new();
+        let f = a.label("f");
+        a.li(reg::A0, 0);
+        a.call(f);
+        a.call(f);
+        a.halt();
+        a.bind(f);
+        a.addi(reg::A0, reg::A0, 7);
+        a.ret();
+        let core = run(&mut a);
+        assert_eq!(core.regs[reg::A0 as usize], 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "never bound")]
+    fn unbound_label_panics() {
+        let mut a = Asm::new();
+        let l = a.label("nowhere");
+        a.j(l);
+        a.assemble();
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns the register file")]
+    fn nn_mac_register_group_checked() {
+        let mut a = Asm::new();
+        a.nn_mac(MacMode::W2, reg::A0, 30, reg::A1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Micro-benchmark harness used by `benches/*.rs` (offline environment —
+//! criterion is not in the vendored crate set). Reports min/mean/p50/max
+//! over timed iterations after warm-up, in criterion-like one-line format.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall times.
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    /// Mean per-iteration time.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Median per-iteration time.
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    /// Minimum per-iteration time.
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    /// Maximum per-iteration time.
+    pub fn max(&self) -> Duration {
+        *self.samples.iter().max().unwrap()
+    }
+}
+
+/// Time `f` for `iters` measured iterations (plus one warm-up) and print
+/// a one-line summary. Returns the stats for further reporting.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let s = Stats { name: name.to_string(), samples };
+    println!(
+        "bench {:<44} iters {:>3}  min {:>12?}  mean {:>12?}  p50 {:>12?}  max {:>12?}",
+        s.name,
+        iters,
+        s.min(),
+        s.mean(),
+        s.median(),
+        s.max()
+    );
+    s
+}
+
+/// Convenience: benchmark returning a value (value of last call returned).
+pub fn bench_val<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> (Stats, T) {
+    let mut last = None;
+    let stats = bench(name, iters, || {
+        last = Some(f());
+    });
+    (stats, last.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let s = bench("noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.min() <= s.mean() && s.mean() <= s.max());
+    }
+
+    #[test]
+    fn bench_val_returns_value() {
+        let (_, v) = bench_val("val", 3, || 42);
+        assert_eq!(v, 42);
+    }
+}

@@ -1,0 +1,297 @@
+//! The evaluation coordinator — the L3 orchestration layer of the
+//! co-design framework (paper Fig. 5).
+//!
+//! DSE configurations flow through a bounded job queue (backpressure)
+//! into a worker pool; each worker quantizes the model under its
+//! configuration (CPU-bound), obtains accuracy from the shared
+//! [`AccuracyEval`] backend (the batched PJRT artifact, or the host
+//! reference when artifacts are absent) and composes cycle/memory cost
+//! from the per-layer [`CycleModel`]. Results are cached by
+//! configuration so repeated sweeps (Fig. 6 → Fig. 8 reuse) are free.
+
+use crate::dse::cycles::CycleModel;
+use crate::dse::{total_mac_instructions, Config, EvalPoint};
+use crate::models::format::LoadedModel;
+use crate::models::infer::QModel;
+use crate::models::synthetic::Dataset;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+
+/// Accuracy-evaluation backend.
+pub trait AccuracyEval: Send {
+    /// Top-1 accuracy of `qm` over the first `n` test samples.
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32>;
+    /// Backend label (metrics/logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Host-reference evaluator: the Rust integer forward pass. Always
+/// available (no artifacts needed); slower than the PJRT path.
+pub struct HostEval {
+    /// Evaluation set.
+    pub test: Dataset,
+}
+
+impl AccuracyEval for HostEval {
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32> {
+        let n = n.min(self.test.images.len());
+        let mut correct = 0usize;
+        for (img, &label) in self.test.images.iter().zip(&self.test.labels).take(n) {
+            if crate::models::infer::qpredict(qm, img) == label {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / n as f32)
+    }
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+/// PJRT evaluator: batched inference through the AOT model artifact.
+pub struct PjrtEval {
+    /// PJRT session (executable cache inside).
+    pub session: crate::runtime::Session,
+    /// Evaluation set.
+    pub test: Dataset,
+    /// Artifact batch size.
+    pub batch: usize,
+}
+
+// SAFETY: the `xla` crate's client/executable handles are raw C
+// pointers (hence !Send by default), but the PJRT CPU plugin has no
+// thread affinity and the coordinator serialises every access through
+// its evaluator Mutex — the value is only ever *used* by one thread at
+// a time.
+unsafe impl Send for PjrtEval {}
+
+impl AccuracyEval for PjrtEval {
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32> {
+        let n = n.min(self.test.images.len());
+        crate::runtime::evaluate_accuracy(
+            &mut self.session,
+            qm,
+            &self.test.images[..n],
+            &self.test.labels[..n],
+            self.batch,
+        )
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Configurations submitted.
+    pub submitted: AtomicU64,
+    /// Cache hits.
+    pub cache_hits: AtomicU64,
+    /// Accuracy evaluations executed.
+    pub acc_evals: AtomicU64,
+}
+
+/// The evaluation coordinator.
+pub struct Coordinator {
+    /// Loaded model (spec + trained params + scales + test set).
+    pub model: LoadedModel,
+    /// Per-layer cycle table (ISS-measured).
+    pub cycle_model: CycleModel,
+    /// Model analysis (computed once).
+    pub analysis: crate::models::ModelAnalysis,
+    /// Per-(layer, width) quantization cache: configs assemble from
+    /// these instead of re-running the MSE scale search (§Perf
+    /// iteration 2 — the quantize step falls out of the sweep hot path).
+    qcache: Vec<[crate::nn::QLayer; 3]>,
+    evaluator: Mutex<Box<dyn AccuracyEval>>,
+    cache: Mutex<HashMap<Config, f32>>,
+    /// Worker threads for the sweep.
+    pub workers: usize,
+    /// Bounded-queue capacity (backpressure).
+    pub queue_cap: usize,
+    /// Metrics.
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Build a coordinator; measures the cycle model up front.
+    pub fn new(model: LoadedModel, evaluator: Box<dyn AccuracyEval>, workers: usize) -> Self {
+        let analysis = crate::models::analyze(&model.spec);
+        let cycle_model =
+            CycleModel::build(&analysis, crate::sim::MacUnitConfig::full(), 0xC1C1E);
+        let qcache = analysis
+            .layers
+            .iter()
+            .zip(&model.params)
+            .map(|(info, p)| {
+                [8u32, 4, 2].map(|b| {
+                    crate::nn::quantize_layer(
+                        &p.w,
+                        &p.b,
+                        model.sites[info.site_in],
+                        model.sites[info.site_out],
+                        b,
+                    )
+                })
+            })
+            .collect();
+        Coordinator {
+            model,
+            cycle_model,
+            analysis,
+            qcache,
+            evaluator: Mutex::new(evaluator),
+            cache: Mutex::new(HashMap::new()),
+            workers: workers.max(1),
+            queue_cap: 64,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Assemble a quantized model from the per-(layer, width) cache.
+    pub fn quantized(&self, cfg: &Config) -> QModel {
+        let layers = cfg
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let slot = match b {
+                    8 => 0,
+                    4 => 1,
+                    2 => 2,
+                    _ => panic!("unsupported width {b}"),
+                };
+                self.qcache[i][slot].clone()
+            })
+            .collect();
+        QModel {
+            spec: self.model.spec.clone(),
+            analysis: self.analysis.clone(),
+            layers,
+            sites: self.model.sites.clone(),
+            bits: cfg.clone(),
+        }
+    }
+
+    /// Quantize + evaluate one configuration (cached).
+    pub fn evaluate(&self, cfg: &Config, n_eval: usize) -> Result<EvalPoint> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let cached = self.cache.lock().unwrap().get(cfg).copied();
+        let accuracy = match cached {
+            Some(a) => {
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                a
+            }
+            None => {
+                let qm = self.quantized(cfg);
+                self.metrics.acc_evals.fetch_add(1, Ordering::Relaxed);
+                let a = self.evaluator.lock().unwrap().evaluate(&qm, n_eval)?;
+                self.cache.lock().unwrap().insert(cfg.clone(), a);
+                a
+            }
+        };
+        let cost = self.cycle_model.config_total(cfg);
+        Ok(EvalPoint {
+            config: cfg.clone(),
+            accuracy,
+            mac_instructions: total_mac_instructions(&self.analysis, cfg),
+            cycles: cost.cycles,
+            mem_accesses: cost.mem_accesses,
+        })
+    }
+
+    /// Evaluate a sweep of configurations through the worker pool
+    /// (bounded queue → workers → ordered result collection).
+    pub fn run_sweep(&self, configs: &[Config], n_eval: usize) -> Result<Vec<EvalPoint>> {
+        let (job_tx, job_rx) = sync_channel::<(usize, Config)>(self.queue_cap);
+        let job_rx = Mutex::new(job_rx);
+        let results: Mutex<Vec<Option<EvalPoint>>> = Mutex::new(vec![None; configs.len()]);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                s.spawn(|| loop {
+                    let job = job_rx.lock().unwrap().recv();
+                    let Ok((i, cfg)) = job else { break };
+                    match self.evaluate(&cfg, n_eval) {
+                        Ok(p) => results.lock().unwrap()[i] = Some(p),
+                        Err(e) => {
+                            let mut fe = first_err.lock().unwrap();
+                            if fe.is_none() {
+                                *fe = Some(e);
+                            }
+                        }
+                    }
+                });
+            }
+            // Producer: the bounded send blocks when workers fall behind
+            // (the backpressure the architecture calls for).
+            for (i, cfg) in configs.iter().enumerate() {
+                if first_err.lock().unwrap().is_some() {
+                    break;
+                }
+                job_tx.send((i, cfg.clone())).expect("workers alive");
+            }
+            drop(job_tx);
+        });
+
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(results.into_inner().unwrap().into_iter().map(|p| p.unwrap()).collect())
+    }
+
+    /// Cache size (distinct configurations evaluated).
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::format::load_or_fallback;
+    use std::path::Path;
+
+    fn tiny_coordinator() -> Coordinator {
+        // Fallback model (no artifacts needed) + host evaluator.
+        let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", 11).unwrap();
+        let test = model.test.clone();
+        Coordinator::new(model, Box::new(HostEval { test }), 2)
+    }
+
+    #[test]
+    fn sweep_returns_ordered_points_and_caches() {
+        let c = tiny_coordinator();
+        let n = crate::models::analyze(&c.model.spec).layers.len();
+        let configs: Vec<Vec<u32>> =
+            vec![vec![8; n], vec![4; n], vec![2; n], vec![8; n] /* dup */];
+        let pts = c.run_sweep(&configs, 8).unwrap();
+        assert_eq!(pts.len(), 4);
+        // Order preserved.
+        assert_eq!(pts[0].config, configs[0]);
+        assert_eq!(pts[3].config, configs[3]);
+        // The duplicate hits the cache.
+        assert_eq!(c.cache_len(), 3);
+        assert!(c.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        // Cost ordering: 2-bit config must be cheapest.
+        assert!(pts[2].cycles < pts[0].cycles);
+        assert!(pts[2].mac_instructions < pts[0].mac_instructions);
+    }
+
+    #[test]
+    fn accuracy_degrades_monotonically_in_aggregate() {
+        // 8-bit should be at least as accurate as 2-bit on the fallback
+        // (random-weights) model is NOT guaranteed — use a trained-free
+        // structural check instead: accuracies are valid probabilities.
+        let c = tiny_coordinator();
+        let n = crate::models::analyze(&c.model.spec).layers.len();
+        let pts = c.run_sweep(&[vec![8; n], vec![2; n]], 8).unwrap();
+        for p in pts {
+            assert!((0.0..=1.0).contains(&p.accuracy));
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-layer cycle model: every (layer, kernel-variant) pair is measured
+//! **once** on the cycle-accurate ISS and cached; configuration costs
+//! compose from the table. This mirrors the paper's methodology — layer
+//! cycle counts are data-independent (the kernels have no data-dependent
+//! control flow except the requant clamps, a ±2-cycle effect), so one
+//! Verilator-style measurement per layer/mode suffices.
+
+use crate::isa::MacMode;
+use crate::kernels::conv::ConvSpec;
+use crate::kernels::dense::DenseSpec;
+use crate::kernels::depthwise::DwSpec;
+use crate::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
+use crate::models::{ModelAnalysis, QKind, QLayerInfo};
+use crate::nn::quant::Requant;
+use crate::rng::Rng;
+use crate::sim::MacUnitConfig;
+
+/// Measured cost of one layer kernel execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCost {
+    /// Core cycles.
+    pub cycles: u64,
+    /// Loads + stores.
+    pub mem_accesses: u64,
+    /// Retired instructions.
+    pub instret: u64,
+    /// MACs retired.
+    pub macs: u64,
+}
+
+impl LayerCost {
+    fn from_perf(p: &crate::sim::PerfCounters) -> Self {
+        LayerCost {
+            cycles: p.cycles,
+            mem_accesses: p.mem_accesses(),
+            instret: p.instret,
+            macs: p.macs,
+        }
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, o: &LayerCost) -> LayerCost {
+        LayerCost {
+            cycles: self.cycles + o.cycles,
+            mem_accesses: self.mem_accesses + o.mem_accesses,
+            instret: self.instret + o.instret,
+            macs: self.macs + o.macs,
+        }
+    }
+}
+
+/// Measure one layer under a kernel variant on the ISS.
+///
+/// `mode = None` measures the scalar baseline. Timing is
+/// value-independent, so operands are random at the right shapes.
+pub fn measure_layer(
+    info: &QLayerInfo,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    seed: u64,
+) -> LayerCost {
+    let mut rng = Rng::new(seed);
+    let bits = mode.map_or(8, |m| m.weight_bits());
+    let rq = Requant::from_real_scale(0.01);
+    match info.kind {
+        QKind::Conv => {
+            // Pre-padded input; channel-pad to 4 for the mode kernels
+            // (exactly what `sim_exec` does at model level).
+            let cin = if mode.is_some() {
+                info.in_shape[2].next_multiple_of(4)
+            } else {
+                info.in_shape[2]
+            };
+            let (h, w) = (info.in_shape[0] + 2 * info.pad, info.in_shape[1] + 2 * info.pad);
+            let cout = info.out_shape[2];
+            let spec = ConvSpec { h, w, cin, cout, k: info.k, stride: info.stride, rq, relu: info.relu };
+            let acts: Vec<i8> = (0..h * w * cin).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> =
+                (0..cout * info.k * info.k * cin).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..cout).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, perf) = run_conv_with(spec, mode, mac, &acts, &wts, &bias);
+            LayerCost::from_perf(&perf)
+        }
+        QKind::Depthwise => {
+            let c = info.in_shape[2];
+            let (h, w) = (info.in_shape[0] + 2 * info.pad, info.in_shape[1] + 2 * info.pad);
+            let spec = DwSpec { h, w, c, k: info.k, stride: info.stride, rq, relu: info.relu };
+            let acts: Vec<i8> = (0..h * w * c).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> = (0..c * info.k * info.k).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..c).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, perf) = run_depthwise_with(spec, mode, mac, &acts, &wts, &bias);
+            LayerCost::from_perf(&perf)
+        }
+        QKind::Dense => {
+            let (i, o) = (info.in_shape[2], info.out_shape[2]);
+            let spec = DenseSpec { in_dim: i, out_dim: o, rq, relu: info.relu, out_i32: info.is_last };
+            let acts: Vec<i8> = (0..i).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> = (0..i * o).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..o).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, _, perf) = run_dense_with(spec, mode, mac, &acts, &wts, &bias);
+            LayerCost::from_perf(&perf)
+        }
+    }
+}
+
+/// The per-model cycle table: baseline + one entry per mode per layer.
+#[derive(Debug, Clone)]
+pub struct CycleModel {
+    /// Baseline (scalar RV32IM kernel) cost per layer.
+    pub baseline: Vec<LayerCost>,
+    /// Extended-kernel cost per layer for widths 8 / 4 / 2.
+    pub modes: Vec<[LayerCost; 3]>,
+}
+
+fn width_index(bits: u32) -> usize {
+    match bits {
+        8 => 0,
+        4 => 1,
+        2 => 2,
+        _ => panic!("unsupported width {bits}"),
+    }
+}
+
+impl CycleModel {
+    /// Measure every layer of a model under all four kernel variants.
+    pub fn build(analysis: &ModelAnalysis, mac: MacUnitConfig, seed: u64) -> Self {
+        let mut baseline = Vec::with_capacity(analysis.layers.len());
+        let mut modes = Vec::with_capacity(analysis.layers.len());
+        for (i, info) in analysis.layers.iter().enumerate() {
+            let s = seed.wrapping_add(i as u64 * 1313);
+            baseline.push(measure_layer(info, None, mac, s));
+            modes.push([
+                measure_layer(info, Some(MacMode::W8), mac, s ^ 1),
+                measure_layer(info, Some(MacMode::W4), mac, s ^ 2),
+                measure_layer(info, Some(MacMode::W2), mac, s ^ 3),
+            ]);
+        }
+        CycleModel { baseline, modes }
+    }
+
+    /// Total baseline cost.
+    pub fn baseline_total(&self) -> LayerCost {
+        self.baseline.iter().fold(LayerCost::default(), |a, b| a.add(b))
+    }
+
+    /// Total cost of a mixed-precision configuration.
+    pub fn config_total(&self, cfg: &[u32]) -> LayerCost {
+        assert_eq!(cfg.len(), self.modes.len());
+        cfg.iter()
+            .enumerate()
+            .map(|(i, &b)| self.modes[i][width_index(b)])
+            .fold(LayerCost::default(), |a, b| a.add(&b))
+    }
+
+    /// Per-layer cost of a configuration.
+    pub fn layer_cost(&self, layer: usize, bits: u32) -> LayerCost {
+        self.modes[layer][width_index(bits)]
+    }
+
+    /// End-to-end speedup of a configuration over the baseline.
+    pub fn speedup(&self, cfg: &[u32]) -> f64 {
+        self.baseline_total().cycles as f64 / self.config_total(cfg).cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{analyze, zoo};
+
+    #[test]
+    fn lenet_cycle_model_ordering() {
+        let a = analyze(&zoo::lenet5());
+        let cm = CycleModel::build(&a, MacUnitConfig::full(), 42);
+        let n = a.layers.len();
+        let base = cm.baseline_total();
+        let all8 = cm.config_total(&vec![8; n]);
+        let all4 = cm.config_total(&vec![4; n]);
+        let all2 = cm.config_total(&vec![2; n]);
+        assert!(base.cycles > all8.cycles, "{} vs {}", base.cycles, all8.cycles);
+        assert!(all8.cycles > all4.cycles);
+        assert!(all4.cycles > all2.cycles);
+        // Memory accesses shrink monotonically too (Fig. 4).
+        assert!(base.mem_accesses > all8.mem_accesses);
+        assert!(all8.mem_accesses > all2.mem_accesses);
+        // Mode kernels retire at least the baseline's MACs: packed words
+        // are zero-padded at group boundaries and conv channels pad to 4,
+        // so the packed lanes over-count (bounded by the padding factor).
+        assert!(all2.macs >= base.macs);
+        assert!(all2.macs < 4 * base.macs, "{} vs {}", all2.macs, base.macs);
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let a = analyze(&zoo::lenet5());
+        let c1 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7);
+        let c2 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7);
+        assert_eq!(c1.cycles, c2.cycles);
+        assert_eq!(c1.mem_accesses, c2.mem_accesses);
+    }
+}

@@ -1,0 +1,65 @@
+//! Pareto-front extraction for the Fig.-6 accuracy-vs-cost spaces.
+
+use super::EvalPoint;
+
+/// Indices of the non-dominated points: maximize accuracy, minimize
+/// `cost(point)`. A point is dominated if another is at least as good
+/// on both axes and strictly better on one.
+pub fn pareto_front(points: &[EvalPoint], cost: impl Fn(&EvalPoint) -> u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // Sort by cost ascending, accuracy descending.
+    idx.sort_by(|&a, &b| {
+        cost(&points[a])
+            .cmp(&cost(&points[b]))
+            .then(points[b].accuracy.partial_cmp(&points[a].accuracy).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_acc = f32::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].accuracy > best_acc {
+            front.push(i);
+            best_acc = points[i].accuracy;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(acc: f32, cycles: u64) -> EvalPoint {
+        EvalPoint { config: vec![], accuracy: acc, mac_instructions: cycles, cycles, mem_accesses: 0 }
+    }
+
+    #[test]
+    fn extracts_non_dominated() {
+        let pts = vec![p(0.9, 100), p(0.8, 50), p(0.85, 200), p(0.7, 10), p(0.9, 90)];
+        let front = pareto_front(&pts, |e| e.cycles);
+        let set: Vec<(f32, u64)> = front.iter().map(|&i| (pts[i].accuracy, pts[i].cycles)).collect();
+        // (0.7,10) (0.8,50) (0.9,90) are the front; (0.9,100) and
+        // (0.85,200) are dominated.
+        assert_eq!(set, vec![(0.7, 10), (0.8, 50), (0.9, 90)]);
+    }
+
+    #[test]
+    fn front_property_no_dominated_member() {
+        let mut rng = crate::rng::Rng::new(9);
+        let pts: Vec<EvalPoint> =
+            (0..200).map(|_| p(rng.f32(), rng.below(10_000))).collect();
+        let front = pareto_front(&pts, |e| e.cycles);
+        for &i in &front {
+            for q in &pts {
+                let dominated = q.accuracy >= pts[i].accuracy
+                    && q.cycles <= pts[i].cycles
+                    && (q.accuracy > pts[i].accuracy || q.cycles < pts[i].cycles);
+                assert!(!dominated, "front point {i} is dominated");
+            }
+        }
+        // Front is sorted by cost and strictly increasing in accuracy.
+        for w in front.windows(2) {
+            assert!(pts[w[0]].cycles <= pts[w[1]].cycles);
+            assert!(pts[w[0]].accuracy < pts[w[1]].accuracy);
+        }
+    }
+}

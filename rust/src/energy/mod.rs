@@ -1,0 +1,163 @@
+//! Power / area / energy models for the FPGA (Virtex-7) and ASIC
+//! (ASAP7 7 nm) flows — the reproduction of the paper's Vivado /
+//! Synopsys-DC numbers (Table 4) and the Table-5 SOTA comparison.
+//!
+//! Substitution (DESIGN.md §5): we cannot synthesize RTL here, so each
+//! platform is an analytical model *calibrated to the paper's published
+//! operating points* (clock frequencies, power, resources). Our own
+//! measured cycle/op counts drive the model, so every ratio the paper
+//! derives (energy-efficiency gain, overheads) is reproduced from our
+//! measurements, with the published power/area as fixed anchors.
+
+pub mod sota;
+
+/// One synthesized platform operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    /// Display name.
+    pub name: &'static str,
+    /// Core clock (Hz).
+    pub core_clock_hz: f64,
+    /// Multi-pumped MAC-unit clock (Hz) — equals the core clock on the
+    /// baseline design.
+    pub unit_clock_hz: f64,
+    /// Total power at the operating point (W).
+    pub power_w: f64,
+    /// Area: LUTs (FPGA) or mm² (ASIC) — see `area_label`.
+    pub area: f64,
+    /// Area unit label.
+    pub area_label: &'static str,
+    /// Flip-flops (FPGA only; 0 for ASIC).
+    pub ffs: f64,
+    /// DSP blocks (FPGA only).
+    pub dsps: f64,
+}
+
+/// Paper Table 4 anchors: baseline Ibex on Virtex-7 (50 MHz).
+pub const FPGA_BASELINE: Platform = Platform {
+    name: "fpga-baseline-ibex",
+    core_clock_hz: 50e6,
+    unit_clock_hz: 50e6,
+    power_w: 0.256, // 256 mW (28% leakage)
+    area: 5_100.0,  // LUTs
+    area_label: "LUT",
+    ffs: 5_500.0,
+    dsps: 4.0,
+};
+
+/// Modified Ibex on Virtex-7 (50 MHz core / 100 MHz multi-pumped unit).
+pub const FPGA_MODIFIED: Platform = Platform {
+    name: "fpga-modified-ibex",
+    core_clock_hz: 50e6,
+    unit_clock_hz: 100e6,
+    power_w: 0.261, // 261 mW (+2%)
+    area: 6_400.0,
+    area_label: "LUT",
+    ffs: 7_400.0,
+    dsps: 4.0,
+};
+
+/// Baseline Ibex on ASAP7 (250 MHz).
+pub const ASIC_BASELINE: Platform = Platform {
+    name: "asic-baseline-ibex",
+    core_clock_hz: 250e6,
+    unit_clock_hz: 250e6,
+    power_w: 0.43e-3, // 0.43 mW
+    area: 0.028,
+    area_label: "mm2",
+    ffs: 0.0,
+    dsps: 0.0,
+};
+
+/// Modified Ibex on ASAP7 (250 MHz core / 500 MHz unit).
+pub const ASIC_MODIFIED: Platform = Platform {
+    name: "asic-modified-ibex",
+    core_clock_hz: 250e6,
+    unit_clock_hz: 500e6,
+    power_w: 0.58e-3, // 0.58 mW (+25.8%)
+    area: 0.038,
+    area_label: "mm2",
+    ffs: 0.0,
+    dsps: 0.0,
+};
+
+/// An energy/performance report for one (platform, workload) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyReport {
+    /// Execution time (s).
+    pub time_s: f64,
+    /// Energy (J).
+    pub energy_j: f64,
+    /// Operations counted (2 per MAC, the GOPs convention of Table 4/5).
+    pub ops: f64,
+    /// Throughput (GOP/s).
+    pub gops: f64,
+    /// Energy efficiency (GOP/s/W).
+    pub gops_per_w: f64,
+}
+
+impl Platform {
+    /// Evaluate a workload of `macs` MAC operations taking `cycles`
+    /// core-clock cycles on this platform (ops = 2·MACs, the
+    /// multiply+accumulate counting of the paper's GOPs figures).
+    pub fn evaluate(&self, macs: u64, cycles: u64) -> EnergyReport {
+        let time_s = cycles as f64 / self.core_clock_hz;
+        let energy_j = time_s * self.power_w;
+        let ops = 2.0 * macs as f64;
+        let gops = ops / time_s / 1e9;
+        EnergyReport { time_s, energy_j, ops, gops, gops_per_w: gops / self.power_w }
+    }
+
+    /// Area overhead of `self` over `base`, as a fraction.
+    pub fn area_overhead(&self, base: &Platform) -> f64 {
+        self.area / base.area - 1.0
+    }
+
+    /// Power overhead of `self` over `base`, as a fraction.
+    pub fn power_overhead(&self, base: &Platform) -> f64 {
+        self.power_w / base.power_w - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Calibration check: the paper's own Table-4 LeNet row must fall
+    /// out of the model. LeNet: 423 K MACs, 10.4 M baseline cycles at
+    /// 250 MHz / 0.43 mW → 47.1 GOP/s/W.
+    #[test]
+    fn asic_baseline_reproduces_table4_lenet() {
+        let r = ASIC_BASELINE.evaluate(423_000, 10_400_000);
+        assert!((r.gops_per_w - 47.1).abs() / 47.1 < 0.02, "got {}", r.gops_per_w);
+    }
+
+    /// Same check on the FPGA point: 50 MHz / 256 mW → 0.016 GOP/s/W.
+    #[test]
+    fn fpga_baseline_reproduces_table4_lenet() {
+        let r = FPGA_BASELINE.evaluate(423_000, 10_400_000);
+        assert!((r.gops_per_w - 0.016).abs() / 0.016 < 0.05, "got {}", r.gops_per_w);
+    }
+
+    /// Paper overhead claims: ~25% LUT/FF increase, ~2% FPGA power,
+    /// ~26% ASIC area. (The paper *states* 25.8% ASIC power, but its own
+    /// Table 4 values 0.43 → 0.58 mW give +34.9%; we anchor on the table.)
+    #[test]
+    fn overheads_match_paper() {
+        assert!((FPGA_MODIFIED.area_overhead(&FPGA_BASELINE) - 0.25).abs() < 0.03);
+        assert!((FPGA_MODIFIED.power_overhead(&FPGA_BASELINE) - 0.02).abs() < 0.01);
+        assert!((ASIC_MODIFIED.area_overhead(&ASIC_BASELINE) - 0.357).abs() < 0.01);
+        assert!((ASIC_MODIFIED.power_overhead(&ASIC_BASELINE) - 0.349).abs() < 0.005);
+    }
+
+    /// Energy-efficiency gain structure: with a speedup S and the power
+    /// ratio P, the efficiency gain is S/P — e.g. S = 13× on ASIC gives
+    /// ≈ 10.3×, the paper's ~11× regime.
+    #[test]
+    fn efficiency_gain_tracks_speedup_over_power() {
+        let base = ASIC_BASELINE.evaluate(1_000_000, 20_000_000);
+        let fast = ASIC_MODIFIED.evaluate(1_000_000, 20_000_000 / 13);
+        let gain = fast.gops_per_w / base.gops_per_w;
+        assert!(gain > 9.0 && gain < 11.0, "gain {gain}");
+    }
+}

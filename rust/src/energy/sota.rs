@@ -1,0 +1,126 @@
+//! Table 5: comparison against state-of-the-art mixed-precision /
+//! ISA-extension solutions. The competitor rows are literature constants
+//! transcribed from the paper's Table 5; our row is computed from the
+//! measured cycles/MACs through the [`super::Platform`] models.
+
+/// One comparison row.
+#[derive(Debug, Clone)]
+pub struct SotaEntry {
+    /// Work label (venue'year).
+    pub work: &'static str,
+    /// Process node.
+    pub platform: &'static str,
+    /// Supported precisions.
+    pub precision: &'static str,
+    /// Clock frequency (MHz).
+    pub clk_mhz: f64,
+    /// Area description.
+    pub area: &'static str,
+    /// Power (mW).
+    pub power_mw: f64,
+    /// Peak throughput (GOPs); a range is (lo, hi).
+    pub gops: (f64, f64),
+    /// Energy efficiency (GOPs/W); a range is (lo, hi).
+    pub gops_per_w: (f64, f64),
+}
+
+/// The paper's Table-5 competitor rows (literature constants).
+pub fn competitors() -> Vec<SotaEntry> {
+    vec![
+        SotaEntry {
+            work: "TC'24 [14]",
+            platform: "90nm",
+            precision: "32 bit",
+            clk_mhz: 100.0,
+            area: "6.44 mm2",
+            power_mw: 5.8,
+            gops: (0.23, 0.23),
+            gops_per_w: (38.8, 38.8),
+        },
+        SotaEntry {
+            work: "Mix-GEMM HPCA'23 [3]",
+            platform: "22nm",
+            precision: "2-8 bit",
+            clk_mhz: 1200.0,
+            area: "0.014 mm2",
+            power_mw: 9.9,
+            gops: (11.9, 11.9),
+            gops_per_w: (500.0, 1166.0),
+        },
+        SotaEntry {
+            work: "ISVLSI'20 [10]",
+            platform: "22nm",
+            precision: "2/4/8 bit",
+            clk_mhz: 250.0,
+            area: "0.002 mm2",
+            power_mw: 5.5,
+            gops: (3.3, 3.3),
+            gops_per_w: (200.0, 600.0),
+        },
+        SotaEntry {
+            work: "UNPU JSSC'18 [12]",
+            platform: "65nm",
+            precision: "1-16 bit",
+            clk_mhz: 2500.0,
+            area: "16 mm2",
+            power_mw: 288.0,
+            gops: (514.2, 514.2),
+            gops_per_w: (1750.0, 1750.0),
+        },
+        SotaEntry {
+            work: "TCAD'20 [13]",
+            platform: "65nm",
+            precision: "16 bit",
+            clk_mhz: 200.0,
+            area: "11.47 mm2",
+            power_mw: 805.0,
+            gops: (288.0, 288.0),
+            gops_per_w: (357.8, 357.8),
+        },
+        SotaEntry {
+            work: "XpulpNN DATE'20 [5]",
+            platform: "22nm",
+            precision: "2/4/8 bit",
+            clk_mhz: 600.0,
+            area: "0.04 mm2",
+            power_mw: 43.5,
+            gops: (47.9, 47.9),
+            gops_per_w: (700.0, 1100.0),
+        },
+    ]
+}
+
+/// Build our Table-5 row from measured throughput/efficiency ranges
+/// (lo = <1% accuracy loss, hi = up to 5%).
+pub fn ours(gops_lo: f64, gops_hi: f64, eff_lo: f64, eff_hi: f64) -> SotaEntry {
+    SotaEntry {
+        work: "Ours",
+        platform: "7nm",
+        precision: "2/4/8 bit",
+        clk_mhz: 250.0,
+        area: "0.038 mm2",
+        power_mw: 0.58,
+        gops: (gops_lo, gops_hi),
+        gops_per_w: (eff_lo, eff_hi),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_has_all_competitors() {
+        let c = competitors();
+        assert_eq!(c.len(), 6);
+        assert!(c.iter().any(|e| e.work.contains("Mix-GEMM")));
+        assert!(c.iter().any(|e| e.work.contains("XpulpNN")));
+    }
+
+    #[test]
+    fn ours_row_shape() {
+        let o = ours(0.24, 0.85, 415.0, 1470.0);
+        assert_eq!(o.platform, "7nm");
+        assert!(o.gops_per_w.0 < o.gops_per_w.1);
+    }
+}

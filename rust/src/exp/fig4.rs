@@ -1,0 +1,94 @@
+//! Fig. 4 — per-layer memory-access reduction on MobileNetV1 delivered
+//! by the new instructions, for three mixed-precision models of
+//! increasing aggressiveness (<1%, ~2%, ~5% accuracy loss).
+
+use super::ExpOpts;
+use crate::dse::cycles::CycleModel;
+use crate::json::Json;
+use crate::models::analyze;
+use anyhow::Result;
+
+/// Per-layer reductions for one configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigReduction {
+    /// Configuration label.
+    pub label: String,
+    /// Per-layer bit-widths.
+    pub bits: Vec<u32>,
+    /// Per-layer access reduction (fraction).
+    pub per_layer: Vec<f64>,
+    /// Average reduction across layers.
+    pub average: f64,
+}
+
+/// Representative configurations when no sweep selections are supplied:
+/// conservative (mostly 8/4), medium (4), aggressive (4/2) — mirroring
+/// the three models the paper examines.
+pub fn default_configs(n: usize) -> Vec<(String, Vec<u32>)> {
+    let mut conservative = vec![4u32; n];
+    conservative[0] = 8;
+    for i in 1..n / 3 {
+        conservative[i] = 8;
+    }
+    let mut medium = vec![4u32; n];
+    medium[0] = 8;
+    let mut aggressive = vec![2u32; n];
+    aggressive[0] = 8;
+    for i in 1..n / 4 {
+        aggressive[i] = 4;
+    }
+    vec![
+        ("<1% loss".to_string(), conservative),
+        ("~2% loss".to_string(), medium),
+        ("~5% loss".to_string(), aggressive),
+    ]
+}
+
+/// Run the Fig.-4 harness with explicit configurations (e.g. the Fig.-8
+/// selections) or the defaults.
+pub fn run_with(
+    opts: &ExpOpts,
+    configs: Option<Vec<(String, Vec<u32>)>>,
+) -> Result<(Vec<ConfigReduction>, Json)> {
+    let model = opts.load_model("mobilenet_v1")?;
+    let analysis = analyze(&model.spec);
+    let cm = CycleModel::build(&analysis, crate::sim::MacUnitConfig::full(), opts.seed);
+    let configs = configs.unwrap_or_else(|| default_configs(analysis.layers.len()));
+    let mut out = Vec::new();
+    for (label, bits) in configs {
+        let per_layer: Vec<f64> = (0..analysis.layers.len())
+            .map(|i| {
+                let base = cm.baseline[i].mem_accesses as f64;
+                let ext = cm.layer_cost(i, bits[i]).mem_accesses as f64;
+                1.0 - ext / base
+            })
+            .collect();
+        let average = per_layer.iter().sum::<f64>() / per_layer.len() as f64;
+        out.push(ConfigReduction { label, bits, per_layer, average });
+    }
+    println!("Fig. 4 — MobileNetV1 per-layer memory-access reduction");
+    for c in &out {
+        println!("  {}: average {:.1}%", c.label, c.average * 100.0);
+        let cells: Vec<String> =
+            c.per_layer.iter().map(|r| format!("{:.0}", r * 100.0)).collect();
+        println!("    per-layer %: [{}]", cells.join(" "));
+    }
+    let json = Json::Arr(
+        out.iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("label", Json::s(&c.label)),
+                    ("bits", Json::Arr(c.bits.iter().map(|&b| Json::i(b as i64)).collect())),
+                    ("per_layer", Json::nums(c.per_layer.iter().copied())),
+                    ("average", Json::Num(c.average)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((out, json))
+}
+
+/// Run with the default representative configurations.
+pub fn run(opts: &ExpOpts) -> Result<(Vec<ConfigReduction>, Json)> {
+    run_with(opts, None)
+}

@@ -1,0 +1,107 @@
+//! Fig. 6 — the accuracy-vs-MAC-instruction Pareto spaces from the
+//! mixed-precision DSE (gray points = all configurations, squares = the
+//! Pareto front, star = the float baseline).
+
+use super::ExpOpts;
+use crate::coordinator::Coordinator;
+use crate::dse::pareto::pareto_front;
+use crate::dse::{default_pinned, enumerate, EvalPoint};
+use crate::json::Json;
+use anyhow::Result;
+
+/// Sweep result for one model.
+pub struct Sweep {
+    /// Model name.
+    pub model: String,
+    /// Float baseline accuracy.
+    pub float_acc: f32,
+    /// Baseline MAC-instruction count (one mul per MAC).
+    pub baseline_instrs: u64,
+    /// Every evaluated point.
+    pub points: Vec<EvalPoint>,
+    /// Indices of the Pareto front (by MAC instructions).
+    pub front: Vec<usize>,
+    /// The coordinator (kept for downstream reuse, e.g. Fig. 8).
+    pub coordinator: Coordinator,
+}
+
+/// Run the DSE sweep for one model.
+pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
+    let coordinator = opts.coordinator(name)?;
+    let analysis = crate::models::analyze(&coordinator.model.spec);
+    let n = analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
+    let points = coordinator.run_sweep(&configs, opts.eval_n)?;
+    let front = pareto_front(&points, |p| p.mac_instructions);
+    let baseline_instrs =
+        analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
+    Ok(Sweep {
+        model: name.to_string(),
+        float_acc: coordinator.model.float_acc,
+        baseline_instrs,
+        points,
+        front,
+        coordinator,
+    })
+}
+
+/// Run the Fig.-6 harness over all four models.
+pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
+    let mut sweeps = Vec::new();
+    for name in super::MODEL_NAMES {
+        eprintln!("[fig6] sweeping {name} ({} configs, {} eval images)", opts.budget, opts.eval_n);
+        sweeps.push(sweep_model(opts, name)?);
+    }
+    let mut arr = Vec::new();
+    for s in &sweeps {
+        println!(
+            "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front",
+            s.model,
+            s.float_acc * 100.0,
+            s.points.len(),
+            s.front.len()
+        );
+        println!(
+            "{:>10} {:>8} {:>14} {:>10}  (front points)",
+            "acc(%)", "Δacc", "MAC instrs", "reduction"
+        );
+        for &i in &s.front {
+            let p = &s.points[i];
+            println!(
+                "{:>10.1} {:>8.2} {:>14} {:>9.1}%",
+                p.accuracy * 100.0,
+                (s.float_acc - p.accuracy) * 100.0,
+                p.mac_instructions,
+                (1.0 - p.mac_instructions as f64 / s.baseline_instrs as f64) * 100.0
+            );
+        }
+        arr.push(Json::obj(vec![
+            ("model", Json::s(&s.model)),
+            ("float_acc", Json::Num(s.float_acc as f64)),
+            ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
+            (
+                "points",
+                Json::Arr(
+                    s.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("acc", Json::Num(p.accuracy as f64)),
+                                ("mac_instrs", Json::i(p.mac_instructions as i64)),
+                                ("cycles", Json::i(p.cycles as i64)),
+                                (
+                                    "bits",
+                                    Json::Arr(
+                                        p.config.iter().map(|&b| Json::i(b as i64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
+        ]));
+    }
+    Ok((sweeps, Json::Arr(arr)))
+}

@@ -1,0 +1,111 @@
+//! Fig. 7 — per-Mode cycle breakdown on one dense layer (MobileNetV1's
+//! final classifier) and one convolution layer (the CIFAR-10 CNN's 2nd
+//! conv), decomposing the contribution of each optimisation:
+//! packing/parallelisation (Mode-1 technique), + multi-pumping (Mode-2),
+//! + soft SIMD (Mode-3), each evaluated at all three weight widths.
+
+use super::ExpOpts;
+use crate::dse::cycles::measure_layer;
+use crate::isa::MacMode;
+use crate::json::Json;
+use crate::models::{analyze, QKind, QLayerInfo};
+use crate::sim::MacUnitConfig;
+use anyhow::Result;
+
+/// Cycle measurements for one layer at one weight width.
+#[derive(Debug, Clone)]
+pub struct WidthRow {
+    /// Weight bits.
+    pub bits: u32,
+    /// Baseline scalar-kernel cycles.
+    pub baseline: u64,
+    /// Packing/parallelisation only (standalone Mode-1 technique).
+    pub packing: u64,
+    /// Packing + multi-pumping (standalone Mode-2).
+    pub multipump: u64,
+    /// Packing + multi-pumping + soft SIMD (full Mode-3 datapath).
+    pub soft_simd: u64,
+}
+
+/// Results for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerBreakdown {
+    /// Display label.
+    pub label: String,
+    /// Per-width rows.
+    pub rows: Vec<WidthRow>,
+}
+
+fn breakdown(label: &str, info: &QLayerInfo, seed: u64) -> LayerBreakdown {
+    let mut rows = Vec::new();
+    let base = measure_layer(info, None, MacUnitConfig::full(), seed).cycles;
+    for bits in [8u32, 4, 2] {
+        let mode = MacMode::from_weight_bits(bits).unwrap();
+        let p = measure_layer(info, Some(mode), MacUnitConfig::packing_only(), seed).cycles;
+        let mp = measure_layer(info, Some(mode), MacUnitConfig::multipump_only(), seed).cycles;
+        let ss = measure_layer(info, Some(mode), MacUnitConfig::full(), seed).cycles;
+        rows.push(WidthRow { bits, baseline: base, packing: p, multipump: mp, soft_simd: ss });
+    }
+    LayerBreakdown { label: label.to_string(), rows }
+}
+
+/// Run the Fig.-7 harness.
+pub fn run(opts: &ExpOpts) -> Result<(Vec<LayerBreakdown>, Json)> {
+    let mobilenet = opts.load_model("mobilenet_v1")?;
+    let cifar = opts.load_model("cifar_cnn")?;
+    let ma = analyze(&mobilenet.spec);
+    let ca = analyze(&cifar.spec);
+    let dense = ma.layers.iter().find(|l| l.kind == QKind::Dense).unwrap();
+    let conv2 = ca.layers.iter().filter(|l| l.kind == QKind::Conv).nth(1).unwrap();
+    let out = vec![
+        breakdown("dense (MobileNetV1 classifier)", dense, opts.seed),
+        breakdown("conv (CIFAR10 CNN layer 2)", conv2, opts.seed ^ 1),
+    ];
+    for lb in &out {
+        println!("Fig. 7 — {}", lb.label);
+        println!(
+            "{:>5} {:>12} {:>12} {:>12} {:>12}   speedups: P / +MP / +SS",
+            "bits", "baseline", "packing", "+multipump", "+softSIMD"
+        );
+        for r in &lb.rows {
+            println!(
+                "{:>5} {:>12} {:>12} {:>12} {:>12}   {:.1}x / {:.1}x / {:.1}x",
+                r.bits,
+                r.baseline,
+                r.packing,
+                r.multipump,
+                r.soft_simd,
+                r.baseline as f64 / r.packing as f64,
+                r.baseline as f64 / r.multipump as f64,
+                r.baseline as f64 / r.soft_simd as f64,
+            );
+        }
+    }
+    let json = Json::Arr(
+        out.iter()
+            .map(|lb| {
+                Json::obj(vec![
+                    ("layer", Json::s(&lb.label)),
+                    (
+                        "rows",
+                        Json::Arr(
+                            lb.rows
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("bits", Json::i(r.bits as i64)),
+                                        ("baseline", Json::i(r.baseline as i64)),
+                                        ("packing", Json::i(r.packing as i64)),
+                                        ("multipump", Json::i(r.multipump as i64)),
+                                        ("soft_simd", Json::i(r.soft_simd as i64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    Ok((out, json))
+}

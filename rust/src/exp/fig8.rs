@@ -1,0 +1,170 @@
+//! Fig. 8 — end-to-end speedup over the baseline Ibex for the DSE
+//! configurations selected under 1% / 2% / 5% accuracy-loss thresholds,
+//! with the per-layer bit-widths of each selection.
+
+use super::fig6::{sweep_model, Sweep};
+use super::ExpOpts;
+use crate::dse::select_under_threshold;
+use crate::json::Json;
+use anyhow::Result;
+
+/// The paper's accuracy-loss thresholds.
+pub const THRESHOLDS: [f32; 3] = [0.01, 0.02, 0.05];
+
+/// One selected configuration.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Threshold used.
+    pub threshold: f32,
+    /// Selected per-layer bit-widths.
+    pub bits: Vec<u32>,
+    /// Accuracy at the selection.
+    pub accuracy: f32,
+    /// End-to-end speedup vs baseline.
+    pub speedup: f64,
+    /// Memory-access reduction vs baseline.
+    pub mem_reduction: f64,
+    /// Cycles.
+    pub cycles: u64,
+    /// Average of per-layer speedups — the metric behind the paper's
+    /// "13.1×–17.8× on average for all layers" claim (conv/dense layers
+    /// dominate; depthwise layers drag the mean down exactly as the
+    /// paper observes for MCUNet/MobileNet).
+    pub layer_avg_speedup: f64,
+}
+
+/// Per-model Fig.-8 result.
+pub struct ModelSelections {
+    /// Model name.
+    pub model: String,
+    /// Float accuracy.
+    pub float_acc: f32,
+    /// Baseline cycles / accesses.
+    pub baseline_cycles: u64,
+    /// Baseline memory accesses.
+    pub baseline_accesses: u64,
+    /// One selection per threshold (None if nothing met it).
+    pub selections: Vec<Option<Selection>>,
+    /// The sweep this came from.
+    pub sweep: Sweep,
+}
+
+/// Select under thresholds from an existing sweep.
+pub fn select(sweep: Sweep) -> ModelSelections {
+    let base = sweep.coordinator.cycle_model.baseline_total();
+    let cm = &sweep.coordinator.cycle_model;
+    let selections = THRESHOLDS
+        .iter()
+        .map(|&t| {
+            select_under_threshold(&sweep.points, sweep.float_acc, t).map(|i| {
+                let p = &sweep.points[i];
+                let layer_avg = p
+                    .config
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &b)| {
+                        cm.baseline[l].cycles as f64 / cm.layer_cost(l, b).cycles as f64
+                    })
+                    .sum::<f64>()
+                    / p.config.len() as f64;
+                Selection {
+                    threshold: t,
+                    bits: p.config.clone(),
+                    accuracy: p.accuracy,
+                    speedup: base.cycles as f64 / p.cycles as f64,
+                    mem_reduction: 1.0 - p.mem_accesses as f64 / base.mem_accesses as f64,
+                    cycles: p.cycles,
+                    layer_avg_speedup: layer_avg,
+                }
+            })
+        })
+        .collect();
+    ModelSelections {
+        model: sweep.model.clone(),
+        float_acc: sweep.float_acc,
+        baseline_cycles: base.cycles,
+        baseline_accesses: base.mem_accesses,
+        selections,
+        sweep,
+    }
+}
+
+/// Run the Fig.-8 harness (shares sweeps with Fig. 6 in the CLI's `all`).
+pub fn run(opts: &ExpOpts) -> Result<(Vec<ModelSelections>, Json)> {
+    let mut out = Vec::new();
+    for name in super::MODEL_NAMES {
+        eprintln!("[fig8] {name}");
+        let sweep = sweep_model(opts, name)?;
+        out.push(select(sweep));
+    }
+    let json = to_json(&out);
+    print(&out);
+    Ok((out, json))
+}
+
+/// Print the Fig.-8 table.
+pub fn print(out: &[ModelSelections]) {
+    for m in out {
+        println!(
+            "Fig. 8 — {} (float acc {:.1}%, baseline {} cycles)",
+            m.model,
+            m.float_acc * 100.0,
+            m.baseline_cycles
+        );
+        for sel in m.selections.iter().flatten() {
+            let bits: Vec<String> = sel.bits.iter().map(|b| b.to_string()).collect();
+            println!(
+                "  <{:>2.0}% loss: e2e {:>5.1}x  layer-avg {:>5.1}x  acc {:>5.1}%  mem-red {:>4.1}%  bits [{}]",
+                sel.threshold * 100.0,
+                sel.speedup,
+                sel.layer_avg_speedup,
+                sel.accuracy * 100.0,
+                sel.mem_reduction * 100.0,
+                bits.join(",")
+            );
+        }
+    }
+}
+
+/// JSON encoding.
+pub fn to_json(out: &[ModelSelections]) -> Json {
+    Json::Arr(
+        out.iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::s(&m.model)),
+                    ("float_acc", Json::Num(m.float_acc as f64)),
+                    ("baseline_cycles", Json::i(m.baseline_cycles as i64)),
+                    (
+                        "selections",
+                        Json::Arr(
+                            m.selections
+                                .iter()
+                                .map(|s| match s {
+                                    None => Json::Null,
+                                    Some(s) => Json::obj(vec![
+                                        ("threshold", Json::Num(s.threshold as f64)),
+                                        ("speedup", Json::Num(s.speedup)),
+                                        ("layer_avg_speedup", Json::Num(s.layer_avg_speedup)),
+                                        ("accuracy", Json::Num(s.accuracy as f64)),
+                                        ("mem_reduction", Json::Num(s.mem_reduction)),
+                                        ("cycles", Json::i(s.cycles as i64)),
+                                        (
+                                            "bits",
+                                            Json::Arr(
+                                                s.bits
+                                                    .iter()
+                                                    .map(|&b| Json::i(b as i64))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                    ]),
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,126 @@
+//! Experiment harnesses — one per table/figure of the paper's evaluation
+//! section (the DESIGN.md experiment index maps each to its module):
+//!
+//! | module   | reproduces |
+//! |----------|------------|
+//! | [`table3`] | Table 3 — baseline model characteristics |
+//! | [`fig4`]   | Fig. 4 — per-layer memory-access reduction (MobileNetV1) |
+//! | [`fig6`]   | Fig. 6 — accuracy-vs-MAC-instruction Pareto spaces |
+//! | [`fig7`]   | Fig. 7 — per-Mode cycle breakdown (dense + conv layer) |
+//! | [`fig8`]   | Fig. 8 — end-to-end speedup at 1/2/5% accuracy loss |
+//! | [`table4`] | Table 4 — FPGA/ASIC energy-efficiency comparison |
+//! | [`table5`] | Table 5 — state-of-the-art comparison |
+//!
+//! Every harness prints a human-readable table and returns a JSON value
+//! that the CLI writes under `results/`.
+
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use crate::coordinator::{AccuracyEval, Coordinator, HostEval, PjrtEval};
+use crate::json::Json;
+use crate::models::format::{load_or_fallback, LoadedModel};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Experiment options shared by the CLI and the benches.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Artifacts directory.
+    pub artifacts: PathBuf,
+    /// Images per accuracy evaluation during sweeps.
+    pub eval_n: usize,
+    /// Configuration budget per model for the DSE sweeps.
+    pub budget: usize,
+    /// Force the host evaluator even when PJRT artifacts exist.
+    pub host_eval: bool,
+    /// Random seed.
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            artifacts: crate::runtime::default_artifacts_dir(),
+            eval_n: 128,
+            budget: 120,
+            host_eval: false,
+            seed: 0xD5E,
+        }
+    }
+}
+
+impl ExpOpts {
+    /// Load a model artifact (or the random-init fallback).
+    pub fn load_model(&self, name: &str) -> Result<LoadedModel> {
+        load_or_fallback(&self.artifacts, name, self.seed)
+    }
+
+    /// Build the accuracy evaluator: PJRT when the model artifact
+    /// exists (and not overridden), host reference otherwise.
+    pub fn evaluator(&self, model: &LoadedModel, batch: usize) -> Result<Box<dyn AccuracyEval>> {
+        let stem = self.artifacts.join(format!("{}_qfwd_b{batch}.hlo.txt", model.spec.name));
+        if !self.host_eval && stem.exists() {
+            let session = crate::runtime::Session::open(&self.artifacts)?;
+            Ok(Box::new(PjrtEval { session, test: model.test.clone(), batch }))
+        } else {
+            Ok(Box::new(HostEval { test: model.test.clone() }))
+        }
+    }
+
+    /// Build a coordinator for a model.
+    pub fn coordinator(&self, name: &str) -> Result<Coordinator> {
+        let model = self.load_model(name)?;
+        let eval = self.evaluator(&model, 64)?;
+        Ok(Coordinator::new(model, eval, 2))
+    }
+}
+
+/// Write an experiment result under `results/<name>.json`.
+pub fn write_result(name: &str, value: &Json) -> Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), value.to_string())?;
+    Ok(())
+}
+
+/// The four Table-3 benchmark names in paper order.
+pub const MODEL_NAMES: [&str; 4] = ["cifar_cnn", "lenet5", "mcunet_vww", "mobilenet_v1"];
+
+/// Topology string in the paper's C/R/D notation.
+pub fn topology_string(spec: &crate::models::ModelSpec) -> String {
+    use crate::models::{LayerSpec, Node};
+    let mut convs = 0;
+    let mut dense = 0;
+    let mut res = 0;
+    for n in &spec.nodes {
+        match n {
+            Node::Residual(_) => res += 1,
+            Node::Layer(LayerSpec::Conv { .. }) | Node::Layer(LayerSpec::Depthwise { .. }) => {
+                convs += 1
+            }
+            Node::Layer(LayerSpec::Dense { .. }) => dense += 1,
+            _ => {}
+        }
+    }
+    // MobileNet counts dw+pw pairs as one "C" in the paper's notation;
+    // MCUNet counts every inverted-residual block as an "R" whether or
+    // not the skip connection applies.
+    if spec.name == "mobilenet_v1" {
+        convs = 1 + (convs - 1) / 2;
+    }
+    if spec.name == "mcunet_vww" {
+        res += (convs - 1) / 3;
+        convs = 1;
+    }
+    if res > 0 {
+        format!("{convs}C-{res}R-{dense}D")
+    } else {
+        format!("{convs}C-{dense}D")
+    }
+}

@@ -1,0 +1,70 @@
+//! Table 3 — baseline model characteristics: accuracy, topology,
+//! baseline cycles (original Ibex running the scalar kernels) and MACs.
+
+use super::{topology_string, ExpOpts, MODEL_NAMES};
+use crate::dse::cycles::measure_layer;
+use crate::json::Json;
+use crate::models::analyze;
+use crate::sim::MacUnitConfig;
+use anyhow::Result;
+
+/// One Table-3 row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Model name.
+    pub model: String,
+    /// Float-model accuracy (%).
+    pub acc: f32,
+    /// Topology (paper notation).
+    pub topology: String,
+    /// Baseline cycles for one inference.
+    pub cycles: u64,
+    /// MAC count for one inference.
+    pub macs: u64,
+}
+
+/// Run the Table-3 harness.
+pub fn run(opts: &ExpOpts) -> Result<(Vec<Row>, Json)> {
+    let mut rows = Vec::new();
+    for name in MODEL_NAMES {
+        let model = opts.load_model(name)?;
+        let a = analyze(&model.spec);
+        let cycles: u64 = a
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                measure_layer(l, None, MacUnitConfig::full(), opts.seed + i as u64).cycles
+            })
+            .sum();
+        rows.push(Row {
+            model: name.to_string(),
+            acc: model.float_acc * 100.0,
+            topology: topology_string(&model.spec),
+            cycles,
+            macs: a.total_macs,
+        });
+    }
+    println!("Table 3: baseline models (scaled reproductions — see DESIGN.md §5)");
+    println!("{:<14} {:>8} {:>12} {:>14} {:>12}", "Model", "Acc(%)", "Topology", "#cycles", "#MAC");
+    for r in &rows {
+        println!(
+            "{:<14} {:>8.1} {:>12} {:>14} {:>12}",
+            r.model, r.acc, r.topology, r.cycles, r.macs
+        );
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::s(&r.model)),
+                    ("acc_pct", Json::Num(r.acc as f64)),
+                    ("topology", Json::s(&r.topology)),
+                    ("cycles", Json::i(r.cycles as i64)),
+                    ("macs", Json::i(r.macs as i64)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((rows, json))
+}

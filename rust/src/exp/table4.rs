@@ -1,0 +1,119 @@
+//! Table 4 — FPGA (Virtex-7) and ASIC (ASAP7) comparison of the
+//! baseline vs modified Ibex: clocks, power, area and per-model energy
+//! efficiency (GOP/s/W) for <1%-accuracy-loss configurations.
+
+use super::fig8::ModelSelections;
+use super::ExpOpts;
+use crate::energy::{EnergyReport, ASIC_BASELINE, ASIC_MODIFIED, FPGA_BASELINE, FPGA_MODIFIED};
+use crate::json::Json;
+use anyhow::Result;
+
+/// Per-model Table-4 energy row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Model name.
+    pub model: String,
+    /// MACs per inference.
+    pub macs: u64,
+    /// Baseline / modified cycles.
+    pub cycles: (u64, u64),
+    /// FPGA baseline / modified reports.
+    pub fpga: (EnergyReport, EnergyReport),
+    /// ASIC baseline / modified reports.
+    pub asic: (EnergyReport, EnergyReport),
+}
+
+/// Build Table 4 from Fig.-8 selections (uses each model's <1% config;
+/// falls back to the least-aggressive available selection).
+pub fn from_selections(opts: &ExpOpts, sels: &[ModelSelections]) -> Result<(Vec<Row>, Json)> {
+    let mut rows = Vec::new();
+    for m in sels {
+        let model = opts.load_model(&m.model)?;
+        let analysis = crate::models::analyze(&model.spec);
+        let sel = m
+            .selections
+            .iter()
+            .flatten()
+            .next()
+            .or_else(|| m.selections.iter().flatten().last());
+        let Some(sel) = sel else { continue };
+        let macs = analysis.total_macs;
+        let cycles = (m.baseline_cycles, sel.cycles);
+        rows.push(Row {
+            model: m.model.clone(),
+            macs,
+            cycles,
+            fpga: (FPGA_BASELINE.evaluate(macs, cycles.0), FPGA_MODIFIED.evaluate(macs, cycles.1)),
+            asic: (ASIC_BASELINE.evaluate(macs, cycles.0), ASIC_MODIFIED.evaluate(macs, cycles.1)),
+        });
+    }
+    print(&rows);
+    Ok((rows.clone(), to_json(&rows)))
+}
+
+/// Print the Table-4 report.
+pub fn print(rows: &[Row]) {
+    println!("Table 4 — platform comparison (models with <1% accuracy loss)");
+    println!(
+        "  FPGA: baseline {:.0} MHz / {:.0} mW vs modified {:.0}/{:.0} MHz / {:.0} mW (area +{:.0}% LUT)",
+        FPGA_BASELINE.core_clock_hz / 1e6,
+        FPGA_BASELINE.power_w * 1e3,
+        FPGA_MODIFIED.core_clock_hz / 1e6,
+        FPGA_MODIFIED.unit_clock_hz / 1e6,
+        FPGA_MODIFIED.power_w * 1e3,
+        FPGA_MODIFIED.area_overhead(&FPGA_BASELINE) * 100.0
+    );
+    println!(
+        "  ASIC: baseline {:.0} MHz / {:.2} mW vs modified {:.0}/{:.0} MHz / {:.2} mW (area +{:.0}%)",
+        ASIC_BASELINE.core_clock_hz / 1e6,
+        ASIC_BASELINE.power_w * 1e3,
+        ASIC_MODIFIED.core_clock_hz / 1e6,
+        ASIC_MODIFIED.unit_clock_hz / 1e6,
+        ASIC_MODIFIED.power_w * 1e3,
+        ASIC_MODIFIED.area_overhead(&ASIC_BASELINE) * 100.0
+    );
+    println!(
+        "{:<14} {:>10} {:>22} {:>22} {:>8}",
+        "Model", "speedup", "FPGA GOP/s/W (b→m)", "ASIC GOP/s/W (b→m)", "gain"
+    );
+    for r in rows {
+        let gain = r.asic.1.gops_per_w / r.asic.0.gops_per_w;
+        println!(
+            "{:<14} {:>9.1}x {:>10.3} → {:>8.2} {:>10.1} → {:>8.1} {:>7.1}x",
+            r.model,
+            r.cycles.0 as f64 / r.cycles.1 as f64,
+            r.fpga.0.gops_per_w,
+            r.fpga.1.gops_per_w,
+            r.asic.0.gops_per_w,
+            r.asic.1.gops_per_w,
+            gain
+        );
+    }
+}
+
+/// JSON encoding.
+pub fn to_json(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::s(&r.model)),
+                    ("macs", Json::i(r.macs as i64)),
+                    ("baseline_cycles", Json::i(r.cycles.0 as i64)),
+                    ("modified_cycles", Json::i(r.cycles.1 as i64)),
+                    ("fpga_gopsw_base", Json::Num(r.fpga.0.gops_per_w)),
+                    ("fpga_gopsw_mod", Json::Num(r.fpga.1.gops_per_w)),
+                    ("asic_gopsw_base", Json::Num(r.asic.0.gops_per_w)),
+                    ("asic_gopsw_mod", Json::Num(r.asic.1.gops_per_w)),
+                    ("asic_gain", Json::Num(r.asic.1.gops_per_w / r.asic.0.gops_per_w)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Standalone run (performs its own sweeps).
+pub fn run(opts: &ExpOpts) -> Result<(Vec<Row>, Json)> {
+    let (sels, _) = super::fig8::run(opts)?;
+    from_selections(opts, &sels)
+}

@@ -1,0 +1,97 @@
+//! Table 5 — comparison with state-of-the-art solutions: literature
+//! rows (constants from the paper) + our row computed from measured
+//! cycles through the ASAP7 platform model. The efficiency range spans
+//! <1% to ≤5% accuracy-loss configurations.
+
+use super::fig8::ModelSelections;
+use super::ExpOpts;
+use crate::energy::sota::{competitors, ours, SotaEntry};
+use crate::energy::ASIC_MODIFIED;
+use crate::json::Json;
+use anyhow::Result;
+
+/// Build Table 5 from Fig.-8 selections.
+pub fn from_selections(opts: &ExpOpts, sels: &[ModelSelections]) -> Result<(Vec<SotaEntry>, Json)> {
+    // Our GOPs / GOPs/W across models: lo = <1% selections, hi = 5%.
+    let mut lo_eff: Vec<f64> = Vec::new();
+    let mut hi_eff: Vec<f64> = Vec::new();
+    let mut lo_gops: Vec<f64> = Vec::new();
+    let mut hi_gops: Vec<f64> = Vec::new();
+    for m in sels {
+        let model = opts.load_model(&m.model)?;
+        let macs = crate::models::analyze(&model.spec).total_macs;
+        if let Some(s) = m.selections.first().and_then(|s| s.as_ref()) {
+            let r = ASIC_MODIFIED.evaluate(macs, s.cycles);
+            lo_eff.push(r.gops_per_w);
+            lo_gops.push(r.gops);
+        }
+        if let Some(s) = m.selections.last().and_then(|s| s.as_ref()) {
+            let r = ASIC_MODIFIED.evaluate(macs, s.cycles);
+            hi_eff.push(r.gops_per_w);
+            hi_gops.push(r.gops);
+        }
+    }
+    let min = |v: &[f64]| v.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = |v: &[f64]| v.iter().copied().fold(0.0f64, f64::max);
+    let mut table = competitors();
+    table.push(ours(min(&lo_gops), max(&hi_gops), min(&lo_eff), max(&hi_eff)));
+    print(&table);
+    let json = to_json(&table);
+    Ok((table, json))
+}
+
+/// Print the Table-5 report.
+pub fn print(table: &[SotaEntry]) {
+    println!("Table 5 — comparison with state-of-the-art");
+    println!(
+        "{:<22} {:>6} {:>10} {:>9} {:>10} {:>16} {:>20}",
+        "Work", "node", "precision", "clk MHz", "power mW", "GOPs", "GOPs/W"
+    );
+    for e in table {
+        let fmt_range = |(lo, hi): (f64, f64)| {
+            if (lo - hi).abs() < 1e-9 {
+                format!("{lo:.2}")
+            } else {
+                format!("{lo:.2}-{hi:.2}")
+            }
+        };
+        println!(
+            "{:<22} {:>6} {:>10} {:>9.0} {:>10.2} {:>16} {:>20}",
+            e.work,
+            e.platform,
+            e.precision,
+            e.clk_mhz,
+            e.power_mw,
+            fmt_range(e.gops),
+            fmt_range(e.gops_per_w)
+        );
+    }
+}
+
+/// JSON encoding.
+pub fn to_json(table: &[SotaEntry]) -> Json {
+    Json::Arr(
+        table
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("work", Json::s(e.work)),
+                    ("platform", Json::s(e.platform)),
+                    ("precision", Json::s(e.precision)),
+                    ("clk_mhz", Json::Num(e.clk_mhz)),
+                    ("power_mw", Json::Num(e.power_mw)),
+                    ("gops_lo", Json::Num(e.gops.0)),
+                    ("gops_hi", Json::Num(e.gops.1)),
+                    ("gopsw_lo", Json::Num(e.gops_per_w.0)),
+                    ("gopsw_hi", Json::Num(e.gops_per_w.1)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Standalone run.
+pub fn run(opts: &ExpOpts) -> Result<(Vec<SotaEntry>, Json)> {
+    let (sels, _) = super::fig8::run(opts)?;
+    from_selections(opts, &sels)
+}

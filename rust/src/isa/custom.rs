@@ -1,0 +1,217 @@
+//! Packed-operand semantics of the mixed-precision extension.
+//!
+//! This module is the single source of truth for *what the bits mean*:
+//! activation/weight packing layouts, sign-extension rules and the scalar
+//! reference semantics (`nn_mac_ref`) every other implementation — the
+//! cycle-accurate MAC unit, the kernel code generators, the Pallas kernel
+//! (via exported test vectors) — is tested against.
+//!
+//! Lane layout is little-endian: lane 0 occupies the least-significant
+//! bits. All operands are signed two's complement:
+//!
+//! * activations: always 4 × int8 per 32-bit word,
+//! * weights: 4 × int8 (Mode-1), 8 × int4 (Mode-2) or 16 × int2 (Mode-3)
+//!   per 32-bit word.
+
+use super::MacMode;
+
+/// Value range of a signed `bits`-wide weight: `[-2^(bits-1), 2^(bits-1)-1]`.
+pub fn weight_range(bits: u32) -> (i32, i32) {
+    (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+}
+
+/// Pack four int8 activations into one 32-bit word (lane 0 = LSB).
+pub fn pack_acts(a: [i8; 4]) -> u32 {
+    u32::from_le_bytes([a[0] as u8, a[1] as u8, a[2] as u8, a[3] as u8])
+}
+
+/// Unpack four int8 activations from one 32-bit word.
+pub fn unpack_acts(w: u32) -> [i8; 4] {
+    let b = w.to_le_bytes();
+    [b[0] as i8, b[1] as i8, b[2] as i8, b[3] as i8]
+}
+
+/// Pack `32/bits` signed weights into a 32-bit word.
+///
+/// Panics if a value falls outside the `bits`-wide signed range — the
+/// quantizer must have clamped to the grid first.
+pub fn pack_weights(mode: MacMode, w: &[i8]) -> u32 {
+    let bits = mode.weight_bits();
+    let n = mode.weights_per_word() as usize;
+    assert_eq!(w.len(), n, "expected {n} weights for {mode:?}, got {}", w.len());
+    let (lo, hi) = weight_range(bits);
+    let mask = (1u32 << bits) - 1;
+    let mut word = 0u32;
+    for (i, &v) in w.iter().enumerate() {
+        assert!(
+            (v as i32) >= lo && (v as i32) <= hi,
+            "weight {v} out of int{bits} range [{lo}, {hi}]"
+        );
+        word |= ((v as u32) & mask) << (i as u32 * bits);
+    }
+    word
+}
+
+/// Unpack the `32/bits` signed weights of a 32-bit word (sign-extended).
+pub fn unpack_weights(mode: MacMode, word: u32) -> Vec<i8> {
+    let bits = mode.weight_bits();
+    let n = mode.weights_per_word();
+    let shift = 32 - bits;
+    (0..n)
+        .map(|i| {
+            let field = (word >> (i * bits)) as i32;
+            (((field << shift) as i32) >> shift) as i8
+        })
+        .collect()
+}
+
+/// Scalar reference semantics of `nn_mac_<x>b rd, rs1, rs2`.
+///
+/// `acc` is the incoming `rd` value, `act_words` are the register-pair /
+/// quad activation words (`rs1`, `rs1+1`, ...; exactly
+/// [`MacMode::activation_regs`] of them) and `w_word` is `rs2`. Returns
+/// the new accumulator: `acc + Σᵢ aᵢ·wᵢ` with wrapping 32-bit arithmetic
+/// (the hardware accumulator wraps, and the requantization range analysis
+/// in `nn::quant` guarantees no wrap for well-formed layers).
+pub fn nn_mac_ref(mode: MacMode, acc: u32, act_words: &[u32], w_word: u32) -> u32 {
+    assert_eq!(
+        act_words.len(),
+        mode.activation_regs() as usize,
+        "mode {mode:?} consumes {} activation words",
+        mode.activation_regs()
+    );
+    let weights = unpack_weights(mode, w_word);
+    let mut sum = acc as i32;
+    for (i, &w) in weights.iter().enumerate() {
+        let a = unpack_acts(act_words[i / 4])[i % 4];
+        sum = sum.wrapping_add((a as i32).wrapping_mul(w as i32));
+    }
+    sum as u32
+}
+
+/// Guard-bit field offset of the soft-SIMD dual product (paper Eq. 2).
+///
+/// The low product `A·W_lo` of an int8 × int2 multiply spans 10 bits
+/// (|A·W| ≤ 256), so the high weight is placed at bit 11 — 10 product
+/// bits + 1 guard bit inside the 17-bit multiplier port; the second
+/// guard bit of the paper sits above the high product within the
+/// multiplier's 34-bit output.
+pub const SOFT_SIMD_SHIFT: u32 = 11;
+
+/// One 17×17 multiplier executing the paper's Eq. (2): a *single*
+/// multiplication producing two int8×int2 products.
+///
+/// `P = A · (W_hi·2¹¹ + W_lo)`; the low product is recovered by
+/// interpreting the low 11 bits (10 product bits + guard) as a signed
+/// field — exact because `|A·W_lo| ≤ 256 < 2¹⁰` — and the high product
+/// as the remaining (signed) upper part. Returns `(lo, hi)` products.
+pub fn soft_simd_dual_product(a: i8, w_lo: i8, w_hi: i8) -> (i32, i32) {
+    debug_assert!((-2..=1).contains(&(w_lo as i32)) && (-2..=1).contains(&(w_hi as i32)));
+    // The composed 17-bit operand: W_hi·2^11 + W_lo, a signed value that
+    // fits in 14 bits — well inside the 17-bit port.
+    let composed = ((w_hi as i32) << SOFT_SIMD_SHIFT) + (w_lo as i32);
+    let p = (a as i32) * composed;
+    // Field extraction with guard-bit sign correction: the low field is
+    // exactly SOFT_SIMD_SHIFT bits wide (bit 11 upward belongs to the
+    // high product), and |A·W_lo| ≤ 256 < 2¹⁰ so the sign-extended low
+    // field recovers the low product exactly.
+    let lo = (p << (32 - SOFT_SIMD_SHIFT)) >> (32 - SOFT_SIMD_SHIFT);
+    let hi = (p - lo) >> SOFT_SIMD_SHIFT;
+    (lo, hi)
+}
+
+/// Pack a flat signed-weight slice into 32-bit words for a given mode,
+/// zero-padding the tail. This is the memory layout the Mode-1/2/3
+/// kernels stream (`nn/pack.rs` builds full layer layouts on top).
+pub fn pack_weight_stream(mode: MacMode, w: &[i8]) -> Vec<u32> {
+    let n = mode.weights_per_word() as usize;
+    w.chunks(n)
+        .map(|c| {
+            if c.len() == n {
+                pack_weights(mode, c)
+            } else {
+                let mut padded = vec![0i8; n];
+                padded[..c.len()].copy_from_slice(c);
+                pack_weights(mode, &padded)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MacMode::*;
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        for mode in [W8, W4, W2] {
+            let (lo, hi) = weight_range(mode.weight_bits());
+            let n = mode.weights_per_word() as usize;
+            let w: Vec<i8> = (0..n).map(|i| (lo + (i as i32 * 3) % (hi - lo + 1)) as i8).collect();
+            let packed = pack_weights(mode, &w);
+            assert_eq!(unpack_weights(mode, packed), w, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn acts_round_trip() {
+        let a = [-128i8, -1, 0, 127];
+        assert_eq!(unpack_acts(pack_acts(a)), a);
+    }
+
+    #[test]
+    fn mac_ref_mode1_matches_manual() {
+        let acts = pack_acts([1, -2, 3, -4]);
+        let w = pack_weights(W8, &[10, 20, -30, 40]);
+        // 1*10 + (-2)*20 + 3*(-30) + (-4)*40 = 10 - 40 - 90 - 160 = -280
+        assert_eq!(nn_mac_ref(W8, 0, &[acts], w) as i32, -280);
+        // Accumulation wraps on top of the incoming rd.
+        assert_eq!(nn_mac_ref(W8, 1000, &[acts], w) as i32, 720);
+    }
+
+    #[test]
+    fn mac_ref_mode2_uses_register_pair() {
+        let a0 = pack_acts([1, 1, 1, 1]);
+        let a1 = pack_acts([2, 2, 2, 2]);
+        let w = pack_weights(W4, &[1, 1, 1, 1, 1, 1, 1, 1]);
+        // 4·(1·1) + 4·(2·1) = 12
+        assert_eq!(nn_mac_ref(W4, 0, &[a0, a1], w) as i32, 12);
+    }
+
+    #[test]
+    fn mac_ref_mode3_sixteen_macs() {
+        let acts: Vec<u32> = (0..4).map(|j| pack_acts([j as i8 + 1; 4])).collect();
+        let w = pack_weights(W2, &[-2i8; 16]);
+        // Σ_j 4·(j+1)·(−2) = −2·4·(1+2+3+4) = −80
+        assert_eq!(nn_mac_ref(W2, 0, &acts, w) as i32, -80);
+    }
+
+    #[test]
+    fn soft_simd_exact_over_full_range() {
+        // Exhaustive: every (a, w_lo, w_hi) — the Eq.(2) decomposition must
+        // be bit-exact including worst-case negative borrows.
+        for a in i8::MIN..=i8::MAX {
+            for w_lo in -2i8..=1 {
+                for w_hi in -2i8..=1 {
+                    let (lo, hi) = soft_simd_dual_product(a, w_lo, w_hi);
+                    assert_eq!(lo, a as i32 * w_lo as i32, "lo a={a} wl={w_lo} wh={w_hi}");
+                    assert_eq!(hi, a as i32 * w_hi as i32, "hi a={a} wl={w_lo} wh={w_hi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_pads_tail() {
+        let words = pack_weight_stream(W4, &[1, 2, 3]);
+        assert_eq!(words.len(), 1);
+        assert_eq!(unpack_weights(W4, words[0]), vec![1, 2, 3, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of int2 range")]
+    fn rejects_out_of_grid_weights() {
+        pack_weights(W2, &[2i8; 16]);
+    }
+}

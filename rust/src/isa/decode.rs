@@ -1,0 +1,264 @@
+//! RV32IM (+ custom) instruction decoder — the exact inverse of
+//! [`super::encode`], property-tested for round-trip equality.
+
+use super::*;
+
+/// Decode error: the word is not a recognised RV32IM / extension encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError {
+    /// The offending machine word.
+    pub word: u32,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal instruction: {:#010x}", self.word)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[inline]
+fn rd(w: u32) -> Reg {
+    ((w >> 7) & 31) as Reg
+}
+#[inline]
+fn rs1(w: u32) -> Reg {
+    ((w >> 15) & 31) as Reg
+}
+#[inline]
+fn rs2(w: u32) -> Reg {
+    ((w >> 20) & 31) as Reg
+}
+#[inline]
+fn f3(w: u32) -> u32 {
+    (w >> 12) & 7
+}
+#[inline]
+fn f7(w: u32) -> u32 {
+    w >> 25
+}
+
+/// Sign-extended I-type immediate.
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+/// Sign-extended S-type immediate.
+#[inline]
+fn imm_s(w: u32) -> i32 {
+    (((w as i32) >> 25) << 5) | (((w >> 7) & 0x1f) as i32)
+}
+
+/// Sign-extended B-type branch offset.
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // bit 31 -> offset bit 12, sign
+    ((sign << 12)
+        | ((((w >> 7) & 1) as i32) << 11)
+        | ((((w >> 25) & 0x3f) as i32) << 5)
+        | ((((w >> 8) & 0xf) as i32) << 1)) as i32
+}
+
+/// U-type immediate (pre-shifted, low 12 bits zero).
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w & 0xfffff000) as i32
+}
+
+/// Sign-extended J-type jump offset.
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // bit 31 -> offset bit 20, sign
+    (sign << 20)
+        | ((((w >> 12) & 0xff) as i32) << 12)
+        | ((((w >> 20) & 1) as i32) << 11)
+        | ((((w >> 21) & 0x3ff) as i32) << 1)
+}
+
+/// Decode one 32-bit machine word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    let err = Err(DecodeError { word: w });
+    Ok(match w & 0x7f {
+        opcodes::LUI => Instr::Lui { rd: rd(w), imm: imm_u(w) },
+        opcodes::AUIPC => Instr::Auipc { rd: rd(w), imm: imm_u(w) },
+        opcodes::JAL => Instr::Jal { rd: rd(w), offset: imm_j(w) },
+        opcodes::JALR => {
+            if f3(w) != 0 {
+                return err;
+            }
+            Instr::Jalr { rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        opcodes::BRANCH => {
+            let op = match f3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return err,
+            };
+            Instr::Branch { op, rs1: rs1(w), rs2: rs2(w), offset: imm_b(w) }
+        }
+        opcodes::LOAD => {
+            let op = match f3(w) {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return err,
+            };
+            Instr::Load { op, rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        opcodes::STORE => {
+            let op = match f3(w) {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return err,
+            };
+            Instr::Store { op, rs1: rs1(w), rs2: rs2(w), offset: imm_s(w) }
+        }
+        opcodes::OP_IMM => {
+            let op = match f3(w) {
+                0b000 => AluOp::Add,
+                0b001 => {
+                    if f7(w) != 0 {
+                        return err;
+                    }
+                    return Ok(Instr::OpImm {
+                        op: AluOp::Sll,
+                        rd: rd(w),
+                        rs1: rs1(w),
+                        imm: rs2(w) as i32,
+                    });
+                }
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => {
+                    let op = match f7(w) {
+                        0b0000000 => AluOp::Srl,
+                        0b0100000 => AluOp::Sra,
+                        _ => return err,
+                    };
+                    return Ok(Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm: rs2(w) as i32 });
+                }
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => unreachable!(),
+            };
+            Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+        }
+        opcodes::OP => match f7(w) {
+            0b0000001 => {
+                let op = match f3(w) {
+                    0b000 => MulOp::Mul,
+                    0b001 => MulOp::Mulh,
+                    0b010 => MulOp::Mulhsu,
+                    0b011 => MulOp::Mulhu,
+                    0b100 => MulOp::Div,
+                    0b101 => MulOp::Divu,
+                    0b110 => MulOp::Rem,
+                    0b111 => MulOp::Remu,
+                    _ => unreachable!(),
+                };
+                Instr::MulDiv { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            }
+            0b0000000 => {
+                let op = match f3(w) {
+                    0b000 => AluOp::Add,
+                    0b001 => AluOp::Sll,
+                    0b010 => AluOp::Slt,
+                    0b011 => AluOp::Sltu,
+                    0b100 => AluOp::Xor,
+                    0b101 => AluOp::Srl,
+                    0b110 => AluOp::Or,
+                    0b111 => AluOp::And,
+                    _ => unreachable!(),
+                };
+                Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            }
+            0b0100000 => {
+                let op = match f3(w) {
+                    0b000 => AluOp::Sub,
+                    0b101 => AluOp::Sra,
+                    _ => return err,
+                };
+                Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            }
+            _ => return err,
+        },
+        opcodes::CUSTOM0 => {
+            // The paper's mixed-precision extension: func3=010, one-hot func7.
+            if f3(w) != 0b010 {
+                return err;
+            }
+            match MacMode::from_func7(f7(w)) {
+                Some(mode) => Instr::NnMac { mode, rd: rd(w), rs1: rs1(w), rs2: rs2(w) },
+                None => return err,
+            }
+        }
+        opcodes::MISC_MEM => Instr::Fence,
+        opcodes::SYSTEM => match f3(w) {
+            0b000 => match w >> 20 {
+                0 => Instr::Ecall,
+                1 => Instr::Ebreak,
+                _ => return err,
+            },
+            0b001 => Instr::Csr { op: CsrOp::Rw, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            0b010 => Instr::Csr { op: CsrOp::Rs, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            0b011 => Instr::Csr { op: CsrOp::Rc, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            _ => return err,
+        },
+        _ => return err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    #[test]
+    fn round_trips_hand_picked() {
+        let cases = [
+            Instr::Lui { rd: 5, imm: 0x7ffff << 12 },
+            Instr::Auipc { rd: 1, imm: -4096 },
+            Instr::Jal { rd: 1, offset: -2048 },
+            Instr::Jalr { rd: 0, rs1: 1, offset: 0 },
+            Instr::Branch { op: BranchOp::Bge, rs1: 10, rs2: 11, offset: 4094 },
+            Instr::Branch { op: BranchOp::Bltu, rs1: 10, rs2: 11, offset: -4096 },
+            Instr::Load { op: LoadOp::Lbu, rd: 12, rs1: 13, offset: -1 },
+            Instr::Store { op: StoreOp::Sb, rs1: 2, rs2: 3, offset: -2048 },
+            Instr::OpImm { op: AluOp::Sra, rd: 4, rs1: 5, imm: 31 },
+            Instr::OpImm { op: AluOp::Add, rd: 4, rs1: 5, imm: -2048 },
+            Instr::Op { op: AluOp::Sub, rd: 6, rs1: 7, rs2: 8 },
+            Instr::MulDiv { op: MulOp::Mulhsu, rd: 9, rs1: 10, rs2: 11 },
+            Instr::NnMac { mode: MacMode::W8, rd: 10, rs1: 11, rs2: 12 },
+            Instr::NnMac { mode: MacMode::W4, rd: 10, rs1: 12, rs2: 14 },
+            Instr::NnMac { mode: MacMode::W2, rd: 10, rs1: 16, rs2: 20 },
+            Instr::Csr { op: CsrOp::Rs, rd: 10, rs1: 0, csr: csr::MCYCLE },
+            Instr::Ecall,
+            Instr::Ebreak,
+            Instr::Fence,
+        ];
+        for c in cases {
+            assert_eq!(decode(encode(c)).unwrap(), c, "round-trip failed for {c:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_0000).is_err());
+        // custom-0 with wrong func3
+        assert!(decode(0x0000_000b).is_err());
+        // custom-0 with non-one-hot func7
+        let bad = (0b1111111 << 25) | (0b010 << 12) | opcodes::CUSTOM0;
+        assert!(decode(bad).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Disassembler: `Instr` → GNU-as-compatible text (custom instructions use
+//! the paper's mnemonics). Used by the CLI `disasm` subcommand, the
+//! assembler's listing output and the simulator's trace mode.
+
+use super::reg::name;
+use super::*;
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Xor => "xor",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Or => "or",
+        AluOp::And => "and",
+    }
+}
+
+fn mul_name(op: MulOp) -> &'static str {
+    match op {
+        MulOp::Mul => "mul",
+        MulOp::Mulh => "mulh",
+        MulOp::Mulhsu => "mulhsu",
+        MulOp::Mulhu => "mulhu",
+        MulOp::Div => "div",
+        MulOp::Divu => "divu",
+        MulOp::Rem => "rem",
+        MulOp::Remu => "remu",
+    }
+}
+
+fn branch_name(op: BranchOp) -> &'static str {
+    match op {
+        BranchOp::Beq => "beq",
+        BranchOp::Bne => "bne",
+        BranchOp::Blt => "blt",
+        BranchOp::Bge => "bge",
+        BranchOp::Bltu => "bltu",
+        BranchOp::Bgeu => "bgeu",
+    }
+}
+
+fn load_name(op: LoadOp) -> &'static str {
+    match op {
+        LoadOp::Lb => "lb",
+        LoadOp::Lh => "lh",
+        LoadOp::Lw => "lw",
+        LoadOp::Lbu => "lbu",
+        LoadOp::Lhu => "lhu",
+    }
+}
+
+fn store_name(op: StoreOp) -> &'static str {
+    match op {
+        StoreOp::Sb => "sb",
+        StoreOp::Sh => "sh",
+        StoreOp::Sw => "sw",
+    }
+}
+
+/// Render one instruction as assembly text.
+pub fn disasm(instr: Instr) -> String {
+    match instr {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", name(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", name(rd), (imm as u32) >> 12),
+        Instr::Jal { rd, offset } => format!("jal {}, {}", name(rd), offset),
+        Instr::Jalr { rd, rs1, offset } => format!("jalr {}, {}({})", name(rd), offset, name(rs1)),
+        Instr::Branch { op, rs1, rs2, offset } => {
+            format!("{} {}, {}, {}", branch_name(op), name(rs1), name(rs2), offset)
+        }
+        Instr::Load { op, rd, rs1, offset } => {
+            format!("{} {}, {}({})", load_name(op), name(rd), offset, name(rs1))
+        }
+        Instr::Store { op, rs1, rs2, offset } => {
+            format!("{} {}, {}({})", store_name(op), name(rs2), offset, name(rs1))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            let mn = match op {
+                AluOp::Add => "addi",
+                AluOp::Sll => "slli",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sub => unreachable!("subi does not exist"),
+            };
+            format!("{} {}, {}, {}", mn, name(rd), name(rs1), imm)
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            format!("{} {}, {}, {}", alu_name(op), name(rd), name(rs1), name(rs2))
+        }
+        Instr::MulDiv { op, rd, rs1, rs2 } => {
+            format!("{} {}, {}, {}", mul_name(op), name(rd), name(rs1), name(rs2))
+        }
+        Instr::NnMac { mode, rd, rs1, rs2 } => {
+            format!("{} {}, {}, {}", mode.mnemonic(), name(rd), name(rs1), name(rs2))
+        }
+        Instr::Csr { op, rd, rs1, csr } => {
+            let mn = match op {
+                CsrOp::Rw => "csrrw",
+                CsrOp::Rs => "csrrs",
+                CsrOp::Rc => "csrrc",
+            };
+            format!("{} {}, {:#x}, {}", mn, name(rd), csr, name(rs1))
+        }
+        Instr::Fence => "fence".to_string(),
+        Instr::Ecall => "ecall".to_string(),
+        Instr::Ebreak => "ebreak".to_string(),
+    }
+}
+
+/// Disassemble a sequence of machine words into an annotated listing.
+pub fn disasm_words(words: &[u32], base: u32) -> String {
+    use super::decode::decode;
+    let mut out = String::new();
+    for (i, &w) in words.iter().enumerate() {
+        let pc = base + 4 * i as u32;
+        match decode(w) {
+            Ok(ins) => out.push_str(&format!("{pc:8x}: {w:08x}  {}\n", disasm(ins))),
+            Err(_) => out.push_str(&format!("{pc:8x}: {w:08x}  <illegal>\n")),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_custom_mnemonics() {
+        let s = disasm(Instr::NnMac { mode: MacMode::W2, rd: reg::A0, rs1: reg::A2, rs2: reg::A6 });
+        assert_eq!(s, "nn_mac_2b a0, a2, a6");
+    }
+
+    #[test]
+    fn renders_loads_gnu_style() {
+        let s = disasm(Instr::Load { op: LoadOp::Lbu, rd: reg::T0, rs1: reg::A0, offset: -3 });
+        assert_eq!(s, "lbu t0, -3(a0)");
+    }
+}

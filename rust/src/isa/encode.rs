@@ -1,0 +1,265 @@
+//! Bit-exact RV32IM (+ custom) instruction encoder.
+//!
+//! Every encoder asserts the immediate ranges required by the format so
+//! kernel-codegen bugs fail loudly at emit time instead of silently
+//! mis-executing on the core simulator.
+
+use super::*;
+
+#[inline]
+fn r(rd: Reg, rs1: Reg, rs2: Reg, f3: u32, f7: u32, opcode: u32) -> u32 {
+    debug_assert!(rd < 32 && rs1 < 32 && rs2 < 32);
+    (f7 << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (f3 << 12) | ((rd as u32) << 7) | opcode
+}
+
+#[inline]
+fn i(rd: Reg, rs1: Reg, imm: i32, f3: u32, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "I-type imm out of range: {imm}");
+    ((imm as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | (f3 << 12) | ((rd as u32) << 7) | opcode
+}
+
+#[inline]
+fn s(rs1: Reg, rs2: Reg, imm: i32, f3: u32, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "S-type imm out of range: {imm}");
+    let imm = imm as u32 & 0xfff;
+    ((imm >> 5) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((imm & 0x1f) << 7)
+        | opcode
+}
+
+#[inline]
+fn b(rs1: Reg, rs2: Reg, offset: i32, f3: u32) -> u32 {
+    assert!(
+        (-4096..=4094).contains(&offset) && offset % 2 == 0,
+        "B-type offset out of range or misaligned: {offset}"
+    );
+    let o = offset as u32;
+    (((o >> 12) & 1) << 31)
+        | (((o >> 5) & 0x3f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | (((o >> 1) & 0xf) << 8)
+        | (((o >> 11) & 1) << 7)
+        | opcodes::BRANCH
+}
+
+#[inline]
+fn u(rd: Reg, imm: i32, opcode: u32) -> u32 {
+    assert_eq!(imm & 0xfff, 0, "U-type imm must be 4KiB aligned (pre-shifted): {imm:#x}");
+    (imm as u32) | ((rd as u32) << 7) | opcode
+}
+
+#[inline]
+fn j(rd: Reg, offset: i32) -> u32 {
+    assert!(
+        (-(1 << 20)..(1 << 20)).contains(&offset) && offset % 2 == 0,
+        "J-type offset out of range or misaligned: {offset}"
+    );
+    let o = offset as u32;
+    (((o >> 20) & 1) << 31)
+        | (((o >> 1) & 0x3ff) << 21)
+        | (((o >> 11) & 1) << 20)
+        | (((o >> 12) & 0xff) << 12)
+        | ((rd as u32) << 7)
+        | opcodes::JAL
+}
+
+fn alu_f3(op: AluOp) -> u32 {
+    match op {
+        AluOp::Add | AluOp::Sub => 0b000,
+        AluOp::Sll => 0b001,
+        AluOp::Slt => 0b010,
+        AluOp::Sltu => 0b011,
+        AluOp::Xor => 0b100,
+        AluOp::Srl | AluOp::Sra => 0b101,
+        AluOp::Or => 0b110,
+        AluOp::And => 0b111,
+    }
+}
+
+fn mul_f3(op: MulOp) -> u32 {
+    match op {
+        MulOp::Mul => 0b000,
+        MulOp::Mulh => 0b001,
+        MulOp::Mulhsu => 0b010,
+        MulOp::Mulhu => 0b011,
+        MulOp::Div => 0b100,
+        MulOp::Divu => 0b101,
+        MulOp::Rem => 0b110,
+        MulOp::Remu => 0b111,
+    }
+}
+
+fn branch_f3(op: BranchOp) -> u32 {
+    match op {
+        BranchOp::Beq => 0b000,
+        BranchOp::Bne => 0b001,
+        BranchOp::Blt => 0b100,
+        BranchOp::Bge => 0b101,
+        BranchOp::Bltu => 0b110,
+        BranchOp::Bgeu => 0b111,
+    }
+}
+
+fn load_f3(op: LoadOp) -> u32 {
+    match op {
+        LoadOp::Lb => 0b000,
+        LoadOp::Lh => 0b001,
+        LoadOp::Lw => 0b010,
+        LoadOp::Lbu => 0b100,
+        LoadOp::Lhu => 0b101,
+    }
+}
+
+fn store_f3(op: StoreOp) -> u32 {
+    match op {
+        StoreOp::Sb => 0b000,
+        StoreOp::Sh => 0b001,
+        StoreOp::Sw => 0b010,
+    }
+}
+
+fn csr_f3(op: CsrOp) -> u32 {
+    match op {
+        CsrOp::Rw => 0b001,
+        CsrOp::Rs => 0b010,
+        CsrOp::Rc => 0b011,
+    }
+}
+
+/// Encode an instruction into its 32-bit machine word.
+///
+/// Panics on out-of-range immediates — codegen is expected to have
+/// range-split them (the assembler's `li`/`la` handle the general case).
+pub fn encode(instr: Instr) -> u32 {
+    match instr {
+        Instr::Lui { rd, imm } => u(rd, imm, opcodes::LUI),
+        Instr::Auipc { rd, imm } => u(rd, imm, opcodes::AUIPC),
+        Instr::Jal { rd, offset } => j(rd, offset),
+        Instr::Jalr { rd, rs1, offset } => i(rd, rs1, offset, 0b000, opcodes::JALR),
+        Instr::Branch { op, rs1, rs2, offset } => b(rs1, rs2, offset, branch_f3(op)),
+        Instr::Load { op, rd, rs1, offset } => i(rd, rs1, offset, load_f3(op), opcodes::LOAD),
+        Instr::Store { op, rs1, rs2, offset } => s(rs1, rs2, offset, store_f3(op), opcodes::STORE),
+        Instr::OpImm { op, rd, rs1, imm } => {
+            assert!(op != AluOp::Sub, "subi does not exist; encode addi with negated imm");
+            match op {
+                AluOp::Sll => {
+                    assert!((0..32).contains(&imm), "slli shamt out of range: {imm}");
+                    r(rd, rs1, imm as Reg, alu_f3(op), 0, opcodes::OP_IMM)
+                }
+                AluOp::Srl => {
+                    assert!((0..32).contains(&imm), "srli shamt out of range: {imm}");
+                    r(rd, rs1, imm as Reg, alu_f3(op), 0, opcodes::OP_IMM)
+                }
+                AluOp::Sra => {
+                    assert!((0..32).contains(&imm), "srai shamt out of range: {imm}");
+                    r(rd, rs1, imm as Reg, alu_f3(op), 0b0100000, opcodes::OP_IMM)
+                }
+                _ => i(rd, rs1, imm, alu_f3(op), opcodes::OP_IMM),
+            }
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let f7 = match op {
+                AluOp::Sub | AluOp::Sra => 0b0100000,
+                _ => 0,
+            };
+            r(rd, rs1, rs2, alu_f3(op), f7, opcodes::OP)
+        }
+        Instr::MulDiv { op, rd, rs1, rs2 } => r(rd, rs1, rs2, mul_f3(op), 0b0000001, opcodes::OP),
+        Instr::NnMac { mode, rd, rs1, rs2 } => {
+            // Table 2: custom-0, func3 = 010, one-hot func7 per mode.
+            r(rd, rs1, rs2, 0b010, mode.func7(), opcodes::CUSTOM0)
+        }
+        Instr::Csr { op, rd, rs1, csr } => {
+            ((csr as u32) << 20)
+                | ((rs1 as u32) << 15)
+                | (csr_f3(op) << 12)
+                | ((rd as u32) << 7)
+                | opcodes::SYSTEM
+        }
+        Instr::Fence => (0b000 << 12) | opcodes::MISC_MEM,
+        Instr::Ecall => opcodes::SYSTEM,
+        Instr::Ebreak => (1 << 20) | opcodes::SYSTEM,
+    }
+}
+
+/// Encode a whole program (one word per instruction).
+pub fn encode_program(instrs: &[Instr]) -> Vec<u32> {
+    instrs.iter().map(|&i| encode(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_known_words() {
+        // Cross-checked against riscv-tests / GNU as output.
+        // addi a0, a0, 1  -> 0x00150513
+        assert_eq!(
+            encode(Instr::OpImm { op: AluOp::Add, rd: reg::A0, rs1: reg::A0, imm: 1 }),
+            0x00150513
+        );
+        // add a0, a1, a2 -> 0x00c58533
+        assert_eq!(
+            encode(Instr::Op { op: AluOp::Add, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 }),
+            0x00c58533
+        );
+        // sub a0, a1, a2 -> 0x40c58533
+        assert_eq!(
+            encode(Instr::Op { op: AluOp::Sub, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 }),
+            0x40c58533
+        );
+        // lw a0, 4(sp) -> 0x00412503
+        assert_eq!(
+            encode(Instr::Load { op: LoadOp::Lw, rd: reg::A0, rs1: reg::SP, offset: 4 }),
+            0x00412503
+        );
+        // sw a0, 8(sp) -> 0x00a12423
+        assert_eq!(
+            encode(Instr::Store { op: StoreOp::Sw, rs1: reg::SP, rs2: reg::A0, offset: 8 }),
+            0x00a12423
+        );
+        // mul a0, a1, a2 -> 0x02c58533
+        assert_eq!(
+            encode(Instr::MulDiv { op: MulOp::Mul, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 }),
+            0x02c58533
+        );
+        // lui a0, 0x12345 -> 0x12345537
+        assert_eq!(encode(Instr::Lui { rd: reg::A0, imm: 0x12345 << 12 }), 0x12345537);
+        // jal ra, +8 -> 0x008000ef
+        assert_eq!(encode(Instr::Jal { rd: reg::RA, offset: 8 }), 0x008000ef);
+        // ecall -> 0x00000073
+        assert_eq!(encode(Instr::Ecall), 0x00000073);
+    }
+
+    #[test]
+    fn encodes_nn_mac_table2() {
+        // nn_mac_8b a0, a1, a2: opcode custom-0 (0001011), f3=010, f7=0001000
+        let w = encode(Instr::NnMac { mode: MacMode::W8, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 });
+        assert_eq!(w & 0x7f, opcodes::CUSTOM0);
+        assert_eq!((w >> 12) & 0x7, 0b010);
+        assert_eq!(w >> 25, 0b0001000);
+        let w4 = encode(Instr::NnMac { mode: MacMode::W4, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 });
+        assert_eq!(w4 >> 25, 0b0000100);
+        let w2 = encode(Instr::NnMac { mode: MacMode::W2, rd: reg::A0, rs1: reg::A1, rs2: reg::A2 });
+        assert_eq!(w2 >> 25, 0b0000010);
+    }
+
+    #[test]
+    fn branch_offset_scatter() {
+        // beq x0, x0, -4 -> 0xfe000ee3
+        let w = encode(Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: -4 });
+        assert_eq!(w, 0xfe000ee3);
+    }
+
+    #[test]
+    #[should_panic(expected = "I-type imm out of range")]
+    fn rejects_oversized_imm() {
+        encode(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 1, imm: 4096 });
+    }
+}

@@ -1,0 +1,292 @@
+//! Standard (dense-channel) convolution kernels, NHWC, valid geometry —
+//! the host pre-pads spatially, so the kernel sees `Hp×Wp×Cin` input and
+//! produces `Ho×Wo×Cout`.
+//!
+//! The mode kernels exploit the paper's key reuse structure: in NHWC one
+//! kernel row `(ky)` touches a *contiguous* run of `K·Cin` activation
+//! bytes, so word loads feed `nn_mac` directly with no repacking. `Cin`
+//! must be a multiple of 4 (the model zoo channel-pads with zero weights)
+//! so every strip base is word-aligned.
+
+use super::requant::{emit_prologue, emit_requantize};
+use super::{emit_advance, Arena, KernelProgram};
+use crate::asm::Asm;
+use crate::isa::reg::*;
+use crate::isa::MacMode;
+use crate::nn::pack::words_per_group;
+use crate::nn::quant::Requant;
+
+/// Convolution kernel shape parameters (valid conv over pre-padded input).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvSpec {
+    /// Pre-padded input height.
+    pub h: usize,
+    /// Pre-padded input width.
+    pub w: usize,
+    /// Input channels (mode kernels require a multiple of 4).
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Kernel size (square).
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Requantization parameters.
+    pub rq: Requant,
+    /// Fused ReLU.
+    pub relu: bool,
+}
+
+impl ConvSpec {
+    /// Output height.
+    pub fn ho(&self) -> usize {
+        (self.h - self.k) / self.stride + 1
+    }
+    /// Output width.
+    pub fn wo(&self) -> usize {
+        (self.w - self.k) / self.stride + 1
+    }
+    /// Total MAC operations.
+    pub fn macs(&self) -> u64 {
+        (self.ho() * self.wo() * self.cout * self.k * self.k * self.cin) as u64
+    }
+}
+
+fn alloc(spec: &ConvSpec, w_bytes: u32) -> (Arena, u32, u32, u32, u32) {
+    let mut ar = Arena::new();
+    let act = ar.alloc_act((spec.h * spec.w * spec.cin) as u32);
+    let w = ar.alloc(w_bytes, 4);
+    let bias = ar.alloc(4 * spec.cout as u32, 4);
+    let out = ar.alloc((spec.ho() * spec.wo() * spec.cout) as u32, 4);
+    (ar, act, w, bias, out)
+}
+
+/// Scalar baseline conv kernel. Weights int8 `[Cout][K][K][Cin]`.
+pub fn build_baseline(spec: ConvSpec) -> KernelProgram {
+    let (ar, act, w, bias, out) =
+        alloc(&spec, (spec.cout * spec.k * spec.k * spec.cin) as u32);
+    let rowstride = (spec.w * spec.cin) as i32;
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    emit_prologue(&mut a, spec.rq, spec.relu);
+    a.mv(T5, S3); // out cursor
+    a.li(GP, spec.ho() as i32);
+    a.mv(S7, S0); // row base
+
+    let oy_l = a.new_label();
+    a.bind(oy_l);
+    a.li(TP, spec.wo() as i32);
+    a.mv(S8, S7); // col base
+    let ox_l = a.new_label();
+    a.bind(ox_l);
+    a.mv(S11, S1); // weight cursor (stream restarts per pixel)
+    a.mv(T4, S2); // bias cursor
+    a.li(A6, spec.cout as i32);
+    let oc_l = a.new_label();
+    a.bind(oc_l);
+    a.lw(A0, T4, 0);
+    a.mv(S9, S8); // tap row base
+    a.li(A7, spec.k as i32);
+    let ky_l = a.new_label();
+    a.bind(ky_l);
+    a.mv(S10, S9); // tap cursor
+    a.li(T6, (spec.k * spec.cin) as i32);
+    let ic_l = a.new_label();
+    a.bind(ic_l);
+    a.lb(T0, S10, 0);
+    a.lb(T1, S11, 0);
+    a.mul(T0, T0, T1);
+    a.add(A0, A0, T0);
+    a.addi(S10, S10, 1);
+    a.addi(S11, S11, 1);
+    a.addi(T6, T6, -1);
+    a.bne(T6, ZERO, ic_l);
+    emit_advance(&mut a, S9, S9, rowstride);
+    a.addi(A7, A7, -1);
+    a.bne(A7, ZERO, ky_l);
+    emit_requantize(&mut a, spec.rq);
+    a.sb(T5, A0, 0);
+    a.addi(T5, T5, 1);
+    a.addi(T4, T4, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, oc_l);
+    emit_advance(&mut a, S8, S8, (spec.stride * spec.cin) as i32);
+    a.addi(TP, TP, -1);
+    a.bne(TP, ZERO, ox_l);
+    emit_advance(&mut a, S7, S7, spec.stride as i32 * rowstride);
+    a.addi(GP, GP, -1);
+    a.bne(GP, ZERO, oy_l);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+/// Packed `nn_mac` conv kernel. Weights packed per `(oc, ky)` strip —
+/// see [`crate::nn::pack::pack_conv`]. Requires `Cin % 4 == 0`.
+pub fn build_mode(mode: MacMode, spec: ConvSpec) -> KernelProgram {
+    assert_eq!(spec.cin % 4, 0, "mode conv kernels require channel-padded input (Cin % 4 == 0)");
+    let n = mode.weights_per_word() as usize;
+    let strip = spec.k * spec.cin;
+    let wpg = words_per_group(mode, strip); // words per (oc, ky) strip
+    let oc_w_bytes = (spec.k * wpg * 4) as i32; // weight bytes per oc
+    assert!(strip <= 2000, "strip too long for immediate offsets: {strip}");
+    assert!(oc_w_bytes <= 2000, "per-oc weight block too large: {oc_w_bytes}");
+    let (ar, act, w, bias, out) = alloc(&spec, (spec.cout * spec.k * wpg * 4) as u32);
+    let rowstride = (spec.w * spec.cin) as i32;
+    let act_regs = mode.activation_regs() as usize;
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    emit_prologue(&mut a, spec.rq, spec.relu);
+    a.mv(T5, S3);
+    a.li(GP, spec.ho() as i32);
+    a.mv(S7, S0);
+
+    let oy_l = a.new_label();
+    a.bind(oy_l);
+    a.li(TP, spec.wo() as i32);
+    a.mv(S8, S7);
+    let ox_l = a.new_label();
+    a.bind(ox_l);
+    a.mv(S11, S1);
+    a.mv(T4, S2);
+    a.li(A6, spec.cout as i32);
+    let oc_l = a.new_label();
+    a.bind(oc_l);
+    a.lw(A0, T4, 0);
+    // K strips, fully unrolled with immediate offsets.
+    for ky in 0..spec.k {
+        if ky == 0 {
+            a.mv(S9, S8);
+        } else {
+            emit_advance(&mut a, S9, S9, rowstride);
+        }
+        for c in 0..wpg {
+            for k in 0..act_regs {
+                a.lw(A2 + k as u8, S9, (c * n + 4 * k) as i32);
+            }
+            a.lw(A1, S11, ((ky * wpg + c) * 4) as i32);
+            a.nn_mac(mode, A0, A2, A1);
+        }
+    }
+    a.addi(S11, S11, oc_w_bytes);
+    emit_requantize(&mut a, spec.rq);
+    a.sb(T5, A0, 0);
+    a.addi(T5, T5, 1);
+    a.addi(T4, T4, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, oc_l);
+    emit_advance(&mut a, S8, S8, (spec.stride * spec.cin) as i32);
+    a.addi(TP, TP, -1);
+    a.bne(TP, ZERO, ox_l);
+    emit_advance(&mut a, S7, S7, spec.stride as i32 * rowstride);
+    a.addi(GP, GP, -1);
+    a.bne(GP, ZERO, oy_l);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MacMode::*;
+    use crate::kernels::run::run_conv;
+    use crate::nn::layers::{qconv2d, ConvGeom};
+    use crate::nn::tensor::Tensor;
+    use crate::rng::Rng;
+
+    fn spec(h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize) -> ConvSpec {
+        ConvSpec {
+            h,
+            w,
+            cin,
+            cout,
+            k,
+            stride,
+            rq: Requant::from_real_scale(0.002),
+            relu: true,
+        }
+    }
+
+    fn check(spec: ConvSpec, mode: Option<MacMode>, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let bits = mode.map_or(8, |m| m.weight_bits());
+        let acts: Vec<i8> = (0..spec.h * spec.w * spec.cin).map(|_| rng.i8()).collect();
+        let wts: Vec<i8> =
+            (0..spec.cout * spec.k * spec.k * spec.cin).map(|_| rng.int_bits(bits)).collect();
+        let bias: Vec<i32> = (0..spec.cout).map(|_| rng.range_i32(-300, 300)).collect();
+        let input = Tensor::from_vec(&[spec.h, spec.w, spec.cin], acts.clone());
+        let want = qconv2d(
+            &input,
+            &wts,
+            &bias,
+            spec.cout,
+            ConvGeom { k: spec.k, stride: spec.stride, pad: 0 },
+            spec.rq,
+            spec.relu,
+        );
+        let (got, _) = run_conv(spec, mode, &acts, &wts, &bias);
+        assert_eq!(got, want.data, "{mode:?} spec {spec:?}");
+    }
+
+    #[test]
+    fn baseline_matches_reference() {
+        check(spec(6, 6, 4, 3, 3, 1), None, 10);
+        check(spec(8, 8, 3, 2, 3, 2), None, 11); // odd Cin fine for baseline
+        check(spec(7, 7, 4, 2, 5, 1), None, 12);
+    }
+
+    #[test]
+    fn mode_kernels_match_reference() {
+        for m in [W8, W4, W2] {
+            check(spec(6, 6, 4, 3, 3, 1), Some(m), 20); // strip 12: not word-multiple for W2/W4
+            check(spec(8, 8, 8, 4, 3, 2), Some(m), 21); // strided
+            check(spec(6, 6, 16, 2, 1, 1), Some(m), 22); // pointwise
+            check(spec(9, 9, 4, 2, 5, 1), Some(m), 23); // 5×5 (LeNet-style)
+        }
+    }
+
+    #[test]
+    fn mode_speedup_ordering_matches_fig7() {
+        let s = spec(10, 10, 16, 8, 3, 1);
+        let mut rng = Rng::new(33);
+        let acts: Vec<i8> = (0..s.h * s.w * s.cin).map(|_| rng.i8()).collect();
+        let bias = vec![0i32; s.cout];
+        let mk = |bits: u32, rng: &mut Rng| -> Vec<i8> {
+            (0..s.cout * s.k * s.k * s.cin).map(|_| rng.int_bits(bits)).collect()
+        };
+        let w8 = mk(8, &mut rng);
+        let w4 = mk(4, &mut rng);
+        let w2 = mk(2, &mut rng);
+        let (_, base) = run_conv(s, None, &acts, &w8, &bias);
+        let (_, m1) = run_conv(s, Some(W8), &acts, &w8, &bias);
+        let (_, m2) = run_conv(s, Some(W4), &acts, &w4, &bias);
+        let (_, m3) = run_conv(s, Some(W2), &acts, &w2, &bias);
+        let su = |p: &crate::sim::PerfCounters| base.cycles as f64 / p.cycles as f64;
+        assert!(su(&m1) > 5.0, "Mode-1 {:.2}", su(&m1));
+        assert!(su(&m2) > su(&m1), "Mode-2 {:.2} vs Mode-1 {:.2}", su(&m2), su(&m1));
+        assert!(su(&m3) > su(&m2), "Mode-3 {:.2} vs Mode-2 {:.2}", su(&m3), su(&m2));
+    }
+}

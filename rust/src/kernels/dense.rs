@@ -1,0 +1,261 @@
+//! Dense (fully-connected) layer kernels.
+//!
+//! * [`build_baseline`] — scalar RV32IM code: per-element byte loads,
+//!   `mul`/`add`, pointer bumps (what the compiler emits for the paper's
+//!   original Ibex kernels).
+//! * [`build_mode`] — packed `nn_mac` kernel: the inner dot product is
+//!   fully unrolled with immediate-offset word loads when the row fits
+//!   in the 12-bit offset range, otherwise chunk-looped with pointer
+//!   bumps. One `nn_mac_<x>b` retires 4/8/16 MACs.
+
+use super::requant::{emit_prologue, emit_requantize};
+use super::{emit_advance, Arena, KernelProgram};
+use crate::asm::Asm;
+use crate::isa::reg::*;
+use crate::isa::MacMode;
+use crate::nn::pack::words_per_group;
+use crate::nn::quant::Requant;
+
+/// Dense kernel shape/behaviour parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseSpec {
+    /// Input features.
+    pub in_dim: usize,
+    /// Output features.
+    pub out_dim: usize,
+    /// Requantization parameters (ignored when `out_i32`).
+    pub rq: Requant,
+    /// Fused ReLU.
+    pub relu: bool,
+    /// Emit raw int32 accumulators (final logits layer).
+    pub out_i32: bool,
+}
+
+/// Build the scalar baseline kernel.
+///
+/// Layout: activations int8 `[I]` at `act_addr`, weights int8 `[O][I]`
+/// row-major at `w_addr`, bias int32 `[O]`, output int8 `[O]`
+/// (or int32 `[O]` when `out_i32`).
+pub fn build_baseline(spec: DenseSpec) -> KernelProgram {
+    let mut ar = Arena::new();
+    let act = ar.alloc_act(spec.in_dim as u32);
+    let w = ar.alloc((spec.out_dim * spec.in_dim) as u32, 4);
+    let bias = ar.alloc(4 * spec.out_dim as u32, 4);
+    let out = ar.alloc(4 * spec.out_dim as u32, 4);
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    if !spec.out_i32 {
+        emit_prologue(&mut a, spec.rq, spec.relu);
+    }
+    a.mv(T4, S2); // bias cursor
+    a.mv(T5, S3); // out cursor
+    a.mv(S11, S1); // weight cursor (monotonic over rows)
+    a.li(A6, spec.out_dim as i32); // output counter
+
+    let outer = a.new_label();
+    a.bind(outer);
+    a.lw(A0, T4, 0); // acc = bias
+    a.mv(S10, S0); // act cursor
+    a.li(T6, spec.in_dim as i32); // element counter
+    let inner = a.new_label();
+    a.bind(inner);
+    // Scalar MAC: lb act, lb weight, mul, add.
+    a.lb(T0, S10, 0);
+    a.lb(T1, S11, 0);
+    a.mul(T0, T0, T1);
+    a.add(A0, A0, T0);
+    a.addi(S10, S10, 1);
+    a.addi(S11, S11, 1);
+    a.addi(T6, T6, -1);
+    a.bne(T6, ZERO, inner);
+
+    if spec.out_i32 {
+        a.sw(T5, A0, 0);
+        a.addi(T5, T5, 4);
+    } else {
+        emit_requantize(&mut a, spec.rq);
+        a.sb(T5, A0, 0);
+        a.addi(T5, T5, 1);
+    }
+    a.addi(T4, T4, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, outer);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+/// Maximum immediate-offset reach for the unrolled inner product.
+const UNROLL_OFFSET_LIMIT: usize = 2000;
+
+/// Build the packed `nn_mac` kernel for `mode`.
+///
+/// Layout: activations int8 `[I]` (word-aligned, slack-padded), weights
+/// packed u32 per output row (see [`crate::nn::pack::pack_dense`]),
+/// bias int32 `[O]`, output as in the baseline.
+pub fn build_mode(mode: MacMode, spec: DenseSpec) -> KernelProgram {
+    let n = mode.weights_per_word() as usize; // MACs per instruction
+    let wpg = words_per_group(mode, spec.in_dim); // weight words per row
+    let mut ar = Arena::new();
+    let act = ar.alloc_act(spec.in_dim.next_multiple_of(4) as u32);
+    let w = ar.alloc((spec.out_dim * wpg * 4) as u32, 4);
+    let bias = ar.alloc(4 * spec.out_dim as u32, 4);
+    let out = ar.alloc(4 * spec.out_dim as u32, 4);
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    if !spec.out_i32 {
+        emit_prologue(&mut a, spec.rq, spec.relu);
+    }
+    a.mv(T4, S2);
+    a.mv(T5, S3);
+    a.mv(S11, S1); // weight row cursor
+    a.li(A6, spec.out_dim as i32);
+
+    let outer = a.new_label();
+    a.bind(outer);
+    a.lw(A0, T4, 0); // acc = bias
+
+    let act_words_per_chunk = mode.activation_regs() as usize;
+    if spec.in_dim <= UNROLL_OFFSET_LIMIT && wpg * 4 <= UNROLL_OFFSET_LIMIT {
+        // Fully unrolled: immediate offsets off s0 (acts) and s11 (row).
+        for c in 0..wpg {
+            for k in 0..act_words_per_chunk {
+                a.lw(A2 + k as u8, S0, (c * n + 4 * k) as i32);
+            }
+            a.lw(A1, S11, (4 * c) as i32);
+            a.nn_mac(mode, A0, A2, A1);
+        }
+        emit_advance(&mut a, S11, S11, (4 * wpg) as i32);
+    } else {
+        // Chunk loop with pointer bumps (large layers).
+        a.mv(S10, S0);
+        a.li(T6, wpg as i32);
+        let inner = a.new_label();
+        a.bind(inner);
+        for k in 0..act_words_per_chunk {
+            a.lw(A2 + k as u8, S10, (4 * k) as i32);
+        }
+        a.lw(A1, S11, 0);
+        a.nn_mac(mode, A0, A2, A1);
+        a.addi(S10, S10, n as i32);
+        a.addi(S11, S11, 4);
+        a.addi(T6, T6, -1);
+        a.bne(T6, ZERO, inner);
+    }
+
+    if spec.out_i32 {
+        a.sw(T5, A0, 0);
+        a.addi(T5, T5, 4);
+    } else {
+        emit_requantize(&mut a, spec.rq);
+        a.sb(T5, A0, 0);
+        a.addi(T5, T5, 1);
+    }
+    a.addi(T4, T4, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, outer);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MacMode::*;
+    use crate::kernels::run::run_dense;
+    use crate::nn::layers::qdense;
+    use crate::rng::Rng;
+
+    fn spec(in_dim: usize, out_dim: usize, relu: bool, out_i32: bool) -> DenseSpec {
+        DenseSpec { in_dim, out_dim, rq: Requant::from_real_scale(0.004), relu, out_i32 }
+    }
+
+    fn check(spec: DenseSpec, mode: Option<MacMode>, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let bits = mode.map_or(8, |m| m.weight_bits());
+        let acts: Vec<i8> = (0..spec.in_dim).map(|_| rng.i8()).collect();
+        let w: Vec<i8> =
+            (0..spec.in_dim * spec.out_dim).map(|_| rng.int_bits(bits)).collect();
+        let bias: Vec<i32> = (0..spec.out_dim).map(|_| rng.range_i32(-500, 500)).collect();
+        let (want_q, want_acc) = qdense(
+            &acts,
+            &w,
+            &bias,
+            spec.out_dim,
+            if spec.out_i32 { None } else { Some(spec.rq) },
+            spec.relu,
+        );
+        let (got_q, got_acc, _) = run_dense(spec, mode, &acts, &w, &bias);
+        if spec.out_i32 {
+            assert_eq!(got_acc, want_acc, "{mode:?}");
+        } else {
+            assert_eq!(got_q, want_q, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_matches_reference() {
+        check(spec(17, 5, true, false), None, 1);
+        check(spec(32, 3, false, true), None, 2);
+    }
+
+    #[test]
+    fn mode_kernels_match_reference_unrolled() {
+        for mode in [W8, W4, W2] {
+            check(spec(64, 7, true, false), Some(mode), 3);
+            // Non-multiple-of-16 input dim exercises tail padding.
+            check(spec(50, 4, false, false), Some(mode), 4);
+            check(spec(24, 3, false, true), Some(mode), 5);
+        }
+    }
+
+    #[test]
+    fn mode_kernels_match_reference_looped() {
+        // in_dim above the unroll limit takes the chunk-loop path.
+        for mode in [W8, W4, W2] {
+            check(spec(2304, 3, true, false), Some(mode), 6);
+        }
+    }
+
+    #[test]
+    fn mode_kernels_cut_cycles_and_accesses() {
+        let s = spec(256, 16, true, false);
+        let mut rng = Rng::new(9);
+        let acts: Vec<i8> = (0..s.in_dim).map(|_| rng.i8()).collect();
+        let bias: Vec<i32> = vec![0; s.out_dim];
+        let w8: Vec<i8> = (0..s.in_dim * s.out_dim).map(|_| rng.int_bits(8)).collect();
+        let w2: Vec<i8> = (0..s.in_dim * s.out_dim).map(|_| rng.int_bits(2)).collect();
+        let (_, _, base) = run_dense(s, None, &acts, &w8, &bias);
+        let (_, _, m1) = run_dense(s, Some(W8), &acts, &w8, &bias);
+        let (_, _, m3) = run_dense(s, Some(W2), &acts, &w2, &bias);
+        let su1 = base.cycles as f64 / m1.cycles as f64;
+        let su3 = base.cycles as f64 / m3.cycles as f64;
+        assert!(su1 > 4.0, "Mode-1 speedup too small: {su1:.2}");
+        assert!(su3 > su1, "Mode-3 ({su3:.2}) must beat Mode-1 ({su1:.2})");
+        // Fig. 4: packed kernels slash memory accesses.
+        assert!(m3.mem_accesses() * 4 < base.mem_accesses(), "accesses {m3:?} vs {base:?}");
+    }
+}

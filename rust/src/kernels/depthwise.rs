@@ -1,0 +1,302 @@
+//! Depthwise convolution kernels (channel multiplier 1).
+//!
+//! Depthwise taps for one output channel are *strided* by `Cin` in NHWC,
+//! so the packed kernels must gather activation bytes and assemble the
+//! `nn_mac` words on the fly (`lbu` + shift + `or`). This is exactly the
+//! structural disadvantage the paper observes for MCUNet/MobileNet:
+//! "[depthwise convolutions] do not enable the same degree of input
+//! reuse as in standard point-wise convolutions" — the measured gain of
+//! these kernels is correspondingly modest, while weight traffic still
+//! shrinks by the packing factor.
+
+use super::requant::{emit_prologue, emit_requantize};
+use super::{emit_advance, Arena, KernelProgram};
+use crate::asm::Asm;
+use crate::isa::reg::*;
+use crate::isa::MacMode;
+use crate::nn::pack::words_per_group;
+use crate::nn::quant::Requant;
+
+/// Depthwise kernel shape parameters (valid conv over pre-padded input).
+#[derive(Debug, Clone, Copy)]
+pub struct DwSpec {
+    /// Pre-padded input height.
+    pub h: usize,
+    /// Pre-padded input width.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Kernel size.
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Requantization parameters.
+    pub rq: Requant,
+    /// Fused ReLU.
+    pub relu: bool,
+}
+
+impl DwSpec {
+    /// Output height.
+    pub fn ho(&self) -> usize {
+        (self.h - self.k) / self.stride + 1
+    }
+    /// Output width.
+    pub fn wo(&self) -> usize {
+        (self.w - self.k) / self.stride + 1
+    }
+    /// Total MACs.
+    pub fn macs(&self) -> u64 {
+        (self.ho() * self.wo() * self.c * self.k * self.k) as u64
+    }
+}
+
+fn alloc(spec: &DwSpec, w_bytes: u32) -> (Arena, u32, u32, u32, u32) {
+    let mut ar = Arena::new();
+    let act = ar.alloc_act((spec.h * spec.w * spec.c) as u32);
+    let w = ar.alloc(w_bytes, 4);
+    let bias = ar.alloc(4 * spec.c as u32, 4);
+    let out = ar.alloc((spec.ho() * spec.wo() * spec.c) as u32, 4);
+    (ar, act, w, bias, out)
+}
+
+/// Scalar baseline depthwise kernel. Weights int8 `[C][K][K]`.
+pub fn build_baseline(spec: DwSpec) -> KernelProgram {
+    let (ar, act, w, bias, out) = alloc(&spec, (spec.c * spec.k * spec.k) as u32);
+    let rowstride = (spec.w * spec.c) as i32;
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    emit_prologue(&mut a, spec.rq, spec.relu);
+    a.mv(T5, S3);
+    a.li(GP, spec.ho() as i32);
+    a.mv(S7, S0);
+
+    let oy_l = a.new_label();
+    a.bind(oy_l);
+    a.li(TP, spec.wo() as i32);
+    a.mv(S8, S7);
+    let ox_l = a.new_label();
+    a.bind(ox_l);
+    a.mv(S11, S1); // weight cursor, streams per channel
+    a.mv(T4, S2);
+    a.mv(S9, S8); // channel tap base
+    a.li(A6, spec.c as i32);
+    let c_l = a.new_label();
+    a.bind(c_l);
+    a.lw(A0, T4, 0);
+    // K×K taps: per-ky base advance, kx via immediate offsets.
+    for ky in 0..spec.k {
+        if ky == 0 {
+            a.mv(S10, S9);
+        } else {
+            emit_advance(&mut a, S10, S10, rowstride);
+        }
+        for kx in 0..spec.k {
+            a.lb(T0, S10, (kx * spec.c) as i32);
+            a.lb(T1, S11, (ky * spec.k + kx) as i32);
+            a.mul(T0, T0, T1);
+            a.add(A0, A0, T0);
+        }
+    }
+    a.addi(S11, S11, (spec.k * spec.k) as i32);
+    emit_requantize(&mut a, spec.rq);
+    a.sb(T5, A0, 0);
+    a.addi(T5, T5, 1);
+    a.addi(T4, T4, 4);
+    a.addi(S9, S9, 1);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, c_l);
+    emit_advance(&mut a, S8, S8, (spec.stride * spec.c) as i32);
+    a.addi(TP, TP, -1);
+    a.bne(TP, ZERO, ox_l);
+    emit_advance(&mut a, S7, S7, spec.stride as i32 * rowstride);
+    a.addi(GP, GP, -1);
+    a.bne(GP, ZERO, oy_l);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+/// Packed `nn_mac` depthwise kernel with on-the-fly activation packing.
+/// Weights packed per channel — see [`crate::nn::pack::pack_depthwise`].
+pub fn build_mode(mode: MacMode, spec: DwSpec) -> KernelProgram {
+    let taps = spec.k * spec.k;
+    let wpg = words_per_group(mode, taps);
+    let act_regs = mode.activation_regs() as usize;
+    let (ar, act, w, bias, out) = alloc(&spec, (spec.c * wpg * 4) as u32);
+    let rowstride = (spec.w * spec.c) as i32;
+
+    let mut a = Asm::new();
+    a.li(S0, act as i32);
+    a.li(S1, w as i32);
+    a.li(S2, bias as i32);
+    a.li(S3, out as i32);
+    emit_prologue(&mut a, spec.rq, spec.relu);
+    a.mv(T5, S3);
+    a.li(GP, spec.ho() as i32);
+    a.mv(S7, S0);
+
+    let oy_l = a.new_label();
+    a.bind(oy_l);
+    a.li(TP, spec.wo() as i32);
+    a.mv(S8, S7);
+    let ox_l = a.new_label();
+    a.bind(ox_l);
+    a.mv(S11, S1);
+    a.mv(T4, S2);
+    a.mv(S9, S8);
+    a.li(A6, spec.c as i32);
+    let c_l = a.new_label();
+    a.bind(c_l);
+    a.lw(A0, T4, 0);
+    // Assemble activation words tap-by-tap; per-ky tap base in s10.
+    let mut cur_ky = usize::MAX;
+    for chunk in 0..wpg {
+        for reg in 0..act_regs {
+            let word_idx = chunk * act_regs + reg;
+            let dst = A2 + reg as u8;
+            let mut lane_filled = false;
+            for j in 0..4 {
+                let t = word_idx * 4 + j;
+                if t >= taps {
+                    break;
+                }
+                let (ky, kx) = (t / spec.k, t % spec.k);
+                if ky != cur_ky {
+                    // (Re)derive the ky row base. Taps are visited in
+                    // row-major order so ky only moves forward.
+                    if ky == 0 {
+                        a.mv(S10, S9);
+                    } else {
+                        debug_assert_eq!(ky, cur_ky.wrapping_add(1));
+                        emit_advance(&mut a, S10, S10, rowstride);
+                    }
+                    cur_ky = ky;
+                }
+                let off = (kx * spec.c) as i32;
+                if j == 0 {
+                    a.lbu(dst, S10, off);
+                    lane_filled = true;
+                } else {
+                    a.lbu(T1, S10, off);
+                    a.slli(T1, T1, (8 * j) as i32);
+                    a.emit(crate::isa::Instr::Op {
+                        op: crate::isa::AluOp::Or,
+                        rd: dst,
+                        rs1: dst,
+                        rs2: T1,
+                    });
+                }
+            }
+            if !lane_filled {
+                // Word entirely past the tap count: zero it (its weights
+                // are zero-padded, but the register must hold *something*
+                // deterministic).
+                a.li(dst, 0);
+            }
+        }
+        a.lw(A1, S11, (chunk * 4) as i32);
+        a.nn_mac(mode, A0, A2, A1);
+    }
+    a.addi(S11, S11, (wpg * 4) as i32);
+    emit_requantize(&mut a, spec.rq);
+    a.sb(T5, A0, 0);
+    a.addi(T5, T5, 1);
+    a.addi(T4, T4, 4);
+    a.addi(S9, S9, 1);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, c_l);
+    emit_advance(&mut a, S8, S8, (spec.stride * spec.c) as i32);
+    a.addi(TP, TP, -1);
+    a.bne(TP, ZERO, ox_l);
+    emit_advance(&mut a, S7, S7, spec.stride as i32 * rowstride);
+    a.addi(GP, GP, -1);
+    a.bne(GP, ZERO, oy_l);
+    a.halt();
+
+    KernelProgram {
+        prog: a.assemble(),
+        act_addr: act,
+        w_addr: w,
+        bias_addr: bias,
+        out_addr: out,
+        mem_size: ar.high_water() + 4096,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MacMode::*;
+    use crate::kernels::run::run_depthwise;
+    use crate::nn::layers::{qdepthwise, ConvGeom};
+    use crate::nn::tensor::Tensor;
+    use crate::rng::Rng;
+
+    fn spec(h: usize, w: usize, c: usize, k: usize, stride: usize) -> DwSpec {
+        DwSpec { h, w, c, k, stride, rq: Requant::from_real_scale(0.003), relu: true }
+    }
+
+    fn check(spec: DwSpec, mode: Option<MacMode>, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let bits = mode.map_or(8, |m| m.weight_bits());
+        let acts: Vec<i8> = (0..spec.h * spec.w * spec.c).map(|_| rng.i8()).collect();
+        let wts: Vec<i8> = (0..spec.c * spec.k * spec.k).map(|_| rng.int_bits(bits)).collect();
+        let bias: Vec<i32> = (0..spec.c).map(|_| rng.range_i32(-200, 200)).collect();
+        let input = Tensor::from_vec(&[spec.h, spec.w, spec.c], acts.clone());
+        let want = qdepthwise(
+            &input,
+            &wts,
+            &bias,
+            ConvGeom { k: spec.k, stride: spec.stride, pad: 0 },
+            spec.rq,
+            spec.relu,
+        );
+        let (got, _) = run_depthwise(spec, mode, &acts, &wts, &bias);
+        assert_eq!(got, want.data, "{mode:?} {spec:?}");
+    }
+
+    #[test]
+    fn baseline_matches_reference() {
+        check(spec(6, 6, 8, 3, 1), None, 40);
+        check(spec(8, 8, 5, 3, 2), None, 41);
+    }
+
+    #[test]
+    fn mode_kernels_match_reference() {
+        for m in [W8, W4, W2] {
+            check(spec(6, 6, 8, 3, 1), Some(m), 50);
+            check(spec(8, 8, 6, 3, 2), Some(m), 51); // strided
+            check(spec(7, 7, 4, 5, 1), Some(m), 52); // 5×5: 25 taps, multi-chunk
+        }
+    }
+
+    #[test]
+    fn depthwise_gains_modest_but_weight_traffic_cut() {
+        // The paper's depthwise observation: cycle gains are small, but
+        // weight loads still shrink with the packing factor.
+        let s = spec(10, 10, 16, 3, 1);
+        let mut rng = Rng::new(60);
+        let acts: Vec<i8> = (0..s.h * s.w * s.c).map(|_| rng.i8()).collect();
+        let bias = vec![0i32; s.c];
+        let w8: Vec<i8> = (0..s.c * 9).map(|_| rng.int_bits(8)).collect();
+        let w2: Vec<i8> = (0..s.c * 9).map(|_| rng.int_bits(2)).collect();
+        let (_, base) = run_depthwise(s, None, &acts, &w8, &bias);
+        let (_, m3) = run_depthwise(s, Some(W2), &acts, &w2, &bias);
+        let su = base.cycles as f64 / m3.cycles as f64;
+        assert!(su > 1.05, "depthwise Mode-3 should still win: {su:.2}");
+        assert!(su < 6.0, "depthwise gains should be modest: {su:.2}");
+        assert!(m3.loads < base.loads, "weight loads must shrink");
+    }
+}

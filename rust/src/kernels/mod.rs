@@ -1,0 +1,142 @@
+//! NN kernels as RV32 instruction streams — the reproduction of the
+//! paper's C kernels ("the respective replacements of the original
+//! kernels with kernels incorporating the nn_mac_(x)b operations").
+//!
+//! Two families per layer type:
+//!
+//! * **baseline** — straightforward RV32IM scalar code (byte loads,
+//!   `mul`/`add`), modelling what a C compiler emits for the original
+//!   Ibex (the paper's RV32IMC baseline),
+//! * **mode** — the hand-optimised packed kernels using `nn_mac_8b/4b/2b`
+//!   with word activation loads and packed weight streams, fully
+//!   unrolled over each contiguous dot-product strip.
+//!
+//! ## Register conventions (all kernels)
+//!
+//! | regs        | role |
+//! |-------------|------|
+//! | `s0..s3`    | act / weight / bias / out base pointers |
+//! | `s4,s5,s6`  | requant: Q31 multiplier, rounding constant, clamp low |
+//! | `s7..s11`   | kernel-specific bases and cursors |
+//! | `t0..t3`    | requant + scratch |
+//! | `t4,t5,t6`  | bias cursor, out cursor, loop counter |
+//! | `a0`        | 32-bit accumulator (the `rd` of `nn_mac`) |
+//! | `a1`        | packed weight word (`rs2`) |
+//! | `a2..a5`    | activation word group (`rs1..rs1+3`) |
+//! | `a6,a7,gp,tp` | loop counters (bare metal — no ABI constraints) |
+//!
+//! ## Memory map
+//!
+//! Programs are linked at [`PROG_BASE`]; data buffers are allocated by
+//! [`Arena`] from [`DATA_BASE`] with word alignment and a 16-byte slack
+//! after activation buffers (partially-filled `nn_mac` words read past a
+//! strip's end and multiply the excess by zero weights — the slack keeps
+//! those reads in bounds).
+
+pub mod conv;
+pub mod dense;
+pub mod depthwise;
+pub mod requant;
+pub mod run;
+
+use crate::isa::Instr;
+
+/// Program link base.
+pub const PROG_BASE: u32 = 0x0;
+/// Data arena base (leaves room for the largest generated program).
+pub const DATA_BASE: u32 = 0x0010_0000;
+/// Slack appended after activation buffers for whole-word over-reads.
+pub const ACT_SLACK: u32 = 16;
+
+/// Bump allocator for kernel data buffers.
+#[derive(Debug, Clone)]
+pub struct Arena {
+    next: u32,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Arena {
+    /// Arena starting at [`DATA_BASE`].
+    pub fn new() -> Self {
+        Arena { next: DATA_BASE }
+    }
+
+    /// Allocate `size` bytes with `align` alignment; returns the address.
+    pub fn alloc(&mut self, size: u32, align: u32) -> u32 {
+        debug_assert!(align.is_power_of_two());
+        let addr = (self.next + align - 1) & !(align - 1);
+        self.next = addr + size;
+        addr
+    }
+
+    /// Allocate an activation buffer: word-aligned + trailing slack.
+    pub fn alloc_act(&mut self, size: u32) -> u32 {
+        let a = self.alloc(size + ACT_SLACK, 4);
+        a
+    }
+
+    /// Bytes allocated so far (for memory sizing).
+    pub fn high_water(&self) -> u32 {
+        self.next
+    }
+}
+
+/// A generated kernel program plus the buffer addresses the host must
+/// fill / read.
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    /// The instruction stream (ends in `ecall`).
+    pub prog: Vec<Instr>,
+    /// Activation buffer address (int8, layout per kernel).
+    pub act_addr: u32,
+    /// Weight buffer address (packed u32 words for mode kernels, raw
+    /// int8 for baselines).
+    pub w_addr: u32,
+    /// Bias buffer address (int32).
+    pub bias_addr: u32,
+    /// Output buffer address (int8, or int32 when `out_i32`).
+    pub out_addr: u32,
+    /// Required memory size in bytes.
+    pub mem_size: u32,
+}
+
+impl KernelProgram {
+    /// Static instruction count (code size proxy).
+    pub fn code_len(&self) -> usize {
+        self.prog.len()
+    }
+}
+
+/// Choose a `li`-free pointer-advance: emits `addi` when the constant
+/// fits, else `li t0, c; add`.
+pub(crate) fn emit_advance(a: &mut crate::asm::Asm, rd: u8, rs: u8, c: i32) {
+    if (-2048..=2047).contains(&c) {
+        a.addi(rd, rs, c);
+    } else {
+        a.li(crate::isa::reg::T0, c);
+        a.add(rd, rs, crate::isa::reg::T0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_aligns_and_bumps() {
+        let mut ar = Arena::new();
+        let a = ar.alloc(3, 4);
+        assert_eq!(a % 4, 0);
+        let b = ar.alloc(8, 4);
+        assert!(b >= a + 3);
+        assert_eq!(b % 4, 0);
+        let c = ar.alloc_act(10);
+        assert_eq!(c % 4, 0);
+        assert!(ar.high_water() >= c + 10 + ACT_SLACK);
+    }
+}

@@ -1,0 +1,103 @@
+//! In-kernel requantization: the RV32 instruction sequence computing
+//! `clamp(rounding_rshift(SRDHM(acc, m), shift))` — bit-exact against
+//! [`crate::nn::quant::requantize`] (property-tested in `tests/`).
+//!
+//! `SRDHM` on RV32 without 64-bit registers: with `p = acc·m = H·2³² + L`
+//! (`mulh`/`mul`),
+//!
+//! ```text
+//! SRDHM(acc, m) = (p + 2³⁰) >> 31
+//!               = 2·H + 2·carry + ((L + 2³⁰ mod 2³²) >> 31)
+//! ```
+//!
+//! where `carry = (L + 2³⁰) overflowed`. The sequence costs 10 ALU ops +
+//! the `mulh`/`mul` pair, amortised over one output feature.
+
+use crate::asm::Asm;
+use crate::isa::reg::*;
+use crate::nn::quant::Requant;
+
+/// Emit the requant prologue: loads the per-layer constants into
+/// `s4` (Q31 multiplier), `s5` (rounding constant) and `s6` (clamp low).
+pub fn emit_prologue(a: &mut Asm, rq: Requant, relu: bool) {
+    a.li(S4, rq.m);
+    a.li(S5, if rq.shift > 0 { 1 << (rq.shift - 1) } else { 0 });
+    a.li(S6, if relu { 0 } else { -128 });
+}
+
+/// Emit requantization of the accumulator in `a0` into an int8 in `a0`.
+/// Clobbers `t0..t3`. Requires [`emit_prologue`] constants.
+pub fn emit_requantize(a: &mut Asm, rq: Requant) {
+    // SRDHM(a0, s4)
+    a.mulh(T0, A0, S4); // H
+    a.mul(T1, A0, S4); // L (low 32 bits)
+    a.emit(crate::isa::Instr::Lui { rd: T2, imm: 0x4000_0000 }); // 2^30
+    a.add(T3, T1, T2); // Lr = L + 2^30 (mod 2^32)
+    a.emit(crate::isa::Instr::Op { op: crate::isa::AluOp::Sltu, rd: T1, rs1: T3, rs2: T1 }); // carry
+    a.srli(T3, T3, 31);
+    a.slli(T0, T0, 1);
+    a.add(T0, T0, T3);
+    a.slli(T1, T1, 1);
+    a.add(T0, T0, T1); // t0 = SRDHM
+    // Rounding right shift (negative = left shift, scales ≥ 1).
+    if rq.shift > 0 {
+        a.add(T0, T0, S5);
+        a.srai(T0, T0, rq.shift);
+    } else if rq.shift < 0 {
+        a.slli(T0, T0, -rq.shift);
+    }
+    // Clamp to [s6, 127].
+    let hi_ok = a.new_label();
+    let lo_ok = a.new_label();
+    a.li(T1, 127);
+    a.blt(T0, T1, hi_ok);
+    a.mv(T0, T1);
+    a.bind(hi_ok);
+    a.bge(T0, S6, lo_ok);
+    a.mv(T0, S6);
+    a.bind(lo_ok);
+    a.mv(A0, T0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant::requantize;
+    use crate::rng::Rng;
+    use crate::sim::{Core, CoreConfig, ExitReason};
+
+    /// Run the emitted sequence on the ISS for one accumulator value.
+    fn run_requant(acc: i32, rq: Requant, relu: bool) -> i8 {
+        let mut a = Asm::new();
+        emit_prologue(&mut a, rq, relu);
+        a.li(A0, acc);
+        emit_requantize(&mut a, rq);
+        a.halt();
+        let mut core =
+            Core::new(CoreConfig { mem_size: 4096, ..Default::default() }, a.assemble(), 0);
+        assert_eq!(core.run(10_000), ExitReason::Ecall);
+        core.regs[A0 as usize] as i8
+    }
+
+    #[test]
+    fn matches_host_reference_randomised() {
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..200 {
+            let scale = 2f64.powf(-(rng.f32() as f64) * 14.0 - 0.01);
+            let rq = Requant::from_real_scale(scale);
+            let acc = rng.next_u32() as i32 >> (rng.below(8) as u32); // vary magnitude
+            let relu = rng.below(2) == 0;
+            let want = requantize(acc, rq, relu);
+            let got = run_requant(acc, rq, relu);
+            assert_eq!(got, want, "acc {acc} scale {scale} relu {relu}");
+        }
+    }
+
+    #[test]
+    fn clamps_both_rails() {
+        let rq = Requant::from_real_scale(0.5);
+        assert_eq!(run_requant(10_000, rq, false), 127);
+        assert_eq!(run_requant(-10_000, rq, false), -128);
+        assert_eq!(run_requant(-10_000, rq, true), 0);
+    }
+}

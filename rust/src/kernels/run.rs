@@ -1,0 +1,150 @@
+//! Host-side kernel runners: build the kernel program, stage operands in
+//! simulator memory (packing weights for the mode kernels), execute on
+//! the cycle-accurate core and read back results + perf counters.
+//!
+//! These are the measurement entry points used by the tests, the Fig. 4 /
+//! Fig. 7 / Fig. 8 harnesses and the DSE's per-layer cycle model.
+
+use super::conv::ConvSpec;
+use super::dense::DenseSpec;
+use super::depthwise::DwSpec;
+use super::KernelProgram;
+use crate::isa::MacMode;
+use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
+use crate::sim::{Core, CoreConfig, ExitReason, MacUnitConfig, PerfCounters};
+
+/// Execute a staged kernel program and return the perf counters.
+fn exec(prog: &KernelProgram, mac: MacUnitConfig, stage: impl FnOnce(&mut Core)) -> Core {
+    let cfg = CoreConfig {
+        mac,
+        mem_size: prog.mem_size.max(super::DATA_BASE + 4096) as usize,
+        ..Default::default()
+    };
+    let mut core = Core::new(cfg, prog.prog.clone(), super::PROG_BASE);
+    stage(&mut core);
+    core.mem.reset_counters(); // measure only the kernel's own traffic
+    let reason = core.run(u64::MAX);
+    assert_eq!(reason, ExitReason::Ecall, "kernel did not run to completion: {reason:?}");
+    core
+}
+
+/// Run a dense layer. Returns `(int8 outputs, int32 accumulators, perf)` —
+/// one of the two output vectors is empty depending on `spec.out_i32`.
+pub fn run_dense(
+    spec: DenseSpec,
+    mode: Option<MacMode>,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, Vec<i32>, PerfCounters) {
+    run_dense_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
+}
+
+/// [`run_dense`] with an explicit MAC-unit configuration (Fig. 7 ablations).
+pub fn run_dense_with(
+    spec: DenseSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, Vec<i32>, PerfCounters) {
+    assert_eq!(acts.len(), spec.in_dim);
+    assert_eq!(w.len(), spec.in_dim * spec.out_dim);
+    assert_eq!(bias.len(), spec.out_dim);
+    let kp = match mode {
+        None => super::dense::build_baseline(spec),
+        Some(m) => super::dense::build_mode(m, spec),
+    };
+    let core = exec(&kp, mac, |core| {
+        core.mem.write_i8(kp.act_addr, acts);
+        match mode {
+            None => core.mem.write_i8(kp.w_addr, w),
+            Some(m) => core.mem.write_words(kp.w_addr, &pack_dense(m, w, spec.out_dim, spec.in_dim)),
+        }
+        core.mem.write_i32(kp.bias_addr, bias);
+    });
+    if spec.out_i32 {
+        (Vec::new(), core.mem.read_i32(kp.out_addr, spec.out_dim), core.perf)
+    } else {
+        (core.mem.read_i8(kp.out_addr, spec.out_dim), Vec::new(), core.perf)
+    }
+}
+
+/// Run a standard convolution. Returns `(int8 NHWC outputs, perf)`.
+pub fn run_conv(
+    spec: ConvSpec,
+    mode: Option<MacMode>,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, PerfCounters) {
+    run_conv_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
+}
+
+/// [`run_conv`] with an explicit MAC-unit configuration.
+pub fn run_conv_with(
+    spec: ConvSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, PerfCounters) {
+    assert_eq!(acts.len(), spec.h * spec.w * spec.cin);
+    assert_eq!(w.len(), spec.cout * spec.k * spec.k * spec.cin);
+    assert_eq!(bias.len(), spec.cout);
+    let kp = match mode {
+        None => super::conv::build_baseline(spec),
+        Some(m) => super::conv::build_mode(m, spec),
+    };
+    let core = exec(&kp, mac, |core| {
+        core.mem.write_i8(kp.act_addr, acts);
+        match mode {
+            None => core.mem.write_i8(kp.w_addr, w),
+            Some(m) => {
+                core.mem.write_words(kp.w_addr, &pack_conv(m, w, spec.cout, spec.k, spec.cin))
+            }
+        }
+        core.mem.write_i32(kp.bias_addr, bias);
+    });
+    (core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.cout), core.perf)
+}
+
+/// Run a depthwise convolution. Returns `(int8 NHWC outputs, perf)`.
+pub fn run_depthwise(
+    spec: DwSpec,
+    mode: Option<MacMode>,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, PerfCounters) {
+    run_depthwise_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
+}
+
+/// [`run_depthwise`] with an explicit MAC-unit configuration.
+pub fn run_depthwise_with(
+    spec: DwSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> (Vec<i8>, PerfCounters) {
+    assert_eq!(acts.len(), spec.h * spec.w * spec.c);
+    assert_eq!(w.len(), spec.c * spec.k * spec.k);
+    assert_eq!(bias.len(), spec.c);
+    let kp = match mode {
+        None => super::depthwise::build_baseline(spec),
+        Some(m) => super::depthwise::build_mode(m, spec),
+    };
+    let core = exec(&kp, mac, |core| {
+        core.mem.write_i8(kp.act_addr, acts);
+        match mode {
+            None => core.mem.write_i8(kp.w_addr, w),
+            Some(m) => core.mem.write_words(kp.w_addr, &pack_depthwise(m, w, spec.c, spec.k)),
+        }
+        core.mem.write_i32(kp.bias_addr, bias);
+    });
+    (core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.c), core.perf)
+}

@@ -1,0 +1,52 @@
+//! # mpnn-riscv — Mixed-precision Neural Networks on RISC-V Cores
+//!
+//! Full-system reproduction of *"Mixed-precision Neural Networks on RISC-V
+//! Cores: ISA extensions for Multi-Pumped Soft SIMD Operations"* (ICCAD'24,
+//! DOI 10.1145/3676536.3676840) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains every substrate the paper depends on, built from
+//! scratch:
+//!
+//! * [`isa`] — bit-exact RV32IM encoder/decoder/disassembler plus the
+//!   paper's three custom instructions (`nn_mac_8b/4b/2b`, Table 2).
+//! * [`sim`] — a cycle-accurate Ibex-like 2-stage core simulator with the
+//!   modified multiplier block: four 17-bit lanes, 2× multi-pumping and the
+//!   guard-bit soft-SIMD datapath of Eq. (2).
+//! * [`asm`] — macro-assembler (labels, pseudo-instructions) used by the
+//!   kernel code generators.
+//! * [`kernels`] — NN kernels emitted as RV32 instruction streams: baseline
+//!   RV32IM conv/dense/depthwise and the Mode-1/2/3 variants using the
+//!   custom MAC instructions.
+//! * [`nn`] — quantized-NN substrate: tensors, integer layers, per-layer
+//!   symmetric quantization to 2/4/8-bit grids, weight packing and the
+//!   Jacob-style fixed-point requantization.
+//! * [`models`] — the Table-3 model zoo (LeNet5, CIFAR-10 CNN, MCUNet-VWW,
+//!   MobileNetV1) with weights trained at build time by `python/compile`.
+//! * [`dse`] — the mixed-precision design-space exploration: enumeration,
+//!   pruning, Pareto extraction and accuracy-threshold selection.
+//! * [`coordinator`] — the evaluation orchestrator routing accuracy jobs to
+//!   the PJRT runtime and cycle jobs to the core simulator.
+//! * [`energy`] — FPGA (Virtex-7) and ASIC (ASAP7) power/area/energy models
+//!   calibrated to the paper's Table 4, plus the Table-5 SOTA comparison.
+//! * [`runtime`] — PJRT client wrapper loading the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py`.
+//! * [`exp`] — the experiment harnesses regenerating every table and figure
+//!   of the paper's evaluation section.
+
+pub mod asm;
+pub mod bench;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod exp;
+pub mod isa;
+pub mod json;
+pub mod kernels;
+pub mod models;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

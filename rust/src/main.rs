@@ -1,0 +1,220 @@
+//! `mpnn` — CLI for the mixed-precision RISC-V co-design framework.
+//!
+//! Experiment subcommands regenerate every table/figure of the paper
+//! (results are printed and written under `results/`); utility
+//! subcommands expose the ISA/simulator substrate.
+
+use anyhow::{bail, Result};
+use mpnn::exp::{self, ExpOpts};
+use mpnn::json::Json;
+
+const USAGE: &str = "\
+mpnn — Mixed-precision NNs on RISC-V cores (ICCAD'24) reproduction
+
+USAGE: mpnn <COMMAND> [OPTIONS]
+
+Experiment commands (paper artifacts; results go to results/*.json):
+  table3     Baseline model characteristics (Table 3)
+  fig4       MobileNetV1 per-layer memory-access reduction (Fig. 4)
+  fig6       Accuracy-vs-MAC-instructions Pareto sweep (Fig. 6)
+  fig7       Per-Mode cycle breakdown, dense + conv layer (Fig. 7)
+  fig8       End-to-end speedups at 1/2/5% accuracy loss (Fig. 8)
+  table4     FPGA/ASIC energy-efficiency comparison (Table 4)
+  table5     State-of-the-art comparison (Table 5)
+  all        Everything above, sharing one DSE sweep per model
+
+Utility commands:
+  disasm <hex words...>     Decode/disassemble instruction words
+  demo                      Assemble + run a small nn_mac program
+  xcheck                    Verify Rust arithmetic vs python xcheck.json
+
+OPTIONS:
+  --artifacts <dir>   Artifacts directory (default: auto-discover)
+  --eval <n>          Images per accuracy evaluation (default 128)
+  --budget <n>        DSE configuration budget per model (default 120)
+  --host-eval         Use the host evaluator instead of PJRT
+  --seed <n>          Random seed (default 0xD5E)
+";
+
+fn parse_opts(args: &[String]) -> Result<ExpOpts> {
+    let mut opts = ExpOpts::default();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => {
+                opts.artifacts = it.next().map(Into::into).unwrap_or(opts.artifacts)
+            }
+            "--eval" => opts.eval_n = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.eval_n),
+            "--budget" => {
+                opts.budget = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.budget)
+            }
+            "--host-eval" => opts.host_eval = true,
+            "--seed" => opts.seed = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.seed),
+            other => bail!("unknown option `{other}`\n{USAGE}"),
+        }
+    }
+    Ok(opts)
+}
+
+fn save(name: &str, json: &Json) -> Result<()> {
+    exp::write_result(name, json)?;
+    println!("[saved results/{name}.json]");
+    Ok(())
+}
+
+fn cmd_all(opts: &ExpOpts) -> Result<()> {
+    let (_, j3) = exp::table3::run(opts)?;
+    save("table3", &j3)?;
+    let (_, j7) = exp::fig7::run(opts)?;
+    save("fig7", &j7)?;
+    // One sweep per model feeds fig6 + fig8 + table4 + table5.
+    let mut sweeps = Vec::new();
+    for name in exp::MODEL_NAMES {
+        eprintln!("[all] sweeping {name}");
+        sweeps.push(exp::fig6::sweep_model(opts, name)?);
+    }
+    let mut sels = Vec::new();
+    for s in sweeps {
+        sels.push(exp::fig8::select(s));
+    }
+    // Fig. 6 output from the shared sweeps (retained inside the selections).
+    let mut fig6_arr = Vec::new();
+    for m in &sels {
+        let s = &m.sweep;
+        println!(
+            "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front",
+            s.model,
+            s.float_acc * 100.0,
+            s.points.len(),
+            s.front.len()
+        );
+        fig6_arr.push(Json::obj(vec![
+            ("model", Json::s(&s.model)),
+            ("float_acc", Json::Num(s.float_acc as f64)),
+            ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
+            (
+                "points",
+                Json::Arr(
+                    s.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("acc", Json::Num(p.accuracy as f64)),
+                                ("mac_instrs", Json::i(p.mac_instructions as i64)),
+                                ("cycles", Json::i(p.cycles as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
+        ]));
+    }
+    save("fig6", &Json::Arr(fig6_arr))?;
+    exp::fig8::print(&sels);
+    save("fig8", &exp::fig8::to_json(&sels))?;
+    // Fig. 4 with the actual selected MobileNet configs.
+    let mobile = sels.iter().find(|m| m.model == "mobilenet_v1").unwrap();
+    let cfgs: Vec<(String, Vec<u32>)> = mobile
+        .selections
+        .iter()
+        .flatten()
+        .map(|s| (format!("<{:.0}% loss", s.threshold * 100.0), s.bits.clone()))
+        .collect();
+    let (_, j4) = exp::fig4::run_with(opts, if cfgs.is_empty() { None } else { Some(cfgs) })?;
+    save("fig4", &j4)?;
+    let (_, jt4) = exp::table4::from_selections(opts, &sels)?;
+    save("table4", &jt4)?;
+    let (_, jt5) = exp::table5::from_selections(opts, &sels)?;
+    save("table5", &jt5)?;
+    Ok(())
+}
+
+fn cmd_disasm(args: &[String]) -> Result<()> {
+    for a in args {
+        let w = u32::from_str_radix(a.trim_start_matches("0x"), 16)?;
+        match mpnn::isa::decode::decode(w) {
+            Ok(i) => println!("{w:#010x}  {}", mpnn::isa::disasm::disasm(i)),
+            Err(e) => println!("{w:#010x}  <{e}>"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_demo() -> Result<()> {
+    use mpnn::asm::Asm;
+    use mpnn::isa::custom::{pack_acts, pack_weights};
+    use mpnn::isa::{reg, MacMode};
+    use mpnn::sim::{Core, CoreConfig};
+
+    println!("demo: 16 MACs in one nn_mac_2b instruction");
+    let mut a = Asm::new();
+    a.li(reg::A0, 0); // accumulator
+    for (i, r) in [reg::A2, reg::A3, reg::A4, reg::A5].iter().enumerate() {
+        a.li(*r, pack_acts([(i as i8 + 1); 4]) as i32);
+    }
+    a.li(reg::A1, pack_weights(MacMode::W2, &[1i8; 16]) as i32);
+    a.nn_mac(MacMode::W2, reg::A0, reg::A2, reg::A1);
+    a.halt();
+    let prog = a.assemble();
+    println!("--- listing ---");
+    for (pc, i) in prog.iter().enumerate() {
+        println!("{:4x}: {}", pc * 4, mpnn::isa::disasm::disasm(*i));
+    }
+    let mut core = Core::new(CoreConfig { mem_size: 4096, ..Default::default() }, prog, 0);
+    core.run(10_000);
+    println!("--- result ---");
+    println!("acc (a0) = {}   [expect 4·(1+2+3+4) = 40]", core.regs[reg::A0 as usize]);
+    println!("cycles = {}, instret = {}, MACs = {}", core.perf.cycles, core.perf.instret, core.perf.macs);
+    Ok(())
+}
+
+fn cmd_xcheck(opts: &ExpOpts) -> Result<()> {
+    let path = opts.artifacts.join("xcheck.json");
+    let text = std::fs::read_to_string(&path)?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut n = 0;
+    for case in v.get("requantize").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+        let rq = mpnn::nn::quant::Requant {
+            m: case.get("m").unwrap().as_i64().unwrap() as i32,
+            shift: case.get("shift").unwrap().as_i64().unwrap() as i32,
+        };
+        let got = mpnn::nn::quant::requantize(
+            case.get("acc").unwrap().as_i64().unwrap() as i32,
+            rq,
+            case.get("relu").unwrap().as_bool().unwrap(),
+        );
+        let want = case.get("out").unwrap().as_i64().unwrap() as i8;
+        anyhow::ensure!(got == want, "requantize mismatch: {case:?} got {got}");
+        n += 1;
+    }
+    println!("xcheck: {n} requantize vectors OK (python == rust, bit-exact)");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "table3" => save("table3", &exp::table3::run(&parse_opts(rest)?)?.1),
+        "fig4" => save("fig4", &exp::fig4::run(&parse_opts(rest)?)?.1),
+        "fig6" => save("fig6", &exp::fig6::run(&parse_opts(rest)?)?.1),
+        "fig7" => save("fig7", &exp::fig7::run(&parse_opts(rest)?)?.1),
+        "fig8" => save("fig8", &exp::fig8::run(&parse_opts(rest)?)?.1),
+        "table4" => save("table4", &exp::table4::run(&parse_opts(rest)?)?.1),
+        "table5" => save("table5", &exp::table5::run(&parse_opts(rest)?)?.1),
+        "all" => cmd_all(&parse_opts(rest)?),
+        "disasm" => cmd_disasm(rest),
+        "demo" => cmd_demo(),
+        "xcheck" => cmd_xcheck(&parse_opts(rest)?),
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}

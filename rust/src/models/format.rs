@@ -1,0 +1,369 @@
+//! The `.mpw` model-artifact format — trained weights, calibrated
+//! activation scales, the float-baseline accuracy and the held-out test
+//! set, written by `python/compile/train.py` and loaded here. A Rust
+//! writer exists too (round-trip tested) so the whole pipeline can run
+//! artifact-free with randomly-initialised models.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "MPW1"
+//! u32 name_len, utf8 name
+//! u32 h, w, c, num_classes
+//! u32 n_nodes, then nodes:
+//!   u8 0 (layer)    + layer encoding
+//!   u8 1 (residual) + u32 n_inner + inner layer encodings
+//! layer encoding: u8 kind (0 conv | 1 dw | 2 dense | 3 maxpool2 | 4 avgpool)
+//!   conv:  u32 cout,k,stride,pad + u8 relu
+//!   dw:    u32 k,stride,pad     + u8 relu
+//!   dense: u32 out              + u8 relu
+//! u32 n_params, per layer: u32 w_len, u32 b_len, f32*w_len, f32*b_len
+//! u32 n_sites, f32*n_sites
+//! f32 float_accuracy
+//! u32 n_test, f32 images [n_test·h·w·c], u8 labels [n_test]
+//! ```
+
+use super::infer::{LayerParams, ModelParams};
+use super::synthetic::Dataset;
+use super::{LayerSpec, ModelSpec, Node};
+use crate::nn::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A fully-loaded model artifact.
+#[derive(Debug, Clone)]
+pub struct LoadedModel {
+    /// The model spec parsed from the artifact (validated against the
+    /// in-crate zoo when a name matches).
+    pub spec: ModelSpec,
+    /// Trained float parameters.
+    pub params: ModelParams,
+    /// Calibrated activation scales (one per site).
+    pub sites: Vec<f32>,
+    /// Float-model test accuracy recorded by the trainer.
+    pub float_acc: f32,
+    /// Held-out test set.
+    pub test: Dataset,
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("artifact truncated at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+fn read_layer(r: &mut Reader) -> Result<LayerSpec> {
+    Ok(match r.u8()? {
+        0 => LayerSpec::Conv {
+            cout: r.u32()? as usize,
+            k: r.u32()? as usize,
+            stride: r.u32()? as usize,
+            pad: r.u32()? as usize,
+            relu: r.u8()? != 0,
+        },
+        1 => LayerSpec::Depthwise {
+            k: r.u32()? as usize,
+            stride: r.u32()? as usize,
+            pad: r.u32()? as usize,
+            relu: r.u8()? != 0,
+        },
+        2 => LayerSpec::Dense { out: r.u32()? as usize, relu: r.u8()? != 0 },
+        3 => LayerSpec::MaxPool2,
+        4 => LayerSpec::AvgPoolGlobal,
+        k => bail!("unknown layer kind {k}"),
+    })
+}
+
+fn write_layer(out: &mut Vec<u8>, l: &LayerSpec) {
+    match *l {
+        LayerSpec::Conv { cout, k, stride, pad, relu } => {
+            out.push(0);
+            for v in [cout, k, stride, pad] {
+                out.extend((v as u32).to_le_bytes());
+            }
+            out.push(relu as u8);
+        }
+        LayerSpec::Depthwise { k, stride, pad, relu } => {
+            out.push(1);
+            for v in [k, stride, pad] {
+                out.extend((v as u32).to_le_bytes());
+            }
+            out.push(relu as u8);
+        }
+        LayerSpec::Dense { out: o, relu } => {
+            out.push(2);
+            out.extend((o as u32).to_le_bytes());
+            out.push(relu as u8);
+        }
+        LayerSpec::MaxPool2 => out.push(3),
+        LayerSpec::AvgPoolGlobal => out.push(4),
+    }
+}
+
+/// Parse an `.mpw` artifact from bytes.
+pub fn parse(bytes: &[u8]) -> Result<LoadedModel> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    if r.take(4)? != b"MPW1" {
+        bail!("bad magic (not an .mpw artifact)");
+    }
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).context("artifact name")?;
+    let input = [r.u32()? as usize, r.u32()? as usize, r.u32()? as usize];
+    let num_classes = r.u32()? as usize;
+    let n_nodes = r.u32()? as usize;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        match r.u8()? {
+            0 => nodes.push(Node::Layer(read_layer(&mut r)?)),
+            1 => {
+                let n = r.u32()? as usize;
+                let mut inner = Vec::with_capacity(n);
+                for _ in 0..n {
+                    inner.push(read_layer(&mut r)?);
+                }
+                nodes.push(Node::Residual(inner));
+            }
+            k => bail!("unknown node kind {k}"),
+        }
+    }
+    // Resolve the name against the in-crate zoo (gives the 'static str)
+    // and validate structural equality.
+    let spec = match super::zoo::by_name(&name) {
+        Some(z) => {
+            let parsed = ModelSpec { name: z.name, input, num_classes, nodes };
+            if parsed != z {
+                bail!("artifact `{name}` disagrees with the in-crate model zoo definition");
+            }
+            z
+        }
+        None => bail!("unknown model `{name}` (not in the zoo)"),
+    };
+
+    let n_params = r.u32()? as usize;
+    let analysis = super::analyze(&spec);
+    if n_params != analysis.layers.len() {
+        bail!("artifact has {n_params} parameter blocks, model needs {}", analysis.layers.len());
+    }
+    let mut params = Vec::with_capacity(n_params);
+    for info in &analysis.layers {
+        let w_len = r.u32()? as usize;
+        let b_len = r.u32()? as usize;
+        if w_len != info.w_len || b_len != info.b_len {
+            bail!("parameter block shape mismatch: got ({w_len},{b_len}), want ({},{})", info.w_len, info.b_len);
+        }
+        params.push(LayerParams { w: r.f32s(w_len)?, b: r.f32s(b_len)? });
+    }
+    let n_sites = r.u32()? as usize;
+    if n_sites != analysis.n_sites {
+        bail!("artifact has {n_sites} sites, model walk has {}", analysis.n_sites);
+    }
+    let sites = r.f32s(n_sites)?;
+    if sites.iter().any(|&s| !(s > 0.0)) {
+        bail!("non-positive activation scale in artifact");
+    }
+    let float_acc = r.f32()?;
+    let n_test = r.u32()? as usize;
+    let px = input[0] * input[1] * input[2];
+    let mut images = Vec::with_capacity(n_test);
+    for _ in 0..n_test {
+        images.push(Tensor::from_vec(&input, r.f32s(px)?));
+    }
+    let labels: Vec<usize> = r.take(n_test)?.iter().map(|&b| b as usize).collect();
+    if labels.iter().any(|&l| l >= num_classes) {
+        bail!("test label out of range");
+    }
+    Ok(LoadedModel {
+        spec,
+        params,
+        sites,
+        float_acc,
+        test: Dataset { images, labels, num_classes },
+    })
+}
+
+/// Serialize a model artifact (Rust writer — used by tests and the
+/// artifact-free fallback path).
+pub fn serialize(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    sites: &[f32],
+    float_acc: f32,
+    test: &Dataset,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend(b"MPW1");
+    out.extend((spec.name.len() as u32).to_le_bytes());
+    out.extend(spec.name.as_bytes());
+    for v in [spec.input[0], spec.input[1], spec.input[2], spec.num_classes] {
+        out.extend((v as u32).to_le_bytes());
+    }
+    out.extend((spec.nodes.len() as u32).to_le_bytes());
+    for node in &spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                out.push(0);
+                write_layer(&mut out, l);
+            }
+            Node::Residual(inner) => {
+                out.push(1);
+                out.extend((inner.len() as u32).to_le_bytes());
+                for l in inner {
+                    write_layer(&mut out, l);
+                }
+            }
+        }
+    }
+    out.extend((params.len() as u32).to_le_bytes());
+    for p in params {
+        out.extend((p.w.len() as u32).to_le_bytes());
+        out.extend((p.b.len() as u32).to_le_bytes());
+        for &v in &p.w {
+            out.extend(v.to_le_bytes());
+        }
+        for &v in &p.b {
+            out.extend(v.to_le_bytes());
+        }
+    }
+    out.extend((sites.len() as u32).to_le_bytes());
+    for &s in sites {
+        out.extend(s.to_le_bytes());
+    }
+    out.extend(float_acc.to_le_bytes());
+    out.extend((test.images.len() as u32).to_le_bytes());
+    for img in &test.images {
+        for &v in &img.data {
+            out.extend(v.to_le_bytes());
+        }
+    }
+    out.extend(test.labels.iter().map(|&l| l as u8));
+    out
+}
+
+/// Load an artifact from `artifacts/weights/<name>.mpw`.
+pub fn load_file(path: &Path) -> Result<LoadedModel> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse(&buf)
+}
+
+/// Write an artifact file.
+pub fn write_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+/// Standard artifact path for a model name.
+pub fn artifact_path(root: &Path, name: &str) -> std::path::PathBuf {
+    root.join("weights").join(format!("{name}.mpw"))
+}
+
+/// Load a model artifact if present, else build a self-contained
+/// fallback: random init + Rust-side calibration on a synthetic set.
+/// The fallback keeps every harness runnable before `make artifacts`.
+pub fn load_or_fallback(root: &Path, name: &str, seed: u64) -> Result<LoadedModel> {
+    let path = artifact_path(root, name);
+    if path.exists() {
+        return load_file(&path);
+    }
+    let spec = super::zoo::by_name(name)
+        .with_context(|| format!("unknown model `{name}`"))?;
+    let params = super::infer::random_params(&spec, seed);
+    let calib =
+        super::synthetic::generate_split(seed, seed ^ 0x5EED, 16, spec.input, spec.num_classes, 0.4);
+    let sites = super::infer::calibrate(&spec, &params, &calib.images);
+    let test =
+        super::synthetic::generate_split(seed, seed ^ 0x7E57, 64, spec.input, spec.num_classes, 0.4);
+    let float_acc =
+        super::synthetic::accuracy(&test, |img| super::infer::fpredict(&spec, &params, img));
+    Ok(LoadedModel { spec, params, sites, float_acc, test })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::infer::random_params;
+    use crate::models::synthetic::generate;
+    use crate::models::zoo;
+
+    #[test]
+    fn round_trips_lenet() {
+        let spec = zoo::lenet5();
+        let params = random_params(&spec, 1);
+        let a = crate::models::analyze(&spec);
+        let sites = vec![0.01f32; a.n_sites];
+        let test = generate(2, 8, spec.input, spec.num_classes, 0.4);
+        let bytes = serialize(&spec, &params, &sites, 0.5, &test);
+        let loaded = parse(&bytes).unwrap();
+        assert_eq!(loaded.spec, spec);
+        assert_eq!(loaded.params.len(), params.len());
+        assert_eq!(loaded.params[0].w, params[0].w);
+        assert_eq!(loaded.sites, sites);
+        assert_eq!(loaded.float_acc, 0.5);
+        assert_eq!(loaded.test.labels, test.labels);
+        assert_eq!(loaded.test.images[3].data, test.images[3].data);
+    }
+
+    #[test]
+    fn round_trips_residual_model() {
+        let spec = zoo::mcunet_vww();
+        let params = random_params(&spec, 3);
+        let a = crate::models::analyze(&spec);
+        let sites = vec![0.02f32; a.n_sites];
+        let test = generate(4, 4, spec.input, spec.num_classes, 0.4);
+        let bytes = serialize(&spec, &params, &sites, 0.9, &test);
+        let loaded = parse(&bytes).unwrap();
+        assert_eq!(loaded.spec, spec);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(parse(b"nope").is_err());
+        let spec = zoo::lenet5();
+        let params = random_params(&spec, 1);
+        let a = crate::models::analyze(&spec);
+        let test = generate(2, 2, spec.input, spec.num_classes, 0.4);
+        let mut bytes = serialize(&spec, &params, &vec![0.01; a.n_sites], 0.5, &test);
+        bytes.truncate(bytes.len() - 10);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn fallback_works_without_artifacts() {
+        let tmp = std::env::temp_dir().join("mpnn-no-artifacts");
+        let m = load_or_fallback(&tmp, "lenet5", 7).unwrap();
+        assert_eq!(m.spec.name, "lenet5");
+        assert_eq!(m.test.images.len(), 64);
+        assert!(m.sites.iter().all(|&s| s > 0.0));
+    }
+}

@@ -1,0 +1,291 @@
+//! Model-level inference: float forward (training-side semantics),
+//! activation-scale calibration, per-configuration quantization and the
+//! integer forward pass — the host golden reference the RV32 execution
+//! ([`super::sim_exec`]) and the JAX artifact are checked against.
+
+use super::{analyze, LayerSpec, ModelAnalysis, ModelSpec, Node, QKind};
+use crate::nn::layers::*;
+use crate::nn::quant::{quantize_value, symmetric_scale, Requant};
+use crate::nn::tensor::Tensor;
+use crate::nn::{quantize_layer, QLayer};
+
+/// Float parameters of one quantizable layer.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// Weights (layout per layer kind — see `nn::layers`).
+    pub w: Vec<f32>,
+    /// Biases.
+    pub b: Vec<f32>,
+}
+
+/// Float parameters for a whole model (canonical quantizable-layer order).
+pub type ModelParams = Vec<LayerParams>;
+
+/// Random He-style initialisation (tests / artifact-free operation).
+pub fn random_params(spec: &ModelSpec, seed: u64) -> ModelParams {
+    let a = analyze(spec);
+    let mut rng = crate::rng::Rng::new(seed);
+    a.layers
+        .iter()
+        .map(|l| {
+            let fan_in = match l.kind {
+                QKind::Conv => l.k * l.k * l.in_shape[2],
+                QKind::Depthwise => l.k * l.k,
+                QKind::Dense => l.in_shape[2],
+            };
+            let std = (2.0 / fan_in as f32).sqrt();
+            LayerParams {
+                w: (0..l.w_len).map(|_| rng.normal() * std).collect(),
+                b: (0..l.b_len).map(|_| rng.normal() * 0.01).collect(),
+            }
+        })
+        .collect()
+}
+
+enum Flow<T> {
+    Map(Tensor<T>),
+    Flat(Vec<T>),
+}
+
+impl<T: Copy + Default> Flow<T> {
+    fn to_flat(self) -> Vec<T> {
+        match self {
+            Flow::Map(t) => t.data,
+            Flow::Flat(v) => v,
+        }
+    }
+    fn map(self) -> Tensor<T> {
+        match self {
+            Flow::Map(t) => t,
+            Flow::Flat(_) => panic!("expected a feature map"),
+        }
+    }
+}
+
+/// Float forward pass. `record` (if given) receives every site tensor's
+/// abs-max in site order — the calibration hook.
+pub fn float_forward(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    input: &Tensor<f32>,
+    mut record: Option<&mut Vec<f32>>,
+) -> Vec<f32> {
+    let rec = |v: f32, record: &mut Option<&mut Vec<f32>>| {
+        if let Some(r) = record.as_deref_mut() {
+            r.push(v);
+        }
+    };
+    rec(input.abs_max(), &mut record);
+    let mut x = Flow::Map(input.clone());
+    let mut li = 0usize;
+    let run_layer = |l: &LayerSpec, x: Flow<f32>, li: &mut usize| -> Flow<f32> {
+        match *l {
+            LayerSpec::Conv { cout, k, stride, pad, relu } => {
+                let p = &params[*li];
+                *li += 1;
+                Flow::Map(conv2d_f32(&x.map(), &p.w, &p.b, cout, ConvGeom { k, stride, pad }, relu))
+            }
+            LayerSpec::Depthwise { k, stride, pad, relu } => {
+                let p = &params[*li];
+                *li += 1;
+                Flow::Map(depthwise_f32(&x.map(), &p.w, &p.b, ConvGeom { k, stride, pad }, relu))
+            }
+            LayerSpec::Dense { out, relu } => {
+                let p = &params[*li];
+                *li += 1;
+                Flow::Flat(dense_f32(&x.to_flat(), &p.w, &p.b, out, relu))
+            }
+            LayerSpec::MaxPool2 => Flow::Map(maxpool2_f32(&x.map())),
+            LayerSpec::AvgPoolGlobal => {
+                let m = x.map();
+                let c = m.shape[2];
+                Flow::Map(Tensor::from_vec(&[1, 1, c], avgpool_global_f32(&m)))
+            }
+        }
+    };
+    let abs_max = |x: &Flow<f32>| match x {
+        Flow::Map(t) => t.abs_max(),
+        Flow::Flat(v) => v.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
+    };
+    for node in &spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                let is_q = !matches!(l, LayerSpec::MaxPool2 | LayerSpec::AvgPoolGlobal);
+                x = run_layer(l, x, &mut li);
+                if is_q {
+                    rec(abs_max(&x), &mut record);
+                }
+            }
+            Node::Residual(inner) => {
+                let skip = x.map();
+                let mut b = Flow::Map(skip.clone());
+                for l in inner {
+                    b = run_layer(l, b, &mut li);
+                    rec(abs_max(&b), &mut record);
+                }
+                let bm = b.map();
+                let mut sum = skip.clone();
+                for (o, &v) in sum.data.iter_mut().zip(bm.data.iter()) {
+                    *o += v;
+                }
+                rec(sum.abs_max(), &mut record);
+                x = Flow::Map(sum);
+            }
+        }
+    }
+    x.to_flat()
+}
+
+/// Calibrate activation-scale sites over a batch of float inputs:
+/// per-site abs-max over the batch, converted to int8 symmetric scales.
+pub fn calibrate(spec: &ModelSpec, params: &ModelParams, inputs: &[Tensor<f32>]) -> Vec<f32> {
+    let a = analyze(spec);
+    let mut maxes = vec![0.0f32; a.n_sites];
+    for input in inputs {
+        let mut rec = Vec::with_capacity(a.n_sites);
+        float_forward(spec, params, input, Some(&mut rec));
+        assert_eq!(rec.len(), a.n_sites, "site walk mismatch");
+        for (m, r) in maxes.iter_mut().zip(&rec) {
+            *m = m.max(*r);
+        }
+    }
+    maxes.iter().map(|&m| symmetric_scale(m.max(1e-6), 8)).collect()
+}
+
+/// A fully quantized model under one mixed-precision configuration.
+#[derive(Debug, Clone)]
+pub struct QModel {
+    /// The model spec.
+    pub spec: ModelSpec,
+    /// Static analysis (layer order matches `layers`).
+    pub analysis: ModelAnalysis,
+    /// Quantized per-layer parameters.
+    pub layers: Vec<QLayer>,
+    /// Per-site activation scales.
+    pub sites: Vec<f32>,
+    /// Per-layer weight bit-widths (the DSE configuration).
+    pub bits: Vec<u32>,
+}
+
+/// Quantize a model under a per-layer bit-width configuration.
+pub fn quantize_model(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    sites: &[f32],
+    bits: &[u32],
+) -> QModel {
+    let analysis = analyze(spec);
+    assert_eq!(params.len(), analysis.layers.len());
+    assert_eq!(bits.len(), analysis.layers.len());
+    assert_eq!(sites.len(), analysis.n_sites);
+    let layers = analysis
+        .layers
+        .iter()
+        .zip(params)
+        .zip(bits)
+        .map(|((info, p), &b)| {
+            quantize_layer(&p.w, &p.b, sites[info.site_in], sites[info.site_out], b)
+        })
+        .collect();
+    QModel { spec: spec.clone(), analysis, layers, sites: sites.to_vec(), bits: bits.to_vec() }
+}
+
+/// Quantize a float input image to the model's input site scale.
+pub fn quantize_input(qm: &QModel, input: &Tensor<f32>) -> Tensor<i8> {
+    let s0 = qm.sites[0];
+    Tensor::from_vec(&input.shape, input.data.iter().map(|&v| quantize_value(v, s0, 8)).collect())
+}
+
+/// Residual-add requant pair for block `r` (pre-shifted `<<8` semantics
+/// of [`crate::nn::layers::qadd`]).
+pub fn residual_requants(qm: &QModel, r: usize) -> (Requant, Requant) {
+    let (skip, branch, out) = qm.analysis.residuals[r];
+    let rq_skip = Requant::from_real_scale(qm.sites[skip] as f64 / qm.sites[out] as f64 / 256.0);
+    let rq_branch =
+        Requant::from_real_scale(qm.sites[branch] as f64 / qm.sites[out] as f64 / 256.0);
+    (rq_skip, rq_branch)
+}
+
+fn run_qlayer(qm: &QModel, l: &LayerSpec, x: Flow<i8>, li: &mut usize) -> Flow<i8> {
+    match *l {
+        LayerSpec::Conv { cout, k, stride, pad, relu } => {
+            let q = &qm.layers[*li];
+            *li += 1;
+            Flow::Map(qconv2d(&x.map(), &q.qw, &q.bias, cout, ConvGeom { k, stride, pad }, q.rq, relu))
+        }
+        LayerSpec::Depthwise { k, stride, pad, relu } => {
+            let q = &qm.layers[*li];
+            *li += 1;
+            Flow::Map(qdepthwise(&x.map(), &q.qw, &q.bias, ConvGeom { k, stride, pad }, q.rq, relu))
+        }
+        LayerSpec::Dense { out, relu } => {
+            let q = &qm.layers[*li];
+            debug_assert!(!qm.analysis.layers[*li].is_last, "last dense handled by qforward");
+            *li += 1;
+            let flat = x.to_flat();
+            let (qv, _) = qdense(&flat, &q.qw, &q.bias, out, Some(q.rq), relu);
+            Flow::Flat(qv)
+        }
+        LayerSpec::MaxPool2 => Flow::Map(qmaxpool2(&x.map())),
+        LayerSpec::AvgPoolGlobal => {
+            let m = x.map();
+            let c = m.shape[2];
+            Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m)))
+        }
+    }
+}
+
+/// Integer forward pass: int8 input → int32 logits. Bit-exact reference
+/// for the ISS execution and the JAX artifact.
+pub fn qforward(qm: &QModel, input: &Tensor<i8>) -> Vec<i32> {
+    let mut x = Flow::Map(input.clone());
+    let mut li = 0usize;
+    let mut res_i = 0usize;
+    for node in &qm.spec.nodes {
+        match node {
+            Node::Layer(LayerSpec::Dense { out, .. }) if qm.analysis.layers[li].is_last => {
+                let q = &qm.layers[li];
+                let flat = x.to_flat();
+                let (_, accs) = qdense(&flat, &q.qw, &q.bias, *out, None, false);
+                return accs;
+            }
+            Node::Layer(l) => {
+                x = run_qlayer(qm, l, x, &mut li);
+            }
+            Node::Residual(inner) => {
+                let skip = x.map();
+                let mut b = Flow::Map(skip.clone());
+                for l in inner {
+                    b = run_qlayer(qm, l, b, &mut li);
+                }
+                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
+                res_i += 1;
+                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
+            }
+        }
+    }
+    panic!("model must end in a dense logits layer")
+}
+
+/// Classify a batch: argmax of the integer logits.
+pub fn qpredict(qm: &QModel, input: &Tensor<f32>) -> usize {
+    let qi = quantize_input(qm, input);
+    let logits = qforward(qm, &qi);
+    argmax_i32(&logits)
+}
+
+/// Argmax helper (ties broken toward the lower index, as in jnp.argmax).
+pub fn argmax_i32(v: &[i32]) -> usize {
+    v.iter().enumerate().max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0))).map(|(i, _)| i).unwrap()
+}
+
+/// Float-model prediction.
+pub fn fpredict(spec: &ModelSpec, params: &ModelParams, input: &Tensor<f32>) -> usize {
+    let logits = float_forward(spec, params, input, None);
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap()
+}

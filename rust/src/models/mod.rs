@@ -1,0 +1,307 @@
+//! Model zoo and model-graph machinery for the paper's Table-3 benchmarks.
+//!
+//! A [`ModelSpec`] is a chain of [`Node`]s (plain layers or residual
+//! blocks). The *quantizable* layers — conv / depthwise / dense, the
+//! layers the paper's DSE retunes ("the most computationally intensive
+//! layers") — are enumerated in a canonical order by [`analyze`]; the DSE
+//! assigns one weight bit-width per quantizable layer.
+//!
+//! Activation scales live at *sites*: site 0 is the model input, each
+//! quantizable layer output opens a new site, pooling reuses its input
+//! site (max/avg cannot grow the range) and each residual add opens a
+//! site. The Python trainer exports one calibrated scale per site; the
+//! site walk here and in `python/compile/model.py` is structurally
+//! identical (cross-checked by the artifact loader).
+
+pub mod format;
+pub mod infer;
+pub mod sim_exec;
+pub mod synthetic;
+pub mod zoo;
+
+/// A single layer inside a model graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Standard convolution (NHWC, square kernel).
+    Conv {
+        /// Output channels.
+        cout: usize,
+        /// Kernel size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+        /// Fused ReLU.
+        relu: bool,
+    },
+    /// Depthwise convolution (channel multiplier 1).
+    Depthwise {
+        /// Kernel size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Padding.
+        pad: usize,
+        /// Fused ReLU.
+        relu: bool,
+    },
+    /// Fully-connected layer (input implicitly flattened).
+    Dense {
+        /// Output features.
+        out: usize,
+        /// Fused ReLU.
+        relu: bool,
+    },
+    /// 2×2 stride-2 max pool.
+    MaxPool2,
+    /// Global average pool (HWC → C).
+    AvgPoolGlobal,
+}
+
+/// A node of the model graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Node {
+    /// A plain layer.
+    Layer(LayerSpec),
+    /// Residual block: `out = add(input, seq(input))`. Inner layers must
+    /// be quantizable (conv/depthwise/dense) and preserve the shape.
+    Residual(Vec<LayerSpec>),
+}
+
+/// A benchmark model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Model name (Table 3 row).
+    pub name: &'static str,
+    /// Input shape `[H, W, C]`.
+    pub input: [usize; 3],
+    /// Classification classes.
+    pub num_classes: usize,
+    /// Graph nodes.
+    pub nodes: Vec<Node>,
+}
+
+/// Kind of a quantizable layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QKind {
+    /// Standard convolution.
+    Conv,
+    /// Depthwise convolution.
+    Depthwise,
+    /// Dense.
+    Dense,
+}
+
+/// Static analysis of one quantizable layer: geometry, MACs, scale sites.
+#[derive(Debug, Clone, Copy)]
+pub struct QLayerInfo {
+    /// Layer kind.
+    pub kind: QKind,
+    /// Input shape `[H, W, C]` *before* padding (dense: `[1, 1, I]`).
+    pub in_shape: [usize; 3],
+    /// Output shape `[H, W, C]` (dense: `[1, 1, O]`).
+    pub out_shape: [usize; 3],
+    /// Kernel size (dense: 1).
+    pub k: usize,
+    /// Stride (dense: 1).
+    pub stride: usize,
+    /// Padding (dense: 0).
+    pub pad: usize,
+    /// Fused ReLU.
+    pub relu: bool,
+    /// MAC operations for one inference.
+    pub macs: u64,
+    /// Weight count.
+    pub w_len: usize,
+    /// Bias count.
+    pub b_len: usize,
+    /// Input activation scale site.
+    pub site_in: usize,
+    /// Output activation scale site.
+    pub site_out: usize,
+    /// True for the final logits layer (emits raw int32, no requant).
+    pub is_last: bool,
+}
+
+/// Full static analysis of a model.
+#[derive(Debug, Clone)]
+pub struct ModelAnalysis {
+    /// Per-quantizable-layer info, in canonical order.
+    pub layers: Vec<QLayerInfo>,
+    /// Total number of activation-scale sites.
+    pub n_sites: usize,
+    /// Residual adds: `(skip_site, branch_site, out_site)` per block.
+    pub residuals: Vec<(usize, usize, usize)>,
+    /// Total MACs (Table 3's `#MAC`).
+    pub total_macs: u64,
+}
+
+fn layer_out_shape(l: LayerSpec, s: [usize; 3]) -> [usize; 3] {
+    match l {
+        LayerSpec::Conv { cout, k, stride, pad, .. } => {
+            let ho = (s[0] + 2 * pad - k) / stride + 1;
+            let wo = (s[1] + 2 * pad - k) / stride + 1;
+            [ho, wo, cout]
+        }
+        LayerSpec::Depthwise { k, stride, pad, .. } => {
+            let ho = (s[0] + 2 * pad - k) / stride + 1;
+            let wo = (s[1] + 2 * pad - k) / stride + 1;
+            [ho, wo, s[2]]
+        }
+        LayerSpec::Dense { out, .. } => [1, 1, out],
+        LayerSpec::MaxPool2 => [s[0] / 2, s[1] / 2, s[2]],
+        LayerSpec::AvgPoolGlobal => [1, 1, s[2]],
+    }
+}
+
+fn qinfo(l: LayerSpec, s: [usize; 3], site_in: usize, site_out: usize) -> Option<QLayerInfo> {
+    let out = layer_out_shape(l, s);
+    match l {
+        LayerSpec::Conv { cout, k, stride, pad, relu } => Some(QLayerInfo {
+            kind: QKind::Conv,
+            in_shape: s,
+            out_shape: out,
+            k,
+            stride,
+            pad,
+            relu,
+            macs: (out[0] * out[1] * cout * k * k * s[2]) as u64,
+            w_len: cout * k * k * s[2],
+            b_len: cout,
+            site_in,
+            site_out,
+            is_last: false,
+        }),
+        LayerSpec::Depthwise { k, stride, pad, relu } => Some(QLayerInfo {
+            kind: QKind::Depthwise,
+            in_shape: s,
+            out_shape: out,
+            k,
+            stride,
+            pad,
+            relu,
+            macs: (out[0] * out[1] * s[2] * k * k) as u64,
+            w_len: s[2] * k * k,
+            b_len: s[2],
+            site_in,
+            site_out,
+            is_last: false,
+        }),
+        LayerSpec::Dense { out: o, relu } => {
+            let i = s[0] * s[1] * s[2];
+            Some(QLayerInfo {
+                kind: QKind::Dense,
+                in_shape: [1, 1, i],
+                out_shape: [1, 1, o],
+                k: 1,
+                stride: 1,
+                pad: 0,
+                relu,
+                macs: (i * o) as u64,
+                w_len: i * o,
+                b_len: o,
+                site_in,
+                site_out,
+                is_last: false,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Run the canonical graph walk: shapes, MACs, scale sites.
+pub fn analyze(spec: &ModelSpec) -> ModelAnalysis {
+    let mut layers = Vec::new();
+    let mut residuals = Vec::new();
+    let mut shape = spec.input;
+    let mut site = 0usize; // current tensor's site
+    let mut n_sites = 1usize;
+    for node in &spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                if let Some(info) = qinfo(*l, shape, site, n_sites) {
+                    site = n_sites;
+                    n_sites += 1;
+                    shape = info.out_shape;
+                    layers.push(info);
+                } else {
+                    shape = layer_out_shape(*l, shape); // pool: site unchanged
+                }
+            }
+            Node::Residual(inner) => {
+                let skip_site = site;
+                let in_shape = shape;
+                let mut bshape = shape;
+                let mut bsite = site;
+                for l in inner {
+                    let info = qinfo(*l, bshape, bsite, n_sites)
+                        .expect("residual inner layers must be quantizable");
+                    bsite = n_sites;
+                    n_sites += 1;
+                    bshape = info.out_shape;
+                    layers.push(info);
+                }
+                assert_eq!(bshape, in_shape, "residual branch must preserve shape");
+                // The add's output opens its own site.
+                residuals.push((skip_site, bsite, n_sites));
+                site = n_sites;
+                n_sites += 1;
+            }
+        }
+    }
+    if let Some(last) = layers.last_mut() {
+        last.is_last = true;
+    }
+    let total_macs = layers.iter().map(|l| l.macs).sum();
+    ModelAnalysis { layers, n_sites, residuals, total_macs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelSpec {
+        ModelSpec {
+            name: "toy",
+            input: [8, 8, 3],
+            num_classes: 4,
+            nodes: vec![
+                Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+                Node::Layer(LayerSpec::MaxPool2),
+                Node::Residual(vec![
+                    LayerSpec::Conv { cout: 16, k: 1, stride: 1, pad: 0, relu: true },
+                    LayerSpec::Depthwise { k: 3, stride: 1, pad: 1, relu: true },
+                    LayerSpec::Conv { cout: 8, k: 1, stride: 1, pad: 0, relu: false },
+                ]),
+                Node::Layer(LayerSpec::AvgPoolGlobal),
+                Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+            ],
+        }
+    }
+
+    #[test]
+    fn analyze_counts_layers_sites_macs() {
+        let a = analyze(&toy());
+        assert_eq!(a.layers.len(), 5); // conv + 3 residual inner + dense
+        // Sites: input(0), conv(1), res-inner(2,3,4), add(5), dense(6).
+        assert_eq!(a.n_sites, 7);
+        assert_eq!(a.residuals, vec![(1, 4, 5)]);
+        assert!(a.layers[4].is_last);
+        assert_eq!(a.layers[4].in_shape, [1, 1, 8]);
+        // conv: 8·8·8·9·3
+        assert_eq!(a.layers[0].macs, 8 * 8 * 8 * 9 * 3);
+        // pool halves spatial before the residual
+        assert_eq!(a.layers[1].in_shape, [4, 4, 8]);
+        assert!(a.total_macs > 0);
+    }
+
+    #[test]
+    fn maxpool_keeps_site() {
+        let a = analyze(&toy());
+        // conv output is site 1; the residual's first inner layer reads
+        // site 1 even though a pool sits in between.
+        assert_eq!(a.layers[0].site_out, 1);
+        assert_eq!(a.layers[1].site_in, 1);
+    }
+}

@@ -1,0 +1,304 @@
+//! Whole-model execution on the cycle-accurate core: every quantizable
+//! layer runs as a generated RV32 kernel on the ISS (baseline or the
+//! mode matching its weight bit-width); pooling, padding and residual
+//! adds run host-side between kernels (their cycle share is negligible
+//! and identical across baseline/extended architectures — DESIGN.md §5).
+//!
+//! This is the reproduction of the paper's Verilator flow: the same
+//! binary-level kernels the extended processor would run, measured with
+//! the same per-layer performance counters.
+
+use super::infer::{residual_requants, QModel};
+use super::{LayerSpec, Node, QKind};
+use crate::isa::MacMode;
+use crate::kernels::conv::ConvSpec;
+use crate::kernels::dense::DenseSpec;
+use crate::kernels::depthwise::DwSpec;
+use crate::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
+use crate::nn::layers::{pad_spatial, qadd, qavgpool_global, qmaxpool2};
+use crate::nn::tensor::{pad_channels, Tensor};
+use crate::sim::{MacUnitConfig, PerfCounters};
+
+/// Per-layer measurement from an ISS execution.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    /// Quantizable-layer index.
+    pub layer: usize,
+    /// Mode used (`None` = scalar baseline kernel).
+    pub mode: Option<MacMode>,
+    /// Perf counters for the layer's kernel alone.
+    pub perf: PerfCounters,
+}
+
+/// Result of a full-model ISS execution.
+#[derive(Debug, Clone)]
+pub struct SimRun {
+    /// Integer logits (must equal `infer::qforward`).
+    pub logits: Vec<i32>,
+    /// Per-layer measurements.
+    pub layers: Vec<LayerRun>,
+}
+
+impl SimRun {
+    /// Total cycles across all layer kernels.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.perf.cycles).sum()
+    }
+
+    /// Total memory accesses (Fig. 4 metric).
+    pub fn total_accesses(&self) -> u64 {
+        self.layers.iter().map(|l| l.perf.mem_accesses()).sum()
+    }
+
+    /// Total retired instructions.
+    pub fn total_instret(&self) -> u64 {
+        self.layers.iter().map(|l| l.perf.instret).sum()
+    }
+}
+
+/// Pad conv weights `[Cout][K][K][Cin]` to `[Cout][K][K][Cin_p]` with
+/// zeros (mode kernels need word-aligned channel runs).
+fn pad_conv_weights(qw: &[i8], cout: usize, k: usize, cin: usize, cin_p: usize) -> Vec<i8> {
+    if cin == cin_p {
+        return qw.to_vec();
+    }
+    let mut out = vec![0i8; cout * k * k * cin_p];
+    for oc in 0..cout {
+        for t in 0..k * k {
+            let src = (oc * k * k + t) * cin;
+            let dst = (oc * k * k + t) * cin_p;
+            out[dst..dst + cin].copy_from_slice(&qw[src..src + cin]);
+        }
+    }
+    out
+}
+
+/// Execute the quantized model on the ISS.
+///
+/// `modes[i]` selects the kernel for quantizable layer `i`: `None` runs
+/// the scalar baseline, `Some(mode)` the packed kernel (the mode must
+/// match the layer's quantization grid — checked). `mac` configures the
+/// MAC-unit features (Fig. 7 ablations).
+pub fn run_model(
+    qm: &QModel,
+    input: &Tensor<i8>,
+    modes: &[Option<MacMode>],
+    mac: MacUnitConfig,
+) -> SimRun {
+    assert_eq!(modes.len(), qm.layers.len());
+    let mut layers = Vec::new();
+    let mut li = 0usize;
+    let mut res_i = 0usize;
+
+    enum Flow {
+        Map(Tensor<i8>),
+        Flat(Vec<i8>),
+    }
+    impl Flow {
+        fn flat(self) -> Vec<i8> {
+            match self {
+                Flow::Map(t) => t.data,
+                Flow::Flat(v) => v,
+            }
+        }
+        fn map(self) -> Tensor<i8> {
+            match self {
+                Flow::Map(t) => t,
+                Flow::Flat(_) => panic!("expected feature map"),
+            }
+        }
+    }
+
+    let run_one = |l: &LayerSpec, x: Flow, li: &mut usize, layers: &mut Vec<LayerRun>| -> (Flow, Option<Vec<i32>>) {
+        let idx = *li;
+        let q = &qm.layers[idx];
+        let info = &qm.analysis.layers[idx];
+        let mode = modes[idx];
+        if let Some(m) = mode {
+            assert_eq!(
+                m.weight_bits(),
+                q.w_bits,
+                "layer {idx}: kernel mode {m:?} vs quantized bits {}",
+                q.w_bits
+            );
+        }
+        match *l {
+            LayerSpec::Conv { cout, k, stride, pad, relu } => {
+                *li += 1;
+                let xp = pad_spatial(&x.map(), pad);
+                // Mode kernels need Cin % 4 == 0: channel-pad with zeros.
+                let (xp, cin_p) = if mode.is_some() && xp.shape[2] % 4 != 0 {
+                    let p = pad_channels(&xp, 4, 0);
+                    let c = p.shape[2];
+                    (p, c)
+                } else {
+                    let c = xp.shape[2];
+                    (xp, c)
+                };
+                let w = pad_conv_weights(&q.qw, cout, k, info.in_shape[2], cin_p);
+                let spec = ConvSpec {
+                    h: xp.shape[0],
+                    w: xp.shape[1],
+                    cin: cin_p,
+                    cout,
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let (out, perf) = run_conv_with(spec, mode, mac, &xp.data, &w, &q.bias);
+                layers.push(LayerRun { layer: idx, mode, perf });
+                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), cout], out)), None)
+            }
+            LayerSpec::Depthwise { k, stride, pad, relu } => {
+                *li += 1;
+                let xp = pad_spatial(&x.map(), pad);
+                let spec = DwSpec {
+                    h: xp.shape[0],
+                    w: xp.shape[1],
+                    c: xp.shape[2],
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let (out, perf) = run_depthwise_with(spec, mode, mac, &xp.data, &q.qw, &q.bias);
+                layers.push(LayerRun { layer: idx, mode, perf });
+                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None)
+            }
+            LayerSpec::Dense { out, relu } => {
+                let is_last = info.is_last;
+                *li += 1;
+                let flat = x.flat();
+                let spec = DenseSpec {
+                    in_dim: flat.len(),
+                    out_dim: out,
+                    rq: q.rq,
+                    relu,
+                    out_i32: is_last,
+                };
+                let (qv, accs, perf) = run_dense_with(spec, mode, mac, &flat, &q.qw, &q.bias);
+                layers.push(LayerRun { layer: idx, mode, perf });
+                if is_last {
+                    (Flow::Flat(Vec::new()), Some(accs))
+                } else {
+                    (Flow::Flat(qv), None)
+                }
+            }
+            LayerSpec::MaxPool2 => (Flow::Map(qmaxpool2(&x.map())), None),
+            LayerSpec::AvgPoolGlobal => {
+                let m = x.map();
+                let c = m.shape[2];
+                (Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m))), None)
+            }
+        }
+    };
+
+    let mut x = Flow::Map(input.clone());
+    for node in &qm.spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                let (nx, logits) = run_one(l, x, &mut li, &mut layers);
+                if let Some(logits) = logits {
+                    return SimRun { logits, layers };
+                }
+                x = nx;
+            }
+            Node::Residual(inner) => {
+                let skip = x.map();
+                let mut b = Flow::Map(skip.clone());
+                for l in inner {
+                    let (nb, _) = run_one(l, b, &mut li, &mut layers);
+                    b = nb;
+                }
+                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
+                res_i += 1;
+                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
+            }
+        }
+    }
+    panic!("model must end in a dense logits layer")
+}
+
+/// Kernel modes for a quantized model: the mode matching each layer's
+/// bit-width (the extended-ISA execution).
+pub fn modes_for(qm: &QModel) -> Vec<Option<MacMode>> {
+    qm.bits.iter().map(|&b| MacMode::from_weight_bits(b)).collect()
+}
+
+/// All-baseline modes (the original-Ibex execution).
+pub fn baseline_modes(qm: &QModel) -> Vec<Option<MacMode>> {
+    vec![None; qm.layers.len()]
+}
+
+/// Convenience: does this layer benefit less from the extension (the
+/// paper's depthwise observation)?
+pub fn is_depthwise(qm: &QModel, idx: usize) -> bool {
+    qm.analysis.layers[idx].kind == QKind::Depthwise
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::infer::{qforward, quantize_input, quantize_model, random_params, calibrate};
+    use crate::models::synthetic::generate;
+    use crate::models::{zoo, LayerSpec, ModelSpec, Node};
+
+    fn toy_residual_model() -> ModelSpec {
+        ModelSpec {
+            name: "toy",
+            input: [8, 8, 3],
+            num_classes: 4,
+            nodes: vec![
+                Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+                Node::Layer(LayerSpec::MaxPool2),
+                Node::Residual(vec![
+                    LayerSpec::Conv { cout: 16, k: 1, stride: 1, pad: 0, relu: true },
+                    LayerSpec::Depthwise { k: 3, stride: 1, pad: 1, relu: true },
+                    LayerSpec::Conv { cout: 8, k: 1, stride: 1, pad: 0, relu: false },
+                ]),
+                Node::Layer(LayerSpec::AvgPoolGlobal),
+                Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+            ],
+        }
+    }
+
+    fn check_model(spec: &ModelSpec, bits: Vec<u32>, seed: u64) {
+        let params = random_params(spec, seed);
+        let ds = generate(seed ^ 1, 4, spec.input, spec.num_classes, 0.4);
+        let sites = calibrate(spec, &params, &ds.images[..2]);
+        let qm = quantize_model(spec, &params, &sites, &bits);
+        let input = quantize_input(&qm, &ds.images[3]);
+        let want = qforward(&qm, &input);
+
+        // Extended execution (per-layer modes) must be bit-exact.
+        let run = run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full());
+        assert_eq!(run.logits, want, "extended ISS vs host reference");
+        assert_eq!(run.layers.len(), qm.layers.len());
+
+        // Baseline execution must also be bit-exact (same arithmetic).
+        let base = run_model(&qm, &input, &baseline_modes(&qm), MacUnitConfig::full());
+        assert_eq!(base.logits, want, "baseline ISS vs host reference");
+
+        // And the extension must be faster + lighter on memory.
+        assert!(run.total_cycles() < base.total_cycles());
+        assert!(run.total_accesses() < base.total_accesses());
+    }
+
+    #[test]
+    fn toy_residual_model_bit_exact_all_widths() {
+        let spec = toy_residual_model();
+        let n = crate::models::analyze(&spec).layers.len();
+        check_model(&spec, vec![8; n], 100);
+        check_model(&spec, vec![4; n], 101);
+        check_model(&spec, vec![2; n], 102);
+        // Mixed configuration: 8-bit first, then alternating.
+        check_model(&spec, vec![8, 4, 2, 4, 8], 103);
+    }
+
+    #[test]
+    fn lenet5_bit_exact_mixed() {
+        let spec = zoo::lenet5();
+        check_model(&spec, vec![8, 4, 4, 2, 8], 200);
+    }
+}

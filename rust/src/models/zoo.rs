@@ -1,0 +1,211 @@
+//! The Table-3 model zoo, scaled to laptop-trainable sizes while keeping
+//! every topological property the paper's evaluation depends on:
+//!
+//! | paper model      | topology | ours |
+//! |------------------|----------|------|
+//! | LeNet5 (MNIST)   | 2C-3D    | identical topology, 28×28×1 input |
+//! | CNN (CIFAR10)    | 3C-1D    | 3 conv + dense, 32×32×3 |
+//! | MCUNet-vww1      | 1C-15R-1D| stem conv + 15 inverted-residual blocks + dense, 64×64×3, 2 classes |
+//! | MobileNetV1      | 14C-1D   | stem conv + 13 depthwise-separable pairs + dense, 32×32×3, width ≈0.25 |
+//!
+//! The depthwise-separable structure of MobileNet/MCUNet is preserved
+//! exactly because the paper's depthwise observation (less input reuse →
+//! smaller gains) is one of the shape-claims we reproduce.
+
+use super::{LayerSpec, ModelSpec, Node};
+
+/// LeNet5: 2 conv + 3 dense (Table 3 row 2).
+pub fn lenet5() -> ModelSpec {
+    use LayerSpec::*;
+    ModelSpec {
+        name: "lenet5",
+        input: [28, 28, 1],
+        num_classes: 10,
+        nodes: vec![
+            Node::Layer(Conv { cout: 6, k: 5, stride: 1, pad: 0, relu: true }),
+            Node::Layer(MaxPool2),
+            Node::Layer(Conv { cout: 16, k: 5, stride: 1, pad: 0, relu: true }),
+            Node::Layer(MaxPool2),
+            Node::Layer(Dense { out: 120, relu: true }),
+            Node::Layer(Dense { out: 84, relu: true }),
+            Node::Layer(Dense { out: 10, relu: false }),
+        ],
+    }
+}
+
+/// CIFAR-10 CNN: 3 conv + 1 dense (Table 3 row 1).
+pub fn cifar_cnn() -> ModelSpec {
+    use LayerSpec::*;
+    ModelSpec {
+        name: "cifar_cnn",
+        input: [32, 32, 3],
+        num_classes: 10,
+        nodes: vec![
+            Node::Layer(Conv { cout: 16, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(MaxPool2),
+            Node::Layer(Conv { cout: 32, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(MaxPool2),
+            Node::Layer(Conv { cout: 64, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(MaxPool2),
+            Node::Layer(Dense { out: 10, relu: false }),
+        ],
+    }
+}
+
+/// Append one MobileNetV2-style inverted residual block: 1×1 expand →
+/// 3×3 depthwise → 1×1 (linear) project, wrapped in [`Node::Residual`]
+/// when the skip connection applies (stride 1, cin == cout).
+fn push_block(nodes: &mut Vec<Node>, cin: usize, cout: usize, expand: usize, stride: usize) {
+    use LayerSpec::*;
+    let hidden = cin * expand;
+    let seq = vec![
+        Conv { cout: hidden, k: 1, stride: 1, pad: 0, relu: true },
+        Depthwise { k: 3, stride, pad: 1, relu: true },
+        Conv { cout, k: 1, stride: 1, pad: 0, relu: false },
+    ];
+    if stride == 1 && cin == cout {
+        nodes.push(Node::Residual(seq));
+    } else {
+        nodes.extend(seq.into_iter().map(Node::Layer));
+    }
+}
+
+/// MCUNet-VWW-like: stem conv + 15 inverted-residual blocks + dense,
+/// binary Visual-Wake-Words-style task (Table 3 row 3, "1C-15R-1D").
+pub fn mcunet_vww() -> ModelSpec {
+    use LayerSpec::*;
+    let mut nodes = vec![Node::Layer(Conv { cout: 8, k: 3, stride: 2, pad: 1, relu: true })];
+    // (cin → cout, expand, stride) ladder; skip applies on the
+    // stride-1 same-width blocks, matching MCUNet's block distribution.
+    let blocks: [(usize, usize, usize, usize); 15] = [
+        (8, 16, 2, 2),  // 32→16
+        (16, 16, 2, 1), // skip
+        (16, 16, 2, 1), // skip
+        (16, 24, 2, 2), // 16→8
+        (24, 24, 2, 1), // skip
+        (24, 24, 2, 1), // skip
+        (24, 32, 2, 2), // 8→4
+        (32, 32, 2, 1), // skip
+        (32, 32, 2, 1), // skip
+        (32, 32, 2, 1), // skip
+        (32, 48, 2, 2), // 4→2
+        (48, 48, 2, 1), // skip
+        (48, 48, 2, 1), // skip
+        (48, 64, 2, 1), // widen, no skip
+        (64, 64, 2, 1), // skip
+    ];
+    for (cin, cout, t, s) in blocks {
+        push_block(&mut nodes, cin, cout, t, s);
+    }
+    nodes.push(Node::Layer(AvgPoolGlobal));
+    nodes.push(Node::Layer(Dense { out: 2, relu: false }));
+    ModelSpec { name: "mcunet_vww", input: [64, 64, 3], num_classes: 2, nodes }
+}
+
+/// MobileNetV1 at width ≈0.25 on 32×32 inputs: stem conv + 13
+/// depthwise-separable pairs + dense (Table 3 row 4, "14C-1D").
+pub fn mobilenet_v1() -> ModelSpec {
+    use LayerSpec::*;
+    let mut nodes = vec![Node::Layer(Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true })];
+    // (channels out, stride of the depthwise) — the standard MobileNetV1
+    // ladder scaled by 0.25 with strides adapted to the 32×32 input.
+    let pairs: [(usize, usize); 13] = [
+        (16, 1),
+        (32, 2), // 32→16
+        (32, 1),
+        (64, 2), // 16→8
+        (64, 1),
+        (128, 2), // 8→4
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (256, 2), // 4→2
+        (256, 1),
+    ];
+    for (cout, s) in pairs {
+        nodes.push(Node::Layer(Depthwise { k: 3, stride: s, pad: 1, relu: true }));
+        nodes.push(Node::Layer(Conv { cout, k: 1, stride: 1, pad: 0, relu: true }));
+    }
+    nodes.push(Node::Layer(AvgPoolGlobal));
+    nodes.push(Node::Layer(Dense { out: 100, relu: false }));
+    ModelSpec { name: "mobilenet_v1", input: [32, 32, 3], num_classes: 100, nodes }
+}
+
+/// All four Table-3 models.
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![cifar_cnn(), lenet5(), mcunet_vww(), mobilenet_v1()]
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{analyze, QKind};
+
+    #[test]
+    fn lenet5_topology_is_2c3d() {
+        let a = analyze(&lenet5());
+        let convs = a.layers.iter().filter(|l| l.kind == QKind::Conv).count();
+        let denses = a.layers.iter().filter(|l| l.kind == QKind::Dense).count();
+        assert_eq!((convs, denses), (2, 3));
+        // Flatten between conv and dense: 4·4·16 = 256 inputs.
+        assert_eq!(a.layers[2].in_shape, [1, 1, 256]);
+    }
+
+    #[test]
+    fn cifar_cnn_topology_is_3c1d() {
+        let a = analyze(&cifar_cnn());
+        let convs = a.layers.iter().filter(|l| l.kind == QKind::Conv).count();
+        let denses = a.layers.iter().filter(|l| l.kind == QKind::Dense).count();
+        assert_eq!((convs, denses), (3, 1));
+    }
+
+    #[test]
+    fn mcunet_has_15_blocks_and_residuals() {
+        let m = mcunet_vww();
+        let res = m.nodes.iter().filter(|n| matches!(n, Node::Residual(_))).count();
+        assert_eq!(res, 10, "skip blocks");
+        let a = analyze(&m);
+        // 1 stem + 15 blocks × 3 + 1 dense = 47 quantizable layers.
+        assert_eq!(a.layers.len(), 47);
+        assert_eq!(a.residuals.len(), 10);
+        assert!(a.layers.iter().any(|l| l.kind == QKind::Depthwise));
+    }
+
+    #[test]
+    fn mobilenet_is_14c_1d() {
+        let a = analyze(&mobilenet_v1());
+        // 1 stem + 13·(dw+pw) + 1 dense = 28 quantizable layers.
+        assert_eq!(a.layers.len(), 28);
+        let dws = a.layers.iter().filter(|l| l.kind == QKind::Depthwise).count();
+        assert_eq!(dws, 13);
+        // Final spatial is 2×2 before the global pool.
+        assert_eq!(a.layers[26].out_shape, [2, 2, 256]);
+        assert_eq!(a.layers[27].in_shape, [1, 1, 256]);
+    }
+
+    #[test]
+    fn every_model_analyzes_cleanly() {
+        for m in all_models() {
+            let a = analyze(&m);
+            assert!(a.total_macs > 100_000, "{}: {}", m.name, a.total_macs);
+            assert!(a.layers.last().unwrap().is_last);
+            // Output classes match the final dense.
+            assert_eq!(a.layers.last().unwrap().out_shape[2], m.num_classes);
+        }
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for m in all_models() {
+            assert_eq!(by_name(m.name).unwrap(), m);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

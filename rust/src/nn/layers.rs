@@ -1,0 +1,419 @@
+//! Float and integer layer implementations — the host-side golden
+//! reference for both the RV32 kernel programs and the JAX/Pallas
+//! artifacts. The integer path is bit-exact against both (tested).
+
+use super::quant::{requantize, rounding_rshift, srdhm, Requant};
+use super::tensor::Tensor;
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Kernel size (square).
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// Output spatial size for an input extent `n`.
+    pub fn out_size(&self, n: usize) -> usize {
+        (n + 2 * self.pad - self.k) / self.stride + 1
+    }
+}
+
+/// Zero-pad an HWC tensor spatially.
+pub fn pad_spatial<T: Copy + Default>(t: &Tensor<T>, pad: usize) -> Tensor<T> {
+    if pad == 0 {
+        return t.clone();
+    }
+    let (h, w, c) = (t.shape[0], t.shape[1], t.shape[2]);
+    let mut out = Tensor::zeros(&[h + 2 * pad, w + 2 * pad, c]);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                *out.at3_mut(y + pad, x + pad, ch) = t.at3(y, x, ch);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- float ---
+
+/// Float conv2d, NHWC, weights `[Cout][K][K][Cin]` flattened.
+pub fn conv2d_f32(
+    input: &Tensor<f32>,
+    weights: &[f32],
+    bias: &[f32],
+    cout: usize,
+    geom: ConvGeom,
+    relu: bool,
+) -> Tensor<f32> {
+    let x = pad_spatial(input, geom.pad);
+    let (h, w, cin) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (ho, wo) = (geom.out_size(input.shape[0]), geom.out_size(input.shape[1]));
+    assert_eq!(weights.len(), cout * geom.k * geom.k * cin);
+    let mut out = Tensor::zeros(&[ho, wo, cout]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for oc in 0..cout {
+                let mut acc = bias[oc];
+                for ky in 0..geom.k {
+                    for kx in 0..geom.k {
+                        let (iy, ix) = (oy * geom.stride + ky, ox * geom.stride + kx);
+                        debug_assert!(iy < h && ix < w);
+                        for ic in 0..cin {
+                            acc += x.at3(iy, ix, ic)
+                                * weights[((oc * geom.k + ky) * geom.k + kx) * cin + ic];
+                        }
+                    }
+                }
+                *out.at3_mut(oy, ox, oc) = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    out
+}
+
+/// Float depthwise conv2d (channel multiplier 1), weights `[C][K][K]`.
+pub fn depthwise_f32(
+    input: &Tensor<f32>,
+    weights: &[f32],
+    bias: &[f32],
+    geom: ConvGeom,
+    relu: bool,
+) -> Tensor<f32> {
+    let x = pad_spatial(input, geom.pad);
+    let c = input.shape[2];
+    let (ho, wo) = (geom.out_size(input.shape[0]), geom.out_size(input.shape[1]));
+    assert_eq!(weights.len(), c * geom.k * geom.k);
+    let mut out = Tensor::zeros(&[ho, wo, c]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..c {
+                let mut acc = bias[ch];
+                for ky in 0..geom.k {
+                    for kx in 0..geom.k {
+                        acc += x.at3(oy * geom.stride + ky, ox * geom.stride + kx, ch)
+                            * weights[(ch * geom.k + ky) * geom.k + kx];
+                    }
+                }
+                *out.at3_mut(oy, ox, ch) = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    out
+}
+
+/// Float dense layer, weights `[O][I]` flattened.
+pub fn dense_f32(input: &[f32], weights: &[f32], bias: &[f32], out_dim: usize, relu: bool) -> Vec<f32> {
+    let in_dim = input.len();
+    assert_eq!(weights.len(), out_dim * in_dim);
+    (0..out_dim)
+        .map(|o| {
+            let mut acc = bias[o];
+            for i in 0..in_dim {
+                acc += input[i] * weights[o * in_dim + i];
+            }
+            if relu {
+                acc.max(0.0)
+            } else {
+                acc
+            }
+        })
+        .collect()
+}
+
+/// Float 2×2 stride-2 max pool.
+pub fn maxpool2_f32(input: &Tensor<f32>) -> Tensor<f32> {
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let mut out = Tensor::zeros(&[h / 2, w / 2, c]);
+    for y in 0..h / 2 {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let m = input
+                    .at3(2 * y, 2 * x, ch)
+                    .max(input.at3(2 * y, 2 * x + 1, ch))
+                    .max(input.at3(2 * y + 1, 2 * x, ch))
+                    .max(input.at3(2 * y + 1, 2 * x + 1, ch));
+                *out.at3_mut(y, x, ch) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Float global average pool: HWC → C.
+pub fn avgpool_global_f32(input: &Tensor<f32>) -> Vec<f32> {
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let n = (h * w) as f32;
+    (0..c)
+        .map(|ch| {
+            let mut s = 0.0;
+            for y in 0..h {
+                for x in 0..w {
+                    s += input.at3(y, x, ch);
+                }
+            }
+            s / n
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------- integer ---
+
+/// Integer conv2d: int8 in, int8 grid weights, int32 accumulate,
+/// fixed-point requantize to int8. Bit-exact vs the RV32 Mode kernels
+/// and the JAX artifact.
+pub fn qconv2d(
+    input: &Tensor<i8>,
+    weights: &[i8],
+    bias: &[i32],
+    cout: usize,
+    geom: ConvGeom,
+    rq: Requant,
+    relu: bool,
+) -> Tensor<i8> {
+    let x = pad_spatial(input, geom.pad);
+    let cin = x.shape[2];
+    let (ho, wo) = (geom.out_size(input.shape[0]), geom.out_size(input.shape[1]));
+    assert_eq!(weights.len(), cout * geom.k * geom.k * cin);
+    let mut out = Tensor::zeros(&[ho, wo, cout]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for oc in 0..cout {
+                let mut acc = bias[oc];
+                for ky in 0..geom.k {
+                    for kx in 0..geom.k {
+                        let (iy, ix) = (oy * geom.stride + ky, ox * geom.stride + kx);
+                        for ic in 0..cin {
+                            acc = acc.wrapping_add(
+                                x.at3(iy, ix, ic) as i32
+                                    * weights[((oc * geom.k + ky) * geom.k + kx) * cin + ic]
+                                        as i32,
+                            );
+                        }
+                    }
+                }
+                *out.at3_mut(oy, ox, oc) = requantize(acc, rq, relu);
+            }
+        }
+    }
+    out
+}
+
+/// Integer depthwise conv2d, weights `[C][K][K]`.
+pub fn qdepthwise(
+    input: &Tensor<i8>,
+    weights: &[i8],
+    bias: &[i32],
+    geom: ConvGeom,
+    rq: Requant,
+    relu: bool,
+) -> Tensor<i8> {
+    let x = pad_spatial(input, geom.pad);
+    let c = input.shape[2];
+    let (ho, wo) = (geom.out_size(input.shape[0]), geom.out_size(input.shape[1]));
+    assert_eq!(weights.len(), c * geom.k * geom.k);
+    let mut out = Tensor::zeros(&[ho, wo, c]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..c {
+                let mut acc = bias[ch];
+                for ky in 0..geom.k {
+                    for kx in 0..geom.k {
+                        acc = acc.wrapping_add(
+                            x.at3(oy * geom.stride + ky, ox * geom.stride + kx, ch) as i32
+                                * weights[(ch * geom.k + ky) * geom.k + kx] as i32,
+                        );
+                    }
+                }
+                *out.at3_mut(oy, ox, ch) = requantize(acc, rq, relu);
+            }
+        }
+    }
+    out
+}
+
+/// Integer dense. When `rq` is `None` the raw int32 accumulators are
+/// returned (final logits layer).
+pub fn qdense(
+    input: &[i8],
+    weights: &[i8],
+    bias: &[i32],
+    out_dim: usize,
+    rq: Option<Requant>,
+    relu: bool,
+) -> (Vec<i8>, Vec<i32>) {
+    let in_dim = input.len();
+    assert_eq!(weights.len(), out_dim * in_dim);
+    let mut accs = Vec::with_capacity(out_dim);
+    for o in 0..out_dim {
+        let mut acc = bias[o];
+        for i in 0..in_dim {
+            acc = acc.wrapping_add(input[i] as i32 * weights[o * in_dim + i] as i32);
+        }
+        accs.push(acc);
+    }
+    let q = match rq {
+        Some(rq) => accs.iter().map(|&a| requantize(a, rq, relu)).collect(),
+        None => Vec::new(),
+    };
+    (q, accs)
+}
+
+/// Integer 2×2 stride-2 max pool.
+pub fn qmaxpool2(input: &Tensor<i8>) -> Tensor<i8> {
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let mut out = Tensor::zeros(&[h / 2, w / 2, c]);
+    for y in 0..h / 2 {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let m = input
+                    .at3(2 * y, 2 * x, ch)
+                    .max(input.at3(2 * y, 2 * x + 1, ch))
+                    .max(input.at3(2 * y + 1, 2 * x, ch))
+                    .max(input.at3(2 * y + 1, 2 * x + 1, ch));
+                *out.at3_mut(y, x, ch) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Integer global average pool with round-half-up floor division —
+/// `floor((Σ + n/2) / n)` — matching `jnp.floor_divide` on the JAX side.
+pub fn qavgpool_global(input: &Tensor<i8>) -> Vec<i8> {
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let n = (h * w) as i32;
+    (0..c)
+        .map(|ch| {
+            let mut s = 0i32;
+            for y in 0..h {
+                for x in 0..w {
+                    s += input.at3(y, x, ch) as i32;
+                }
+            }
+            (s + n / 2).div_euclid(n).clamp(-128, 127) as i8
+        })
+        .collect()
+}
+
+/// Integer residual add with per-input rescale into the output scale:
+/// `clamp(rescale_a(a) + rescale_b(b))` — the simplified TFLite ADD this
+/// repo standardises on (identical in the JAX model).
+pub fn qadd(a: &Tensor<i8>, rq_a: Requant, b: &Tensor<i8>, rq_b: Requant) -> Tensor<i8> {
+    assert_eq!(a.shape, b.shape, "residual shapes must match");
+    let mut out = Tensor::zeros(&a.shape);
+    for (o, (&va, &vb)) in out.data.iter_mut().zip(a.data.iter().zip(b.data.iter())) {
+        // Inputs are pre-shifted left by 8 bits so the Q31 multiply keeps
+        // precision for small int8 operands (mirrored in the JAX model).
+        let ra = rounding_rshift(srdhm((va as i32) << 8, rq_a.m), rq_a.shift);
+        let rb = rounding_rshift(srdhm((vb as i32) << 8, rq_b.m), rq_b.shift);
+        *o = (ra + rb).clamp(-128, 127) as i8;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant::{quantize_tensor, symmetric_scale, Requant};
+    use crate::rng::Rng;
+
+    fn rand_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn conv_geometry() {
+        let g = ConvGeom { k: 3, stride: 1, pad: 1 };
+        assert_eq!(g.out_size(8), 8);
+        let g = ConvGeom { k: 3, stride: 2, pad: 1 };
+        assert_eq!(g.out_size(8), 4);
+        let g = ConvGeom { k: 5, stride: 1, pad: 0 };
+        assert_eq!(g.out_size(28), 24);
+    }
+
+    #[test]
+    fn float_conv_identity_kernel() {
+        // 1×1 conv with identity weights passes channels through.
+        let input = Tensor::from_vec(&[2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let weights = vec![1.0, 0.0, 0.0, 1.0]; // [Cout=2][1][1][Cin=2]
+        let out = conv2d_f32(
+            &input,
+            &weights,
+            &[0.0, 0.0],
+            2,
+            ConvGeom { k: 1, stride: 1, pad: 0 },
+            false,
+        );
+        assert_eq!(out.data, input.data);
+    }
+
+    /// Quantized conv must approximate float conv within quantization noise.
+    #[test]
+    fn qconv_tracks_float_conv() {
+        let mut rng = Rng::new(42);
+        let (h, w, cin, cout, k) = (6, 6, 4, 3, 3);
+        let xf = Tensor::from_vec(&[h, w, cin], rand_f32(&mut rng, h * w * cin, 1.0));
+        let wf = rand_f32(&mut rng, cout * k * k * cin, 0.3);
+        let bf = rand_f32(&mut rng, cout, 0.1);
+        let geom = ConvGeom { k, stride: 1, pad: 1 };
+        let yf = conv2d_f32(&xf, &wf, &bf, cout, geom, true);
+
+        // Quantize: acts 8-bit, weights 8-bit.
+        let s_in = symmetric_scale(xf.abs_max(), 8);
+        let xq = Tensor::from_vec(
+            &xf.shape,
+            xf.data.iter().map(|&v| crate::nn::quant::quantize_value(v, s_in, 8)).collect(),
+        );
+        let (wq, s_w) = quantize_tensor(&wf, 8);
+        let s_out = symmetric_scale(yf.abs_max(), 8);
+        let bq: Vec<i32> = bf.iter().map(|&b| (b / (s_in * s_w)).round() as i32).collect();
+        let rq = Requant::from_real_scale((s_in * s_w / s_out) as f64);
+        let yq = qconv2d(&xq, &wq, &bq, cout, geom, rq, true);
+
+        // Compare dequantized outputs.
+        let mut max_err = 0.0f32;
+        for (&q, &f) in yq.data.iter().zip(&yf.data) {
+            max_err = max_err.max((q as f32 * s_out - f).abs());
+        }
+        assert!(max_err < 4.0 * s_out, "max_err {max_err} vs s_out {s_out}");
+    }
+
+    #[test]
+    fn qdense_raw_accumulators() {
+        let (q, accs) = qdense(&[1, 2, 3], &[1, 0, 0, 0, 1, 0], &[10, 20], 2, None, false);
+        assert!(q.is_empty());
+        assert_eq!(accs, vec![11, 22]);
+    }
+
+    #[test]
+    fn qmaxpool_picks_max() {
+        let t = Tensor::from_vec(&[2, 2, 1], vec![-5i8, 3, 7, -1]);
+        assert_eq!(qmaxpool2(&t).data, vec![7]);
+    }
+
+    #[test]
+    fn qavgpool_rounds_half_up_floor() {
+        let t = Tensor::from_vec(&[2, 2, 1], vec![1i8, 2, 2, 2]);
+        // (7 + 2) / 4 = 2 (floor)
+        assert_eq!(qavgpool_global(&t), vec![2]);
+        let t = Tensor::from_vec(&[2, 2, 1], vec![-1i8, -2, -2, -2]);
+        // (-7 + 2).div_euclid(4) = -2 (floor of -1.25)
+        assert_eq!(qavgpool_global(&t), vec![-2]);
+    }
+
+    #[test]
+    fn qadd_equal_scales_is_saturating_add() {
+        // rescale = 1/256 with the <<8 pre-shift → identity.
+        let rq = Requant::from_real_scale(1.0 / 256.0);
+        let a = Tensor::from_vec(&[1, 1, 3], vec![100i8, -100, 64]);
+        let b = Tensor::from_vec(&[1, 1, 3], vec![100i8, -100, 63]);
+        let out = qadd(&a, rq, &b, rq);
+        assert_eq!(out.data, vec![127, -128, 127]);
+    }
+}

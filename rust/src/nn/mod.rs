@@ -1,0 +1,69 @@
+//! Quantized-NN substrate: tensors, float/integer layers, the symmetric
+//! quantizer for the 2/4/8-bit weight grids and the packed-weight
+//! layouts. This module is the arithmetic ground truth of the repo —
+//! the RV32 kernels, the JAX model and the Pallas kernel are all tested
+//! bit-exact against it.
+
+pub mod layers;
+pub mod pack;
+pub mod quant;
+pub mod tensor;
+
+pub use layers::ConvGeom;
+pub use quant::Requant;
+pub use tensor::Tensor;
+
+/// A quantized layer's parameters, ready for both the host reference and
+/// the kernel/PJRT paths.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    /// Weights on the `w_bits` grid (stored as int8 values).
+    pub qw: Vec<i8>,
+    /// Int32 biases in the accumulator scale (`s_in · s_w`).
+    pub bias: Vec<i32>,
+    /// Output requantization parameters.
+    pub rq: Requant,
+    /// Weight bit-width ∈ {2, 4, 8}.
+    pub w_bits: u32,
+    /// Weight scale used for quantization (diagnostics/rebuild).
+    pub s_w: f32,
+}
+
+/// Quantize one layer's float parameters to a target weight bit-width.
+///
+/// * `wf` — float weights, `bf` — float biases,
+/// * `s_in` — input activation scale, `s_out` — output activation scale
+///   (both from 8-bit calibration; activation scales are kept fixed
+///   across weight-width choices, standard PTQ practice).
+pub fn quantize_layer(wf: &[f32], bf: &[f32], s_in: f32, s_out: f32, w_bits: u32) -> QLayer {
+    let (qw, s_w) = quant::quantize_tensor(wf, w_bits);
+    let bias: Vec<i32> = bf.iter().map(|&b| (b / (s_in * s_w)).round() as i32).collect();
+    let rq = Requant::from_real_scale((s_in as f64) * (s_w as f64) / (s_out as f64));
+    QLayer { qw, bias, rq, w_bits, s_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_layer_produces_grid_weights() {
+        let wf: Vec<f32> = (-8..8).map(|i| i as f32 * 0.1).collect();
+        for bits in [2u32, 4, 8] {
+            let l = quantize_layer(&wf, &[0.5], 0.02, 0.05, bits);
+            let (lo, hi) = quant::qrange(bits);
+            assert!(l.qw.iter().all(|&q| (q as i32) >= lo && (q as i32) <= hi), "bits {bits}");
+            assert_eq!(l.w_bits, bits);
+            assert!(l.rq.m >= 1 << 30);
+        }
+    }
+
+    #[test]
+    fn bias_lands_in_accumulator_scale() {
+        let l = quantize_layer(&[1.0], &[0.7], 0.1, 1.0, 8);
+        // bias_q = b / (s_in · s_w) with whatever scale the MSE search
+        // picked.
+        let want = (0.7 / (0.1 * l.s_w)).round() as i32;
+        assert!((l.bias[0] - want).abs() <= 1, "bias {} want {want}", l.bias[0]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Layer-level weight packing into the 32-bit word streams the Mode-1/2/3
+//! kernels consume ("the initial step involves packing (up to 16)
+//! operands (weights) into 32-bit registers", Section 3.2).
+//!
+//! Streams are zero-padded at group boundaries so a partially-filled
+//! `nn_mac` word multiplies trailing (out-of-group) activation bytes by
+//! zero — this is what lets the kernels stream whole words without
+//! per-element tail handling. The group strides encoded here are
+//! replicated by the kernel code generators; both sides are tested
+//! against each other.
+
+use crate::isa::custom::pack_weight_stream;
+use crate::isa::MacMode;
+
+/// Words per packed group of `len` weights under `mode`.
+pub fn words_per_group(mode: MacMode, len: usize) -> usize {
+    len.div_ceil(mode.weights_per_word() as usize)
+}
+
+/// Pack dense-layer weights `[O][I]` (row-major) into per-output-row
+/// streams: output `o`'s words start at `o * words_per_group(mode, i)`.
+pub fn pack_dense(mode: MacMode, qw: &[i8], o: usize, i: usize) -> Vec<u32> {
+    assert_eq!(qw.len(), o * i);
+    let wpg = words_per_group(mode, i);
+    let mut out = Vec::with_capacity(o * wpg);
+    for row in qw.chunks(i) {
+        let words = pack_weight_stream(mode, row);
+        debug_assert_eq!(words.len(), wpg);
+        out.extend(words);
+    }
+    out
+}
+
+/// Pack conv weights `[Cout][K][K][Cin]` into per-`(oc, ky)` row strips:
+/// each strip covers the `K·Cin` weights that multiply one contiguous
+/// NHWC activation run. Strip `(oc, ky)` starts at
+/// `(oc*K + ky) * words_per_group(mode, K*Cin)`.
+pub fn pack_conv(mode: MacMode, qw: &[i8], cout: usize, k: usize, cin: usize) -> Vec<u32> {
+    assert_eq!(qw.len(), cout * k * k * cin);
+    let strip = k * cin;
+    let wpg = words_per_group(mode, strip);
+    let mut out = Vec::with_capacity(cout * k * wpg);
+    for oc in 0..cout {
+        for ky in 0..k {
+            let base = ((oc * k) + ky) * k * cin;
+            let words = pack_weight_stream(mode, &qw[base..base + strip]);
+            debug_assert_eq!(words.len(), wpg);
+            out.extend(words);
+        }
+    }
+    out
+}
+
+/// Pack depthwise weights `[C][K][K]` into per-channel groups of
+/// `words_per_group(mode, K*K)` words (taps in row-major `(ky, kx)` order,
+/// matching the kernel's on-the-fly activation gather).
+pub fn pack_depthwise(mode: MacMode, qw: &[i8], c: usize, k: usize) -> Vec<u32> {
+    assert_eq!(qw.len(), c * k * k);
+    let taps = k * k;
+    let wpg = words_per_group(mode, taps);
+    let mut out = Vec::with_capacity(c * wpg);
+    for ch in 0..c {
+        out.extend(pack_weight_stream(mode, &qw[ch * taps..(ch + 1) * taps]));
+        debug_assert_eq!(out.len(), (ch + 1) * wpg);
+    }
+    out
+}
+
+/// Memory-footprint of a packed weight stream in bytes (the Fig. 4 /
+/// Table 4 weight-traffic accounting uses this).
+pub fn packed_bytes(mode: MacMode, groups: usize, group_len: usize) -> usize {
+    groups * words_per_group(mode, group_len) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::custom::unpack_weights;
+    use crate::isa::MacMode::*;
+
+    #[test]
+    fn dense_rows_are_word_aligned() {
+        // O=2, I=5 at 4-bit: 5 weights -> 1 word each (8 slots, 3 padded).
+        let qw: Vec<i8> = vec![1, 2, 3, 4, 5, -1, -2, -3, -4, -5];
+        let words = pack_dense(W4, &qw, 2, 5);
+        assert_eq!(words.len(), 2);
+        assert_eq!(unpack_weights(W4, words[0]), vec![1, 2, 3, 4, 5, 0, 0, 0]);
+        assert_eq!(unpack_weights(W4, words[1]), vec![-1, -2, -3, -4, -5, 0, 0, 0]);
+    }
+
+    #[test]
+    fn conv_strips_follow_oc_ky_order() {
+        // Cout=1, K=2, Cin=4: strips of 8 weights; 8-bit -> 2 words/strip.
+        let qw: Vec<i8> = (1..=16).collect();
+        let words = pack_conv(W8, &qw, 1, 2, 4);
+        assert_eq!(words.len(), 4);
+        assert_eq!(unpack_weights(W8, words[0]), vec![1, 2, 3, 4]);
+        assert_eq!(unpack_weights(W8, words[1]), vec![5, 6, 7, 8]);
+        assert_eq!(unpack_weights(W8, words[2]), vec![9, 10, 11, 12]);
+    }
+
+    #[test]
+    fn depthwise_groups_per_channel() {
+        // C=2, K=3: 9 taps; 2-bit -> 1 word per channel.
+        let qw: Vec<i8> = vec![1; 18];
+        let words = pack_depthwise(W2, &qw, 2, 3);
+        assert_eq!(words.len(), 2);
+        let lanes = unpack_weights(W2, words[0]);
+        assert_eq!(&lanes[..9], &[1i8; 9]);
+        assert_eq!(&lanes[9..], &[0i8; 7]);
+    }
+
+    #[test]
+    fn packed_byte_accounting() {
+        // 64 weights per group, 4 groups.
+        assert_eq!(packed_bytes(W8, 4, 64), 4 * 16 * 4);
+        assert_eq!(packed_bytes(W4, 4, 64), 4 * 8 * 4);
+        assert_eq!(packed_bytes(W2, 4, 64), 4 * 4 * 4);
+    }
+}

@@ -1,0 +1,238 @@
+//! Quantization and requantization — the single arithmetic specification
+//! shared (bit-exactly) by the host integer reference (`nn::layers`), the
+//! RV32 kernels (`kernels::requant`), the JAX model and the Pallas kernel
+//! (`python/compile/kernels`). Cross-checked by exported test vectors.
+//!
+//! Scheme: symmetric per-tensor quantization (zero point 0) for both
+//! activations (always int8) and weights (int8/int4/int2 grids — the
+//! paper's 8/4/2-bit weight precisions). Accumulation is int32; outputs
+//! are requantized to int8 with the fixed-point multiplier+shift scheme
+//! of Jacob et al. (the paper's "common requantization step [29]").
+
+/// Quantized signed range for a bit-width: `[-2^(b-1), 2^(b-1)-1]`.
+pub fn qrange(bits: u32) -> (i32, i32) {
+    crate::isa::custom::weight_range(bits)
+}
+
+/// Symmetric scale for quantizing values of magnitude `abs_max` to
+/// `bits`-wide signed integers.
+pub fn symmetric_scale(abs_max: f32, bits: u32) -> f32 {
+    let qmax = (1i64 << (bits - 1)) as f32; // use the full negative range
+    if abs_max == 0.0 {
+        1.0
+    } else {
+        abs_max / qmax
+    }
+}
+
+/// Quantize one float to the `bits`-wide signed grid with scale `s`.
+pub fn quantize_value(v: f32, s: f32, bits: u32) -> i8 {
+    let (lo, hi) = qrange(bits);
+    let q = (v / s).round() as i32;
+    q.clamp(lo, hi) as i8
+}
+
+/// Candidate scale multipliers for the MSE search (order matters: ties
+/// resolve to the earlier candidate in both language twins).
+pub const SCALE_CANDIDATES: [f32; 6] = [1.0, 0.9, 0.8, 0.7, 0.6, 1.15];
+
+/// Quantize a float slice to `bits`-wide signed values (returned as i8,
+/// always on the grid), choosing the scale that minimises the MSE over
+/// a small candidate grid around the abs-max scale.
+///
+/// The search matters most at 2-bit, where the asymmetric signed grid
+/// {-2,-1,0,1} clips the positive range: a slightly smaller scale
+/// recovers much of the paper's fine-tuning benefit without retraining
+/// (our PTQ-for-QAT substitution, DESIGN.md §5).
+pub fn quantize_tensor(vs: &[f32], bits: u32) -> (Vec<i8>, f32) {
+    let abs_max = vs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let base = symmetric_scale(abs_max, bits);
+    let mut best_s = base;
+    let mut best_mse = f32::INFINITY;
+    for mult in SCALE_CANDIDATES {
+        let s = base * mult;
+        let mse: f32 = vs
+            .iter()
+            .map(|&v| {
+                let q = quantize_value(v, s, bits);
+                let e = v - dequantize(q, s);
+                e * e
+            })
+            .sum();
+        if mse < best_mse {
+            best_mse = mse;
+            best_s = s;
+        }
+    }
+    (vs.iter().map(|&v| quantize_value(v, best_s, bits)).collect(), best_s)
+}
+
+/// Dequantize.
+pub fn dequantize(q: i8, s: f32) -> f32 {
+    q as f32 * s
+}
+
+/// Fixed-point requantization parameters: `real_scale ≈ m / 2^31 / 2^shift`
+/// with `m` a Q31 multiplier in `[2^30, 2^31)`. A negative `shift` is a
+/// *left* shift (scales ≥ 1 arise for 2-bit grids with small outputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    /// Q31 multiplier.
+    pub m: i32,
+    /// Right shift applied after the doubling-high multiply
+    /// (negative = left shift).
+    pub shift: i32,
+}
+
+impl Requant {
+    /// Decompose `real_scale` (the effective `s_in·s_w / s_out`; values
+    /// ≥ 1 arise for coarse weight grids and yield negative shifts).
+    pub fn from_real_scale(real_scale: f64) -> Requant {
+        assert!(real_scale > 0.0, "requant scale must be positive");
+        let mut shift = 0i32;
+        let mut s = real_scale;
+        // Normalize into [0.5, 1): m = s · 2^31 lands in [2^30, 2^31).
+        while s < 0.5 {
+            s *= 2.0;
+            shift += 1;
+        }
+        while s >= 1.0 {
+            s /= 2.0;
+            shift -= 1;
+        }
+        let mut m = (s * (1i64 << 31) as f64).round() as i64;
+        if m == (1i64 << 31) {
+            m /= 2;
+            shift -= 1;
+        }
+        Requant { m: m as i32, shift }
+    }
+
+    /// The real scale this parameter pair encodes.
+    pub fn real_scale(&self) -> f64 {
+        self.m as f64 / (1i64 << 31) as f64 / 2f64.powi(self.shift)
+    }
+}
+
+/// Saturating rounding doubling high multiply — gemmlowp semantics,
+/// the exact operation the RV32 kernel implements with `mulh`/`mul`.
+///
+/// `SRDHM(a, b) = round_to_nearest((a·b) / 2^31)` with the single
+/// saturation case `a = b = i32::MIN`.
+pub fn srdhm(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let p = a as i64 * b as i64;
+    // +2^30 nudge then >>31 — round half away from... (half up in two's
+    // complement). Identical in every implementation of this repo.
+    ((p + (1i64 << 30)) >> 31) as i32
+}
+
+/// Rounding arithmetic right shift by `n` (round half up); negative `n`
+/// shifts left (wrapping, like the hardware barrel shifter).
+pub fn rounding_rshift(x: i32, n: i32) -> i32 {
+    if n > 0 {
+        (x as i64 + (1i64 << (n - 1)) >> n) as i32
+    } else if n == 0 {
+        x
+    } else {
+        // Saturating i64 left shift (identical to the JAX twin; the
+        // magnitudes produced by well-formed layers never saturate).
+        (((x as i64) << (-n) as u32).clamp(i32::MIN as i64, i32::MAX as i64)) as i32
+    }
+}
+
+/// Requantize an int32 accumulator to int8:
+/// `clamp(rounding_rshift(SRDHM(acc, m), shift))`, with optional fused
+/// ReLU (clamp low bound 0).
+pub fn requantize(acc: i32, rq: Requant, relu: bool) -> i8 {
+    let r = rounding_rshift(srdhm(acc, rq.m), rq.shift);
+    let lo = if relu { 0 } else { -128 };
+    r.clamp(lo, 127) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qrange_matches_widths() {
+        assert_eq!(qrange(8), (-128, 127));
+        assert_eq!(qrange(4), (-8, 7));
+        assert_eq!(qrange(2), (-2, 1));
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        let vs: Vec<f32> = (-100..100).map(|i| i as f32 * 0.013).collect();
+        for bits in [2u32, 4, 8] {
+            let (qs, s) = quantize_tensor(&vs, bits);
+            let (lo, hi) = qrange(bits);
+            for (&q, &v) in qs.iter().zip(&vs) {
+                assert!((q as i32) >= lo && (q as i32) <= hi);
+                // Quantization error ≤ s/2 inside the clip range.
+                if (v / s).abs() < hi as f32 {
+                    assert!(
+                        (dequantize(q, s) - v).abs() <= s / 2.0 + 1e-6,
+                        "bits {bits} v {v} q {q} s {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requant_decomposition_accurate() {
+        for scale in [0.5, 0.25, 0.1, 0.01, 0.0003, 0.9999, 0.7 / 3.0] {
+            let rq = Requant::from_real_scale(scale);
+            assert!((1 << 30) <= rq.m, "m normalised: {}", rq.m);
+            let rel = (rq.real_scale() - scale).abs() / scale;
+            assert!(rel < 1e-8, "scale {scale} rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn srdhm_matches_wide_reference() {
+        let cases = [
+            (0, 0),
+            (1, 1),
+            (i32::MAX, i32::MAX),
+            (i32::MIN, i32::MAX),
+            (i32::MIN, i32::MIN),
+            (123456789, -987654321),
+            (-1, 1 << 30),
+        ];
+        for (a, b) in cases {
+            if a == i32::MIN && b == i32::MIN {
+                assert_eq!(srdhm(a, b), i32::MAX);
+            } else {
+                let want = (((a as i64 * b as i64) + (1 << 30)) >> 31) as i32;
+                assert_eq!(srdhm(a, b), want);
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_known_values() {
+        // scale 0.5 → m = 2^30, shift 0: requant(acc) ≈ acc/2.
+        let rq = Requant::from_real_scale(0.5);
+        assert_eq!(requantize(10, rq, false), 5);
+        assert_eq!(requantize(-10, rq, false), -5);
+        assert_eq!(requantize(1000, rq, false), 127); // clamps
+        assert_eq!(requantize(-1000, rq, false), -128);
+        assert_eq!(requantize(-10, rq, true), 0); // fused relu
+        // Rounding: 0.5 rounds up.
+        assert_eq!(requantize(3, rq, false), 2); // 1.5 -> 2
+        assert_eq!(requantize(-3, rq, false), -1); // -1.5 -> -1 (half up)
+    }
+
+    #[test]
+    fn requantize_scale_with_shift() {
+        // 1/16 → s=0.5, shift=3.
+        let rq = Requant::from_real_scale(1.0 / 16.0);
+        assert_eq!(rq.shift, 3);
+        assert_eq!(requantize(160, rq, false), 10);
+        assert_eq!(requantize(-160, rq, false), -10);
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal NHWC tensor containers for the quantized-NN substrate.
+//!
+//! Two concrete element types cover the whole pipeline: `f32` for the
+//! float reference path and `i8`/`i32` for the integer inference path.
+//! Layout is always NHWC with C innermost — the layout the paper's
+//! kernels (and ours) stream, because it makes per-pixel channel runs
+//! contiguous for the packed `nn_mac` loads.
+
+/// Dense tensor over element type `T`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    /// Dimension sizes, outermost first (e.g. `[H, W, C]`).
+    pub shape: Vec<usize>,
+    /// Row-major (C-order) data.
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); shape.iter().product()] }
+    }
+
+    /// Tensor from raw data (length-checked).
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 3-D (HWC) index.
+    #[inline]
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> T {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(y * self.shape[1] + x) * self.shape[2] + c]
+    }
+
+    /// Mutable 3-D (HWC) index.
+    #[inline]
+    pub fn at3_mut(&mut self, y: usize, x: usize, c: usize) -> &mut T {
+        debug_assert_eq!(self.shape.len(), 3);
+        &mut self.data[(y * self.shape[1] + x) * self.shape[2] + c]
+    }
+}
+
+impl Tensor<f32> {
+    /// Maximum absolute value (quantization calibration).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+/// Pad the channel dimension of an HWC tensor to a multiple of `mult`,
+/// filling with `fill`. The packed kernels require word-aligned channel
+/// runs (see `kernels::layout`).
+pub fn pad_channels<T: Copy + Default>(t: &Tensor<T>, mult: usize, fill: T) -> Tensor<T> {
+    assert_eq!(t.shape.len(), 3, "pad_channels expects HWC");
+    let (h, w, c) = (t.shape[0], t.shape[1], t.shape[2]);
+    let cp = c.div_ceil(mult) * mult;
+    if cp == c {
+        return t.clone();
+    }
+    let mut out = Tensor::from_vec(&[h, w, cp], vec![fill; h * w * cp]);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                *out.at3_mut(y, x, ch) = t.at3(y, x, ch);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_nhwc() {
+        let t = Tensor::from_vec(&[2, 2, 3], (0..12).collect::<Vec<i32>>());
+        assert_eq!(t.at3(0, 0, 0), 0);
+        assert_eq!(t.at3(0, 0, 2), 2);
+        assert_eq!(t.at3(0, 1, 0), 3);
+        assert_eq!(t.at3(1, 0, 0), 6);
+        assert_eq!(t.at3(1, 1, 2), 11);
+    }
+
+    #[test]
+    fn channel_padding() {
+        let t = Tensor::from_vec(&[1, 2, 3], vec![1i8, 2, 3, 4, 5, 6]);
+        let p = pad_channels(&t, 4, 0);
+        assert_eq!(p.shape, vec![1, 2, 4]);
+        assert_eq!(p.data, vec![1, 2, 3, 0, 4, 5, 6, 0]);
+        // Already aligned: untouched.
+        let q = pad_channels(&p, 4, 0);
+        assert_eq!(q.data, p.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_length() {
+        Tensor::from_vec(&[2, 2], vec![1i32]);
+    }
+}

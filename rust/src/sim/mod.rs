@@ -1,0 +1,546 @@
+//! Cycle-accurate Ibex-like RV32IM core simulator with the paper's
+//! mixed-precision extension.
+//!
+//! The model reproduces the **timing** of a 2-stage in-order Ibex
+//! configured with the single-cycle RV32M multiplier (the paper's chosen
+//! baseline unit) and single-cycle instruction/data memories. Per-class
+//! cycle costs follow the Ibex user manual and are collected in
+//! [`Timing`]; the `nn_mac_*` cycle cost is produced structurally by the
+//! [`mac_unit::MacUnit`] datapath model.
+//!
+//! Functional semantics are bit-exact RV32IM. Programs halt via `ecall`.
+
+pub mod mac_unit;
+pub mod memory;
+pub mod perf;
+
+use crate::isa::decode::decode;
+use crate::isa::*;
+pub use mac_unit::{MacUnit, MacUnitConfig};
+pub use memory::{MemFault, Memory};
+pub use perf::PerfCounters;
+
+/// Per-instruction-class cycle costs (Ibex user manual, 2-stage pipeline,
+/// single-cycle multiplier, 0-wait-state memories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Timing {
+    /// Integer ALU / LUI / AUIPC.
+    pub alu: u32,
+    /// CSR access.
+    pub csr: u32,
+    /// `mul` on the single-cycle multiplier.
+    pub mul: u32,
+    /// `mulh/mulhsu/mulhu` (2 cycles on the single-cycle multiplier).
+    pub mulh: u32,
+    /// `div/divu/rem/remu` (long division).
+    pub div: u32,
+    /// Load (address phase + response).
+    pub load: u32,
+    /// Store.
+    pub store: u32,
+    /// `jal`/`jalr` (pipeline refill).
+    pub jump: u32,
+    /// Taken conditional branch (flush + refill).
+    pub branch_taken: u32,
+    /// Not-taken conditional branch.
+    pub branch_not_taken: u32,
+    /// `fence` (no-op on this single-hart core).
+    pub fence: u32,
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Timing {
+            alu: 1,
+            csr: 1,
+            mul: 1,
+            mulh: 2,
+            div: 37,
+            load: 2,
+            store: 2,
+            jump: 2,
+            branch_taken: 3,
+            branch_not_taken: 1,
+            fence: 1,
+        }
+    }
+}
+
+/// Why the simulation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// `ecall` — normal program completion.
+    Ecall,
+    /// `ebreak` hit.
+    Ebreak,
+    /// Memory fault.
+    Fault(MemFault),
+    /// PC left the program image.
+    IllegalPc(u32),
+    /// Cycle budget exhausted.
+    MaxCycles,
+}
+
+/// Core configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreConfig {
+    /// Cycle-cost table.
+    pub timing: Timing,
+    /// Mixed-precision MAC datapath features.
+    pub mac: MacUnitConfig,
+    /// Data+program memory size in bytes.
+    pub mem_size: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig {
+            timing: Timing::default(),
+            mac: MacUnitConfig::full(),
+            mem_size: 16 << 20, // 16 MiB — fits every scaled model's buffers
+        }
+    }
+}
+
+/// The simulated core.
+pub struct Core {
+    /// Architectural registers; `x0` is forced to zero on write.
+    pub regs: [u32; NUM_REGS],
+    /// Program counter (byte address).
+    pub pc: u32,
+    /// Data/program memory.
+    pub mem: Memory,
+    /// Performance counters.
+    pub perf: PerfCounters,
+    /// The mixed-precision MAC block.
+    pub mac_unit: MacUnit,
+    timing: Timing,
+    program: Vec<Instr>,
+    prog_base: u32,
+}
+
+impl Core {
+    /// Build a core with `program` pre-decoded at byte address `base`.
+    pub fn new(cfg: CoreConfig, program: Vec<Instr>, base: u32) -> Self {
+        let mut mem = Memory::new(cfg.mem_size);
+        // Mirror the encoded program into memory so self-inspecting
+        // programs (and the disassembler) see real bytes.
+        let words = crate::isa::encode::encode_program(&program);
+        mem.write_words(base, &words);
+        Core {
+            regs: [0; NUM_REGS],
+            pc: base,
+            mem,
+            perf: PerfCounters::default(),
+            mac_unit: MacUnit::new(cfg.mac),
+            timing: cfg.timing,
+            program,
+            prog_base: base,
+        }
+    }
+
+    /// Build a core from raw machine words (exercises the decoder path).
+    pub fn from_words(cfg: CoreConfig, words: &[u32], base: u32) -> Result<Self, decode::DecodeError> {
+        let program = words.iter().map(|&w| decode(w)).collect::<Result<Vec<_>, _>>()?;
+        Ok(Self::new(cfg, program, base))
+    }
+
+    #[inline]
+    fn write_reg(&mut self, rd: Reg, val: u32) {
+        if rd != 0 {
+            self.regs[rd as usize] = val;
+        }
+    }
+
+    /// Execute one instruction; returns `Some(reason)` if the core halts.
+    #[inline]
+    pub fn step(&mut self) -> Option<ExitReason> {
+        let idx = self.pc.wrapping_sub(self.prog_base) / 4;
+        let Some(&instr) = self.program.get(idx as usize) else {
+            return Some(ExitReason::IllegalPc(self.pc));
+        };
+        let t = self.timing;
+        let mut next_pc = self.pc.wrapping_add(4);
+        let mut cycles = 0u32;
+
+        match instr {
+            Instr::Lui { rd, imm } => {
+                self.write_reg(rd, imm as u32);
+                cycles += t.alu;
+            }
+            Instr::Auipc { rd, imm } => {
+                self.write_reg(rd, self.pc.wrapping_add(imm as u32));
+                cycles += t.alu;
+            }
+            Instr::Jal { rd, offset } => {
+                self.write_reg(rd, next_pc);
+                next_pc = self.pc.wrapping_add(offset as u32);
+                cycles += t.jump;
+            }
+            Instr::Jalr { rd, rs1, offset } => {
+                let target = self.regs[rs1 as usize].wrapping_add(offset as u32) & !1;
+                self.write_reg(rd, next_pc);
+                next_pc = target;
+                cycles += t.jump;
+            }
+            Instr::Branch { op, rs1, rs2, offset } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(offset as u32);
+                    cycles += t.branch_taken;
+                    self.perf.taken_branches += 1;
+                } else {
+                    cycles += t.branch_not_taken;
+                }
+            }
+            Instr::Load { op, rd, rs1, offset } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(offset as u32);
+                let (width, sign) = match op {
+                    LoadOp::Lb => (1, true),
+                    LoadOp::Lh => (2, true),
+                    LoadOp::Lw => (4, false),
+                    LoadOp::Lbu => (1, false),
+                    LoadOp::Lhu => (2, false),
+                };
+                match self.mem.load(addr, width) {
+                    Ok(raw) => {
+                        let val = if sign {
+                            match width {
+                                1 => raw as u8 as i8 as i32 as u32,
+                                2 => raw as u16 as i16 as i32 as u32,
+                                _ => raw,
+                            }
+                        } else {
+                            raw
+                        };
+                        self.write_reg(rd, val);
+                        self.perf.loads += 1;
+                        cycles += t.load;
+                    }
+                    Err(f) => return Some(ExitReason::Fault(f)),
+                }
+            }
+            Instr::Store { op, rs1, rs2, offset } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(offset as u32);
+                let width = match op {
+                    StoreOp::Sb => 1,
+                    StoreOp::Sh => 2,
+                    StoreOp::Sw => 4,
+                };
+                match self.mem.store(addr, width, self.regs[rs2 as usize]) {
+                    Ok(()) => {
+                        self.perf.stores += 1;
+                        cycles += t.store;
+                    }
+                    Err(f) => return Some(ExitReason::Fault(f)),
+                }
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let a = self.regs[rs1 as usize];
+                let b = imm as u32;
+                self.write_reg(rd, alu_eval(op, a, b));
+                cycles += t.alu;
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                self.write_reg(rd, alu_eval(op, a, b));
+                cycles += t.alu;
+            }
+            Instr::MulDiv { op, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let (val, c) = match op {
+                    MulOp::Mul => (a.wrapping_mul(b), t.mul),
+                    MulOp::Mulh => {
+                        ((((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32, t.mulh)
+                    }
+                    MulOp::Mulhsu => ((((a as i32 as i64) * (b as i64)) >> 32) as u32, t.mulh),
+                    MulOp::Mulhu => ((((a as u64) * (b as u64)) >> 32) as u32, t.mulh),
+                    MulOp::Div => {
+                        let (a, b) = (a as i32, b as i32);
+                        let q = if b == 0 {
+                            -1
+                        } else if a == i32::MIN && b == -1 {
+                            i32::MIN
+                        } else {
+                            a.wrapping_div(b)
+                        };
+                        (q as u32, t.div)
+                    }
+                    MulOp::Divu => (if b == 0 { u32::MAX } else { a / b }, t.div),
+                    MulOp::Rem => {
+                        let (a, b) = (a as i32, b as i32);
+                        let r = if b == 0 {
+                            a
+                        } else if a == i32::MIN && b == -1 {
+                            0
+                        } else {
+                            a.wrapping_rem(b)
+                        };
+                        (r as u32, t.div)
+                    }
+                    MulOp::Remu => (if b == 0 { a } else { a % b }, t.div),
+                };
+                self.write_reg(rd, val);
+                self.perf.muldiv_instrs += 1;
+                if op == MulOp::Mul {
+                    // One scalar MAC's multiply — counted so baseline and
+                    // extended kernels share the MACs metric.
+                    self.perf.macs += 1;
+                    self.mac_unit.total_macs += 1;
+                }
+                cycles += c;
+            }
+            Instr::NnMac { mode, rd, rs1, rs2 } => {
+                let k = mode.activation_regs() as usize;
+                debug_assert!(
+                    (rs1 as usize) + k <= NUM_REGS,
+                    "nn_mac activation register group overruns the register file"
+                );
+                let mut acts = [0u32; 4];
+                for (i, slot) in acts.iter_mut().enumerate().take(k) {
+                    *slot = self.regs[rs1 as usize + i];
+                }
+                let issue =
+                    self.mac_unit.issue(mode, self.regs[rd as usize], &acts[..k], self.regs[rs2 as usize]);
+                self.write_reg(rd, issue.acc);
+                self.perf.macs += issue.macs as u64;
+                self.perf.nn_mac_instrs += 1;
+                cycles += issue.cycles;
+            }
+            Instr::Csr { op, rd, rs1, csr } => {
+                // Counters are read-only here; writes are accepted and
+                // ignored (enough for rdcycle-style measurement reads).
+                let _ = (op, rs1);
+                let val = self.perf.read_csr(csr);
+                self.write_reg(rd, val);
+                cycles += t.csr;
+            }
+            Instr::Fence => cycles += t.fence,
+            Instr::Ecall => {
+                self.perf.cycles += 1;
+                self.perf.instret += 1;
+                return Some(ExitReason::Ecall);
+            }
+            Instr::Ebreak => {
+                self.perf.cycles += 1;
+                self.perf.instret += 1;
+                return Some(ExitReason::Ebreak);
+            }
+        }
+
+        self.perf.cycles += cycles as u64;
+        self.perf.instret += 1;
+        self.pc = next_pc;
+        None
+    }
+
+    /// Run until halt or `max_cycles`.
+    pub fn run(&mut self, max_cycles: u64) -> ExitReason {
+        loop {
+            if let Some(reason) = self.step() {
+                return reason;
+            }
+            if self.perf.cycles >= max_cycles {
+                return ExitReason::MaxCycles;
+            }
+        }
+    }
+
+    /// Run with a per-instruction trace callback `(pc, instr)`.
+    pub fn run_traced<F: FnMut(u32, Instr)>(&mut self, max_cycles: u64, mut f: F) -> ExitReason {
+        loop {
+            let idx = self.pc.wrapping_sub(self.prog_base) / 4;
+            if let Some(&instr) = self.program.get(idx as usize) {
+                f(self.pc, instr);
+            }
+            if let Some(reason) = self.step() {
+                return reason;
+            }
+            if self.perf.cycles >= max_cycles {
+                return ExitReason::MaxCycles;
+            }
+        }
+    }
+
+    /// Program length in instructions.
+    pub fn program_len(&self) -> usize {
+        self.program.len()
+    }
+}
+
+#[inline]
+fn alu_eval(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::custom::{pack_acts, pack_weights};
+
+    fn run_program(prog: Vec<Instr>) -> Core {
+        let mut core = Core::new(CoreConfig { mem_size: 4096, ..Default::default() }, prog, 0);
+        assert_eq!(core.run(1_000_000), ExitReason::Ecall);
+        core
+    }
+
+    #[test]
+    fn arithmetic_and_halt() {
+        let core = run_program(vec![
+            Instr::OpImm { op: AluOp::Add, rd: 10, rs1: 0, imm: 21 },
+            Instr::OpImm { op: AluOp::Add, rd: 11, rs1: 0, imm: 21 },
+            Instr::Op { op: AluOp::Add, rd: 12, rs1: 10, rs2: 11 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(core.regs[12], 42);
+        assert_eq!(core.perf.instret, 4);
+        // 3 × ALU (1 cycle) + ecall (1 cycle)
+        assert_eq!(core.perf.cycles, 4);
+    }
+
+    #[test]
+    fn x0_is_immutable() {
+        let core = run_program(vec![
+            Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 99 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(core.regs[0], 0);
+    }
+
+    #[test]
+    fn loads_sign_extend_and_count() {
+        let mut core = Core::new(
+            CoreConfig { mem_size: 4096, ..Default::default() },
+            vec![
+                Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1024 },
+                Instr::Load { op: LoadOp::Lb, rd: 10, rs1: 5, offset: 0 },
+                Instr::Load { op: LoadOp::Lbu, rd: 11, rs1: 5, offset: 0 },
+                Instr::Ecall,
+            ],
+            0,
+        );
+        core.mem.write_i8(1024, &[-5]);
+        assert_eq!(core.run(1000), ExitReason::Ecall);
+        assert_eq!(core.regs[10] as i32, -5);
+        assert_eq!(core.regs[11], 0xfb);
+        assert_eq!(core.perf.loads, 2);
+    }
+
+    #[test]
+    fn branch_timing_taken_vs_not() {
+        // beq x0,x0 (taken, 3 cycles) vs bne x0,x0 (not taken, 1 cycle).
+        let core = run_program(vec![
+            Instr::Branch { op: BranchOp::Bne, rs1: 0, rs2: 0, offset: 8 }, // not taken: 1
+            Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 8 }, // taken: 3
+            Instr::Ebreak,                                                  // skipped
+            Instr::Ecall,                                                   // 1
+        ]);
+        assert_eq!(core.perf.cycles, 1 + 3 + 1);
+        assert_eq!(core.perf.taken_branches, 1);
+    }
+
+    #[test]
+    fn division_semantics_riscv_edge_cases() {
+        let core = run_program(vec![
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 7 },
+            // div by zero -> -1 ; rem by zero -> dividend
+            Instr::MulDiv { op: MulOp::Div, rd: 10, rs1: 5, rs2: 0 },
+            Instr::MulDiv { op: MulOp::Rem, rd: 11, rs1: 5, rs2: 0 },
+            // i32::MIN / -1 -> i32::MIN ; rem -> 0
+            Instr::Lui { rd: 6, imm: i32::MIN },
+            Instr::OpImm { op: AluOp::Add, rd: 7, rs1: 0, imm: -1 },
+            Instr::MulDiv { op: MulOp::Div, rd: 12, rs1: 6, rs2: 7 },
+            Instr::MulDiv { op: MulOp::Rem, rd: 13, rs1: 6, rs2: 7 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(core.regs[10] as i32, -1);
+        assert_eq!(core.regs[11] as i32, 7);
+        assert_eq!(core.regs[12] as i32, i32::MIN);
+        assert_eq!(core.regs[13], 0);
+    }
+
+    #[test]
+    fn nn_mac_executes_with_register_group() {
+        // Mode-2: activations in (x11, x12), weights in x13, acc in x10.
+        let a0 = pack_acts([1, 2, 3, 4]);
+        let a1 = pack_acts([5, 6, 7, 8]);
+        let w = pack_weights(MacMode::W4, &[1, 1, 1, 1, 2, 2, 2, 2]);
+        let mut core = Core::new(
+            CoreConfig { mem_size: 4096, ..Default::default() },
+            vec![Instr::NnMac { mode: MacMode::W4, rd: 10, rs1: 11, rs2: 13 }, Instr::Ecall],
+            0,
+        );
+        core.regs[10] = 100;
+        core.regs[11] = a0;
+        core.regs[12] = a1;
+        core.regs[13] = w;
+        assert_eq!(core.run(1000), ExitReason::Ecall);
+        // 100 + (1+2+3+4)·1 + (5+6+7+8)·2 = 100 + 10 + 52 = 162
+        assert_eq!(core.regs[10], 162);
+        assert_eq!(core.perf.macs, 8);
+        assert_eq!(core.perf.nn_mac_instrs, 1);
+        // full config: single cycle + ecall
+        assert_eq!(core.perf.cycles, 2);
+    }
+
+    #[test]
+    fn csr_reads_cycle_counter() {
+        let core = run_program(vec![
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 },
+            Instr::Csr { op: CsrOp::Rs, rd: 10, rs1: 0, csr: csr::MCYCLE },
+            Instr::Ecall,
+        ]);
+        // addi retired 1 cycle before the csr read observed it.
+        assert_eq!(core.regs[10], 1);
+    }
+
+    #[test]
+    fn halts_on_cycle_budget() {
+        // Infinite loop.
+        let mut core = Core::new(
+            CoreConfig { mem_size: 4096, ..Default::default() },
+            vec![Instr::Jal { rd: 0, offset: 0 }],
+            0,
+        );
+        assert_eq!(core.run(100), ExitReason::MaxCycles);
+    }
+
+    #[test]
+    fn fault_on_bad_memory() {
+        let mut core = Core::new(
+            CoreConfig { mem_size: 64, ..Default::default() },
+            vec![Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 0, offset: 60 }, Instr::Ecall],
+            0,
+        );
+        core.regs[0] = 0; // base 0 + 60 aligned, but width 4 reaches 64: ok boundary
+        assert_eq!(core.run(100), ExitReason::Ecall);
+        let mut core = Core::new(
+            CoreConfig { mem_size: 64, ..Default::default() },
+            vec![Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 0, offset: 64 }, Instr::Ecall],
+            0,
+        );
+        assert!(matches!(core.run(100), ExitReason::Fault(_)));
+    }
+}

@@ -1,0 +1,113 @@
+//! Performance counters mirroring Ibex's `mcycle`/`minstret`/`mhpmcounter`
+//! CSRs — the measurement interface every experiment harness reads
+//! (the paper reads the same counters through Verilator).
+
+/// Counter snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PerfCounters {
+    /// Core-clock cycles (`mcycle`).
+    pub cycles: u64,
+    /// Retired instructions (`minstret`).
+    pub instret: u64,
+    /// Data loads issued (`mhpmcounter3`).
+    pub loads: u64,
+    /// Data stores issued (`mhpmcounter4`).
+    pub stores: u64,
+    /// MAC operations retired, scalar `mul`-based and `nn_mac` packed
+    /// alike (`mhpmcounter5`).
+    pub macs: u64,
+    /// `nn_mac_*` instructions retired.
+    pub nn_mac_instrs: u64,
+    /// Taken branches (pipeline-flush events).
+    pub taken_branches: u64,
+    /// Multiply/divide instructions retired.
+    pub muldiv_instrs: u64,
+}
+
+impl PerfCounters {
+    /// Memory accesses (loads + stores) — the Fig. 4 metric.
+    pub fn mem_accesses(&self) -> u64 {
+        self.loads + self.stores
+    }
+
+    /// Instructions per cycle.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instret as f64 / self.cycles as f64
+        }
+    }
+
+    /// MACs per cycle — the throughput the ISA extension multiplies.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Difference of two snapshots (measurement window).
+    pub fn delta(&self, earlier: &PerfCounters) -> PerfCounters {
+        PerfCounters {
+            cycles: self.cycles - earlier.cycles,
+            instret: self.instret - earlier.instret,
+            loads: self.loads - earlier.loads,
+            stores: self.stores - earlier.stores,
+            macs: self.macs - earlier.macs,
+            nn_mac_instrs: self.nn_mac_instrs - earlier.nn_mac_instrs,
+            taken_branches: self.taken_branches - earlier.taken_branches,
+            muldiv_instrs: self.muldiv_instrs - earlier.muldiv_instrs,
+        }
+    }
+
+    /// CSR read mapping (see [`crate::isa::csr`]).
+    pub fn read_csr(&self, csr: u16) -> u32 {
+        use crate::isa::csr::*;
+        match csr {
+            MCYCLE => self.cycles as u32,
+            MCYCLEH => (self.cycles >> 32) as u32,
+            MINSTRET => self.instret as u32,
+            MINSTRETH => (self.instret >> 32) as u32,
+            MHPM_LOADS => self.loads as u32,
+            MHPM_STORES => self.stores as u32,
+            MHPM_MACS => self.macs as u32,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_subtracts_fieldwise() {
+        let a = PerfCounters { cycles: 10, instret: 5, loads: 2, ..Default::default() };
+        let b = PerfCounters { cycles: 25, instret: 12, loads: 9, ..Default::default() };
+        let d = b.delta(&a);
+        assert_eq!(d.cycles, 15);
+        assert_eq!(d.instret, 7);
+        assert_eq!(d.loads, 7);
+    }
+
+    #[test]
+    fn csr_mapping_reads_expected_slots() {
+        use crate::isa::csr::*;
+        let c = PerfCounters {
+            cycles: 0x1_0000_0002,
+            instret: 7,
+            loads: 3,
+            stores: 4,
+            macs: 5,
+            ..Default::default()
+        };
+        assert_eq!(c.read_csr(MCYCLE), 2);
+        assert_eq!(c.read_csr(MCYCLEH), 1);
+        assert_eq!(c.read_csr(MINSTRET), 7);
+        assert_eq!(c.read_csr(MHPM_LOADS), 3);
+        assert_eq!(c.read_csr(MHPM_STORES), 4);
+        assert_eq!(c.read_csr(MHPM_MACS), 5);
+    }
+}

@@ -1,0 +1,127 @@
+//! End-to-end integration: the AOT JAX/Pallas artifacts executed via
+//! PJRT must agree **bit-exactly** with the Rust host reference (which
+//! in turn is bit-exact vs the ISS kernels — tested in the lib). This
+//! closes the L1(Pallas) == L2(JAX) == L3(Rust/ISS) loop.
+//!
+//! These tests are skipped gracefully when `make artifacts` has not run.
+
+use mpnn::models::format::load_or_fallback;
+use mpnn::models::infer::{qforward, quantize_input, quantize_model};
+use mpnn::runtime::{default_artifacts_dir, run_qfwd, Session};
+
+fn artifacts_ready(name: &str) -> bool {
+    let root = default_artifacts_dir();
+    root.join(format!("{name}_qfwd_b64.hlo.txt")).exists()
+        && root.join("weights").join(format!("{name}.mpw")).exists()
+}
+
+fn check_model(name: &str, bits_pattern: &[u32]) {
+    if !artifacts_ready(name) {
+        eprintln!("skipping {name}: artifacts not built");
+        return;
+    }
+    let root = default_artifacts_dir();
+    let model = load_or_fallback(&root, name, 0).unwrap();
+    let analysis = mpnn::models::analyze(&model.spec);
+    let bits: Vec<u32> =
+        (0..analysis.layers.len()).map(|i| bits_pattern[i % bits_pattern.len()]).collect();
+    let mut bits = bits;
+    bits[0] = 8; // pinned first layer, as the DSE does
+    let qm = quantize_model(&model.spec, &model.params, &model.sites, &bits);
+
+    // Host-reference logits for the first 64 test images.
+    let b = 64usize;
+    let px = model.spec.input.iter().product::<usize>();
+    let mut images = vec![0i8; b * px];
+    let mut want_logits = Vec::new();
+    for j in 0..b {
+        let qi = quantize_input(&qm, &model.test.images[j]);
+        images[j * px..(j + 1) * px].copy_from_slice(&qi.data);
+        want_logits.extend(qforward(&qm, &qi));
+    }
+
+    // PJRT execution of the same batch.
+    let mut session = Session::open(&root).unwrap();
+    let exe = session.load(&format!("{name}_qfwd_b64")).unwrap();
+    let out = run_qfwd(exe, &qm, &images, b).unwrap();
+
+    assert_eq!(out.logits.len(), want_logits.len());
+    assert_eq!(out.logits, want_logits, "{name}: PJRT logits != host reference");
+    // Predictions consistent with logits.
+    for j in 0..b {
+        let row = &out.logits[j * qm.spec.num_classes..(j + 1) * qm.spec.num_classes];
+        let am = mpnn::models::infer::argmax_i32(row);
+        assert_eq!(out.preds[j] as usize, am, "{name}: pred/logits mismatch at {j}");
+    }
+}
+
+#[test]
+fn lenet5_pjrt_bit_exact_mixed_widths() {
+    check_model("lenet5", &[8, 4, 2]);
+}
+
+#[test]
+fn cifar_cnn_pjrt_bit_exact_all4() {
+    check_model("cifar_cnn", &[4]);
+}
+
+#[test]
+fn mcunet_pjrt_bit_exact_residuals() {
+    check_model("mcunet_vww", &[8, 4]);
+}
+
+#[test]
+fn mobilenet_pjrt_bit_exact() {
+    check_model("mobilenet_v1", &[4, 2]);
+}
+
+#[test]
+fn standalone_kernel_artifacts_execute() {
+    let root = default_artifacts_dir();
+    if !root.join("kernel_packed_gemm_8b.hlo.txt").exists() {
+        eprintln!("skipping: kernel artifacts not built");
+        return;
+    }
+    use mpnn::isa::custom::pack_weight_stream;
+    use mpnn::isa::MacMode;
+    use mpnn::runtime::{execute, lit_i32, lit_i8, lit_u32};
+    let mut session = Session::open(&root).unwrap();
+    let mut rng = mpnn::rng::Rng::new(5);
+    // Reference shape from aot.py: M=64, I=256, O=32.
+    let (m, i, o) = (64usize, 256usize, 32usize);
+    for (stem, mode) in [
+        ("kernel_packed_gemm_8b", MacMode::W8),
+        ("kernel_packed_gemm_4b", MacMode::W4),
+        ("kernel_packed_gemm_2b", MacMode::W2),
+    ] {
+        let acts: Vec<i8> = (0..m * i).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..o * i).map(|_| rng.int_bits(mode.weight_bits())).collect();
+        let bias: Vec<i32> = (0..o).map(|_| rng.range_i32(-500, 500)).collect();
+        let mut packed = Vec::new();
+        for row in w.chunks(i) {
+            packed.extend(pack_weight_stream(mode, row));
+        }
+        let rq = mpnn::nn::quant::Requant::from_real_scale(0.002);
+        let exe = session.load(stem).unwrap();
+        let args = vec![
+            lit_i8(&[m, i], &acts).unwrap(),
+            lit_u32(&[o, packed.len() / o], &packed).unwrap(),
+            lit_i32(&[o], &bias).unwrap(),
+            lit_i32(&[], &[rq.m]).unwrap(),
+            lit_i32(&[], &[rq.shift as i32]).unwrap(),
+        ];
+        let outs = execute(exe, &args).unwrap();
+        let got = outs[0].to_vec::<i8>().unwrap();
+        // Host reference: plain integer GEMM + requantize (relu=true).
+        for oi in 0..o {
+            for mi in 0..m {
+                let mut acc = bias[oi];
+                for k in 0..i {
+                    acc += acts[mi * i + k] as i32 * w[oi * i + k] as i32;
+                }
+                let want = mpnn::nn::quant::requantize(acc, rq, true);
+                assert_eq!(got[mi * o + oi], want, "{stem} at ({mi},{oi})");
+            }
+        }
+    }
+}

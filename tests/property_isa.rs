@@ -1,0 +1,168 @@
+//! Property tests over the ISA substrate (offline environment — these
+//! use the crate's deterministic RNG in place of proptest).
+
+use mpnn::isa::decode::decode;
+use mpnn::isa::encode::encode;
+use mpnn::isa::*;
+use mpnn::rng::Rng;
+
+/// Generate a random well-formed instruction.
+fn random_instr(rng: &mut Rng) -> Instr {
+    let reg = |r: &mut Rng| (r.below(32)) as Reg;
+    let alu_ops = [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::Sll,
+        AluOp::Slt,
+        AluOp::Sltu,
+        AluOp::Xor,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::Or,
+        AluOp::And,
+    ];
+    let mul_ops = [
+        MulOp::Mul,
+        MulOp::Mulh,
+        MulOp::Mulhsu,
+        MulOp::Mulhu,
+        MulOp::Div,
+        MulOp::Divu,
+        MulOp::Rem,
+        MulOp::Remu,
+    ];
+    let br_ops =
+        [BranchOp::Beq, BranchOp::Bne, BranchOp::Blt, BranchOp::Bge, BranchOp::Bltu, BranchOp::Bgeu];
+    match rng.below(12) {
+        0 => Instr::Lui { rd: reg(rng), imm: (rng.next_u32() as i32) & !0xfff },
+        1 => Instr::Auipc { rd: reg(rng), imm: (rng.next_u32() as i32) & !0xfff },
+        2 => Instr::Jal { rd: reg(rng), offset: (rng.range_i32(-(1 << 19), (1 << 19) - 1)) * 2 },
+        3 => Instr::Jalr { rd: reg(rng), rs1: reg(rng), offset: rng.range_i32(-2048, 2047) },
+        4 => Instr::Branch {
+            op: br_ops[rng.below(6) as usize],
+            rs1: reg(rng),
+            rs2: reg(rng),
+            offset: rng.range_i32(-2048, 2047) * 2,
+        },
+        5 => Instr::Load {
+            op: [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu]
+                [rng.below(5) as usize],
+            rd: reg(rng),
+            rs1: reg(rng),
+            offset: rng.range_i32(-2048, 2047),
+        },
+        6 => Instr::Store {
+            op: [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw][rng.below(3) as usize],
+            rs1: reg(rng),
+            rs2: reg(rng),
+            offset: rng.range_i32(-2048, 2047),
+        },
+        7 => {
+            let op = alu_ops[rng.below(10) as usize];
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => rng.range_i32(0, 31),
+                AluOp::Sub => return Instr::Op { op, rd: reg(rng), rs1: reg(rng), rs2: reg(rng) },
+                _ => rng.range_i32(-2048, 2047),
+            };
+            Instr::OpImm { op, rd: reg(rng), rs1: reg(rng), imm }
+        }
+        8 => Instr::Op {
+            op: alu_ops[rng.below(10) as usize],
+            rd: reg(rng),
+            rs1: reg(rng),
+            rs2: reg(rng),
+        },
+        9 => Instr::MulDiv {
+            op: mul_ops[rng.below(8) as usize],
+            rd: reg(rng),
+            rs1: reg(rng),
+            rs2: reg(rng),
+        },
+        10 => {
+            let mode = [MacMode::W8, MacMode::W4, MacMode::W2][rng.below(3) as usize];
+            let max_rs1 = 32 - mode.activation_regs();
+            Instr::NnMac {
+                mode,
+                rd: reg(rng),
+                rs1: rng.below(max_rs1 as u64) as Reg,
+                rs2: reg(rng),
+            }
+        }
+        _ => Instr::Csr {
+            op: [CsrOp::Rw, CsrOp::Rs, CsrOp::Rc][rng.below(3) as usize],
+            rd: reg(rng),
+            rs1: reg(rng),
+            csr: rng.below(4096) as u16,
+        },
+    }
+}
+
+#[test]
+fn encode_decode_round_trip_10k() {
+    let mut rng = Rng::new(0x15A);
+    for i in 0..10_000 {
+        let instr = random_instr(&mut rng);
+        let word = encode(instr);
+        let back = decode(word).unwrap_or_else(|e| panic!("case {i}: {instr:?} -> {e}"));
+        assert_eq!(back, instr, "case {i}: word {word:#010x}");
+    }
+}
+
+#[test]
+fn decode_never_panics_on_random_words() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..100_000 {
+        let w = rng.next_u32();
+        let _ = decode(w); // must return Ok or Err, never panic
+    }
+}
+
+#[test]
+fn disasm_total_on_valid_instructions() {
+    let mut rng = Rng::new(7);
+    for _ in 0..2_000 {
+        let instr = random_instr(&mut rng);
+        let text = mpnn::isa::disasm::disasm(instr);
+        assert!(!text.is_empty());
+    }
+}
+
+#[test]
+fn nn_mac_ref_invariants() {
+    use mpnn::isa::custom::*;
+    let mut rng = Rng::new(99);
+    for _ in 0..2_000 {
+        let mode = [MacMode::W8, MacMode::W4, MacMode::W2][rng.below(3) as usize];
+        let n = mode.weights_per_word() as usize;
+        let w: Vec<i8> = (0..n).map(|_| rng.int_bits(mode.weight_bits())).collect();
+        let word = pack_weights(mode, &w);
+        // Round trip.
+        assert_eq!(unpack_weights(mode, word), w);
+        let acts: Vec<u32> = (0..mode.activation_regs()).map(|_| rng.next_u32()).collect();
+        // Zero weights -> accumulator unchanged.
+        let acc = rng.next_u32();
+        assert_eq!(nn_mac_ref(mode, acc, &acts, 0), acc);
+        // Linearity in the accumulator.
+        let r0 = nn_mac_ref(mode, 0, &acts, word);
+        let r1 = nn_mac_ref(mode, acc, &acts, word);
+        assert_eq!(r1, acc.wrapping_add(r0));
+    }
+}
+
+#[test]
+fn assembler_round_trips_through_encoder() {
+    // assemble -> encode -> decode -> same instruction stream.
+    use mpnn::asm::Asm;
+    use mpnn::isa::reg;
+    let mut a = Asm::new();
+    let top = a.here("top");
+    a.li(reg::A0, 123456);
+    a.lw(reg::A1, reg::SP, 16);
+    a.nn_mac(MacMode::W4, reg::A0, reg::A2, reg::A1);
+    a.bne(reg::A0, reg::ZERO, top);
+    a.halt();
+    let prog = a.assemble();
+    for ins in &prog {
+        assert_eq!(decode(encode(*ins)).unwrap(), *ins);
+    }
+}
