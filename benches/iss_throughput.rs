@@ -1,13 +1,15 @@
 //! Bench: raw ISS throughput (simulated instructions per host second) —
 //! the §Perf hot-path metric for the L3 simulator. Uses the CIFAR CNN's
-//! second conv layer as a representative kernel workload.
+//! second conv layer as a representative kernel workload and reports
+//! the legacy `step()` interpreter next to the pre-decoded micro-op
+//! engine so the engine speedup lands in the bench trajectory.
 
 use mpnn::bench::bench_val;
-use mpnn::dse::cycles::measure_layer;
+use mpnn::dse::cycles::measure_layer_backend;
 use mpnn::exp::ExpOpts;
 use mpnn::isa::MacMode;
+use mpnn::kernels::run::ExecBackend;
 use mpnn::sim::MacUnitConfig;
-use std::time::Instant;
 
 fn main() {
     let opts = ExpOpts::default();
@@ -15,19 +17,43 @@ fn main() {
     let a = mpnn::models::analyze(&model.spec);
     let conv = a.layers[1];
 
+    println!("ISS throughput: legacy step() interpreter vs pre-decoded micro-op engine");
+    let mut mode_worst = f64::INFINITY;
     for (label, mode) in
         [("baseline", None), ("mode1-w8", Some(MacMode::W8)), ("mode3-w2", Some(MacMode::W2))]
     {
-        let t0 = Instant::now();
-        let (stats, cost) = bench_val(&format!("iss/{label}-conv-layer"), 3, || {
-            measure_layer(&conv, mode, MacUnitConfig::full(), 7)
-        });
-        let _ = t0;
-        let mips = cost.instret as f64 / stats.median().as_secs_f64() / 1e6;
-        println!(
-            "  -> {:.1}M instructions, {:.0} M simulated-instr/s (median)",
-            cost.instret as f64 / 1e6,
-            mips
+        let mut mips = [0.0f64; 2];
+        for (bi, backend) in [ExecBackend::Legacy, ExecBackend::Engine].into_iter().enumerate() {
+            let tag = if bi == 0 { "legacy" } else { "engine" };
+            let (stats, cost) = bench_val(&format!("iss/{label}-conv-layer/{tag}"), 3, || {
+                measure_layer_backend(&conv, mode, MacUnitConfig::full(), 7, backend).unwrap()
+            });
+            mips[bi] = cost.instret as f64 / stats.median().as_secs_f64() / 1e6;
+            println!(
+                "  -> {:.1}M instructions, {:.0} M simulated-instr/s (median, {tag})",
+                cost.instret as f64 / 1e6,
+                mips[bi]
+            );
+        }
+        let speedup = mips[1] / mips[0];
+        if mode.is_some() {
+            mode_worst = mode_worst.min(speedup);
+        }
+        println!("  => engine speedup on {label}: {speedup:.2}x");
+    }
+    println!(
+        "iss_throughput: worst mode-kernel engine-vs-legacy speedup {mode_worst:.2}x \
+         (acceptance target: >= 2x)"
+    );
+    // Regression gate, opt-in: ISS_BENCH_ASSERT holds the minimum
+    // acceptable speedup. CI uses a floor well below the 2x target so
+    // shared-runner noise can't flip a healthy engine red, while a
+    // true regression (engine ~1x or slower) still fails.
+    if let Some(min) = std::env::var("ISS_BENCH_ASSERT").ok().and_then(|v| v.parse::<f64>().ok())
+    {
+        assert!(
+            mode_worst >= min,
+            "engine regression: worst mode-kernel speedup {mode_worst:.2}x < {min}x"
         );
     }
 }

@@ -13,13 +13,14 @@ fn main() {
     let model = opts.load_model("lenet5").unwrap();
     let a = mpnn::models::analyze(&model.spec);
     bench("table4/lenet-layer+energy-model", 5, || {
-        let base = measure_layer(&a.layers[1], None, MacUnitConfig::full(), 1);
+        let base = measure_layer(&a.layers[1], None, MacUnitConfig::full(), 1).unwrap();
         let fast = measure_layer(
             &a.layers[1],
             Some(mpnn::isa::MacMode::W4),
             MacUnitConfig::full(),
             1,
-        );
+        )
+        .unwrap();
         let rb = ASIC_BASELINE.evaluate(base.macs, base.cycles);
         let rm = ASIC_MODIFIED.evaluate(fast.macs, fast.cycles);
         assert!(rm.gops_per_w > rb.gops_per_w);

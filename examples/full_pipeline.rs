@@ -17,7 +17,7 @@ use mpnn::models::infer::{qforward, quantize_input, quantize_model};
 use mpnn::models::sim_exec::{baseline_modes, modes_for, run_model};
 use mpnn::sim::MacUnitConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpnn::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "lenet5".to_string());
     let opts = ExpOpts::default();
     let model = opts.load_model(&name)?;
@@ -57,11 +57,22 @@ fn main() -> anyhow::Result<()> {
     let stem = format!("{name}_qfwd_b64");
     let have_artifacts = opts.artifacts.join(format!("{stem}.hlo.txt")).exists();
     if have_artifacts {
-        let mut session = mpnn::runtime::Session::open(&opts.artifacts)?;
-        let exe = session.load(&stem)?;
-        let out = mpnn::runtime::run_qfwd(exe, &qm, &images, n_eval)?;
-        anyhow::ensure!(out.preds == host_preds, "PJRT and host predictions diverge");
-        println!("PJRT(JAX+Pallas) == Rust host reference: {} predictions bit-exact", n_eval);
+        // Any PJRT failure (no `pjrt` feature, stale/corrupt artifact)
+        // skips this path; the host + ISS halves below still run.
+        let pjrt = mpnn::runtime::Session::open(&opts.artifacts).and_then(|mut session| {
+            let exe = session.load(&stem)?;
+            mpnn::runtime::run_qfwd(exe, &qm, &images, n_eval)
+        });
+        match pjrt {
+            Ok(out) => {
+                mpnn::ensure!(out.preds == host_preds, "PJRT and host predictions diverge");
+                println!(
+                    "PJRT(JAX+Pallas) == Rust host reference: {} predictions bit-exact",
+                    n_eval
+                );
+            }
+            Err(e) => println!("(PJRT unavailable — {e}; skipping the PJRT path)"),
+        }
     } else {
         println!("(artifacts missing — skipping the PJRT path)");
     }
@@ -75,10 +86,10 @@ fn main() -> anyhow::Result<()> {
     // --- path 3: the cycle-accurate core --------------------------------
     let input = quantize_input(&qm, &model.test.images[0]);
     let want = qforward(&qm, &input);
-    let ext = run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full());
-    anyhow::ensure!(ext.logits == want, "ISS logits diverge from host reference");
-    let base = run_model(&qm, &input, &baseline_modes(&qm), MacUnitConfig::full());
-    anyhow::ensure!(base.logits == want, "baseline ISS logits diverge");
+    let ext = run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full())?;
+    mpnn::ensure!(ext.logits == want, "ISS logits diverge from host reference");
+    let base = run_model(&qm, &input, &baseline_modes(&qm), MacUnitConfig::full())?;
+    mpnn::ensure!(base.logits == want, "baseline ISS logits diverge");
     println!("RISC-V ISS (nn_mac kernels) == host reference: logits bit-exact");
     let speedup = base.total_cycles() as f64 / ext.total_cycles() as f64;
     println!(

@@ -8,7 +8,7 @@ use mpnn::dse::pareto::pareto_front;
 use mpnn::dse::{default_pinned, enumerate};
 use mpnn::exp::ExpOpts;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpnn::Result<()> {
     let opts = ExpOpts { budget: 81, eval_n: 64, ..Default::default() };
     let coordinator = opts.coordinator("lenet5")?;
     let n = mpnn::models::analyze(&coordinator.model.spec).layers.len();

@@ -14,7 +14,7 @@ use mpnn::kernels::run::run_dense;
 use mpnn::nn::quant::Requant;
 use mpnn::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpnn::Result<()> {
     let mut rng = Rng::new(42);
     // A small quantized dense layer: 256 inputs, 32 outputs, 4-bit weights.
     let (i, o) = (256usize, 32usize);
@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- L3: the RISC-V ISS running the nn_mac_4b kernel -----------------
     let spec = DenseSpec { in_dim: i, out_dim: o, rq, relu: true, out_i32: false };
-    let (iss_out, _, perf) = run_dense(spec, Some(mode), &acts, &w, &bias);
-    let (base_out, _, base_perf) = run_dense(spec, None, &acts, &w, &bias);
+    let (iss_out, _, perf) = run_dense(spec, Some(mode), &acts, &w, &bias)?;
+    let (base_out, _, base_perf) = run_dense(spec, None, &acts, &w, &bias)?;
     assert_eq!(iss_out, base_out, "extended and baseline kernels agree");
     println!("ISS: {} MACs in {} cycles (baseline {} cycles → {:.1}x speedup)",
         perf.macs, perf.cycles, base_perf.cycles,

@@ -11,10 +11,10 @@
 
 use crate::dse::cycles::CycleModel;
 use crate::dse::{total_mac_instructions, Config, EvalPoint};
+use crate::error::{Error, Result};
 use crate::models::format::LoadedModel;
 use crate::models::infer::QModel;
 use crate::models::synthetic::Dataset;
-use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
@@ -118,11 +118,21 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build a coordinator; measures the cycle model up front.
-    pub fn new(model: LoadedModel, evaluator: Box<dyn AccuracyEval>, workers: usize) -> Self {
+    /// Build a coordinator; measures the cycle model up front, fanning
+    /// the per-layer ISS measurements out over the worker pool.
+    pub fn new(
+        model: LoadedModel,
+        evaluator: Box<dyn AccuracyEval>,
+        workers: usize,
+    ) -> Result<Self> {
+        let workers = workers.max(1);
         let analysis = crate::models::analyze(&model.spec);
-        let cycle_model =
-            CycleModel::build(&analysis, crate::sim::MacUnitConfig::full(), 0xC1C1E);
+        let cycle_model = CycleModel::build_with_workers(
+            &analysis,
+            crate::sim::MacUnitConfig::full(),
+            0xC1C1E,
+            workers,
+        )?;
         let qcache = analysis
             .layers
             .iter()
@@ -139,17 +149,17 @@ impl Coordinator {
                 })
             })
             .collect();
-        Coordinator {
+        Ok(Coordinator {
             model,
             cycle_model,
             analysis,
             qcache,
             evaluator: Mutex::new(evaluator),
             cache: Mutex::new(HashMap::new()),
-            workers: workers.max(1),
+            workers,
             queue_cap: 64,
             metrics: Metrics::default(),
-        }
+        })
     }
 
     /// Assemble a quantized model from the per-(layer, width) cache.
@@ -209,7 +219,7 @@ impl Coordinator {
         let (job_tx, job_rx) = sync_channel::<(usize, Config)>(self.queue_cap);
         let job_rx = Mutex::new(job_rx);
         let results: Mutex<Vec<Option<EvalPoint>>> = Mutex::new(vec![None; configs.len()]);
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
 
         std::thread::scope(|s| {
             for _ in 0..self.workers {
@@ -260,7 +270,7 @@ mod tests {
         // Fallback model (no artifacts needed) + host evaluator.
         let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", 11).unwrap();
         let test = model.test.clone();
-        Coordinator::new(model, Box::new(HostEval { test }), 2)
+        Coordinator::new(model, Box::new(HostEval { test }), 2).unwrap()
     }
 
     #[test]

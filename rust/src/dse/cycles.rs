@@ -4,12 +4,19 @@
 //! cycle counts are data-independent (the kernels have no data-dependent
 //! control flow except the requant clamps, a ±2-cycle effect), so one
 //! Verilator-style measurement per layer/mode suffices.
+//!
+//! Measurements run on the micro-op engine through the global
+//! [`crate::sim::session::SimSession`] (kernel images cached, memories
+//! pooled), and [`CycleModel::build`] fans the independent
+//! (layer × variant) measurements out over a worker pool — the
+//! measurement matrix is embarrassingly parallel.
 
+use crate::error::Result;
 use crate::isa::MacMode;
 use crate::kernels::conv::ConvSpec;
 use crate::kernels::dense::DenseSpec;
 use crate::kernels::depthwise::DwSpec;
-use crate::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
+use crate::kernels::run::{run_conv_backend, run_dense_backend, run_depthwise_backend, ExecBackend};
 use crate::models::{ModelAnalysis, QKind, QLayerInfo};
 use crate::nn::quant::Requant;
 use crate::rng::Rng;
@@ -58,7 +65,19 @@ pub fn measure_layer(
     mode: Option<MacMode>,
     mac: MacUnitConfig,
     seed: u64,
-) -> LayerCost {
+) -> Result<LayerCost> {
+    measure_layer_backend(info, mode, mac, seed, ExecBackend::Engine)
+}
+
+/// [`measure_layer`] with an explicit interpreter choice — the
+/// throughput bench uses this to report the engine-vs-legacy gap.
+pub fn measure_layer_backend(
+    info: &QLayerInfo,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    seed: u64,
+    backend: ExecBackend,
+) -> Result<LayerCost> {
     let mut rng = Rng::new(seed);
     let bits = mode.map_or(8, |m| m.weight_bits());
     let rq = Requant::from_real_scale(0.01);
@@ -73,13 +92,14 @@ pub fn measure_layer(
             };
             let (h, w) = (info.in_shape[0] + 2 * info.pad, info.in_shape[1] + 2 * info.pad);
             let cout = info.out_shape[2];
-            let spec = ConvSpec { h, w, cin, cout, k: info.k, stride: info.stride, rq, relu: info.relu };
+            let spec =
+                ConvSpec { h, w, cin, cout, k: info.k, stride: info.stride, rq, relu: info.relu };
             let acts: Vec<i8> = (0..h * w * cin).map(|_| rng.i8()).collect();
             let wts: Vec<i8> =
                 (0..cout * info.k * info.k * cin).map(|_| rng.int_bits(bits)).collect();
             let bias: Vec<i32> = (0..cout).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, perf) = run_conv_with(spec, mode, mac, &acts, &wts, &bias);
-            LayerCost::from_perf(&perf)
+            let (_, perf) = run_conv_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
+            Ok(LayerCost::from_perf(&perf))
         }
         QKind::Depthwise => {
             let c = info.in_shape[2];
@@ -88,17 +108,18 @@ pub fn measure_layer(
             let acts: Vec<i8> = (0..h * w * c).map(|_| rng.i8()).collect();
             let wts: Vec<i8> = (0..c * info.k * info.k).map(|_| rng.int_bits(bits)).collect();
             let bias: Vec<i32> = (0..c).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, perf) = run_depthwise_with(spec, mode, mac, &acts, &wts, &bias);
-            LayerCost::from_perf(&perf)
+            let (_, perf) = run_depthwise_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
+            Ok(LayerCost::from_perf(&perf))
         }
         QKind::Dense => {
             let (i, o) = (info.in_shape[2], info.out_shape[2]);
-            let spec = DenseSpec { in_dim: i, out_dim: o, rq, relu: info.relu, out_i32: info.is_last };
+            let spec =
+                DenseSpec { in_dim: i, out_dim: o, rq, relu: info.relu, out_i32: info.is_last };
             let acts: Vec<i8> = (0..i).map(|_| rng.i8()).collect();
             let wts: Vec<i8> = (0..i * o).map(|_| rng.int_bits(bits)).collect();
             let bias: Vec<i32> = (0..o).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, _, perf) = run_dense_with(spec, mode, mac, &acts, &wts, &bias);
-            LayerCost::from_perf(&perf)
+            let (_, _, perf) = run_dense_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
+            Ok(LayerCost::from_perf(&perf))
         }
     }
 }
@@ -121,21 +142,44 @@ fn width_index(bits: u32) -> usize {
     }
 }
 
+/// Worker count for the measurement fan-out.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map_or(4, |n| n.get()).min(8)
+}
+
 impl CycleModel {
-    /// Measure every layer of a model under all four kernel variants.
-    pub fn build(analysis: &ModelAnalysis, mac: MacUnitConfig, seed: u64) -> Self {
-        let mut baseline = Vec::with_capacity(analysis.layers.len());
-        let mut modes = Vec::with_capacity(analysis.layers.len());
-        for (i, info) in analysis.layers.iter().enumerate() {
-            let s = seed.wrapping_add(i as u64 * 1313);
-            baseline.push(measure_layer(info, None, mac, s));
-            modes.push([
-                measure_layer(info, Some(MacMode::W8), mac, s ^ 1),
-                measure_layer(info, Some(MacMode::W4), mac, s ^ 2),
-                measure_layer(info, Some(MacMode::W2), mac, s ^ 3),
-            ]);
+    /// Measure every layer of a model under all four kernel variants,
+    /// fanned out over [`default_workers`] threads.
+    pub fn build(analysis: &ModelAnalysis, mac: MacUnitConfig, seed: u64) -> Result<Self> {
+        Self::build_with_workers(analysis, mac, seed, default_workers())
+    }
+
+    /// [`CycleModel::build`] with an explicit worker count. Seeds are
+    /// derived per (layer, variant), so the result is deterministic
+    /// regardless of scheduling.
+    pub fn build_with_workers(
+        analysis: &ModelAnalysis,
+        mac: MacUnitConfig,
+        seed: u64,
+        workers: usize,
+    ) -> Result<Self> {
+        let n = analysis.layers.len();
+        // Job matrix: (layer, variant slot 0..4) — slot 0 is baseline.
+        let variants = [None, Some(MacMode::W8), Some(MacMode::W4), Some(MacMode::W2)];
+        let measured = crate::par::parallel_map(n * 4, workers, |j| {
+            let (li, v) = (j / 4, j % 4);
+            let base_seed = seed.wrapping_add(li as u64 * 1313);
+            let s_v = if v == 0 { base_seed } else { base_seed ^ v as u64 };
+            measure_layer(&analysis.layers[li], variants[v], mac, s_v)
+        })?;
+
+        let mut baseline = Vec::with_capacity(n);
+        let mut modes = Vec::with_capacity(n);
+        for i in 0..n {
+            baseline.push(measured[i * 4]);
+            modes.push([measured[i * 4 + 1], measured[i * 4 + 2], measured[i * 4 + 3]]);
         }
-        CycleModel { baseline, modes }
+        Ok(CycleModel { baseline, modes })
     }
 
     /// Total baseline cost.
@@ -171,7 +215,7 @@ mod tests {
     #[test]
     fn lenet_cycle_model_ordering() {
         let a = analyze(&zoo::lenet5());
-        let cm = CycleModel::build(&a, MacUnitConfig::full(), 42);
+        let cm = CycleModel::build(&a, MacUnitConfig::full(), 42).unwrap();
         let n = a.layers.len();
         let base = cm.baseline_total();
         let all8 = cm.config_total(&vec![8; n]);
@@ -193,9 +237,42 @@ mod tests {
     #[test]
     fn measurement_is_deterministic() {
         let a = analyze(&zoo::lenet5());
-        let c1 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7);
-        let c2 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7);
+        let c1 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7).unwrap();
+        let c2 = measure_layer(&a.layers[1], Some(MacMode::W4), MacUnitConfig::full(), 7).unwrap();
         assert_eq!(c1.cycles, c2.cycles);
         assert_eq!(c1.mem_accesses, c2.mem_accesses);
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_build() {
+        let a = analyze(&zoo::lenet5());
+        let p = CycleModel::build_with_workers(&a, MacUnitConfig::full(), 42, 4).unwrap();
+        let s = CycleModel::build_with_workers(&a, MacUnitConfig::full(), 42, 1).unwrap();
+        for i in 0..a.layers.len() {
+            assert_eq!(p.baseline[i].cycles, s.baseline[i].cycles, "layer {i}");
+            for v in 0..3 {
+                assert_eq!(p.modes[i][v].cycles, s.modes[i][v].cycles, "layer {i} mode {v}");
+                assert_eq!(p.modes[i][v].macs, s.modes[i][v].macs, "layer {i} mode {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_and_legacy_measurements_agree() {
+        let a = analyze(&zoo::lenet5());
+        for mode in [None, Some(MacMode::W8), Some(MacMode::W2)] {
+            let e = measure_layer_backend(
+                &a.layers[1], mode, MacUnitConfig::full(), 7, ExecBackend::Engine,
+            )
+            .unwrap();
+            let l = measure_layer_backend(
+                &a.layers[1], mode, MacUnitConfig::full(), 7, ExecBackend::Legacy,
+            )
+            .unwrap();
+            assert_eq!(e.cycles, l.cycles, "{mode:?}");
+            assert_eq!(e.mem_accesses, l.mem_accesses, "{mode:?}");
+            assert_eq!(e.instret, l.instret, "{mode:?}");
+            assert_eq!(e.macs, l.macs, "{mode:?}");
+        }
     }
 }

@@ -1,0 +1,179 @@
+//! Minimal in-tree error type with an `anyhow`-compatible surface.
+//!
+//! The build environment is offline, so the crate carries no external
+//! dependencies; this module provides the small subset of `anyhow` the
+//! codebase actually uses: an opaque [`Error`] holding a cause chain,
+//! the [`Context`] extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros (exported at the crate root,
+//! as `#[macro_export]` requires).
+
+use std::fmt;
+
+/// Opaque error: an outermost message plus a flattened cause chain.
+///
+/// Like `anyhow::Error`, this type deliberately does *not* implement
+/// `std::error::Error`, which is what allows the blanket
+/// `From<E: std::error::Error>` conversion to coexist with the reflexive
+/// `From<Error>` the `?` operator needs.
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { chain: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_msg(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias (the error side is always [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow`-style context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error side.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error side.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (crate-root export).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::error::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+/// Return early with an [`Error`] (crate-root export).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Bail unless a condition holds (crate-root export).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("opening artifact");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_msg(), "opening artifact");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("missing"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(e.to_msg(), "no value 7");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_msg(), "three is right out");
+        assert_eq!(f(11).unwrap_err().to_msg(), "x too big: 11");
+        assert_eq!(anyhow!("n = {}", 4).to_msg(), "n = 4");
+    }
+}

@@ -6,7 +6,7 @@ use super::ExpOpts;
 use crate::dse::cycles::CycleModel;
 use crate::json::Json;
 use crate::models::analyze;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Per-layer reductions for one configuration.
 #[derive(Debug, Clone)]
@@ -52,7 +52,7 @@ pub fn run_with(
 ) -> Result<(Vec<ConfigReduction>, Json)> {
     let model = opts.load_model("mobilenet_v1")?;
     let analysis = analyze(&model.spec);
-    let cm = CycleModel::build(&analysis, crate::sim::MacUnitConfig::full(), opts.seed);
+    let cm = CycleModel::build(&analysis, crate::sim::MacUnitConfig::full(), opts.seed)?;
     let configs = configs.unwrap_or_else(|| default_configs(analysis.layers.len()));
     let mut out = Vec::new();
     for (label, bits) in configs {

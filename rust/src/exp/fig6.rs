@@ -7,7 +7,7 @@ use crate::coordinator::Coordinator;
 use crate::dse::pareto::pareto_front;
 use crate::dse::{default_pinned, enumerate, EvalPoint};
 use crate::json::Json;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Sweep result for one model.
 pub struct Sweep {

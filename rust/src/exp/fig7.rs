@@ -10,7 +10,7 @@ use crate::isa::MacMode;
 use crate::json::Json;
 use crate::models::{analyze, QKind, QLayerInfo};
 use crate::sim::MacUnitConfig;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Cycle measurements for one layer at one weight width.
 #[derive(Debug, Clone)]
@@ -36,17 +36,17 @@ pub struct LayerBreakdown {
     pub rows: Vec<WidthRow>,
 }
 
-fn breakdown(label: &str, info: &QLayerInfo, seed: u64) -> LayerBreakdown {
+fn breakdown(label: &str, info: &QLayerInfo, seed: u64) -> Result<LayerBreakdown> {
     let mut rows = Vec::new();
-    let base = measure_layer(info, None, MacUnitConfig::full(), seed).cycles;
+    let base = measure_layer(info, None, MacUnitConfig::full(), seed)?.cycles;
     for bits in [8u32, 4, 2] {
         let mode = MacMode::from_weight_bits(bits).unwrap();
-        let p = measure_layer(info, Some(mode), MacUnitConfig::packing_only(), seed).cycles;
-        let mp = measure_layer(info, Some(mode), MacUnitConfig::multipump_only(), seed).cycles;
-        let ss = measure_layer(info, Some(mode), MacUnitConfig::full(), seed).cycles;
+        let p = measure_layer(info, Some(mode), MacUnitConfig::packing_only(), seed)?.cycles;
+        let mp = measure_layer(info, Some(mode), MacUnitConfig::multipump_only(), seed)?.cycles;
+        let ss = measure_layer(info, Some(mode), MacUnitConfig::full(), seed)?.cycles;
         rows.push(WidthRow { bits, baseline: base, packing: p, multipump: mp, soft_simd: ss });
     }
-    LayerBreakdown { label: label.to_string(), rows }
+    Ok(LayerBreakdown { label: label.to_string(), rows })
 }
 
 /// Run the Fig.-7 harness.
@@ -58,8 +58,8 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<LayerBreakdown>, Json)> {
     let dense = ma.layers.iter().find(|l| l.kind == QKind::Dense).unwrap();
     let conv2 = ca.layers.iter().filter(|l| l.kind == QKind::Conv).nth(1).unwrap();
     let out = vec![
-        breakdown("dense (MobileNetV1 classifier)", dense, opts.seed),
-        breakdown("conv (CIFAR10 CNN layer 2)", conv2, opts.seed ^ 1),
+        breakdown("dense (MobileNetV1 classifier)", dense, opts.seed)?,
+        breakdown("conv (CIFAR10 CNN layer 2)", conv2, opts.seed ^ 1)?,
     ];
     for lb in &out {
         println!("Fig. 7 — {}", lb.label);

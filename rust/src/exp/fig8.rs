@@ -6,7 +6,7 @@ use super::fig6::{sweep_model, Sweep};
 use super::ExpOpts;
 use crate::dse::select_under_threshold;
 use crate::json::Json;
-use anyhow::Result;
+use crate::error::Result;
 
 /// The paper's accuracy-loss thresholds.
 pub const THRESHOLDS: [f32; 3] = [0.01, 0.02, 0.05];

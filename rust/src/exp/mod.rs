@@ -25,7 +25,7 @@ pub mod table5;
 use crate::coordinator::{AccuracyEval, Coordinator, HostEval, PjrtEval};
 use crate::json::Json;
 use crate::models::format::{load_or_fallback, LoadedModel};
-use anyhow::Result;
+use crate::error::Result;
 use std::path::{Path, PathBuf};
 
 /// Experiment options shared by the CLI and the benches.
@@ -62,22 +62,29 @@ impl ExpOpts {
     }
 
     /// Build the accuracy evaluator: PJRT when the model artifact
-    /// exists (and not overridden), host reference otherwise.
+    /// exists (and not overridden), host reference otherwise. A PJRT
+    /// session that fails to open (e.g. the crate was built without
+    /// the `pjrt` feature) degrades to the host evaluator with a note.
     pub fn evaluator(&self, model: &LoadedModel, batch: usize) -> Result<Box<dyn AccuracyEval>> {
         let stem = self.artifacts.join(format!("{}_qfwd_b{batch}.hlo.txt", model.spec.name));
         if !self.host_eval && stem.exists() {
-            let session = crate::runtime::Session::open(&self.artifacts)?;
-            Ok(Box::new(PjrtEval { session, test: model.test.clone(), batch }))
-        } else {
-            Ok(Box::new(HostEval { test: model.test.clone() }))
+            match crate::runtime::Session::open(&self.artifacts) {
+                Ok(session) => {
+                    return Ok(Box::new(PjrtEval { session, test: model.test.clone(), batch }))
+                }
+                Err(e) => {
+                    eprintln!("[exp] PJRT unavailable ({e}); using the host evaluator");
+                }
+            }
         }
+        Ok(Box::new(HostEval { test: model.test.clone() }))
     }
 
     /// Build a coordinator for a model.
     pub fn coordinator(&self, name: &str) -> Result<Coordinator> {
         let model = self.load_model(name)?;
         let eval = self.evaluator(&model, 64)?;
-        Ok(Coordinator::new(model, eval, 2))
+        Coordinator::new(model, eval, 2)
     }
 }
 

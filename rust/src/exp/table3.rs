@@ -6,7 +6,7 @@ use crate::dse::cycles::measure_layer;
 use crate::json::Json;
 use crate::models::analyze;
 use crate::sim::MacUnitConfig;
-use anyhow::Result;
+use crate::error::Result;
 
 /// One Table-3 row.
 #[derive(Debug, Clone)]
@@ -29,14 +29,10 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<Row>, Json)> {
     for name in MODEL_NAMES {
         let model = opts.load_model(name)?;
         let a = analyze(&model.spec);
-        let cycles: u64 = a
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| {
-                measure_layer(l, None, MacUnitConfig::full(), opts.seed + i as u64).cycles
-            })
-            .sum();
+        let mut cycles = 0u64;
+        for (i, l) in a.layers.iter().enumerate() {
+            cycles += measure_layer(l, None, MacUnitConfig::full(), opts.seed + i as u64)?.cycles;
+        }
         rows.push(Row {
             model: name.to_string(),
             acc: model.float_acc * 100.0,

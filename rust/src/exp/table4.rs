@@ -6,7 +6,7 @@ use super::fig8::ModelSelections;
 use super::ExpOpts;
 use crate::energy::{EnergyReport, ASIC_BASELINE, ASIC_MODIFIED, FPGA_BASELINE, FPGA_MODIFIED};
 use crate::json::Json;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Per-model Table-4 energy row.
 #[derive(Debug, Clone)]

@@ -8,7 +8,7 @@ use super::ExpOpts;
 use crate::energy::sota::{competitors, ours, SotaEntry};
 use crate::energy::ASIC_MODIFIED;
 use crate::json::Json;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Build Table 5 from Fig.-8 selections.
 pub fn from_selections(opts: &ExpOpts, sels: &[ModelSelections]) -> Result<(Vec<SotaEntry>, Json)> {

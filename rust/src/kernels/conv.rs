@@ -247,7 +247,7 @@ mod tests {
             spec.rq,
             spec.relu,
         );
-        let (got, _) = run_conv(spec, mode, &acts, &wts, &bias);
+        let (got, _) = run_conv(spec, mode, &acts, &wts, &bias).unwrap();
         assert_eq!(got, want.data, "{mode:?} spec {spec:?}");
     }
 
@@ -280,10 +280,10 @@ mod tests {
         let w8 = mk(8, &mut rng);
         let w4 = mk(4, &mut rng);
         let w2 = mk(2, &mut rng);
-        let (_, base) = run_conv(s, None, &acts, &w8, &bias);
-        let (_, m1) = run_conv(s, Some(W8), &acts, &w8, &bias);
-        let (_, m2) = run_conv(s, Some(W4), &acts, &w4, &bias);
-        let (_, m3) = run_conv(s, Some(W2), &acts, &w2, &bias);
+        let (_, base) = run_conv(s, None, &acts, &w8, &bias).unwrap();
+        let (_, m1) = run_conv(s, Some(W8), &acts, &w8, &bias).unwrap();
+        let (_, m2) = run_conv(s, Some(W4), &acts, &w4, &bias).unwrap();
+        let (_, m3) = run_conv(s, Some(W2), &acts, &w2, &bias).unwrap();
         let su = |p: &crate::sim::PerfCounters| base.cycles as f64 / p.cycles as f64;
         assert!(su(&m1) > 5.0, "Mode-1 {:.2}", su(&m1));
         assert!(su(&m2) > su(&m1), "Mode-2 {:.2} vs Mode-1 {:.2}", su(&m2), su(&m1));

@@ -208,7 +208,7 @@ mod tests {
             if spec.out_i32 { None } else { Some(spec.rq) },
             spec.relu,
         );
-        let (got_q, got_acc, _) = run_dense(spec, mode, &acts, &w, &bias);
+        let (got_q, got_acc, _) = run_dense(spec, mode, &acts, &w, &bias).unwrap();
         if spec.out_i32 {
             assert_eq!(got_acc, want_acc, "{mode:?}");
         } else {
@@ -248,9 +248,9 @@ mod tests {
         let bias: Vec<i32> = vec![0; s.out_dim];
         let w8: Vec<i8> = (0..s.in_dim * s.out_dim).map(|_| rng.int_bits(8)).collect();
         let w2: Vec<i8> = (0..s.in_dim * s.out_dim).map(|_| rng.int_bits(2)).collect();
-        let (_, _, base) = run_dense(s, None, &acts, &w8, &bias);
-        let (_, _, m1) = run_dense(s, Some(W8), &acts, &w8, &bias);
-        let (_, _, m3) = run_dense(s, Some(W2), &acts, &w2, &bias);
+        let (_, _, base) = run_dense(s, None, &acts, &w8, &bias).unwrap();
+        let (_, _, m1) = run_dense(s, Some(W8), &acts, &w8, &bias).unwrap();
+        let (_, _, m3) = run_dense(s, Some(W2), &acts, &w2, &bias).unwrap();
         let su1 = base.cycles as f64 / m1.cycles as f64;
         let su3 = base.cycles as f64 / m3.cycles as f64;
         assert!(su1 > 4.0, "Mode-1 speedup too small: {su1:.2}");

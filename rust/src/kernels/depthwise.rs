@@ -263,7 +263,7 @@ mod tests {
             spec.rq,
             spec.relu,
         );
-        let (got, _) = run_depthwise(spec, mode, &acts, &wts, &bias);
+        let (got, _) = run_depthwise(spec, mode, &acts, &wts, &bias).unwrap();
         assert_eq!(got, want.data, "{mode:?} {spec:?}");
     }
 
@@ -292,8 +292,8 @@ mod tests {
         let bias = vec![0i32; s.c];
         let w8: Vec<i8> = (0..s.c * 9).map(|_| rng.int_bits(8)).collect();
         let w2: Vec<i8> = (0..s.c * 9).map(|_| rng.int_bits(2)).collect();
-        let (_, base) = run_depthwise(s, None, &acts, &w8, &bias);
-        let (_, m3) = run_depthwise(s, Some(W2), &acts, &w2, &bias);
+        let (_, base) = run_depthwise(s, None, &acts, &w8, &bias).unwrap();
+        let (_, m3) = run_depthwise(s, Some(W2), &acts, &w2, &bias).unwrap();
         let su = base.cycles as f64 / m3.cycles as f64;
         assert!(su > 1.05, "depthwise Mode-3 should still win: {su:.2}");
         assert!(su < 6.0, "depthwise gains should be modest: {su:.2}");

@@ -4,28 +4,148 @@
 //!
 //! These are the measurement entry points used by the tests, the Fig. 4 /
 //! Fig. 7 / Fig. 8 harnesses and the DSE's per-layer cycle model.
+//!
+//! ## Compile-once / run-many
+//!
+//! Every `(spec, mode)` pair is assembled and translated for the
+//! micro-op engine exactly once: a process-wide **kernel cache** maps
+//! the spec key to an [`Arc<CompiledKernel>`], and executions go
+//! through [`crate::sim::session::SimSession::global`]'s memory pool —
+//! a DSE sweep or whole-model run no longer pays per-invocation
+//! assembly + 16 MiB allocation. The MAC-unit configuration is *not*
+//! part of the key: the generated program is identical across Fig.-7
+//! ablations (nn_mac cycle costs come from the structural
+//! [`crate::sim::MacUnit`] at issue time), so ablation sweeps share one
+//! image.
+//!
+//! A kernel that exits any way other than `ecall` (memory fault,
+//! runaway pc) surfaces as an `Err`, not a process abort.
 
 use super::conv::ConvSpec;
 use super::dense::DenseSpec;
 use super::depthwise::DwSpec;
 use super::KernelProgram;
+use crate::ensure;
+use crate::error::Result;
 use crate::isa::MacMode;
 use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
-use crate::sim::{Core, CoreConfig, ExitReason, MacUnitConfig, PerfCounters};
+use crate::sim::session::{CompiledImage, SimSession};
+use crate::sim::{Core, CoreConfig, ExitReason, MacUnitConfig, PerfCounters, Timing};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// Execute a staged kernel program and return the perf counters.
-fn exec(prog: &KernelProgram, mac: MacUnitConfig, stage: impl FnOnce(&mut Core)) -> Core {
+/// Which interpreter executes the kernel (see `sim::engine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// Pre-decoded micro-op engine (the default fast path).
+    #[default]
+    Engine,
+    /// Reference interpreter (`Core::step`) — the semantic oracle,
+    /// kept selectable for differential testing and benching.
+    Legacy,
+}
+
+/// A kernel prepared for repeated execution.
+#[derive(Debug)]
+pub struct CompiledKernel {
+    /// Operand buffer addresses + memory footprint. Its `prog` vector
+    /// is **empty**: the decoded stream was moved into `image.prog`
+    /// (shared `Arc`) so the never-evicted cache doesn't hold every
+    /// instruction stream twice.
+    pub kp: KernelProgram,
+    /// Encoded + engine-translated image (owns the decoded program).
+    pub image: CompiledImage,
+}
+
+/// Kernel-cache key: the full generation-relevant spec. The MAC-unit
+/// configuration is intentionally absent (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum KernelKey {
+    Dense {
+        in_dim: usize,
+        out_dim: usize,
+        m: i32,
+        shift: i32,
+        relu: bool,
+        out_i32: bool,
+        mode: Option<MacMode>,
+    },
+    Conv {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        m: i32,
+        shift: i32,
+        relu: bool,
+        mode: Option<MacMode>,
+    },
+    Dw {
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        m: i32,
+        shift: i32,
+        relu: bool,
+        mode: Option<MacMode>,
+    },
+}
+
+fn cache() -> &'static Mutex<HashMap<KernelKey, Arc<CompiledKernel>>> {
+    static CACHE: OnceLock<Mutex<HashMap<KernelKey, Arc<CompiledKernel>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Distinct kernels currently cached (observability/tests).
+pub fn kernel_cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// Fetch (or build + translate + insert) the kernel for `key`.
+fn cached(key: KernelKey, build: impl FnOnce() -> KernelProgram) -> Arc<CompiledKernel> {
+    if let Some(k) = cache().lock().unwrap().get(&key) {
+        return Arc::clone(k);
+    }
+    // Build outside the lock — assembly/translation can be slow and
+    // other kernels shouldn't serialise behind it. A racing builder of
+    // the same key just loses its work.
+    let mut kp = build();
+    let prog = std::mem::take(&mut kp.prog);
+    let image = CompiledImage::new(prog, super::PROG_BASE, Timing::default());
+    let ck = Arc::new(CompiledKernel { kp, image });
+    Arc::clone(cache().lock().unwrap().entry(key).or_insert(ck))
+}
+
+/// Execute a staged kernel and return (`read` result, perf counters).
+fn exec<T>(
+    ck: &CompiledKernel,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    stage: impl FnOnce(&mut Core),
+    read: impl FnOnce(&Core) -> T,
+) -> Result<(T, PerfCounters)> {
     let cfg = CoreConfig {
         mac,
-        mem_size: prog.mem_size.max(super::DATA_BASE + 4096) as usize,
+        mem_size: ck.kp.mem_size.max(super::DATA_BASE + 4096) as usize,
         ..Default::default()
     };
-    let mut core = Core::new(cfg, prog.prog.clone(), super::PROG_BASE);
-    stage(&mut core);
-    core.mem.reset_counters(); // measure only the kernel's own traffic
-    let reason = core.run(u64::MAX);
-    assert_eq!(reason, ExitReason::Ecall, "kernel did not run to completion: {reason:?}");
-    core
+    let mut perf = PerfCounters::default();
+    let (out, reason) = SimSession::global().execute_backend(
+        cfg,
+        &ck.image,
+        backend == ExecBackend::Engine,
+        stage,
+        |core| {
+            perf = core.perf;
+            read(core)
+        },
+    );
+    ensure!(reason == ExitReason::Ecall, "kernel did not run to completion: {reason:?}");
+    Ok((out, perf))
 }
 
 /// Run a dense layer. Returns `(int8 outputs, int32 accumulators, perf)` —
@@ -36,7 +156,7 @@ pub fn run_dense(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, Vec<i32>, PerfCounters) {
+) -> Result<(Vec<i8>, Vec<i32>, PerfCounters)> {
     run_dense_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
 }
 
@@ -48,27 +168,65 @@ pub fn run_dense_with(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, Vec<i32>, PerfCounters) {
-    assert_eq!(acts.len(), spec.in_dim);
-    assert_eq!(w.len(), spec.in_dim * spec.out_dim);
-    assert_eq!(bias.len(), spec.out_dim);
-    let kp = match mode {
+) -> Result<(Vec<i8>, Vec<i32>, PerfCounters)> {
+    run_dense_backend(spec, mode, mac, ExecBackend::default(), acts, w, bias)
+}
+
+/// [`run_dense_with`] with an explicit interpreter choice.
+pub fn run_dense_backend(
+    spec: DenseSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> Result<(Vec<i8>, Vec<i32>, PerfCounters)> {
+    ensure!(
+        acts.len() == spec.in_dim,
+        "dense: {} activations for in_dim {}",
+        acts.len(),
+        spec.in_dim
+    );
+    ensure!(w.len() == spec.in_dim * spec.out_dim, "dense: weight count mismatch");
+    ensure!(bias.len() == spec.out_dim, "dense: bias count mismatch");
+    let key = KernelKey::Dense {
+        in_dim: spec.in_dim,
+        out_dim: spec.out_dim,
+        m: spec.rq.m,
+        shift: spec.rq.shift,
+        relu: spec.relu,
+        out_i32: spec.out_i32,
+        mode,
+    };
+    let ck = cached(key, || match mode {
         None => super::dense::build_baseline(spec),
         Some(m) => super::dense::build_mode(m, spec),
-    };
-    let core = exec(&kp, mac, |core| {
-        core.mem.write_i8(kp.act_addr, acts);
-        match mode {
-            None => core.mem.write_i8(kp.w_addr, w),
-            Some(m) => core.mem.write_words(kp.w_addr, &pack_dense(m, w, spec.out_dim, spec.in_dim)),
-        }
-        core.mem.write_i32(kp.bias_addr, bias);
     });
-    if spec.out_i32 {
-        (Vec::new(), core.mem.read_i32(kp.out_addr, spec.out_dim), core.perf)
-    } else {
-        (core.mem.read_i8(kp.out_addr, spec.out_dim), Vec::new(), core.perf)
-    }
+    let kp = &ck.kp;
+    let (out, perf) = exec(
+        &ck,
+        mac,
+        backend,
+        |core| {
+            core.mem.write_i8(kp.act_addr, acts);
+            match mode {
+                None => core.mem.write_i8(kp.w_addr, w),
+                Some(m) => core
+                    .mem
+                    .write_words(kp.w_addr, &pack_dense(m, w, spec.out_dim, spec.in_dim)),
+            }
+            core.mem.write_i32(kp.bias_addr, bias);
+        },
+        |core| {
+            if spec.out_i32 {
+                (Vec::new(), core.mem.read_i32(kp.out_addr, spec.out_dim))
+            } else {
+                (core.mem.read_i8(kp.out_addr, spec.out_dim), Vec::new())
+            }
+        },
+    )?;
+    Ok((out.0, out.1, perf))
 }
 
 /// Run a standard convolution. Returns `(int8 NHWC outputs, perf)`.
@@ -78,7 +236,7 @@ pub fn run_conv(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, PerfCounters) {
+) -> Result<(Vec<i8>, PerfCounters)> {
     run_conv_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
 }
 
@@ -90,25 +248,57 @@ pub fn run_conv_with(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, PerfCounters) {
-    assert_eq!(acts.len(), spec.h * spec.w * spec.cin);
-    assert_eq!(w.len(), spec.cout * spec.k * spec.k * spec.cin);
-    assert_eq!(bias.len(), spec.cout);
-    let kp = match mode {
+) -> Result<(Vec<i8>, PerfCounters)> {
+    run_conv_backend(spec, mode, mac, ExecBackend::default(), acts, w, bias)
+}
+
+/// [`run_conv_with`] with an explicit interpreter choice.
+pub fn run_conv_backend(
+    spec: ConvSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> Result<(Vec<i8>, PerfCounters)> {
+    ensure!(acts.len() == spec.h * spec.w * spec.cin, "conv: activation count mismatch");
+    ensure!(w.len() == spec.cout * spec.k * spec.k * spec.cin, "conv: weight count mismatch");
+    ensure!(bias.len() == spec.cout, "conv: bias count mismatch");
+    let key = KernelKey::Conv {
+        h: spec.h,
+        w: spec.w,
+        cin: spec.cin,
+        cout: spec.cout,
+        k: spec.k,
+        stride: spec.stride,
+        m: spec.rq.m,
+        shift: spec.rq.shift,
+        relu: spec.relu,
+        mode,
+    };
+    let ck = cached(key, || match mode {
         None => super::conv::build_baseline(spec),
         Some(m) => super::conv::build_mode(m, spec),
-    };
-    let core = exec(&kp, mac, |core| {
-        core.mem.write_i8(kp.act_addr, acts);
-        match mode {
-            None => core.mem.write_i8(kp.w_addr, w),
-            Some(m) => {
-                core.mem.write_words(kp.w_addr, &pack_conv(m, w, spec.cout, spec.k, spec.cin))
-            }
-        }
-        core.mem.write_i32(kp.bias_addr, bias);
     });
-    (core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.cout), core.perf)
+    let kp = &ck.kp;
+    let (out, perf) = exec(
+        &ck,
+        mac,
+        backend,
+        |core| {
+            core.mem.write_i8(kp.act_addr, acts);
+            match mode {
+                None => core.mem.write_i8(kp.w_addr, w),
+                Some(m) => core
+                    .mem
+                    .write_words(kp.w_addr, &pack_conv(m, w, spec.cout, spec.k, spec.cin)),
+            }
+            core.mem.write_i32(kp.bias_addr, bias);
+        },
+        |core| core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.cout),
+    )?;
+    Ok((out, perf))
 }
 
 /// Run a depthwise convolution. Returns `(int8 NHWC outputs, perf)`.
@@ -118,7 +308,7 @@ pub fn run_depthwise(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, PerfCounters) {
+) -> Result<(Vec<i8>, PerfCounters)> {
     run_depthwise_with(spec, mode, MacUnitConfig::full(), acts, w, bias)
 }
 
@@ -130,21 +320,134 @@ pub fn run_depthwise_with(
     acts: &[i8],
     w: &[i8],
     bias: &[i32],
-) -> (Vec<i8>, PerfCounters) {
-    assert_eq!(acts.len(), spec.h * spec.w * spec.c);
-    assert_eq!(w.len(), spec.c * spec.k * spec.k);
-    assert_eq!(bias.len(), spec.c);
-    let kp = match mode {
+) -> Result<(Vec<i8>, PerfCounters)> {
+    run_depthwise_backend(spec, mode, mac, ExecBackend::default(), acts, w, bias)
+}
+
+/// [`run_depthwise_with`] with an explicit interpreter choice.
+pub fn run_depthwise_backend(
+    spec: DwSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: &[i8],
+    bias: &[i32],
+) -> Result<(Vec<i8>, PerfCounters)> {
+    ensure!(acts.len() == spec.h * spec.w * spec.c, "depthwise: activation count mismatch");
+    ensure!(w.len() == spec.c * spec.k * spec.k, "depthwise: weight count mismatch");
+    ensure!(bias.len() == spec.c, "depthwise: bias count mismatch");
+    let key = KernelKey::Dw {
+        h: spec.h,
+        w: spec.w,
+        c: spec.c,
+        k: spec.k,
+        stride: spec.stride,
+        m: spec.rq.m,
+        shift: spec.rq.shift,
+        relu: spec.relu,
+        mode,
+    };
+    let ck = cached(key, || match mode {
         None => super::depthwise::build_baseline(spec),
         Some(m) => super::depthwise::build_mode(m, spec),
-    };
-    let core = exec(&kp, mac, |core| {
-        core.mem.write_i8(kp.act_addr, acts);
-        match mode {
-            None => core.mem.write_i8(kp.w_addr, w),
-            Some(m) => core.mem.write_words(kp.w_addr, &pack_depthwise(m, w, spec.c, spec.k)),
-        }
-        core.mem.write_i32(kp.bias_addr, bias);
     });
-    (core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.c), core.perf)
+    let kp = &ck.kp;
+    let (out, perf) = exec(
+        &ck,
+        mac,
+        backend,
+        |core| {
+            core.mem.write_i8(kp.act_addr, acts);
+            match mode {
+                None => core.mem.write_i8(kp.w_addr, w),
+                Some(m) => core.mem.write_words(kp.w_addr, &pack_depthwise(m, w, spec.c, spec.k)),
+            }
+            core.mem.write_i32(kp.bias_addr, bias);
+        },
+        |core| core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.c),
+    )?;
+    Ok((out, perf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant::Requant;
+    use crate::rng::Rng;
+
+    fn small_spec() -> DenseSpec {
+        DenseSpec {
+            in_dim: 32,
+            out_dim: 4,
+            rq: Requant::from_real_scale(0.004),
+            relu: true,
+            out_i32: false,
+        }
+    }
+
+    #[test]
+    fn engine_and_legacy_backends_agree() {
+        let spec = small_spec();
+        let mut rng = Rng::new(11);
+        let acts: Vec<i8> = (0..spec.in_dim).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..spec.in_dim * spec.out_dim).map(|_| rng.int_bits(4)).collect();
+        let bias: Vec<i32> = (0..spec.out_dim).map(|_| rng.range_i32(-100, 100)).collect();
+        for mode in [None, Some(MacMode::W4)] {
+            let (qe, _, pe) = run_dense_backend(
+                spec, mode, MacUnitConfig::full(), ExecBackend::Engine, &acts, &w, &bias,
+            )
+            .unwrap();
+            let (ql, _, pl) = run_dense_backend(
+                spec, mode, MacUnitConfig::full(), ExecBackend::Legacy, &acts, &w, &bias,
+            )
+            .unwrap();
+            assert_eq!(qe, ql, "{mode:?}");
+            assert_eq!(pe, pl, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn repeated_runs_hit_the_kernel_cache() {
+        let spec = DenseSpec {
+            in_dim: 24,
+            out_dim: 3,
+            rq: Requant::from_real_scale(0.005),
+            relu: false,
+            out_i32: false,
+        };
+        // Identity-based check on this spec's own entry: global cache
+        // *length* would race with other tests inserting concurrently.
+        let key = KernelKey::Dense {
+            in_dim: spec.in_dim,
+            out_dim: spec.out_dim,
+            m: spec.rq.m,
+            shift: spec.rq.shift,
+            relu: spec.relu,
+            out_i32: spec.out_i32,
+            mode: Some(MacMode::W8),
+        };
+        let mut rng = Rng::new(5);
+        let acts: Vec<i8> = (0..spec.in_dim).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..spec.in_dim * spec.out_dim).map(|_| rng.int_bits(8)).collect();
+        let bias: Vec<i32> = vec![0; spec.out_dim];
+        let (a, _, _) = run_dense(spec, Some(MacMode::W8), &acts, &w, &bias).unwrap();
+        let first = Arc::clone(cache().lock().unwrap().get(&key).expect("cached on first run"));
+        let (b, _, _) = run_dense(spec, Some(MacMode::W8), &acts, &w, &bias).unwrap();
+        assert_eq!(a, b);
+        let second = Arc::clone(cache().lock().unwrap().get(&key).unwrap());
+        assert!(Arc::ptr_eq(&first, &second), "second run must reuse the compiled kernel");
+        // Ablation configs share the image too (mac config is not keyed).
+        run_dense_with(spec, Some(MacMode::W8), MacUnitConfig::packing_only(), &acts, &w, &bias)
+            .unwrap();
+        let third = Arc::clone(cache().lock().unwrap().get(&key).unwrap());
+        assert!(Arc::ptr_eq(&first, &third), "mac ablations must share the image");
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let spec = small_spec();
+        let r = run_dense(spec, None, &[0i8; 3], &[0i8; 3], &[0i32; 3]);
+        assert!(r.is_err());
+    }
 }

@@ -11,7 +11,16 @@
 //!   paper's three custom instructions (`nn_mac_8b/4b/2b`, Table 2).
 //! * [`sim`] — a cycle-accurate Ibex-like 2-stage core simulator with the
 //!   modified multiplier block: four 17-bit lanes, 2× multi-pumping and the
-//!   guard-bit soft-SIMD datapath of Eq. (2).
+//!   guard-bit soft-SIMD datapath of Eq. (2). Two execution paths share
+//!   the architectural model: the reference interpreter (`Core::step`)
+//!   and the pre-decoded **micro-op engine** (`sim::engine`) that the
+//!   hot measurement paths run on — branch targets resolved to program
+//!   indices at translation time, per-op cycle costs precomputed, and
+//!   the kernel generators' inner-loop strips fused into
+//!   superinstructions. `sim::session` adds the reuse layer:
+//!   [`sim::session::SimSession`] pools simulator memories and caches
+//!   translated kernels so repeated runs (DSE sweeps, whole-model
+//!   measurement) stop paying per-invocation assembly + allocation.
 //! * [`asm`] — macro-assembler (labels, pseudo-instructions) used by the
 //!   kernel code generators.
 //! * [`kernels`] — NN kernels emitted as RV32 instruction streams: baseline
@@ -38,15 +47,19 @@ pub mod bench;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;
+pub mod error;
 pub mod exp;
 pub mod isa;
 pub mod json;
 pub mod kernels;
 pub mod models;
 pub mod nn;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
 
+pub use error::{Context, Error};
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

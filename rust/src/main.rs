@@ -4,7 +4,7 @@
 //! (results are printed and written under `results/`); utility
 //! subcommands expose the ISA/simulator substrate.
 
-use anyhow::{bail, Result};
+use mpnn::{bail, Result};
 use mpnn::exp::{self, ExpOpts};
 use mpnn::json::Json;
 
@@ -172,7 +172,7 @@ fn cmd_demo() -> Result<()> {
 fn cmd_xcheck(opts: &ExpOpts) -> Result<()> {
     let path = opts.artifacts.join("xcheck.json");
     let text = std::fs::read_to_string(&path)?;
-    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let v = Json::parse(&text).map_err(|e| mpnn::anyhow!("{e}"))?;
     let mut n = 0;
     for case in v.get("requantize").and_then(|j| j.as_arr()).unwrap_or(&[]) {
         let rq = mpnn::nn::quant::Requant {
@@ -185,7 +185,7 @@ fn cmd_xcheck(opts: &ExpOpts) -> Result<()> {
             case.get("relu").unwrap().as_bool().unwrap(),
         );
         let want = case.get("out").unwrap().as_i64().unwrap() as i8;
-        anyhow::ensure!(got == want, "requantize mismatch: {case:?} got {got}");
+        mpnn::ensure!(got == want, "requantize mismatch: {case:?} got {got}");
         n += 1;
     }
     println!("xcheck: {n} requantize vectors OK (python == rust, bit-exact)");

@@ -27,7 +27,8 @@ use super::infer::{LayerParams, ModelParams};
 use super::synthetic::Dataset;
 use super::{LayerSpec, ModelSpec, Node};
 use crate::nn::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 

@@ -7,9 +7,18 @@
 //! This is the reproduction of the paper's Verilator flow: the same
 //! binary-level kernels the extended processor would run, measured with
 //! the same per-layer performance counters.
+//!
+//! Layer kernels execute on the micro-op engine through the global
+//! [`crate::sim::session::SimSession`] — across a whole model the
+//! kernel images are translated once and simulator memories recycled.
+//! One model execution is inherently sequential (each layer consumes
+//! the previous layer's activations), so the parallel axis is the
+//! *input batch*: [`run_model_batch`] fans independent inputs out over
+//! a worker pool sharing the kernel cache.
 
 use super::infer::{residual_requants, QModel};
 use super::{LayerSpec, Node, QKind};
+use crate::error::Result;
 use crate::isa::MacMode;
 use crate::kernels::conv::ConvSpec;
 use crate::kernels::dense::DenseSpec;
@@ -18,6 +27,7 @@ use crate::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
 use crate::nn::layers::{pad_spatial, qadd, qavgpool_global, qmaxpool2};
 use crate::nn::tensor::{pad_channels, Tensor};
 use crate::sim::{MacUnitConfig, PerfCounters};
+use crate::{bail, ensure};
 
 /// Per-layer measurement from an ISS execution.
 #[derive(Debug, Clone)]
@@ -78,14 +88,15 @@ fn pad_conv_weights(qw: &[i8], cout: usize, k: usize, cin: usize, cin_p: usize) 
 /// `modes[i]` selects the kernel for quantizable layer `i`: `None` runs
 /// the scalar baseline, `Some(mode)` the packed kernel (the mode must
 /// match the layer's quantization grid — checked). `mac` configures the
-/// MAC-unit features (Fig. 7 ablations).
+/// MAC-unit features (Fig. 7 ablations). A kernel that misbehaves on
+/// the core (memory fault, runaway pc) surfaces as an `Err`.
 pub fn run_model(
     qm: &QModel,
     input: &Tensor<i8>,
     modes: &[Option<MacMode>],
     mac: MacUnitConfig,
-) -> SimRun {
-    assert_eq!(modes.len(), qm.layers.len());
+) -> Result<SimRun> {
+    ensure!(modes.len() == qm.layers.len(), "one mode per quantizable layer");
     let mut layers = Vec::new();
     let mut li = 0usize;
     let mut res_i = 0usize;
@@ -109,15 +120,18 @@ pub fn run_model(
         }
     }
 
-    let run_one = |l: &LayerSpec, x: Flow, li: &mut usize, layers: &mut Vec<LayerRun>| -> (Flow, Option<Vec<i32>>) {
+    let run_one = |l: &LayerSpec,
+                   x: Flow,
+                   li: &mut usize,
+                   layers: &mut Vec<LayerRun>|
+     -> Result<(Flow, Option<Vec<i32>>)> {
         let idx = *li;
         let q = &qm.layers[idx];
         let info = &qm.analysis.layers[idx];
         let mode = modes[idx];
         if let Some(m) = mode {
-            assert_eq!(
-                m.weight_bits(),
-                q.w_bits,
+            ensure!(
+                m.weight_bits() == q.w_bits,
                 "layer {idx}: kernel mode {m:?} vs quantized bits {}",
                 q.w_bits
             );
@@ -146,9 +160,9 @@ pub fn run_model(
                     rq: q.rq,
                     relu,
                 };
-                let (out, perf) = run_conv_with(spec, mode, mac, &xp.data, &w, &q.bias);
+                let (out, perf) = run_conv_with(spec, mode, mac, &xp.data, &w, &q.bias)?;
                 layers.push(LayerRun { layer: idx, mode, perf });
-                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), cout], out)), None)
+                Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), cout], out)), None))
             }
             LayerSpec::Depthwise { k, stride, pad, relu } => {
                 *li += 1;
@@ -162,9 +176,9 @@ pub fn run_model(
                     rq: q.rq,
                     relu,
                 };
-                let (out, perf) = run_depthwise_with(spec, mode, mac, &xp.data, &q.qw, &q.bias);
+                let (out, perf) = run_depthwise_with(spec, mode, mac, &xp.data, &q.qw, &q.bias)?;
                 layers.push(LayerRun { layer: idx, mode, perf });
-                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None)
+                Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None))
             }
             LayerSpec::Dense { out, relu } => {
                 let is_last = info.is_last;
@@ -177,19 +191,19 @@ pub fn run_model(
                     relu,
                     out_i32: is_last,
                 };
-                let (qv, accs, perf) = run_dense_with(spec, mode, mac, &flat, &q.qw, &q.bias);
+                let (qv, accs, perf) = run_dense_with(spec, mode, mac, &flat, &q.qw, &q.bias)?;
                 layers.push(LayerRun { layer: idx, mode, perf });
                 if is_last {
-                    (Flow::Flat(Vec::new()), Some(accs))
+                    Ok((Flow::Flat(Vec::new()), Some(accs)))
                 } else {
-                    (Flow::Flat(qv), None)
+                    Ok((Flow::Flat(qv), None))
                 }
             }
-            LayerSpec::MaxPool2 => (Flow::Map(qmaxpool2(&x.map())), None),
+            LayerSpec::MaxPool2 => Ok((Flow::Map(qmaxpool2(&x.map())), None)),
             LayerSpec::AvgPoolGlobal => {
                 let m = x.map();
                 let c = m.shape[2];
-                (Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m))), None)
+                Ok((Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m))), None))
             }
         }
     };
@@ -198,9 +212,9 @@ pub fn run_model(
     for node in &qm.spec.nodes {
         match node {
             Node::Layer(l) => {
-                let (nx, logits) = run_one(l, x, &mut li, &mut layers);
+                let (nx, logits) = run_one(l, x, &mut li, &mut layers)?;
                 if let Some(logits) = logits {
-                    return SimRun { logits, layers };
+                    return Ok(SimRun { logits, layers });
                 }
                 x = nx;
             }
@@ -208,7 +222,7 @@ pub fn run_model(
                 let skip = x.map();
                 let mut b = Flow::Map(skip.clone());
                 for l in inner {
-                    let (nb, _) = run_one(l, b, &mut li, &mut layers);
+                    let (nb, _) = run_one(l, b, &mut li, &mut layers)?;
                     b = nb;
                 }
                 let (rq_skip, rq_branch) = residual_requants(qm, res_i);
@@ -217,7 +231,23 @@ pub fn run_model(
             }
         }
     }
-    panic!("model must end in a dense logits layer")
+    bail!("model must end in a dense logits layer")
+}
+
+/// Run one model over a batch of independent inputs in parallel.
+///
+/// Each worker runs the full sequential layer pipeline for its input;
+/// all workers share the global kernel cache and memory pool, so the
+/// per-input setup cost is amortised batch-wide. Results are in input
+/// order and identical to per-input [`run_model`] calls.
+pub fn run_model_batch(
+    qm: &QModel,
+    inputs: &[Tensor<i8>],
+    modes: &[Option<MacMode>],
+    mac: MacUnitConfig,
+    workers: usize,
+) -> Result<Vec<SimRun>> {
+    crate::par::parallel_map(inputs.len(), workers, |j| run_model(qm, &inputs[j], modes, mac))
 }
 
 /// Kernel modes for a quantized model: the mode matching each layer's
@@ -240,7 +270,7 @@ pub fn is_depthwise(qm: &QModel, idx: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::infer::{qforward, quantize_input, quantize_model, random_params, calibrate};
+    use crate::models::infer::{calibrate, qforward, quantize_input, quantize_model, random_params};
     use crate::models::synthetic::generate;
     use crate::models::{zoo, LayerSpec, ModelSpec, Node};
 
@@ -272,12 +302,12 @@ mod tests {
         let want = qforward(&qm, &input);
 
         // Extended execution (per-layer modes) must be bit-exact.
-        let run = run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full());
+        let run = run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full()).unwrap();
         assert_eq!(run.logits, want, "extended ISS vs host reference");
         assert_eq!(run.layers.len(), qm.layers.len());
 
         // Baseline execution must also be bit-exact (same arithmetic).
-        let base = run_model(&qm, &input, &baseline_modes(&qm), MacUnitConfig::full());
+        let base = run_model(&qm, &input, &baseline_modes(&qm), MacUnitConfig::full()).unwrap();
         assert_eq!(base.logits, want, "baseline ISS vs host reference");
 
         // And the extension must be faster + lighter on memory.
@@ -300,5 +330,26 @@ mod tests {
     fn lenet5_bit_exact_mixed() {
         let spec = zoo::lenet5();
         check_model(&spec, vec![8, 4, 4, 2, 8], 200);
+    }
+
+    #[test]
+    fn batch_run_matches_sequential_runs() {
+        let spec = toy_residual_model();
+        let n = crate::models::analyze(&spec).layers.len();
+        let bits = vec![4u32; n];
+        let params = random_params(&spec, 7);
+        let ds = generate(8, 6, spec.input, spec.num_classes, 0.4);
+        let sites = calibrate(&spec, &params, &ds.images[..2]);
+        let qm = quantize_model(&spec, &params, &sites, &bits);
+        let inputs: Vec<_> = ds.images.iter().map(|im| quantize_input(&qm, im)).collect();
+        let modes = modes_for(&qm);
+
+        let batch = run_model_batch(&qm, &inputs, &modes, MacUnitConfig::full(), 3).unwrap();
+        assert_eq!(batch.len(), inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            let solo = run_model(&qm, input, &modes, MacUnitConfig::full()).unwrap();
+            assert_eq!(batch[i].logits, solo.logits, "input {i}");
+            assert_eq!(batch[i].total_cycles(), solo.total_cycles(), "input {i}");
+        }
     }
 }

@@ -1,0 +1,86 @@
+//! Tiny shared worker-pool primitive: run `n_jobs` independent
+//! fallible jobs over scoped threads, preserving job order.
+//!
+//! Used by the DSE cycle-model build and the whole-model batch runner;
+//! the coordinator keeps its own bounded-queue pool because it needs
+//! backpressure against a producer, which this fan-out does not model.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0..n_jobs)` over `workers` scoped threads and collect the
+/// results in job order. The first job error wins (remaining queued
+/// jobs are abandoned) and is returned after all workers stop.
+pub fn parallel_map<T, F>(n_jobs: usize, workers: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n_jobs).map(|_| None).collect());
+    let first_err: Mutex<Option<Error>> = Mutex::new(None);
+    let next = AtomicUsize::new(0);
+    let workers = workers.clamp(1, n_jobs.max(1));
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= n_jobs || first_err.lock().unwrap().is_some() {
+                    break;
+                }
+                match f(j) {
+                    Ok(v) => results.lock().unwrap()[j] = Some(v),
+                    Err(e) => {
+                        let mut fe = first_err.lock().unwrap();
+                        if fe.is_none() {
+                            *fe = Some(e);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job ran"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order_across_workers() {
+        let out = parallel_map(100, 7, |j| Ok(j * j)).unwrap();
+        assert_eq!(out.len(), 100);
+        for (j, v) in out.iter().enumerate() {
+            assert_eq!(*v, j * j);
+        }
+    }
+
+    #[test]
+    fn propagates_the_first_error() {
+        let r: Result<Vec<usize>> = parallel_map(50, 4, |j| {
+            if j == 17 {
+                Err(Error::msg("boom"))
+            } else {
+                Ok(j)
+            }
+        });
+        assert_eq!(r.unwrap_err().to_msg(), "boom");
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        let out: Vec<u32> = parallel_map(0, 4, |_| Ok(1)).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,205 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — Python is never
+//! on this path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit
+//! instruction ids the bundled xla_extension rejects in proto form).
+
+//! Real PJRT bindings (compiled only with the `pjrt` cargo feature;
+//! requires the vendored `xla` crate).
+
+use crate::error::{Context, Result};
+use crate::json::Json;
+use crate::models::infer::QModel;
+use crate::models::QKind;
+use crate::{bail, ensure};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A PJRT session: client + executable cache.
+pub struct Session {
+    client: PjRtClient,
+    root: PathBuf,
+    manifest: Option<Json>,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Session {
+    /// Open a CPU PJRT session rooted at an artifacts directory.
+    pub fn open(root: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest_path = root.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            Some(
+                Json::parse(&std::fs::read_to_string(&manifest_path)?)
+                    .map_err(|e| crate::anyhow!("manifest: {e}"))?,
+            )
+        } else {
+            None
+        };
+        Ok(Session { client, root: root.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    /// The parsed manifest (if present).
+    pub fn manifest(&self) -> Option<&Json> {
+        self.manifest.as_ref()
+    }
+
+    /// Artifacts root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Compile (and cache) an HLO-text artifact by file stem.
+    pub fn load(&mut self, stem: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(stem) {
+            let path = self.root.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {stem}"))?;
+            self.cache.insert(stem.to_string(), exe);
+        }
+        Ok(&self.cache[stem])
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an int8 literal from values.
+pub fn lit_i8(dims: &[usize], data: &[i8]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)?)
+}
+
+/// Build an int32 literal from values.
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, &bytes)?)
+}
+
+/// Build a uint32 literal from values.
+pub fn lit_u32(dims: &[usize], data: &[u32]) -> Result<Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U32, dims, &bytes)?)
+}
+
+/// Execute an executable and decompose the (tupled) outputs.
+pub fn execute(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+    let result = exe.execute::<Literal>(args).context("execute")?;
+    let out = result[0][0].to_literal_sync()?;
+    Ok(out.to_tuple()?)
+}
+
+/// The batched classification result of one model execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Int32 logits, row-major `[B, classes]`.
+    pub logits: Vec<i32>,
+    /// Predicted class per sample.
+    pub preds: Vec<i32>,
+    /// Class count.
+    pub classes: usize,
+}
+
+/// Assemble the canonical argument list of `<model>_qfwd_b<B>.hlo.txt`
+/// for one quantized model + a batch of int8 images (padded/truncated
+/// to the artifact batch `b`).
+pub fn qfwd_args(qm: &QModel, images: &[i8], b: usize) -> Result<Vec<Literal>> {
+    let [h, w, c] = qm.spec.input;
+    let px = h * w * c;
+    ensure!(images.len() == b * px, "expected {b}·{px} image bytes");
+    let mut args = Vec::with_capacity(3 + 2 * qm.layers.len());
+    args.push(lit_i8(&[b, h, w, c], images)?);
+    for (q, info) in qm.layers.iter().zip(&qm.analysis.layers) {
+        let dims: Vec<usize> = match info.kind {
+            QKind::Conv => vec![info.out_shape[2], info.k, info.k, info.in_shape[2]],
+            QKind::Depthwise => vec![info.in_shape[2], info.k, info.k],
+            QKind::Dense => vec![info.out_shape[2], info.in_shape[2]],
+        };
+        args.push(lit_i8(&dims, &q.qw)?);
+        args.push(lit_i32(&[q.bias.len()], &q.bias)?);
+    }
+    let ms: Vec<i32> = qm.layers.iter().map(|q| q.rq.m).collect();
+    let ss: Vec<i32> = qm.layers.iter().map(|q| q.rq.shift).collect();
+    args.push(lit_i32(&[ms.len()], &ms)?);
+    args.push(lit_i32(&[ss.len()], &ss)?);
+    if !qm.analysis.residuals.is_empty() {
+        let r = qm.analysis.residuals.len();
+        let mut rm = Vec::with_capacity(2 * r);
+        let mut rs = Vec::with_capacity(2 * r);
+        for i in 0..r {
+            let (rq_skip, rq_branch) = crate::models::infer::residual_requants(qm, i);
+            rm.push(rq_skip.m);
+            rm.push(rq_branch.m);
+            rs.push(rq_skip.shift);
+            rs.push(rq_branch.shift);
+        }
+        args.push(lit_i32(&[r, 2], &rm)?);
+        args.push(lit_i32(&[r, 2], &rs)?);
+    }
+    Ok(args)
+}
+
+/// Run one batch through a model's qfwd artifact.
+pub fn run_qfwd(
+    exe: &PjRtLoadedExecutable,
+    qm: &QModel,
+    images: &[i8],
+    b: usize,
+) -> Result<BatchOutput> {
+    let args = qfwd_args(qm, images, b)?;
+    let outs = execute(exe, &args)?;
+    if outs.len() != 2 {
+        bail!("expected (logits, preds), got {} outputs", outs.len());
+    }
+    let logits = outs[0].to_vec::<i32>()?;
+    let preds = outs[1].to_vec::<i32>()?;
+    Ok(BatchOutput { logits, preds, classes: qm.spec.num_classes })
+}
+
+/// Batched accuracy evaluation of a quantized model over a float test
+/// set: quantizes inputs at the model's input scale, pads the final
+/// batch, returns top-1 accuracy.
+pub fn evaluate_accuracy(
+    session: &mut Session,
+    qm: &QModel,
+    images: &[crate::nn::tensor::Tensor<f32>],
+    labels: &[usize],
+    batch: usize,
+) -> Result<f32> {
+    ensure!(images.len() == labels.len());
+    let stem = format!("{}_qfwd_b{batch}", qm.spec.name);
+    let [h, w, c] = qm.spec.input;
+    let px = h * w * c;
+    let s0 = qm.sites[0];
+    let mut correct = 0usize;
+    let mut idx = 0usize;
+    // Quantize + batch on the fly.
+    while idx < images.len() {
+        let take = (images.len() - idx).min(batch);
+        let mut buf = vec![0i8; batch * px];
+        for j in 0..take {
+            for (d, &v) in buf[j * px..(j + 1) * px].iter_mut().zip(&images[idx + j].data) {
+                *d = crate::nn::quant::quantize_value(v, s0, 8);
+            }
+        }
+        let exe = session.load(&stem)?;
+        let out = run_qfwd(exe, qm, &buf, batch)?;
+        for j in 0..take {
+            if out.preds[j] as usize == labels[idx + j] {
+                correct += 1;
+            }
+        }
+        idx += take;
+    }
+    Ok(correct as f32 / images.len() as f32)
+}

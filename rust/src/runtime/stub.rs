@@ -1,0 +1,93 @@
+//! Featureless stand-in for the PJRT runtime (built when the `pjrt`
+//! cargo feature is off). Mirrors the public surface of the real
+//! bindings so every consumer compiles; [`Session::open`] always errors
+//! and no [`Session`] value can exist (it wraps an uninhabited type),
+//! so the remaining methods are statically unreachable.
+
+use crate::error::Result;
+use crate::models::infer::QModel;
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Placeholder for `xla::Literal`.
+pub struct Literal(pub(super) Infallible);
+
+/// Placeholder for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable(pub(super) Infallible);
+
+/// A PJRT session. Uninhabited in the stub build: [`Session::open`]
+/// is the only constructor and it always fails.
+pub struct Session(Infallible);
+
+const DISABLED: &str = "PJRT runtime disabled: vendor the `xla` crate, add it to Cargo.toml \
+     as an optional dependency of the `pjrt` feature, then rebuild with `--features pjrt` \
+     (see rust/src/runtime/ and the ROADMAP open item)";
+
+impl Session {
+    /// Always fails in the stub build.
+    pub fn open(_root: &Path) -> Result<Self> {
+        Err(crate::error::Error::msg(DISABLED))
+    }
+
+    /// Unreachable (no `Session` value can exist).
+    pub fn load(&mut self, _stem: &str) -> Result<&PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+
+    /// Unreachable (no `Session` value can exist).
+    pub fn cache_len(&self) -> usize {
+        match self.0 {}
+    }
+}
+
+/// The batched classification result of one model execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Int32 logits, row-major `[B, classes]`.
+    pub logits: Vec<i32>,
+    /// Predicted class per sample.
+    pub preds: Vec<i32>,
+    /// Class count.
+    pub classes: usize,
+}
+
+/// Stub: always errors (no PJRT).
+pub fn lit_i8(_dims: &[usize], _data: &[i8]) -> Result<Literal> {
+    Err(crate::error::Error::msg(DISABLED))
+}
+
+/// Stub: always errors (no PJRT).
+pub fn lit_i32(_dims: &[usize], _data: &[i32]) -> Result<Literal> {
+    Err(crate::error::Error::msg(DISABLED))
+}
+
+/// Stub: always errors (no PJRT).
+pub fn lit_u32(_dims: &[usize], _data: &[u32]) -> Result<Literal> {
+    Err(crate::error::Error::msg(DISABLED))
+}
+
+/// Unreachable (no `PjRtLoadedExecutable` value can exist).
+pub fn execute(exe: &PjRtLoadedExecutable, _args: &[Literal]) -> Result<Vec<Literal>> {
+    match exe.0 {}
+}
+
+/// Unreachable (no `PjRtLoadedExecutable` value can exist).
+pub fn run_qfwd(
+    exe: &PjRtLoadedExecutable,
+    _qm: &QModel,
+    _images: &[i8],
+    _b: usize,
+) -> Result<BatchOutput> {
+    match exe.0 {}
+}
+
+/// Unreachable (no `Session` value can exist).
+pub fn evaluate_accuracy(
+    session: &mut Session,
+    _qm: &QModel,
+    _images: &[crate::nn::tensor::Tensor<f32>],
+    _labels: &[usize],
+    _batch: usize,
+) -> Result<f32> {
+    match session.0 {}
+}

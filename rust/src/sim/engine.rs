@@ -1,0 +1,890 @@
+//! Pre-decoded micro-op execution engine — the fast path of the ISS.
+//!
+//! [`CompiledProgram::translate`] lowers a decoded [`Instr`] stream
+//! *once* into a flat micro-op stream:
+//!
+//! * branch/jump targets are resolved to **stream indices** at
+//!   translation time (no byte-pc arithmetic per executed branch),
+//! * per-op cycle costs are pre-computed from the [`Timing`] table
+//!   (the reference interpreter re-reads the table every step),
+//! * the instruction sequences the kernel generators actually emit are
+//!   **fused into superinstructions**: the packed-kernel inner-loop
+//!   strip (k× activation-word `lw` + weight `lw` + `nn_mac`), the
+//!   scalar baseline MAC (`lb`,`lb`,`mul`,`add`) and the pointer-bump
+//!   loop latch (up to 3× `addi` + conditional branch).
+//!
+//! [`run`] dispatches the stream against a [`Core`]'s architectural
+//! state and is **observationally identical** to [`Core::run`]: same
+//! final registers, memory, perf counters, cycle totals, pc and exit
+//! reason (property-tested in `tests/engine_equivalence.rs`). Programs
+//! the translator cannot prove clean (static control flow with
+//! non-multiple-of-4 offsets) and dynamic `jalr` entries into the
+//! interior of a fused strip fall back to the reference interpreter.
+//!
+//! The only intentional divergence: the cycle *budget* is checked
+//! between micro-ops, so a fused strip is atomic with respect to
+//! `max_cycles` and a `MaxCycles` exit may be detected up to
+//! strip-length − 1 instructions later than the reference interpreter.
+//! Measurement paths run with an effectively unlimited budget, where
+//! the two are indistinguishable.
+
+use super::{alu_eval, Core, ExitReason, Timing};
+use crate::isa::*;
+
+/// Pre-resolved control-flow target.
+#[derive(Debug, Clone, Copy)]
+enum Tgt {
+    /// Target micro-op index.
+    Op(u32),
+    /// Target pc outside the program image (raises `IllegalPc`).
+    Illegal(u32),
+}
+
+/// One micro-op. Cycle costs (`c`, `ct`, `cnt`, …) are baked in at
+/// translation time from the core's [`Timing`] table.
+#[derive(Debug, Clone, Copy)]
+enum MicroOp {
+    /// `lui` / `auipc` (pc-relative value pre-computed).
+    LoadImm { rd: Reg, val: u32, c: u32 },
+    Jal { rd: Reg, link: u32, tgt: Tgt, c: u32 },
+    Jalr { rd: Reg, rs1: Reg, offset: u32, link: u32, c: u32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, tgt: Tgt, ct: u32, cnt: u32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, offset: u32, c: u32 },
+    Store { op: StoreOp, rs1: Reg, rs2: Reg, offset: u32, c: u32 },
+    OpImm { op: AluOp, rd: Reg, rs1: Reg, imm: u32, c: u32 },
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg, c: u32 },
+    MulDiv { op: MulOp, rd: Reg, rs1: Reg, rs2: Reg, c: u32 },
+    NnMac { mode: MacMode, rd: Reg, rs1: Reg, rs2: Reg },
+    Csr { rd: Reg, csr: u16, c: u32 },
+    Fence { c: u32 },
+    Ecall,
+    Ebreak,
+    /// Fell off the end of the program (or a resolved jump landed one
+    /// past it): `IllegalPc` at this op's pc.
+    Trap,
+    /// Fused packed-kernel strip: `k`× `lw act_rd+j, act_off+4j(act_base)`,
+    /// then `lw w_rd, w_off(w_base)`, then `nn_mac mode acc, act_rd, w_rd`.
+    LoadMac {
+        mode: MacMode,
+        acc: Reg,
+        act_rd: Reg,
+        act_base: Reg,
+        act_off: u32,
+        w_rd: Reg,
+        w_base: Reg,
+        w_off: u32,
+        k: u8,
+        c_load: u32,
+    },
+    /// Fused scalar baseline MAC: `lb ra`, `lb rb`, `mul rm, ra, rb`,
+    /// `add acc, acc, rm`.
+    ScalarMac {
+        ra: Reg,
+        a_base: Reg,
+        a_off: u32,
+        rb: Reg,
+        b_base: Reg,
+        b_off: u32,
+        rm: Reg,
+        acc: Reg,
+        c_load: u32,
+        c_tail: u32,
+    },
+    /// Fused loop latch: `n`× `addi r, r, imm` then a conditional branch.
+    Latch {
+        bumps: [(Reg, u32); 3],
+        n: u8,
+        bop: BranchOp,
+        rs1: Reg,
+        rs2: Reg,
+        tgt: Tgt,
+        c_bumps: u32,
+        ct: u32,
+        cnt: u32,
+    },
+}
+
+/// A program translated for the micro-op engine. Tied to the decoded
+/// instruction stream, its link base and a [`Timing`] table — *not* to
+/// any particular core, so one translation serves any number of runs
+/// (see [`super::session::SimSession`]).
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    ops: Vec<MicroOp>,
+    /// Byte pc of the first instruction of each op (parallel to `ops`).
+    op_pc: Vec<u32>,
+    /// Instruction index → op index; `u32::MAX` marks the interior of a
+    /// fused strip. Has `n_instrs + 1` entries — the last maps the
+    /// one-past-the-end pc to the trailing [`MicroOp::Trap`].
+    instr_to_op: Vec<u32>,
+    base: u32,
+    n_instrs: usize,
+    /// False when static control flow defeats pc pre-resolution
+    /// (non-multiple-of-4 offsets); [`run`] then uses [`Core::run`].
+    clean: bool,
+    /// Instructions absorbed into fused superinstructions.
+    fused_instrs: usize,
+}
+
+impl CompiledProgram {
+    /// Translate a decoded program linked at `base` under `timing`.
+    pub fn translate(program: &[Instr], base: u32, timing: Timing) -> CompiledProgram {
+        let n = program.len();
+        let t = &timing;
+
+        // Pass 1: collect static branch/jump targets; any misaligned
+        // offset makes pc pre-resolution unsound for the whole program.
+        let mut is_target = vec![false; n];
+        let mut clean = true;
+        for (i, ins) in program.iter().enumerate() {
+            let off = match *ins {
+                Instr::Jal { offset, .. } | Instr::Branch { offset, .. } => Some(offset),
+                _ => None,
+            };
+            if let Some(off) = off {
+                if off % 4 != 0 {
+                    clean = false;
+                    break;
+                }
+                let pc = base.wrapping_add(4 * i as u32);
+                let ti = pc.wrapping_add(off as u32).wrapping_sub(base) / 4;
+                if (ti as usize) < n {
+                    is_target[ti as usize] = true;
+                }
+            }
+        }
+        if !clean {
+            return CompiledProgram {
+                ops: Vec::new(),
+                op_pc: Vec::new(),
+                instr_to_op: Vec::new(),
+                base,
+                n_instrs: n,
+                clean: false,
+                fused_instrs: 0,
+            };
+        }
+
+        // Pass 2: fuse + lower. Control-flow targets are stored as
+        // *instruction* indices (`Tgt::Op`) and rewritten to op indices
+        // in pass 3, once `instr_to_op` is complete.
+        let mk_tgt = |branch_instr: usize, off: i32| -> Tgt {
+            let pc = base.wrapping_add(4 * branch_instr as u32);
+            let tpc = pc.wrapping_add(off as u32);
+            let ti = tpc.wrapping_sub(base) / 4;
+            if (ti as usize) <= n {
+                Tgt::Op(ti)
+            } else {
+                Tgt::Illegal(tpc)
+            }
+        };
+
+        let mut ops = Vec::with_capacity(n + 1);
+        let mut op_pc = Vec::with_capacity(n + 1);
+        let mut instr_to_op = vec![u32::MAX; n + 1];
+        let mut fused_instrs = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            instr_to_op[i] = ops.len() as u32;
+            op_pc.push(base.wrapping_add(4 * i as u32));
+            if let Some((op, len)) = try_fuse(program, i, &is_target, t, &mk_tgt) {
+                ops.push(op);
+                fused_instrs += len;
+                i += len;
+            } else {
+                ops.push(lower_one(program[i], base.wrapping_add(4 * i as u32), i, t, &mk_tgt));
+                i += 1;
+            }
+        }
+        instr_to_op[n] = ops.len() as u32;
+        op_pc.push(base.wrapping_add(4 * n as u32));
+        ops.push(MicroOp::Trap);
+
+        // Pass 3: instruction-index targets → op indices. Every static
+        // target was marked in pass 1, so fusion never swallowed it and
+        // the map entry is real.
+        for op in &mut ops {
+            match op {
+                MicroOp::Jal { tgt, .. }
+                | MicroOp::Branch { tgt, .. }
+                | MicroOp::Latch { tgt, .. } => {
+                    if let Tgt::Op(ii) = *tgt {
+                        let oi = instr_to_op[ii as usize];
+                        debug_assert_ne!(oi, u32::MAX, "static target inside a fused strip");
+                        *tgt = Tgt::Op(oi);
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        CompiledProgram { ops, op_pc, instr_to_op, base, n_instrs: n, clean: true, fused_instrs }
+    }
+
+    /// Micro-ops in the stream (excluding the trailing trap).
+    pub fn op_count(&self) -> usize {
+        self.ops.len().saturating_sub(1)
+    }
+
+    /// Instructions in the source program.
+    pub fn instr_count(&self) -> usize {
+        self.n_instrs
+    }
+
+    /// Instructions absorbed into fused superinstructions.
+    pub fn fused_instr_count(&self) -> usize {
+        self.fused_instrs
+    }
+
+    /// False when [`run`] will delegate to the reference interpreter.
+    pub fn is_clean(&self) -> bool {
+        self.clean
+    }
+}
+
+/// Lower one instruction to a micro-op.
+fn lower_one(
+    ins: Instr,
+    pc: u32,
+    instr_idx: usize,
+    t: &Timing,
+    mk_tgt: &impl Fn(usize, i32) -> Tgt,
+) -> MicroOp {
+    match ins {
+        Instr::Lui { rd, imm } => MicroOp::LoadImm { rd, val: imm as u32, c: t.alu },
+        Instr::Auipc { rd, imm } => {
+            MicroOp::LoadImm { rd, val: pc.wrapping_add(imm as u32), c: t.alu }
+        }
+        Instr::Jal { rd, offset } => MicroOp::Jal {
+            rd,
+            link: pc.wrapping_add(4),
+            tgt: mk_tgt(instr_idx, offset),
+            c: t.jump,
+        },
+        Instr::Jalr { rd, rs1, offset } => MicroOp::Jalr {
+            rd,
+            rs1,
+            offset: offset as u32,
+            link: pc.wrapping_add(4),
+            c: t.jump,
+        },
+        Instr::Branch { op, rs1, rs2, offset } => MicroOp::Branch {
+            op,
+            rs1,
+            rs2,
+            tgt: mk_tgt(instr_idx, offset),
+            ct: t.branch_taken,
+            cnt: t.branch_not_taken,
+        },
+        Instr::Load { op, rd, rs1, offset } => {
+            MicroOp::Load { op, rd, rs1, offset: offset as u32, c: t.load }
+        }
+        Instr::Store { op, rs1, rs2, offset } => {
+            MicroOp::Store { op, rs1, rs2, offset: offset as u32, c: t.store }
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            MicroOp::OpImm { op, rd, rs1, imm: imm as u32, c: t.alu }
+        }
+        Instr::Op { op, rd, rs1, rs2 } => MicroOp::Op { op, rd, rs1, rs2, c: t.alu },
+        Instr::MulDiv { op, rd, rs1, rs2 } => {
+            let c = match op {
+                MulOp::Mul => t.mul,
+                MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => t.mulh,
+                MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu => t.div,
+            };
+            MicroOp::MulDiv { op, rd, rs1, rs2, c }
+        }
+        Instr::NnMac { mode, rd, rs1, rs2 } => MicroOp::NnMac { mode, rd, rs1, rs2 },
+        Instr::Csr { op: _, rd, rs1: _, csr } => MicroOp::Csr { rd, csr, c: t.csr },
+        Instr::Fence => MicroOp::Fence { c: t.fence },
+        Instr::Ecall => MicroOp::Ecall,
+        Instr::Ebreak => MicroOp::Ebreak,
+    }
+}
+
+/// Try to fuse a superinstruction starting at instruction `i`. The
+/// fused executor replays the exact sequential semantics, so the only
+/// hard requirements are the literal opcode pattern and that no static
+/// branch target points into the strip's interior.
+fn try_fuse(
+    p: &[Instr],
+    i: usize,
+    is_target: &[bool],
+    t: &Timing,
+    mk_tgt: &impl Fn(usize, i32) -> Tgt,
+) -> Option<(MicroOp, usize)> {
+    match p[i] {
+        Instr::Load { op: LoadOp::Lw, .. } => try_load_mac(p, i, is_target, t),
+        Instr::Load { op: LoadOp::Lb, .. } => try_scalar_mac(p, i, is_target, t),
+        Instr::OpImm { op: AluOp::Add, .. } => try_latch(p, i, is_target, t, mk_tgt),
+        _ => None,
+    }
+}
+
+/// k× `lw` of consecutive activation words + weight `lw` + `nn_mac`.
+fn try_load_mac(
+    p: &[Instr],
+    i: usize,
+    is_target: &[bool],
+    t: &Timing,
+) -> Option<(MicroOp, usize)> {
+    let Instr::Load { op: LoadOp::Lw, rd: rd0, rs1: ab, offset: ao } = p[i] else {
+        return None;
+    };
+    if rd0 == 0 {
+        return None;
+    }
+    for k in [1usize, 2, 4] {
+        if i + k + 1 >= p.len() {
+            continue;
+        }
+        let Instr::NnMac { mode, rd: acc, rs1, rs2 } = p[i + k + 1] else { continue };
+        if mode.activation_regs() as usize != k || rs1 != rd0 {
+            continue;
+        }
+        if rd0 as usize + k > NUM_REGS {
+            continue;
+        }
+        // The activation-word run: rd0+j ← (ao + 4j)(ab).
+        let mut run_ok = true;
+        for j in 1..k {
+            match p[i + j] {
+                Instr::Load { op: LoadOp::Lw, rd, rs1: b, offset }
+                    if rd == rd0 + j as u8 && b == ab && offset == ao + 4 * j as i32 => {}
+                _ => {
+                    run_ok = false;
+                    break;
+                }
+            }
+        }
+        if !run_ok {
+            continue;
+        }
+        let Instr::Load { op: LoadOp::Lw, rd: w_rd, rs1: w_base, offset: w_off } = p[i + k]
+        else {
+            continue;
+        };
+        if w_rd == 0 || rs2 != w_rd {
+            continue;
+        }
+        // The fused executor reads the activation base once, so it must
+        // not be overwritten by the act-word loads themselves.
+        if (rd0..rd0 + k as u8).contains(&ab) {
+            continue;
+        }
+        if is_target[i + 1..=i + k + 1].iter().any(|&b| b) {
+            continue;
+        }
+        return Some((
+            MicroOp::LoadMac {
+                mode,
+                acc,
+                act_rd: rd0,
+                act_base: ab,
+                act_off: ao as u32,
+                w_rd,
+                w_base,
+                w_off: w_off as u32,
+                k: k as u8,
+                c_load: t.load,
+            },
+            k + 2,
+        ));
+    }
+    None
+}
+
+/// `lb ra`, `lb rb`, `mul rm, ra, rb`, `add acc, acc, rm`.
+fn try_scalar_mac(
+    p: &[Instr],
+    i: usize,
+    is_target: &[bool],
+    t: &Timing,
+) -> Option<(MicroOp, usize)> {
+    if i + 3 >= p.len() {
+        return None;
+    }
+    let Instr::Load { op: LoadOp::Lb, rd: ra, rs1: a_base, offset: a_off } = p[i] else {
+        return None;
+    };
+    let Instr::Load { op: LoadOp::Lb, rd: rb, rs1: b_base, offset: b_off } = p[i + 1] else {
+        return None;
+    };
+    let Instr::MulDiv { op: MulOp::Mul, rd: rm, rs1, rs2 } = p[i + 2] else {
+        return None;
+    };
+    if rs1 != ra || rs2 != rb {
+        return None;
+    }
+    let Instr::Op { op: AluOp::Add, rd: acc, rs1: ar1, rs2: ar2 } = p[i + 3] else {
+        return None;
+    };
+    if ar1 != acc || ar2 != rm {
+        return None;
+    }
+    if is_target[i + 1..=i + 3].iter().any(|&b| b) {
+        return None;
+    }
+    Some((
+        MicroOp::ScalarMac {
+            ra,
+            a_base,
+            a_off: a_off as u32,
+            rb,
+            b_base,
+            b_off: b_off as u32,
+            rm,
+            acc,
+            c_load: t.load,
+            c_tail: t.mul + t.alu,
+        },
+        4,
+    ))
+}
+
+/// Up to 3× `addi r, r, imm` followed by a conditional branch.
+fn try_latch(
+    p: &[Instr],
+    i: usize,
+    is_target: &[bool],
+    t: &Timing,
+    mk_tgt: &impl Fn(usize, i32) -> Tgt,
+) -> Option<(MicroOp, usize)> {
+    let mut bumps = [(0u8, 0u32); 3];
+    let mut nb = 0usize;
+    while nb < 3 && i + nb < p.len() {
+        match p[i + nb] {
+            Instr::OpImm { op: AluOp::Add, rd, rs1, imm } if rd == rs1 => {
+                bumps[nb] = (rd, imm as u32);
+                nb += 1;
+            }
+            _ => break,
+        }
+    }
+    if nb == 0 || i + nb >= p.len() {
+        return None;
+    }
+    let Instr::Branch { op, rs1, rs2, offset } = p[i + nb] else {
+        return None;
+    };
+    if is_target[i + 1..=i + nb].iter().any(|&b| b) {
+        return None;
+    }
+    Some((
+        MicroOp::Latch {
+            bumps,
+            n: nb as u8,
+            bop: op,
+            rs1,
+            rs2,
+            tgt: mk_tgt(i + nb, offset),
+            c_bumps: nb as u32 * t.alu,
+            ct: t.branch_taken,
+            cnt: t.branch_not_taken,
+        },
+        nb + 1,
+    ))
+}
+
+#[inline]
+fn branch_taken(op: BranchOp, a: u32, b: u32) -> bool {
+    match op {
+        BranchOp::Beq => a == b,
+        BranchOp::Bne => a != b,
+        BranchOp::Blt => (a as i32) < (b as i32),
+        BranchOp::Bge => (a as i32) >= (b as i32),
+        BranchOp::Bltu => a < b,
+        BranchOp::Bgeu => a >= b,
+    }
+}
+
+/// Per-op control-flow outcome of the dispatch loop.
+enum Flow {
+    Seq,
+    Goto(Tgt),
+}
+
+/// Run `core` on the micro-op engine until halt or `max_cycles`.
+///
+/// Equivalent to [`Core::run`] (see the module docs for the cycle
+/// budget caveat). Falls back to the reference interpreter when the
+/// translation is not clean, when the entry pc is not a translated
+/// op boundary, or when a `jalr` lands inside a fused strip.
+pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason {
+    if !cp.clean || core.prog_base != cp.base || core.program.len() != cp.n_instrs {
+        return core.run(max_cycles);
+    }
+    // Entry: map the current pc onto the op stream.
+    let rel = core.pc.wrapping_sub(cp.base);
+    if rel % 4 != 0 {
+        return core.run(max_cycles);
+    }
+    let ii = (rel / 4) as usize;
+    if ii > cp.n_instrs {
+        return ExitReason::IllegalPc(core.pc);
+    }
+    let entry = cp.instr_to_op[ii];
+    if entry == u32::MAX {
+        return core.run(max_cycles);
+    }
+    let mut idx = entry as usize;
+
+    loop {
+        let flow = match cp.ops[idx] {
+            MicroOp::LoadImm { rd, val, c } => {
+                core.write_reg(rd, val);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::Jal { rd, link, tgt, c } => {
+                core.write_reg(rd, link);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Goto(tgt)
+            }
+            MicroOp::Jalr { rd, rs1, offset, link, c } => {
+                let target = core.regs[rs1 as usize].wrapping_add(offset) & !1;
+                core.write_reg(rd, link);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                let rel = target.wrapping_sub(cp.base);
+                if rel % 4 != 0 {
+                    core.pc = target;
+                    if core.perf.cycles >= max_cycles {
+                        return ExitReason::MaxCycles;
+                    }
+                    return core.run(max_cycles);
+                }
+                let ti = (rel / 4) as usize;
+                if ti > cp.n_instrs {
+                    core.pc = target;
+                    if core.perf.cycles >= max_cycles {
+                        return ExitReason::MaxCycles;
+                    }
+                    return ExitReason::IllegalPc(target);
+                }
+                let oi = cp.instr_to_op[ti];
+                if oi == u32::MAX {
+                    // Dynamic entry into a fused strip: replay on the
+                    // reference interpreter from here.
+                    core.pc = target;
+                    if core.perf.cycles >= max_cycles {
+                        return ExitReason::MaxCycles;
+                    }
+                    return core.run(max_cycles);
+                }
+                Flow::Goto(Tgt::Op(oi))
+            }
+            MicroOp::Branch { op, rs1, rs2, tgt, ct, cnt } => {
+                let a = core.regs[rs1 as usize];
+                let b = core.regs[rs2 as usize];
+                core.perf.instret += 1;
+                if branch_taken(op, a, b) {
+                    core.perf.taken_branches += 1;
+                    core.perf.cycles += ct as u64;
+                    Flow::Goto(tgt)
+                } else {
+                    core.perf.cycles += cnt as u64;
+                    Flow::Seq
+                }
+            }
+            MicroOp::Load { op, rd, rs1, offset, c } => {
+                let addr = core.regs[rs1 as usize].wrapping_add(offset);
+                let (width, sign) = match op {
+                    LoadOp::Lb => (1, true),
+                    LoadOp::Lh => (2, true),
+                    LoadOp::Lw => (4, false),
+                    LoadOp::Lbu => (1, false),
+                    LoadOp::Lhu => (2, false),
+                };
+                match core.mem.load(addr, width) {
+                    Ok(raw) => {
+                        let val = if sign {
+                            match width {
+                                1 => raw as u8 as i8 as i32 as u32,
+                                2 => raw as u16 as i16 as i32 as u32,
+                                _ => raw,
+                            }
+                        } else {
+                            raw
+                        };
+                        core.write_reg(rd, val);
+                        core.perf.loads += 1;
+                        core.perf.cycles += c as u64;
+                        core.perf.instret += 1;
+                        Flow::Seq
+                    }
+                    Err(f) => {
+                        core.pc = cp.op_pc[idx];
+                        return ExitReason::Fault(f);
+                    }
+                }
+            }
+            MicroOp::Store { op, rs1, rs2, offset, c } => {
+                let addr = core.regs[rs1 as usize].wrapping_add(offset);
+                let width = match op {
+                    StoreOp::Sb => 1,
+                    StoreOp::Sh => 2,
+                    StoreOp::Sw => 4,
+                };
+                match core.mem.store(addr, width, core.regs[rs2 as usize]) {
+                    Ok(()) => {
+                        core.perf.stores += 1;
+                        core.perf.cycles += c as u64;
+                        core.perf.instret += 1;
+                        Flow::Seq
+                    }
+                    Err(f) => {
+                        core.pc = cp.op_pc[idx];
+                        return ExitReason::Fault(f);
+                    }
+                }
+            }
+            MicroOp::OpImm { op, rd, rs1, imm, c } => {
+                let v = alu_eval(op, core.regs[rs1 as usize], imm);
+                core.write_reg(rd, v);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::Op { op, rd, rs1, rs2, c } => {
+                let v = alu_eval(op, core.regs[rs1 as usize], core.regs[rs2 as usize]);
+                core.write_reg(rd, v);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::MulDiv { op, rd, rs1, rs2, c } => {
+                let a = core.regs[rs1 as usize];
+                let b = core.regs[rs2 as usize];
+                let val = match op {
+                    MulOp::Mul => a.wrapping_mul(b),
+                    MulOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+                    MulOp::Mulhsu => (((a as i32 as i64) * (b as i64)) >> 32) as u32,
+                    MulOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+                    MulOp::Div => {
+                        let (a, b) = (a as i32, b as i32);
+                        let q = if b == 0 {
+                            -1
+                        } else if a == i32::MIN && b == -1 {
+                            i32::MIN
+                        } else {
+                            a.wrapping_div(b)
+                        };
+                        q as u32
+                    }
+                    MulOp::Divu => {
+                        if b == 0 {
+                            u32::MAX
+                        } else {
+                            a / b
+                        }
+                    }
+                    MulOp::Rem => {
+                        let (a, b) = (a as i32, b as i32);
+                        let r = if b == 0 {
+                            a
+                        } else if a == i32::MIN && b == -1 {
+                            0
+                        } else {
+                            a.wrapping_rem(b)
+                        };
+                        r as u32
+                    }
+                    MulOp::Remu => {
+                        if b == 0 {
+                            a
+                        } else {
+                            a % b
+                        }
+                    }
+                };
+                core.write_reg(rd, val);
+                core.perf.muldiv_instrs += 1;
+                if op == MulOp::Mul {
+                    core.perf.macs += 1;
+                    core.mac_unit.total_macs += 1;
+                }
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::NnMac { mode, rd, rs1, rs2 } => {
+                let k = mode.activation_regs() as usize;
+                let mut acts = [0u32; 4];
+                for (j, slot) in acts.iter_mut().enumerate().take(k) {
+                    *slot = core.regs[rs1 as usize + j];
+                }
+                let issue = core.mac_unit.issue(
+                    mode,
+                    core.regs[rd as usize],
+                    &acts[..k],
+                    core.regs[rs2 as usize],
+                );
+                core.write_reg(rd, issue.acc);
+                core.perf.macs += issue.macs as u64;
+                core.perf.nn_mac_instrs += 1;
+                core.perf.cycles += issue.cycles as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::Csr { rd, csr, c } => {
+                let val = core.perf.read_csr(csr);
+                core.write_reg(rd, val);
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::Fence { c } => {
+                core.perf.cycles += c as u64;
+                core.perf.instret += 1;
+                Flow::Seq
+            }
+            MicroOp::Ecall => {
+                core.perf.cycles += 1;
+                core.perf.instret += 1;
+                core.pc = cp.op_pc[idx];
+                return ExitReason::Ecall;
+            }
+            MicroOp::Ebreak => {
+                core.perf.cycles += 1;
+                core.perf.instret += 1;
+                core.pc = cp.op_pc[idx];
+                return ExitReason::Ebreak;
+            }
+            MicroOp::Trap => {
+                core.pc = cp.op_pc[idx];
+                return ExitReason::IllegalPc(cp.op_pc[idx]);
+            }
+            MicroOp::LoadMac {
+                mode,
+                acc,
+                act_rd,
+                act_base,
+                act_off,
+                w_rd,
+                w_base,
+                w_off,
+                k,
+                c_load,
+            } => {
+                let k = k as usize;
+                let base_addr = core.regs[act_base as usize].wrapping_add(act_off);
+                let mut buf = [0u32; 4];
+                match core.mem.load_word_run(base_addr, &mut buf[..k]) {
+                    Ok(()) => {}
+                    Err((j, f)) => {
+                        // Partial strip: the first j loads completed
+                        // exactly as they would have individually.
+                        for (jj, &w) in buf.iter().enumerate().take(j) {
+                            core.regs[act_rd as usize + jj] = w;
+                        }
+                        core.perf.loads += j as u64;
+                        core.perf.cycles += j as u64 * c_load as u64;
+                        core.perf.instret += j as u64;
+                        core.pc = cp.op_pc[idx].wrapping_add(4 * j as u32);
+                        return ExitReason::Fault(f);
+                    }
+                }
+                for (j, &w) in buf.iter().enumerate().take(k) {
+                    core.regs[act_rd as usize + j] = w;
+                }
+                let w_addr = core.regs[w_base as usize].wrapping_add(w_off);
+                let w_word = match core.mem.load(w_addr, 4) {
+                    Ok(w) => w,
+                    Err(f) => {
+                        core.perf.loads += k as u64;
+                        core.perf.cycles += k as u64 * c_load as u64;
+                        core.perf.instret += k as u64;
+                        core.pc = cp.op_pc[idx].wrapping_add(4 * k as u32);
+                        return ExitReason::Fault(f);
+                    }
+                };
+                core.regs[w_rd as usize] = w_word;
+                let issue = core.mac_unit.issue(
+                    mode,
+                    core.regs[acc as usize],
+                    &core.regs[act_rd as usize..act_rd as usize + k],
+                    w_word,
+                );
+                core.write_reg(acc, issue.acc);
+                core.perf.loads += (k + 1) as u64;
+                core.perf.macs += issue.macs as u64;
+                core.perf.nn_mac_instrs += 1;
+                core.perf.cycles += (k + 1) as u64 * c_load as u64 + issue.cycles as u64;
+                core.perf.instret += (k + 2) as u64;
+                Flow::Seq
+            }
+            MicroOp::ScalarMac {
+                ra, a_base, a_off, rb, b_base, b_off, rm, acc, c_load, c_tail,
+            } => {
+                let addr_a = core.regs[a_base as usize].wrapping_add(a_off);
+                let va = match core.mem.load(addr_a, 1) {
+                    Ok(raw) => raw as u8 as i8 as i32 as u32,
+                    Err(f) => {
+                        core.pc = cp.op_pc[idx];
+                        return ExitReason::Fault(f);
+                    }
+                };
+                core.write_reg(ra, va);
+                let addr_b = core.regs[b_base as usize].wrapping_add(b_off);
+                let vb = match core.mem.load(addr_b, 1) {
+                    Ok(raw) => raw as u8 as i8 as i32 as u32,
+                    Err(f) => {
+                        core.perf.loads += 1;
+                        core.perf.cycles += c_load as u64;
+                        core.perf.instret += 1;
+                        core.pc = cp.op_pc[idx].wrapping_add(4);
+                        return ExitReason::Fault(f);
+                    }
+                };
+                core.write_reg(rb, vb);
+                let prod = core.regs[ra as usize].wrapping_mul(core.regs[rb as usize]);
+                core.write_reg(rm, prod);
+                let sum = core.regs[acc as usize].wrapping_add(core.regs[rm as usize]);
+                core.write_reg(acc, sum);
+                core.perf.loads += 2;
+                core.perf.muldiv_instrs += 1;
+                core.perf.macs += 1;
+                core.mac_unit.total_macs += 1;
+                core.perf.cycles += 2 * c_load as u64 + c_tail as u64;
+                core.perf.instret += 4;
+                Flow::Seq
+            }
+            MicroOp::Latch { bumps, n, bop, rs1, rs2, tgt, c_bumps, ct, cnt } => {
+                for &(r, imm) in bumps.iter().take(n as usize) {
+                    let v = core.regs[r as usize].wrapping_add(imm);
+                    core.write_reg(r, v);
+                }
+                let a = core.regs[rs1 as usize];
+                let b = core.regs[rs2 as usize];
+                core.perf.instret += n as u64 + 1;
+                if branch_taken(bop, a, b) {
+                    core.perf.taken_branches += 1;
+                    core.perf.cycles += (c_bumps + ct) as u64;
+                    Flow::Goto(tgt)
+                } else {
+                    core.perf.cycles += (c_bumps + cnt) as u64;
+                    Flow::Seq
+                }
+            }
+        };
+
+        match flow {
+            Flow::Seq => idx += 1,
+            Flow::Goto(Tgt::Op(i)) => idx = i as usize,
+            Flow::Goto(Tgt::Illegal(pc)) => {
+                core.pc = pc;
+                if core.perf.cycles >= max_cycles {
+                    return ExitReason::MaxCycles;
+                }
+                return ExitReason::IllegalPc(pc);
+            }
+        }
+        if core.perf.cycles >= max_cycles {
+            core.pc = cp.op_pc[idx];
+            return ExitReason::MaxCycles;
+        }
+    }
+}

@@ -32,9 +32,20 @@ impl std::fmt::Display for MemFault {
 impl std::error::Error for MemFault {}
 
 /// Flat little-endian memory.
+///
+/// The backing buffer may be larger than the *logical* size (`limit`):
+/// the [`crate::sim::session::SimSession`] pool hands the same buffer
+/// to kernels of different footprints, and bounds checks always use the
+/// logical size so fault behaviour is identical to a freshly-allocated
+/// memory of exactly `limit` bytes. A dirty high-water mark tracks the
+/// highest byte ever written so reuse only zeroes what was touched.
 #[derive(Debug, Clone)]
 pub struct Memory {
     bytes: Vec<u8>,
+    /// Logical size: accesses at or beyond this address fault.
+    limit: usize,
+    /// One past the highest byte written (guest stores + host writes).
+    dirty_high: usize,
     /// Loads issued (instruction count).
     pub loads: u64,
     /// Stores issued (instruction count).
@@ -48,12 +59,35 @@ pub struct Memory {
 impl Memory {
     /// Allocate `size` zeroed bytes.
     pub fn new(size: usize) -> Self {
-        Memory { bytes: vec![0; size], loads: 0, stores: 0, load_bytes: 0, store_bytes: 0 }
+        Memory {
+            bytes: vec![0; size],
+            limit: size,
+            dirty_high: 0,
+            loads: 0,
+            stores: 0,
+            load_bytes: 0,
+            store_bytes: 0,
+        }
     }
 
-    /// Total size in bytes.
+    /// Logical size in bytes (the fault boundary).
     pub fn size(&self) -> usize {
-        self.bytes.len()
+        self.limit
+    }
+
+    /// Recycle this memory for a new run of logical size `limit`:
+    /// grows the backing buffer if needed, zeroes every byte written by
+    /// the previous tenant and resets the access counters. Equivalent
+    /// to `Memory::new(limit)` without the allocation.
+    pub fn reset_for_reuse(&mut self, limit: usize) {
+        if self.bytes.len() < limit {
+            self.bytes.resize(limit, 0);
+        }
+        let dirty = self.dirty_high.min(self.bytes.len());
+        self.bytes[..dirty].fill(0);
+        self.dirty_high = 0;
+        self.limit = limit;
+        self.reset_counters();
     }
 
     /// Reset the access counters (e.g. between warm-up and measurement).
@@ -74,7 +108,7 @@ impl Memory {
         let a = addr as usize;
         // Natural alignment, as required by Ibex without the unaligned
         // access retry path (our codegen always emits aligned accesses).
-        if addr % width != 0 || a + width as usize > self.bytes.len() {
+        if addr % width != 0 || a + width as usize > self.limit {
             return Err(MemFault { addr, width, is_store });
         }
         Ok(a)
@@ -99,12 +133,50 @@ impl Memory {
         })
     }
 
+    /// Counted load of a run of `out.len()` consecutive words starting
+    /// at `addr` — the micro-op engine's fused-strip fast path. Counts
+    /// exactly like `out.len()` individual word loads. On a fault,
+    /// returns the index of the first faulting word; earlier words have
+    /// been read (and counted), exactly as sequential loads would.
+    #[inline]
+    pub fn load_word_run(&mut self, addr: u32, out: &mut [u32]) -> Result<(), (usize, MemFault)> {
+        let a = addr as usize;
+        let n = out.len();
+        if addr % 4 == 0 && a + 4 * n <= self.limit {
+            for (j, slot) in out.iter_mut().enumerate() {
+                let b = a + 4 * j;
+                *slot = u32::from_le_bytes([
+                    self.bytes[b],
+                    self.bytes[b + 1],
+                    self.bytes[b + 2],
+                    self.bytes[b + 3],
+                ]);
+            }
+            self.loads += n as u64;
+            self.load_bytes += 4 * n as u64;
+            return Ok(());
+        }
+        // Cold path: replay element-wise to find the faulting word with
+        // per-access counting semantics.
+        for (j, slot) in out.iter_mut().enumerate() {
+            match self.load(addr.wrapping_add(4 * j as u32), 4) {
+                Ok(v) => *slot = v,
+                Err(f) => return Err((j, f)),
+            }
+        }
+        Ok(())
+    }
+
     /// Counted store of `width` ∈ {1,2,4} bytes.
     #[inline]
     pub fn store(&mut self, addr: u32, width: u32, value: u32) -> Result<(), MemFault> {
         let a = self.check(addr, width, true)?;
         self.stores += 1;
         self.store_bytes += width as u64;
+        let end = a + width as usize;
+        if end > self.dirty_high {
+            self.dirty_high = end;
+        }
         match width {
             1 => self.bytes[a] = value as u8,
             2 => self.bytes[a..a + 2].copy_from_slice(&(value as u16).to_le_bytes()),
@@ -117,8 +189,11 @@ impl Memory {
     /// Uncounted host-side write (program/data loading).
     pub fn write_bytes(&mut self, addr: u32, data: &[u8]) {
         let a = addr as usize;
-        assert!(a + data.len() <= self.bytes.len(), "host write out of bounds");
+        assert!(a + data.len() <= self.limit, "host write out of bounds");
         self.bytes[a..a + data.len()].copy_from_slice(data);
+        if a + data.len() > self.dirty_high {
+            self.dirty_high = a + data.len();
+        }
     }
 
     /// Uncounted host-side write of 32-bit words.
@@ -131,9 +206,12 @@ impl Memory {
     /// Uncounted host-side write of int8 values.
     pub fn write_i8(&mut self, addr: u32, data: &[i8]) {
         let a = addr as usize;
-        assert!(a + data.len() <= self.bytes.len(), "host write out of bounds");
+        assert!(a + data.len() <= self.limit, "host write out of bounds");
         for (i, &v) in data.iter().enumerate() {
             self.bytes[a + i] = v as u8;
+        }
+        if a + data.len() > self.dirty_high {
+            self.dirty_high = a + data.len();
         }
     }
 
@@ -144,9 +222,12 @@ impl Memory {
         }
     }
 
-    /// Uncounted host-side read.
+    /// Uncounted host-side read. Bounds-checked against the *logical*
+    /// size so a recycled pooled buffer behaves exactly like a fresh
+    /// `Memory::new(limit)` (no silent zeros from slack capacity).
     pub fn read_bytes(&self, addr: u32, len: usize) -> &[u8] {
         let a = addr as usize;
+        assert!(a + len <= self.limit, "host read out of bounds");
         &self.bytes[a..a + len]
     }
 
@@ -190,6 +271,40 @@ mod tests {
         assert!(m.load(2, 4).is_err());
         assert!(m.load(16, 1).is_err());
         assert!(m.store(14, 4, 0).is_err());
+    }
+
+    #[test]
+    fn reuse_restores_pristine_state() {
+        let mut m = Memory::new(32);
+        m.store(4, 4, 0x11223344).unwrap();
+        m.write_i8(8, &[7, 8]);
+        m.reset_for_reuse(64);
+        assert_eq!(m.size(), 64);
+        assert_eq!(m.accesses(), 0);
+        assert_eq!(m.read_i32(4, 1), vec![0]);
+        assert_eq!(m.read_i8(8, 2), vec![0, 0]);
+        // The larger logical size is addressable; beyond it faults.
+        assert!(m.store(60, 4, 1).is_ok());
+        assert!(m.load(64, 1).is_err());
+        // Shrinking the logical size reinstates the tighter bound.
+        m.reset_for_reuse(16);
+        assert!(m.load(16, 1).is_err());
+    }
+
+    #[test]
+    fn word_run_counts_like_individual_loads() {
+        let mut m = Memory::new(64);
+        m.write_words(8, &[1, 2, 3]);
+        let mut out = [0u32; 3];
+        m.load_word_run(8, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+        assert_eq!(m.loads, 3);
+        assert_eq!(m.load_bytes, 12);
+        // Faulting run: first word reads (and counts), second faults.
+        let mut out2 = [0u32; 2];
+        let err = m.load_word_run(60, &mut out2).unwrap_err();
+        assert_eq!(err.0, 1);
+        assert_eq!(m.loads, 4);
     }
 
     #[test]

@@ -9,16 +9,48 @@
 //! [`mac_unit::MacUnit`] datapath model.
 //!
 //! Functional semantics are bit-exact RV32IM. Programs halt via `ecall`.
+//!
+//! ## Execution paths
+//!
+//! Two interpreters share the architectural state:
+//!
+//! * [`Core::step`] / [`Core::run`] — the **reference interpreter**: one
+//!   decoded-[`Instr`] match per step with byte-pc arithmetic. Simple,
+//!   obviously correct, and the semantic oracle for the engine below
+//!   (see `tests/engine_equivalence.rs`).
+//! * [`engine`] — the **micro-op engine**: [`engine::CompiledProgram`]
+//!   translates the decoded program *once* into a flat micro-op stream
+//!   with branch/jump targets pre-resolved to stream indices, per-op
+//!   cycle costs pre-computed from [`Timing`], and the kernel
+//!   generators' inner-loop strips fused into superinstructions
+//!   (activation-word loads + weight load + `nn_mac`; the scalar
+//!   load-load-mul-add MAC; pointer-bump/branch loop latches). Programs
+//!   the translator cannot prove clean (misaligned static control flow)
+//!   and dynamic jumps into fused strips fall back to the reference
+//!   interpreter, so the engine is observationally identical on every
+//!   program — it is purely a throughput optimisation.
+//!
+//! [`session`] layers compile-once/run-many reuse on top:
+//! [`session::SimSession`] pools [`Memory`] buffers (a run recycles a
+//! previous 16 MiB buffer instead of re-allocating) and executes
+//! pre-translated [`session::CompiledImage`]s; `kernels::run` keys those
+//! images by kernel spec so DSE sweeps and whole-model measurement
+//! assemble + translate each kernel exactly once.
 
+pub mod engine;
 pub mod mac_unit;
 pub mod memory;
 pub mod perf;
+pub mod session;
 
 use crate::isa::decode::decode;
 use crate::isa::*;
+use std::sync::Arc;
+pub use engine::CompiledProgram;
 pub use mac_unit::{MacUnit, MacUnitConfig};
 pub use memory::{MemFault, Memory};
 pub use perf::PerfCounters;
+pub use session::{CompiledImage, SimSession};
 
 /// Per-instruction-class cycle costs (Ibex user manual, 2-stage pipeline,
 /// single-cycle multiplier, 0-wait-state memories).
@@ -115,7 +147,7 @@ pub struct Core {
     /// The mixed-precision MAC block.
     pub mac_unit: MacUnit,
     timing: Timing,
-    program: Vec<Instr>,
+    program: Arc<[Instr]>,
     prog_base: u32,
 }
 
@@ -127,6 +159,14 @@ impl Core {
         // programs (and the disassembler) see real bytes.
         let words = crate::isa::encode::encode_program(&program);
         mem.write_words(base, &words);
+        Self::with_memory(cfg, Arc::from(program), base, mem)
+    }
+
+    /// Build a core around a shared program and an existing (possibly
+    /// recycled) memory. The caller is responsible for staging the
+    /// program image in `mem` — [`session::SimSession`] writes the
+    /// pre-encoded words once per checkout instead of re-encoding.
+    pub fn with_memory(cfg: CoreConfig, program: Arc<[Instr]>, base: u32, mem: Memory) -> Self {
         Core {
             regs: [0; NUM_REGS],
             pc: base,
@@ -139,10 +179,30 @@ impl Core {
         }
     }
 
+    /// Tear the core down, recovering its memory for pooling.
+    pub fn into_memory(self) -> Memory {
+        self.mem
+    }
+
     /// Build a core from raw machine words (exercises the decoder path).
     pub fn from_words(cfg: CoreConfig, words: &[u32], base: u32) -> Result<Self, decode::DecodeError> {
         let program = words.iter().map(|&w| decode(w)).collect::<Result<Vec<_>, _>>()?;
         Ok(Self::new(cfg, program, base))
+    }
+
+    /// Translate this core's program for the micro-op engine. The
+    /// result is tied to the program + link base + timing table, not to
+    /// this core's architectural state, so it can be shared by any
+    /// number of cores running the same program.
+    pub fn compile(&self) -> engine::CompiledProgram {
+        engine::CompiledProgram::translate(&self.program, self.prog_base, self.timing)
+    }
+
+    /// Run on the micro-op engine until halt or `max_cycles`.
+    /// Observationally identical to [`Core::run`] (the equivalence is
+    /// property-tested), several-fold faster on kernel workloads.
+    pub fn run_engine(&mut self, cp: &engine::CompiledProgram, max_cycles: u64) -> ExitReason {
+        engine::run(self, cp, max_cycles)
     }
 
     #[inline]

@@ -1,0 +1,250 @@
+//! Reusable simulation sessions: pooled memories + pre-translated
+//! program images.
+//!
+//! Before this layer existed, every kernel invocation allocated a fresh
+//! 16 MiB [`Memory`], re-encoded the program into it and re-walked the
+//! decoded stream — for a DSE sweep that is thousands of identical
+//! setups. A [`SimSession`] amortises all of it:
+//!
+//! * [`CompiledImage`] bundles a shared decoded program, its encoded
+//!   word image and its [`engine::CompiledProgram`] translation —
+//!   built once per kernel (see the keyed cache in `kernels::run`).
+//! * The session's **memory pool** recycles simulator memories across
+//!   runs: [`Memory::reset_for_reuse`] zeroes only the bytes the
+//!   previous tenant dirtied and reinstates the exact logical size, so
+//!   fault behaviour is indistinguishable from a fresh allocation.
+//! * [`SimSession::execute`] stitches the two together: checkout →
+//!   stage image → stage operands → run on the micro-op engine → read
+//!   results → return the memory to the pool.
+//!
+//! The session is `Sync`; the DSE/coordinator worker pools share one
+//! global instance ([`SimSession::global`]).
+
+use super::engine::CompiledProgram;
+use super::{engine, Core, CoreConfig, ExitReason, Memory, Timing};
+use crate::isa::Instr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A program prepared for repeated execution: decoded instructions
+/// (shared, for the reference interpreter / tracing), the encoded word
+/// image (staged into memory on each run) and the micro-op translation.
+#[derive(Debug, Clone)]
+pub struct CompiledImage {
+    /// Decoded program (shared with every core that runs it).
+    pub prog: Arc<[Instr]>,
+    /// Encoded machine words mirrored into simulator memory.
+    pub words: Vec<u32>,
+    /// Micro-op translation (engine fast path).
+    pub compiled: CompiledProgram,
+    /// Link base address.
+    pub base: u32,
+    /// The cycle-cost table the translation baked in. Executions under
+    /// a *different* `CoreConfig::timing` must not use the micro-op
+    /// path — [`SimSession::execute_backend`] checks and falls back to
+    /// the reference interpreter, which always reads the live table.
+    pub timing: Timing,
+}
+
+impl CompiledImage {
+    /// Assemble an image from a decoded program under `timing`.
+    pub fn new(prog: Vec<Instr>, base: u32, timing: Timing) -> Self {
+        let words = crate::isa::encode::encode_program(&prog);
+        let compiled = CompiledProgram::translate(&prog, base, timing);
+        CompiledImage { prog: Arc::from(prog), words, compiled, base, timing }
+    }
+}
+
+/// Counters for observability (hit rates show up in bench output).
+#[derive(Debug, Default)]
+pub struct SessionStats {
+    /// Memories handed out from the pool.
+    pub mem_reuses: AtomicU64,
+    /// Memories freshly allocated.
+    pub mem_allocs: AtomicU64,
+    /// Engine executions completed.
+    pub runs: AtomicU64,
+}
+
+/// A pool of simulator memories + the execution entry point.
+#[derive(Debug, Default)]
+pub struct SimSession {
+    pool: Mutex<Vec<Memory>>,
+    /// Usage counters.
+    pub stats: SessionStats,
+}
+
+/// Keep at most this many idle memories around (bounds resident RAM at
+/// a few × the largest model footprint while letting a worker pool run
+/// fully in parallel).
+const MAX_POOLED: usize = 16;
+
+impl SimSession {
+    /// Fresh session with an empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide session shared by the kernel runners and the
+    /// DSE / coordinator worker pools.
+    pub fn global() -> &'static SimSession {
+        static GLOBAL: OnceLock<SimSession> = OnceLock::new();
+        GLOBAL.get_or_init(SimSession::new)
+    }
+
+    /// Check a memory of logical size `size` out of the pool (recycled
+    /// and zeroed) or allocate a fresh one.
+    pub fn checkout(&self, size: usize) -> Memory {
+        let recycled = self.pool.lock().unwrap().pop();
+        match recycled {
+            Some(mut m) => {
+                m.reset_for_reuse(size);
+                self.stats.mem_reuses.fetch_add(1, Ordering::Relaxed);
+                m
+            }
+            None => {
+                self.stats.mem_allocs.fetch_add(1, Ordering::Relaxed);
+                Memory::new(size)
+            }
+        }
+    }
+
+    /// Return a memory to the pool for later reuse.
+    pub fn checkin(&self, mem: Memory) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < MAX_POOLED {
+            pool.push(mem);
+        }
+    }
+
+    /// Idle memories currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    /// Execute `image` on a pooled core: checkout memory, stage the
+    /// program image, let `stage` fill operand buffers, run on the
+    /// micro-op engine, hand the finished core to `read`, and recycle
+    /// the memory. Returns `read`'s value and the exit reason.
+    pub fn execute<T>(
+        &self,
+        cfg: CoreConfig,
+        image: &CompiledImage,
+        stage: impl FnOnce(&mut Core),
+        read: impl FnOnce(&Core) -> T,
+    ) -> (T, ExitReason) {
+        self.execute_backend(cfg, image, true, stage, read)
+    }
+
+    /// [`SimSession::execute`] with an explicit interpreter choice:
+    /// `use_engine = false` runs the reference interpreter instead of
+    /// the micro-op engine (the bench harness measures the gap; the
+    /// equivalence property test pins the semantics).
+    pub fn execute_backend<T>(
+        &self,
+        cfg: CoreConfig,
+        image: &CompiledImage,
+        use_engine: bool,
+        stage: impl FnOnce(&mut Core),
+        read: impl FnOnce(&Core) -> T,
+    ) -> (T, ExitReason) {
+        let mut mem = self.checkout(cfg.mem_size);
+        mem.write_words(image.base, &image.words);
+        let mut core = Core::with_memory(cfg, image.prog.clone(), image.base, mem);
+        stage(&mut core);
+        core.mem.reset_counters(); // measure only the kernel's own traffic
+        // The translation baked the image's timing table into its cycle
+        // costs; a mismatched CoreConfig must take the reference path.
+        let reason = if use_engine && cfg.timing == image.timing {
+            engine::run(&mut core, &image.compiled, u64::MAX)
+        } else {
+            core.run(u64::MAX)
+        };
+        self.stats.runs.fetch_add(1, Ordering::Relaxed);
+        let out = read(&core);
+        self.checkin(core.into_memory());
+        (out, reason)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{reg, AluOp, MacMode};
+
+    fn store42_image() -> CompiledImage {
+        // x5 = 42 ; sw 256(x0), x5 ; ecall
+        let prog = vec![
+            Instr::OpImm { op: AluOp::Add, rd: reg::T0, rs1: 0, imm: 42 },
+            Instr::Store { op: crate::isa::StoreOp::Sw, rs1: 0, rs2: reg::T0, offset: 256 },
+            Instr::Ecall,
+        ];
+        CompiledImage::new(prog, 0, Timing::default())
+    }
+
+    #[test]
+    fn execute_runs_and_recycles_memory() {
+        let s = SimSession::new();
+        let image = store42_image();
+        let cfg = CoreConfig { mem_size: 4096, ..Default::default() };
+        for round in 0..3 {
+            let (val, reason) = s.execute(
+                cfg,
+                &image,
+                |_| {},
+                |core| core.mem.read_i32(256, 1)[0],
+            );
+            assert_eq!(reason, ExitReason::Ecall, "round {round}");
+            // The recycled memory must be zeroed between tenants, so
+            // the observed value always comes from this run.
+            assert_eq!(val, 42, "round {round}");
+        }
+        assert_eq!(s.stats.mem_allocs.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats.mem_reuses.load(Ordering::Relaxed), 2);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn image_translation_fuses_kernel_strips() {
+        // A dense mode kernel must contain fused LoadMac strips.
+        let spec = crate::kernels::dense::DenseSpec {
+            in_dim: 64,
+            out_dim: 4,
+            rq: crate::nn::quant::Requant::from_real_scale(0.01),
+            relu: true,
+            out_i32: false,
+        };
+        let kp = crate::kernels::dense::build_mode(MacMode::W2, spec);
+        let image =
+            CompiledImage::new(kp.prog.clone(), crate::kernels::PROG_BASE, Timing::default());
+        assert!(image.compiled.is_clean());
+        assert!(
+            image.compiled.fused_instr_count() > kp.prog.len() / 2,
+            "expected the unrolled inner strips to fuse: {} of {}",
+            image.compiled.fused_instr_count(),
+            kp.prog.len()
+        );
+    }
+
+    #[test]
+    fn parallel_checkouts_are_independent() {
+        let s = SimSession::new();
+        let image = Arc::new(store42_image());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let s = &s;
+                let image = Arc::clone(&image);
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        let cfg = CoreConfig { mem_size: 4096, ..Default::default() };
+                        let (val, reason) =
+                            s.execute(cfg, &image, |_| {}, |c| c.mem.read_i32(256, 1)[0]);
+                        assert_eq!(reason, ExitReason::Ecall);
+                        assert_eq!(val, 42);
+                    }
+                });
+            }
+        });
+        assert!(s.pooled() <= 4);
+    }
+}

@@ -1,0 +1,424 @@
+//! Differential property test: the pre-decoded micro-op engine
+//! (`sim::engine`) must be observationally identical to the reference
+//! interpreter (`Core::step`) — same exit reason, registers, pc, memory
+//! image, memory-access counters, perf counters (including exact cycle
+//! totals) and MAC-unit counters — over randomly generated RV32IM +
+//! `nn_mac` programs.
+//!
+//! The generator emits every instruction class, the exact inner-loop
+//! strips the engine fuses (packed-MAC, scalar-MAC, loop latches with
+//! backward branches), deliberate memory faults, and `jalr`s that land
+//! near (or inside) fused strips to exercise the dynamic-entry
+//! fallback. Programs terminate by construction: control flow is
+//! forward-only except bounded counted loops.
+
+use mpnn::isa::*;
+use mpnn::rng::Rng;
+use mpnn::sim::{Core, CoreConfig, ExitReason};
+
+const MEM: usize = 4096;
+
+/// Run `prog` on both interpreters and assert identical outcomes.
+fn assert_equiv(prog: Vec<Instr>, max_cycles: u64, tag: &str) -> ExitReason {
+    let cfg = CoreConfig { mem_size: MEM, ..Default::default() };
+    let mut legacy = Core::new(cfg, prog.clone(), 0);
+    let mut fast = Core::new(cfg, prog, 0);
+    let cp = fast.compile();
+    let r1 = legacy.run(max_cycles);
+    let r2 = fast.run_engine(&cp, max_cycles);
+    assert_eq!(r1, r2, "{tag}: exit reason");
+    assert_eq!(legacy.regs, fast.regs, "{tag}: registers");
+    assert_eq!(legacy.pc, fast.pc, "{tag}: pc");
+    assert_eq!(legacy.perf, fast.perf, "{tag}: perf counters");
+    assert_eq!(legacy.mem.loads, fast.mem.loads, "{tag}: mem loads");
+    assert_eq!(legacy.mem.stores, fast.mem.stores, "{tag}: mem stores");
+    assert_eq!(legacy.mem.load_bytes, fast.mem.load_bytes, "{tag}: load bytes");
+    assert_eq!(legacy.mem.store_bytes, fast.mem.store_bytes, "{tag}: store bytes");
+    assert_eq!(
+        legacy.mem.read_bytes(0, MEM),
+        fast.mem.read_bytes(0, MEM),
+        "{tag}: memory image"
+    );
+    assert_eq!(legacy.mac_unit.total_macs, fast.mac_unit.total_macs, "{tag}: mac count");
+    assert_eq!(legacy.mac_unit.total_issues, fast.mac_unit.total_issues, "{tag}: mac issues");
+    r1
+}
+
+/// Registers the generator may clobber with arbitrary values.
+const SCRATCH: [u8; 10] = [5, 6, 7, 8, 10, 11, 12, 13, 14, 15];
+/// Data-pointer registers (initialised to in-bounds word addresses).
+const BASES: [u8; 6] = [21, 22, 23, 24, 25, 26];
+/// Loop counter (only the latch template touches it).
+const CTR: u8 = 9;
+/// Jump-target register (holds the final ecall's pc).
+const JREG: u8 = 30;
+/// Out-of-bounds pointer (initialised past the end of memory).
+const OOB: u8 = 27;
+
+struct Gen {
+    rng: Rng,
+    prog: Vec<Instr>,
+}
+
+impl Gen {
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.rng.next_u32() as usize) % xs.len()]
+    }
+
+    fn scratch(&mut self) -> u8 {
+        let s = SCRATCH;
+        self.pick(&s)
+    }
+
+    fn base(&mut self) -> u8 {
+        let b = BASES;
+        self.pick(&b)
+    }
+
+    fn alu_op(&mut self) -> AluOp {
+        self.pick(&[
+            AluOp::Add,
+            AluOp::Sub,
+            AluOp::Sll,
+            AluOp::Slt,
+            AluOp::Sltu,
+            AluOp::Xor,
+            AluOp::Srl,
+            AluOp::Sra,
+            AluOp::Or,
+            AluOp::And,
+        ])
+    }
+
+    /// One random body item; may emit several instructions.
+    fn emit_item(&mut self, faulty: bool) {
+        match self.rng.next_u32() % 14 {
+            0 => {
+                let (op, rd, rs1) = (self.alu_op(), self.scratch(), self.scratch());
+                let op = if op == AluOp::Sub { AluOp::Add } else { op }; // OP-IMM has no sub
+                let imm = self.rng.range_i32(-2048, 2047);
+                self.prog.push(Instr::OpImm { op, rd, rs1, imm });
+            }
+            1 => {
+                let (op, rd) = (self.alu_op(), self.scratch());
+                let (rs1, rs2) = (self.scratch(), self.scratch());
+                self.prog.push(Instr::Op { op, rd, rs1, rs2 });
+            }
+            2 => {
+                let op = self.pick(&[
+                    MulOp::Mul,
+                    MulOp::Mulh,
+                    MulOp::Mulhsu,
+                    MulOp::Mulhu,
+                    MulOp::Div,
+                    MulOp::Divu,
+                    MulOp::Rem,
+                    MulOp::Remu,
+                ]);
+                let (rd, rs1, rs2) = (self.scratch(), self.scratch(), self.scratch());
+                self.prog.push(Instr::MulDiv { op, rd, rs1, rs2 });
+            }
+            3 => {
+                let rd = self.scratch();
+                let imm = (self.rng.next_u32() & 0xffff_f000) as i32;
+                if self.rng.next_u32() % 2 == 0 {
+                    self.prog.push(Instr::Lui { rd, imm });
+                } else {
+                    self.prog.push(Instr::Auipc { rd, imm });
+                }
+            }
+            4 => {
+                // In-bounds load of a random width.
+                let op = self.pick(&[LoadOp::Lb, LoadOp::Lbu, LoadOp::Lh, LoadOp::Lhu, LoadOp::Lw]);
+                let width = match op {
+                    LoadOp::Lb | LoadOp::Lbu => 1,
+                    LoadOp::Lh | LoadOp::Lhu => 2,
+                    LoadOp::Lw => 4,
+                };
+                let offset = ((self.rng.next_u32() % 128) * width) as i32 & !(width as i32 - 1);
+                let (rd, rs1) = (self.scratch(), self.base());
+                self.prog.push(Instr::Load { op, rd, rs1, offset });
+            }
+            5 => {
+                let op = self.pick(&[StoreOp::Sb, StoreOp::Sh, StoreOp::Sw]);
+                let width = match op {
+                    StoreOp::Sb => 1,
+                    StoreOp::Sh => 2,
+                    StoreOp::Sw => 4,
+                };
+                let offset = ((self.rng.next_u32() % 128) * width) as i32;
+                let (rs1, rs2) = (self.base(), self.scratch());
+                self.prog.push(Instr::Store { op, rs1, rs2, offset });
+            }
+            6 => {
+                // Standalone nn_mac on whatever the registers hold.
+                let mode = self.pick(&[MacMode::W8, MacMode::W4, MacMode::W2]);
+                let k = mode.activation_regs() as u8;
+                let rd = self.scratch();
+                let rs1 = 10 + (self.rng.next_u32() % (17 - k as u32)) as u8; // rs1+k <= 27
+                let rs2 = self.scratch();
+                self.prog.push(Instr::NnMac { mode, rd, rs1, rs2 });
+            }
+            7 => {
+                let csr = self.pick(&[
+                    csr::MCYCLE,
+                    csr::MINSTRET,
+                    csr::MHPM_LOADS,
+                    csr::MHPM_STORES,
+                    csr::MHPM_MACS,
+                ]);
+                let rd = self.scratch();
+                self.prog.push(Instr::Csr { op: CsrOp::Rs, rd, rs1: 0, csr });
+            }
+            8 => self.prog.push(Instr::Fence),
+            9 => {
+                // Forward conditional branch over 1..=4 instructions.
+                let op = self.pick(&[
+                    BranchOp::Beq,
+                    BranchOp::Bne,
+                    BranchOp::Blt,
+                    BranchOp::Bge,
+                    BranchOp::Bltu,
+                    BranchOp::Bgeu,
+                ]);
+                let (rs1, rs2) = (self.scratch(), self.scratch());
+                let d = 1 + (self.rng.next_u32() % 4) as i32;
+                self.prog.push(Instr::Branch { op, rs1, rs2, offset: 4 * (d + 1) });
+                for _ in 0..d {
+                    self.emit_simple();
+                }
+            }
+            10 => {
+                // Forward jal over 1..=3 instructions.
+                let d = 1 + (self.rng.next_u32() % 3) as i32;
+                let rd = if self.rng.next_u32() % 2 == 0 { 0 } else { 1 };
+                self.prog.push(Instr::Jal { rd, offset: 4 * (d + 1) });
+                for _ in 0..d {
+                    self.emit_simple();
+                }
+            }
+            11 => {
+                // The packed-kernel strip the engine fuses.
+                let mode = self.pick(&[MacMode::W8, MacMode::W4, MacMode::W2]);
+                let k = mode.activation_regs() as usize;
+                let act_rd = 12u8; // x12..x15
+                let act_base = 21u8;
+                let act_off = ((self.rng.next_u32() % 64) * 4) as i32;
+                for j in 0..k {
+                    self.prog.push(Instr::Load {
+                        op: LoadOp::Lw,
+                        rd: act_rd + j as u8,
+                        rs1: act_base,
+                        offset: act_off + 4 * j as i32,
+                    });
+                }
+                let w_off = ((self.rng.next_u32() % 64) * 4) as i32;
+                self.prog.push(Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 22, offset: w_off });
+                self.prog.push(Instr::NnMac { mode, rd: 10, rs1: act_rd, rs2: 11 });
+            }
+            12 => {
+                // The scalar baseline MAC strip.
+                let a_off = (self.rng.next_u32() % 256) as i32;
+                let b_off = (self.rng.next_u32() % 256) as i32;
+                self.prog.push(Instr::Load { op: LoadOp::Lb, rd: 5, rs1: 23, offset: a_off });
+                self.prog.push(Instr::Load { op: LoadOp::Lb, rd: 6, rs1: 24, offset: b_off });
+                self.prog.push(Instr::MulDiv { op: MulOp::Mul, rd: 7, rs1: 5, rs2: 6 });
+                self.prog.push(Instr::Op { op: AluOp::Add, rd: 8, rs1: 8, rs2: 7 });
+            }
+            _ => {
+                if faulty && self.rng.next_u32() % 3 == 0 {
+                    // Deliberate fault: out-of-bounds (x27 holds an
+                    // address beyond memory) or misaligned.
+                    if self.rng.next_u32() % 2 == 0 {
+                        self.prog.push(Instr::Load {
+                            op: LoadOp::Lw,
+                            rd: self.scratch(),
+                            rs1: OOB,
+                            offset: 0,
+                        });
+                    } else {
+                        self.prog.push(Instr::Store {
+                            op: StoreOp::Sw,
+                            rs1: self.base(),
+                            rs2: self.scratch(),
+                            offset: 2,
+                        });
+                    }
+                } else {
+                    // Bounded backward loop: the latch shape the engine
+                    // fuses. Counter in x9; `blt x0, x9` exits cleanly
+                    // even when entered with a stale counter.
+                    let c = 1 + (self.rng.next_u32() % 3) as i32;
+                    self.prog.push(Instr::OpImm { op: AluOp::Add, rd: CTR, rs1: 0, imm: c });
+                    let bump = self.scratch();
+                    self.prog.push(Instr::OpImm { op: AluOp::Add, rd: bump, rs1: bump, imm: 1 });
+                    self.prog.push(Instr::OpImm { op: AluOp::Add, rd: CTR, rs1: CTR, imm: -1 });
+                    self.prog.push(Instr::Branch {
+                        op: BranchOp::Blt,
+                        rs1: 0,
+                        rs2: CTR,
+                        offset: -8,
+                    });
+                }
+            }
+        }
+    }
+
+    /// A single always-safe instruction (used under skipped branches).
+    fn emit_simple(&mut self) {
+        let (rd, rs1) = (self.scratch(), self.scratch());
+        let imm = self.rng.range_i32(-64, 64);
+        self.prog.push(Instr::OpImm { op: AluOp::Add, rd, rs1, imm });
+    }
+}
+
+/// Generate one random terminating program.
+fn random_program(seed: u64, faulty: bool, with_jalr: bool) -> Vec<Instr> {
+    let mut g = Gen { rng: Rng::new(seed), prog: Vec::new() };
+
+    // Prologue. Slot 0 is patched with the final ecall's pc below.
+    g.prog.push(Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: 0, imm: 0 });
+    // x27 → the first address past the 4 KiB memory (fault pointer).
+    g.prog.push(Instr::Lui { rd: OOB, imm: 0x1000 });
+    for (i, &b) in BASES.iter().enumerate() {
+        let addr = 1024 + 128 * i as i32 + ((g.rng.next_u32() % 16) * 4) as i32;
+        g.prog.push(Instr::OpImm { op: AluOp::Add, rd: b, rs1: 0, imm: addr });
+    }
+    for &r in &SCRATCH {
+        let imm = g.rng.range_i32(-2048, 2047);
+        g.prog.push(Instr::OpImm { op: AluOp::Add, rd: r, rs1: 0, imm });
+    }
+    // Seed some data so loads see non-zero bytes.
+    for j in 0..8 {
+        let rs2 = g.scratch();
+        g.prog.push(Instr::Store { op: StoreOp::Sw, rs1: 21, rs2, offset: 4 * j });
+    }
+
+    let items = 12 + (g.rng.next_u32() % 20) as usize;
+    for i in 0..items {
+        g.emit_item(faulty);
+        if with_jalr && i == items / 2 {
+            // Jump via x30 to (near) the final ecall; negative offsets
+            // land just before it — possibly inside a fused strip,
+            // exercising the dynamic-entry fallback.
+            let off = -4 * (g.rng.next_u32() % 3) as i32;
+            g.prog.push(Instr::Jalr { rd: 1, rs1: JREG, offset: off });
+        }
+    }
+    g.prog.push(Instr::Ecall);
+
+    // Patch x30 with the ecall pc (fits in a 12-bit immediate as long
+    // as programs stay short).
+    let ecall_pc = 4 * (g.prog.len() as i32 - 1);
+    assert!(ecall_pc <= 2047, "generated program too long: {} instrs", g.prog.len());
+    g.prog[0] = Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: 0, imm: ecall_pc };
+    g.prog
+}
+
+#[test]
+fn random_programs_equivalent_1000() {
+    let mut ecalls = 0u32;
+    for seed in 0..1000u64 {
+        let prog = random_program(seed * 7919 + 13, false, false);
+        let r = assert_equiv(prog, 1_000_000, &format!("seed {seed}"));
+        if r == ExitReason::Ecall {
+            ecalls += 1;
+        }
+    }
+    // Sanity: the generator must overwhelmingly produce clean runs.
+    assert!(ecalls >= 990, "only {ecalls}/1000 programs ran to ecall");
+}
+
+#[test]
+fn random_faulting_programs_equivalent() {
+    let mut faults = 0u32;
+    for seed in 0..200u64 {
+        let prog = random_program(seed * 104729 + 7, true, false);
+        let r = assert_equiv(prog, 1_000_000, &format!("faulty seed {seed}"));
+        if matches!(r, ExitReason::Fault(_)) {
+            faults += 1;
+        }
+    }
+    assert!(faults > 20, "fault injection never fired ({faults}/200)");
+}
+
+#[test]
+fn random_jalr_programs_equivalent() {
+    for seed in 0..200u64 {
+        let prog = random_program(seed * 31337 + 3, false, true);
+        assert_equiv(prog, 1_000_000, &format!("jalr seed {seed}"));
+    }
+}
+
+#[test]
+fn jalr_into_fused_strip_interior_falls_back() {
+    // x30 → the `mul` in the middle of a fused scalar-MAC strip.
+    let prog = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 30, rs1: 0, imm: 4 * 4 },
+        Instr::OpImm { op: AluOp::Add, rd: 23, rs1: 0, imm: 1024 },
+        Instr::Load { op: LoadOp::Lb, rd: 5, rs1: 23, offset: 0 },
+        Instr::Load { op: LoadOp::Lb, rd: 6, rs1: 23, offset: 1 },
+        Instr::MulDiv { op: MulOp::Mul, rd: 7, rs1: 5, rs2: 6 },
+        Instr::Op { op: AluOp::Add, rd: 8, rs1: 8, rs2: 7 },
+        Instr::Jalr { rd: 1, rs1: 30, offset: 0 }, // → instr 4 (mul)
+        Instr::Ecall,
+    ];
+    // The jalr lands on instruction 4, which sits inside the fused
+    // strip [2..6); the engine must replay via the reference
+    // interpreter. The mul→add→jalr sequence then loops until the
+    // cycle budget trips — both interpreters must stop in exactly the
+    // same state.
+    let r = assert_equiv(prog, 10_000, "jalr-interior");
+    assert_eq!(r, ExitReason::MaxCycles);
+}
+
+#[test]
+fn misaligned_static_branch_falls_back_whole_program() {
+    // offset 6 defeats pc pre-resolution; both paths floor pc/4.
+    let prog = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 },
+        Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 6 },
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 10 },
+        Instr::Ecall,
+    ];
+    assert_equiv(prog, 10_000, "misaligned-branch");
+}
+
+#[test]
+fn infinite_loop_hits_budget_identically() {
+    let prog = vec![Instr::Jal { rd: 0, offset: 0 }];
+    let r = assert_equiv(prog, 1_000, "jal-self");
+    assert_eq!(r, ExitReason::MaxCycles);
+}
+
+#[test]
+fn fall_off_end_and_wild_branch_are_illegal_pc() {
+    let r = assert_equiv(
+        vec![Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 }],
+        1_000,
+        "fall-off-end",
+    );
+    assert!(matches!(r, ExitReason::IllegalPc(_)));
+    let r = assert_equiv(
+        vec![Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 1024 }, Instr::Ecall],
+        1_000,
+        "wild-branch",
+    );
+    assert!(matches!(r, ExitReason::IllegalPc(_)));
+}
+
+#[test]
+fn fault_inside_fused_load_mac_strip() {
+    // x21 = MEM-4: the first act word loads, the second faults.
+    let prog = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 21, rs1: 0, imm: MEM as i32 - 4 },
+        Instr::OpImm { op: AluOp::Add, rd: 22, rs1: 0, imm: 1024 },
+        Instr::Load { op: LoadOp::Lw, rd: 12, rs1: 21, offset: 0 },
+        Instr::Load { op: LoadOp::Lw, rd: 13, rs1: 21, offset: 4 },
+        Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 22, offset: 0 },
+        Instr::NnMac { mode: MacMode::W4, rd: 10, rs1: 12, rs2: 11 },
+        Instr::Ecall,
+    ];
+    let r = assert_equiv(prog, 10_000, "fault-in-strip");
+    assert!(matches!(r, ExitReason::Fault(_)));
+}

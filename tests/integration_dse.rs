@@ -12,7 +12,7 @@ use std::path::Path;
 fn coordinator(name: &str) -> Coordinator {
     let model = load_or_fallback(Path::new("/nonexistent"), name, 3).unwrap();
     let test = model.test.clone();
-    Coordinator::new(model, Box::new(HostEval { test }), 2)
+    Coordinator::new(model, Box::new(HostEval { test }), 2).unwrap()
 }
 
 #[test]
