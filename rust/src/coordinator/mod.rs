@@ -2,52 +2,213 @@
 //! co-design framework (paper Fig. 5).
 //!
 //! DSE configurations flow through a bounded job queue (backpressure)
-//! into a worker pool; each worker quantizes the model under its
-//! configuration (CPU-bound), obtains accuracy from the shared
-//! [`AccuracyEval`] backend (the batched PJRT artifact, or the host
-//! reference when artifacts are absent) and composes cycle/memory cost
-//! from the per-layer [`CycleModel`]. Results are cached by
+//! into a worker pool. Each worker assembles the quantized model for
+//! its configuration from the per-(layer, width) quantization cache,
+//! obtains accuracy from the shared [`AccuracyEval`] backend and
+//! composes the predicted cycle/memory cost from the per-layer
+//! [`CycleModel`] — which is measured once, up front, on the ISS
+//! micro-op engine through the pooled
+//! [`SimSession`](crate::sim::session::SimSession) and the keyed kernel
+//! cache ([`crate::kernels::run`]). Results are cached per
 //! configuration so repeated sweeps (Fig. 6 → Fig. 8 reuse) are free.
+//!
+//! Three accuracy backends implement [`AccuracyEval`] (see
+//! `docs/EVALUATORS.md` for the fidelity/speed trade-offs and how to
+//! pick one per experiment):
+//!
+//! * [`HostEval`] — the Rust integer forward pass: fast, always
+//!   available, but exercises none of the emulated ISA.
+//! * [`IssEval`] — whole-model execution on the simulated core via
+//!   [`run_model_batch`](crate::models::sim_exec::run_model_batch):
+//!   accuracy, cycles and memory traffic come from the *same*
+//!   binary-level runs, and a built-in differential check reports the
+//!   host-vs-ISS top-1 disagreement per configuration. Kernel images
+//!   come from the shared kernel cache and simulator memories from the
+//!   global session pool, so per-configuration cost during sweeps
+//!   stays amortised.
+//! * [`PjrtEval`] — batched inference through the AOT model artifact
+//!   (needs the `pjrt` feature plus artifacts).
+//!
+//! Every evaluation returns an [`EvalReport`]; the coordinator folds it
+//! into the [`EvalPoint`] it hands to the DSE, so ISS-measured cycles
+//! and the divergence metric ride along with accuracy through the
+//! whole experiment stack.
 
 use crate::dse::cycles::CycleModel;
 use crate::dse::{total_mac_instructions, Config, EvalPoint};
+use crate::ensure;
 use crate::error::{Error, Result};
 use crate::models::format::LoadedModel;
-use crate::models::infer::QModel;
+use crate::models::infer::{argmax_i32, qforward, quantize_input, QModel};
+use crate::models::sim_exec::{modes_for, run_model_batch};
 use crate::models::synthetic::Dataset;
+use crate::nn::tensor::Tensor;
+use crate::sim::MacUnitConfig;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 
+/// What one accuracy evaluation measured. `accuracy` is always
+/// populated; the ISS-only fields stay `None` for backends that do not
+/// execute on the simulated core.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EvalReport {
+    /// Top-1 accuracy over the evaluated samples.
+    pub accuracy: f32,
+    /// Mean per-input end-to-end kernel cycles, measured on the ISS by
+    /// the same runs that produced `accuracy` ([`IssEval`] only).
+    pub iss_cycles: Option<u64>,
+    /// Mean per-input memory accesses from the same runs ([`IssEval`]).
+    pub iss_mem_accesses: Option<u64>,
+    /// Host-vs-backend top-1 disagreement fraction from [`IssEval`]'s
+    /// differential check (`Some(0.0)` is the healthy reading).
+    pub divergence: Option<f32>,
+}
+
+impl EvalReport {
+    /// A report carrying only an accuracy (host/PJRT backends).
+    pub fn accuracy_only(accuracy: f32) -> Self {
+        EvalReport { accuracy, ..Default::default() }
+    }
+}
+
 /// Accuracy-evaluation backend.
 pub trait AccuracyEval: Send {
-    /// Top-1 accuracy of `qm` over the first `n` test samples.
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32>;
+    /// Evaluate `qm` over the first `n` test samples.
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport>;
     /// Backend label (metrics/logs).
     fn name(&self) -> &'static str;
 }
 
 /// Host-reference evaluator: the Rust integer forward pass. Always
-/// available (no artifacts needed); slower than the PJRT path.
+/// available (no artifacts needed); fast, but blind to any divergence
+/// between the host arithmetic and the emulated ISA kernels.
 pub struct HostEval {
     /// Evaluation set.
     pub test: Dataset,
 }
 
 impl AccuracyEval for HostEval {
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32> {
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
+        ensure!(n > 0, "HostEval: empty evaluation set");
         let mut correct = 0usize;
         for (img, &label) in self.test.images.iter().zip(&self.test.labels).take(n) {
             if crate::models::infer::qpredict(qm, img) == label {
                 correct += 1;
             }
         }
-        Ok(correct as f32 / n as f32)
+        Ok(EvalReport::accuracy_only(correct as f32 / n as f32))
     }
     fn name(&self) -> &'static str {
         "host"
+    }
+}
+
+/// ISS-backed evaluator: scores a [`QModel`] by running labelled input
+/// batches through
+/// [`run_model_batch`](crate::models::sim_exec::run_model_batch) —
+/// whole-model execution of the generated RV32 kernels on the micro-op
+/// engine. Kernel images come from the keyed kernel cache and simulator
+/// memories from the pooled global
+/// [`SimSession`](crate::sim::session::SimSession), so per-config
+/// evaluation stays cheap during sweeps.
+///
+/// This is the backend that makes the paper's central numbers
+/// attributable to the emulated ISA extensions: top-1 accuracy, cycle
+/// counts and memory traffic all come from the *same* binary-level
+/// executions. A built-in differential check additionally classifies
+/// every input on the host integer reference and reports the top-1
+/// disagreement fraction ([`EvalReport::divergence`]) — the
+/// quantization/rounding divergence this backend exists to catch.
+///
+/// # Example
+///
+/// ```no_run
+/// use mpnn::coordinator::{Coordinator, IssEval};
+/// use mpnn::models::format::load_or_fallback;
+/// use std::path::Path;
+///
+/// let model = load_or_fallback(Path::new("artifacts"), "lenet5", 7).unwrap();
+/// let eval = IssEval::new(model.test.clone(), 4);
+/// let coord = Coordinator::new(model, Box::new(eval), 2).unwrap();
+/// let n = coord.analysis.layers.len();
+/// let pts = coord.run_sweep(&[vec![8; n], vec![4; n]], 16).unwrap();
+/// for p in &pts {
+///     println!(
+///         "bits {:?}: acc {:.2}, ISS cycles {:?}, host-vs-ISS divergence {:?}",
+///         p.config, p.accuracy, p.iss_cycles, p.divergence
+///     );
+/// }
+/// ```
+pub struct IssEval {
+    /// Evaluation set.
+    pub test: Dataset,
+    /// MAC-unit features of the simulated core.
+    pub mac: MacUnitConfig,
+    /// Worker threads fanning the input batch over the ISS.
+    pub workers: usize,
+    /// Run the host-reference differential check and report
+    /// [`EvalReport::divergence`]. On by default.
+    pub differential: bool,
+    /// Override for the model the differential check classifies on the
+    /// host. `None` (the default, and the only sensible production
+    /// setting) compares against the evaluated model itself; tests
+    /// inject a deliberately mismatched copy to prove the divergence
+    /// metric fires.
+    pub reference: Option<QModel>,
+}
+
+impl IssEval {
+    /// ISS evaluator with the full MAC unit and the differential check
+    /// enabled.
+    pub fn new(test: Dataset, workers: usize) -> Self {
+        IssEval {
+            test,
+            mac: MacUnitConfig::full(),
+            workers: workers.max(1),
+            differential: true,
+            reference: None,
+        }
+    }
+}
+
+impl AccuracyEval for IssEval {
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
+        let n = n.min(self.test.images.len());
+        ensure!(n > 0, "IssEval: empty evaluation set");
+        let inputs: Vec<Tensor<i8>> =
+            self.test.images[..n].iter().map(|im| quantize_input(qm, im)).collect();
+        let modes = modes_for(qm);
+        let runs = run_model_batch(qm, &inputs, &modes, self.mac, self.workers)?;
+        let mut correct = 0usize;
+        let mut disagree = 0usize;
+        let mut cycles = 0u64;
+        let mut accesses = 0u64;
+        for ((run, input), &label) in runs.iter().zip(&inputs).zip(&self.test.labels) {
+            let pred = run.argmax();
+            if pred == label {
+                correct += 1;
+            }
+            if self.differential {
+                let href = self.reference.as_ref().unwrap_or(qm);
+                if argmax_i32(&qforward(href, input)) != pred {
+                    disagree += 1;
+                }
+            }
+            cycles += run.total_cycles();
+            accesses += run.total_accesses();
+        }
+        Ok(EvalReport {
+            accuracy: correct as f32 / n as f32,
+            iss_cycles: Some(cycles / n as u64),
+            iss_mem_accesses: Some(accesses / n as u64),
+            divergence: if self.differential { Some(disagree as f32 / n as f32) } else { None },
+        })
+    }
+    fn name(&self) -> &'static str {
+        "iss"
     }
 }
 
@@ -69,8 +230,9 @@ pub struct PjrtEval {
 unsafe impl Send for PjrtEval {}
 
 impl AccuracyEval for PjrtEval {
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<f32> {
+    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
+        ensure!(n > 0, "PjrtEval: empty evaluation set");
         crate::runtime::evaluate_accuracy(
             &mut self.session,
             qm,
@@ -78,6 +240,7 @@ impl AccuracyEval for PjrtEval {
             &self.test.labels[..n],
             self.batch,
         )
+        .map(EvalReport::accuracy_only)
     }
     fn name(&self) -> &'static str {
         "pjrt"
@@ -93,6 +256,9 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Accuracy evaluations executed.
     pub acc_evals: AtomicU64,
+    /// Configurations whose evaluation reported a nonzero host-vs-ISS
+    /// top-1 divergence (only the [`IssEval`] backend feeds this).
+    pub diverged_configs: AtomicU64,
 }
 
 /// The evaluation coordinator.
@@ -108,7 +274,7 @@ pub struct Coordinator {
     /// iteration 2 — the quantize step falls out of the sweep hot path).
     qcache: Vec<[crate::nn::QLayer; 3]>,
     evaluator: Mutex<Box<dyn AccuracyEval>>,
-    cache: Mutex<HashMap<Config, f32>>,
+    cache: Mutex<HashMap<Config, EvalReport>>,
     /// Worker threads for the sweep.
     pub workers: usize,
     /// Bounded-queue capacity (backpressure).
@@ -190,27 +356,39 @@ impl Coordinator {
     pub fn evaluate(&self, cfg: &Config, n_eval: usize) -> Result<EvalPoint> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let cached = self.cache.lock().unwrap().get(cfg).copied();
-        let accuracy = match cached {
-            Some(a) => {
+        let report = match cached {
+            Some(r) => {
                 self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                a
+                r
             }
             None => {
                 let qm = self.quantized(cfg);
                 self.metrics.acc_evals.fetch_add(1, Ordering::Relaxed);
-                let a = self.evaluator.lock().unwrap().evaluate(&qm, n_eval)?;
-                self.cache.lock().unwrap().insert(cfg.clone(), a);
-                a
+                let r = self.evaluator.lock().unwrap().evaluate(&qm, n_eval)?;
+                // Count divergent configs only on the fresh insert so a
+                // racing duplicate evaluation can't double-count.
+                let fresh = self.cache.lock().unwrap().insert(cfg.clone(), r).is_none();
+                if fresh && r.divergence.is_some_and(|d| d > 0.0) {
+                    self.metrics.diverged_configs.fetch_add(1, Ordering::Relaxed);
+                }
+                r
             }
         };
         let cost = self.cycle_model.config_total(cfg);
         Ok(EvalPoint {
             config: cfg.clone(),
-            accuracy,
+            accuracy: report.accuracy,
             mac_instructions: total_mac_instructions(&self.analysis, cfg),
             cycles: cost.cycles,
             mem_accesses: cost.mem_accesses,
+            iss_cycles: report.iss_cycles,
+            divergence: report.divergence,
         })
+    }
+
+    /// Label of the evaluator backend in use.
+    pub fn evaluator_name(&self) -> &'static str {
+        self.evaluator.lock().unwrap().name()
     }
 
     /// Evaluate a sweep of configurations through the worker pool

@@ -145,6 +145,14 @@ pub struct EvalPoint {
     pub cycles: u64,
     /// Memory accesses from the cycle model.
     pub mem_accesses: u64,
+    /// Mean per-input cycles measured by the evaluator's own ISS runs —
+    /// populated by the `IssEval` backend, whose accuracy and cycles
+    /// come from the same `run_model_batch` executions. `None` for the
+    /// host/PJRT backends.
+    pub iss_cycles: Option<u64>,
+    /// Host-vs-backend top-1 disagreement fraction (the `IssEval`
+    /// differential check; `None` when the backend doesn't compute it).
+    pub divergence: Option<f32>,
 }
 
 /// Quantize a model under a configuration (helper shared by the
@@ -230,6 +238,8 @@ mod tests {
             mac_instructions: 0,
             cycles: cyc,
             mem_accesses: 0,
+            iss_cycles: None,
+            divergence: None,
         };
         let pts = vec![mk(0.90, 100), mk(0.89, 50), mk(0.70, 10)];
         assert_eq!(select_under_threshold(&pts, 0.90, 0.01), Some(1));

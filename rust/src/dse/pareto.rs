@@ -29,7 +29,15 @@ mod tests {
     use super::*;
 
     fn p(acc: f32, cycles: u64) -> EvalPoint {
-        EvalPoint { config: vec![], accuracy: acc, mac_instructions: cycles, cycles, mem_accesses: 0 }
+        EvalPoint {
+            config: vec![],
+            accuracy: acc,
+            mac_instructions: cycles,
+            cycles,
+            mem_accesses: 0,
+            iss_cycles: None,
+            divergence: None,
+        }
     }
 
     #[test]

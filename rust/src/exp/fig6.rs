@@ -21,8 +21,18 @@ pub struct Sweep {
     pub points: Vec<EvalPoint>,
     /// Indices of the Pareto front (by MAC instructions).
     pub front: Vec<usize>,
+    /// Accuracy backend that scored the points (`host`/`iss`/`pjrt`).
+    pub evaluator: &'static str,
     /// The coordinator (kept for downstream reuse, e.g. Fig. 8).
     pub coordinator: Coordinator,
+}
+
+impl Sweep {
+    /// Largest host-vs-ISS top-1 divergence across the sweep, when the
+    /// backend computed it (the `iss` evaluator's differential check).
+    pub fn max_divergence(&self) -> Option<f32> {
+        self.points.iter().filter_map(|p| p.divergence).reduce(f32::max)
+    }
 }
 
 /// Run the DSE sweep for one model.
@@ -41,8 +51,48 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
         baseline_instrs,
         points,
         front,
+        evaluator: coordinator.evaluator_name(),
         coordinator,
     })
+}
+
+/// Print the one-line sweep summary (shared by `fig6` and the CLI's
+/// `all` command, which reuses the sweeps).
+pub fn print_summary(s: &Sweep) {
+    println!(
+        "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front [{} evaluator]",
+        s.model,
+        s.float_acc * 100.0,
+        s.points.len(),
+        s.front.len(),
+        s.evaluator,
+    );
+    if let Some(d) = s.max_divergence() {
+        println!("         host-vs-ISS top-1 divergence: max {:.2}% across configs", d * 100.0);
+    }
+}
+
+/// JSON encoding of one sweep (shared by `fig6` and the CLI's `all`).
+pub fn sweep_json(s: &Sweep) -> Json {
+    Json::obj(vec![
+        ("model", Json::s(&s.model)),
+        ("evaluator", Json::s(s.evaluator)),
+        ("float_acc", Json::Num(s.float_acc as f64)),
+        ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
+        ("points", Json::Arr(s.points.iter().map(point_json).collect())),
+        ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
+    ])
+}
+
+fn point_json(p: &EvalPoint) -> Json {
+    Json::obj(vec![
+        ("acc", Json::Num(p.accuracy as f64)),
+        ("mac_instrs", Json::i(p.mac_instructions as i64)),
+        ("cycles", Json::i(p.cycles as i64)),
+        ("iss_cycles", p.iss_cycles.map_or(Json::Null, |c| Json::i(c as i64))),
+        ("divergence", p.divergence.map_or(Json::Null, |d| Json::Num(d as f64))),
+        ("bits", Json::Arr(p.config.iter().map(|&b| Json::i(b as i64)).collect())),
+    ])
 }
 
 /// Run the Fig.-6 harness over all four models.
@@ -54,13 +104,7 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
     }
     let mut arr = Vec::new();
     for s in &sweeps {
-        println!(
-            "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front",
-            s.model,
-            s.float_acc * 100.0,
-            s.points.len(),
-            s.front.len()
-        );
+        print_summary(s);
         println!(
             "{:>10} {:>8} {:>14} {:>10}  (front points)",
             "acc(%)", "Δacc", "MAC instrs", "reduction"
@@ -75,33 +119,7 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
                 (1.0 - p.mac_instructions as f64 / s.baseline_instrs as f64) * 100.0
             );
         }
-        arr.push(Json::obj(vec![
-            ("model", Json::s(&s.model)),
-            ("float_acc", Json::Num(s.float_acc as f64)),
-            ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
-            (
-                "points",
-                Json::Arr(
-                    s.points
-                        .iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("acc", Json::Num(p.accuracy as f64)),
-                                ("mac_instrs", Json::i(p.mac_instructions as i64)),
-                                ("cycles", Json::i(p.cycles as i64)),
-                                (
-                                    "bits",
-                                    Json::Arr(
-                                        p.config.iter().map(|&b| Json::i(b as i64)).collect(),
-                                    ),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
-        ]));
+        arr.push(sweep_json(s));
     }
     Ok((sweeps, Json::Arr(arr)))
 }

@@ -31,6 +31,9 @@ pub struct Selection {
     /// dominate; depthwise layers drag the mean down exactly as the
     /// paper observes for MCUNet/MobileNet).
     pub layer_avg_speedup: f64,
+    /// Host-vs-ISS top-1 divergence at the selected configuration
+    /// (populated when the sweep ran on the `iss` evaluator).
+    pub divergence: Option<f32>,
 }
 
 /// Per-model Fig.-8 result.
@@ -75,6 +78,7 @@ pub fn select(sweep: Sweep) -> ModelSelections {
                     mem_reduction: 1.0 - p.mem_accesses as f64 / base.mem_accesses as f64,
                     cycles: p.cycles,
                     layer_avg_speedup: layer_avg,
+                    divergence: p.divergence,
                 }
             })
         })
@@ -113,14 +117,19 @@ pub fn print(out: &[ModelSelections]) {
         );
         for sel in m.selections.iter().flatten() {
             let bits: Vec<String> = sel.bits.iter().map(|b| b.to_string()).collect();
+            let div = match sel.divergence {
+                Some(d) => format!("  div {:>4.1}%", d * 100.0),
+                None => String::new(),
+            };
             println!(
-                "  <{:>2.0}% loss: e2e {:>5.1}x  layer-avg {:>5.1}x  acc {:>5.1}%  mem-red {:>4.1}%  bits [{}]",
+                "  <{:>2.0}% loss: e2e {:>5.1}x  layer-avg {:>5.1}x  acc {:>5.1}%  mem-red {:>4.1}%  bits [{}]{}",
                 sel.threshold * 100.0,
                 sel.speedup,
                 sel.layer_avg_speedup,
                 sel.accuracy * 100.0,
                 sel.mem_reduction * 100.0,
-                bits.join(",")
+                bits.join(","),
+                div
             );
         }
     }
@@ -149,6 +158,11 @@ pub fn to_json(out: &[ModelSelections]) -> Json {
                                         ("accuracy", Json::Num(s.accuracy as f64)),
                                         ("mem_reduction", Json::Num(s.mem_reduction)),
                                         ("cycles", Json::i(s.cycles as i64)),
+                                        (
+                                            "divergence",
+                                            s.divergence
+                                                .map_or(Json::Null, |d| Json::Num(d as f64)),
+                                        ),
                                         (
                                             "bits",
                                             Json::Arr(

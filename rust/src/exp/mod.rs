@@ -22,11 +22,53 @@ pub mod table3;
 pub mod table4;
 pub mod table5;
 
-use crate::coordinator::{AccuracyEval, Coordinator, HostEval, PjrtEval};
+use crate::coordinator::{AccuracyEval, Coordinator, HostEval, IssEval, PjrtEval};
 use crate::json::Json;
 use crate::models::format::{load_or_fallback, LoadedModel};
 use crate::error::Result;
 use std::path::{Path, PathBuf};
+
+/// Accuracy-backend selector threaded from the CLI through the
+/// experiment harnesses into the coordinator (see `docs/EVALUATORS.md`
+/// for the trade-offs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvalBackend {
+    /// PJRT when the model's AOT artifact exists, host reference
+    /// otherwise — the zero-configuration default.
+    #[default]
+    Auto,
+    /// Host integer forward pass (fast; no ISA-level fidelity).
+    Host,
+    /// Whole-model execution on the ISS: accuracy and cycles from the
+    /// same binary-level runs, plus the host-vs-ISS divergence metric.
+    Iss,
+    /// Batched PJRT inference (needs artifacts + the `pjrt` feature;
+    /// degrades to the host evaluator with a note).
+    Pjrt,
+}
+
+impl EvalBackend {
+    /// Parse a CLI name (`auto | host | iss | pjrt`).
+    pub fn parse(s: &str) -> Option<EvalBackend> {
+        match s {
+            "auto" => Some(EvalBackend::Auto),
+            "host" => Some(EvalBackend::Host),
+            "iss" => Some(EvalBackend::Iss),
+            "pjrt" => Some(EvalBackend::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Label for logs/usage text.
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalBackend::Auto => "auto",
+            EvalBackend::Host => "host",
+            EvalBackend::Iss => "iss",
+            EvalBackend::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Experiment options shared by the CLI and the benches.
 #[derive(Debug, Clone)]
@@ -37,8 +79,10 @@ pub struct ExpOpts {
     pub eval_n: usize,
     /// Configuration budget per model for the DSE sweeps.
     pub budget: usize,
-    /// Force the host evaluator even when PJRT artifacts exist.
-    pub host_eval: bool,
+    /// Accuracy backend for the sweeps.
+    pub backend: EvalBackend,
+    /// Worker threads the ISS evaluator fans each input batch over.
+    pub eval_workers: usize,
     /// Random seed.
     pub seed: u64,
 }
@@ -49,7 +93,8 @@ impl Default for ExpOpts {
             artifacts: crate::runtime::default_artifacts_dir(),
             eval_n: 128,
             budget: 120,
-            host_eval: false,
+            backend: EvalBackend::Auto,
+            eval_workers: 4,
             seed: 0xD5E,
         }
     }
@@ -61,23 +106,43 @@ impl ExpOpts {
         load_or_fallback(&self.artifacts, name, self.seed)
     }
 
-    /// Build the accuracy evaluator: PJRT when the model artifact
-    /// exists (and not overridden), host reference otherwise. A PJRT
-    /// session that fails to open (e.g. the crate was built without
-    /// the `pjrt` feature) degrades to the host evaluator with a note.
+    /// Build the accuracy evaluator selected by [`ExpOpts::backend`].
+    /// `Auto` prefers PJRT when the model artifact exists and quietly
+    /// uses the host reference otherwise; an explicit `pjrt` request
+    /// that cannot be satisfied (missing artifact, or the crate was
+    /// built without the `pjrt` feature) degrades to the host evaluator
+    /// with a note.
     pub fn evaluator(&self, model: &LoadedModel, batch: usize) -> Result<Box<dyn AccuracyEval>> {
-        let stem = self.artifacts.join(format!("{}_qfwd_b{batch}.hlo.txt", model.spec.name));
-        if !self.host_eval && stem.exists() {
-            match crate::runtime::Session::open(&self.artifacts) {
-                Ok(session) => {
-                    return Ok(Box::new(PjrtEval { session, test: model.test.clone(), batch }))
+        match self.backend {
+            EvalBackend::Host => Ok(Box::new(HostEval { test: model.test.clone() })),
+            EvalBackend::Iss => {
+                Ok(Box::new(IssEval::new(model.test.clone(), self.eval_workers)))
+            }
+            EvalBackend::Auto | EvalBackend::Pjrt => {
+                let stem =
+                    self.artifacts.join(format!("{}_qfwd_b{batch}.hlo.txt", model.spec.name));
+                if stem.exists() {
+                    match crate::runtime::Session::open(&self.artifacts) {
+                        Ok(session) => {
+                            return Ok(Box::new(PjrtEval {
+                                session,
+                                test: model.test.clone(),
+                                batch,
+                            }))
+                        }
+                        Err(e) => {
+                            eprintln!("[exp] PJRT unavailable ({e}); using the host evaluator");
+                        }
+                    }
+                } else if self.backend == EvalBackend::Pjrt {
+                    eprintln!(
+                        "[exp] no PJRT artifact for `{}`; using the host evaluator",
+                        model.spec.name
+                    );
                 }
-                Err(e) => {
-                    eprintln!("[exp] PJRT unavailable ({e}); using the host evaluator");
-                }
+                Ok(Box::new(HostEval { test: model.test.clone() }))
             }
         }
-        Ok(Box::new(HostEval { test: model.test.clone() }))
     }
 
     /// Build a coordinator for a model.

@@ -33,14 +33,29 @@
 //!   MobileNetV1) with weights trained at build time by `python/compile`.
 //! * [`dse`] — the mixed-precision design-space exploration: enumeration,
 //!   pruning, Pareto extraction and accuracy-threshold selection.
-//! * [`coordinator`] — the evaluation orchestrator routing accuracy jobs to
-//!   the PJRT runtime and cycle jobs to the core simulator.
+//! * [`coordinator`] — the evaluation orchestrator: a worker pool with a
+//!   cached per-config evaluation path, routing accuracy jobs to one of
+//!   three [`coordinator::AccuracyEval`] backends — the host integer
+//!   reference, the ISS-backed [`coordinator::IssEval`] (accuracy and
+//!   cycles from the same binary-level `run_model_batch` executions,
+//!   with a host-vs-ISS divergence check), or the PJRT runtime — and
+//!   cycle jobs to the core simulator.
 //! * [`energy`] — FPGA (Virtex-7) and ASIC (ASAP7) power/area/energy models
 //!   calibrated to the paper's Table 4, plus the Table-5 SOTA comparison.
 //! * [`runtime`] — PJRT client wrapper loading the AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py`.
 //! * [`exp`] — the experiment harnesses regenerating every table and figure
 //!   of the paper's evaluation section.
+//!
+//! ## Repo-level documentation
+//!
+//! * `docs/ARCHITECTURE.md` — top-down tour of the crate (asm → isa →
+//!   sim engine/session → kernels → models/sim_exec → dse → coordinator
+//!   → exp) with the dataflow diagram of the unified accuracy+cycles
+//!   path and where PJRT slots in once vendored.
+//! * `docs/EVALUATORS.md` — the three accuracy backends
+//!   (host / iss / pjrt), their fidelity/speed trade-offs and how to
+//!   pick one per experiment.
 
 pub mod asm;
 pub mod bench;

@@ -5,7 +5,7 @@
 //! subcommands expose the ISA/simulator substrate.
 
 use mpnn::{bail, Result};
-use mpnn::exp::{self, ExpOpts};
+use mpnn::exp::{self, EvalBackend, ExpOpts};
 use mpnn::json::Json;
 
 const USAGE: &str = "\
@@ -32,7 +32,13 @@ OPTIONS:
   --artifacts <dir>   Artifacts directory (default: auto-discover)
   --eval <n>          Images per accuracy evaluation (default 128)
   --budget <n>        DSE configuration budget per model (default 120)
-  --host-eval         Use the host evaluator instead of PJRT
+  --evaluator <b>     Accuracy backend: auto|host|iss|pjrt (default auto).
+                      `iss` runs every evaluation batch through the
+                      simulated core: accuracy + cycles from the same
+                      binary-level runs, with host-vs-ISS divergence
+                      reported per config (see docs/EVALUATORS.md)
+  --eval-workers <n>  ISS-evaluator batch worker threads (default 4)
+  --host-eval         Shorthand for --evaluator host
   --seed <n>          Random seed (default 0xD5E)
 ";
 
@@ -48,7 +54,18 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
             "--budget" => {
                 opts.budget = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.budget)
             }
-            "--host-eval" => opts.host_eval = true,
+            "--evaluator" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| mpnn::anyhow!("--evaluator needs a value (auto|host|iss|pjrt)"))?;
+                opts.backend = EvalBackend::parse(v)
+                    .ok_or_else(|| mpnn::anyhow!("unknown evaluator `{v}` (auto|host|iss|pjrt)"))?;
+            }
+            "--eval-workers" => {
+                opts.eval_workers =
+                    it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.eval_workers)
+            }
+            "--host-eval" => opts.backend = EvalBackend::Host,
             "--seed" => opts.seed = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.seed),
             other => bail!("unknown option `{other}`\n{USAGE}"),
         }
@@ -80,35 +97,8 @@ fn cmd_all(opts: &ExpOpts) -> Result<()> {
     // Fig. 6 output from the shared sweeps (retained inside the selections).
     let mut fig6_arr = Vec::new();
     for m in &sels {
-        let s = &m.sweep;
-        println!(
-            "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front",
-            s.model,
-            s.float_acc * 100.0,
-            s.points.len(),
-            s.front.len()
-        );
-        fig6_arr.push(Json::obj(vec![
-            ("model", Json::s(&s.model)),
-            ("float_acc", Json::Num(s.float_acc as f64)),
-            ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
-            (
-                "points",
-                Json::Arr(
-                    s.points
-                        .iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("acc", Json::Num(p.accuracy as f64)),
-                                ("mac_instrs", Json::i(p.mac_instructions as i64)),
-                                ("cycles", Json::i(p.cycles as i64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
-        ]));
+        exp::fig6::print_summary(&m.sweep);
+        fig6_arr.push(exp::fig6::sweep_json(&m.sweep));
     }
     save("fig6", &Json::Arr(fig6_arr))?;
     exp::fig8::print(&sels);

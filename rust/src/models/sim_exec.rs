@@ -6,15 +6,28 @@
 //!
 //! This is the reproduction of the paper's Verilator flow: the same
 //! binary-level kernels the extended processor would run, measured with
-//! the same per-layer performance counters.
+//! the same per-layer performance counters. Each [`SimRun`] carries
+//! both the per-layer [`PerfCounters`] **and** the integer logits /
+//! top-1 class of the execution, so a single pass yields performance
+//! *and* accuracy from the same binary-level run — the substrate behind
+//! the ISS-backed accuracy evaluator
+//! ([`IssEval`](crate::coordinator::IssEval)).
+//!
+//! ## Session / cache architecture (post micro-op-engine refactor)
 //!
 //! Layer kernels execute on the micro-op engine through the global
-//! [`crate::sim::session::SimSession`] — across a whole model the
-//! kernel images are translated once and simulator memories recycled.
-//! One model execution is inherently sequential (each layer consumes
-//! the previous layer's activations), so the parallel axis is the
-//! *input batch*: [`run_model_batch`] fans independent inputs out over
-//! a worker pool sharing the kernel cache.
+//! [`crate::sim::session::SimSession`]: every `(spec, mode)` pair is
+//! assembled and engine-translated exactly once into the keyed kernel
+//! cache (`kernels::run`), and simulator memories are recycled through
+//! the session's pool — across a whole model (and across a whole DSE
+//! sweep) the per-invocation assembly and 16 MiB allocation are paid
+//! once. One model execution is inherently sequential (each layer
+//! consumes the previous layer's activations), so the parallel axis is
+//! the *input batch*: [`run_model_batch`] fans independent inputs out
+//! over a worker pool sharing the kernel cache and memory pool.
+//!
+//! See `docs/ARCHITECTURE.md` for the dataflow diagram of the unified
+//! accuracy+cycles path.
 
 use super::infer::{residual_requants, QModel};
 use super::{LayerSpec, Node, QKind};
@@ -63,6 +76,13 @@ impl SimRun {
     /// Total retired instructions.
     pub fn total_instret(&self) -> u64 {
         self.layers.iter().map(|l| l.perf.instret).sum()
+    }
+
+    /// Top-1 class of this run's logits (ties broken toward the lower
+    /// index, matching [`crate::models::infer::argmax_i32`] so ISS and
+    /// host predictions are directly comparable).
+    pub fn argmax(&self) -> usize {
+        crate::models::infer::argmax_i32(&self.logits)
     }
 }
 
@@ -239,7 +259,33 @@ pub fn run_model(
 /// Each worker runs the full sequential layer pipeline for its input;
 /// all workers share the global kernel cache and memory pool, so the
 /// per-input setup cost is amortised batch-wide. Results are in input
-/// order and identical to per-input [`run_model`] calls.
+/// order and identical to per-input [`run_model`] calls. Every
+/// [`SimRun`] carries the integer logits and [`SimRun::argmax`] class
+/// alongside the perf counters, so accuracy and cycles for a batch
+/// come out of the same executions.
+///
+/// # Example
+///
+/// ```no_run
+/// use mpnn::models::infer::{calibrate, quantize_input, quantize_model, random_params};
+/// use mpnn::models::sim_exec::{modes_for, run_model_batch};
+/// use mpnn::models::synthetic::generate;
+/// use mpnn::models::{analyze, zoo};
+/// use mpnn::sim::MacUnitConfig;
+///
+/// let spec = zoo::lenet5();
+/// let n = analyze(&spec).layers.len();
+/// let params = random_params(&spec, 1);
+/// let ds = generate(2, 8, spec.input, spec.num_classes, 0.4);
+/// let sites = calibrate(&spec, &params, &ds.images[..2]);
+/// let qm = quantize_model(&spec, &params, &sites, &vec![4u32; n]);
+/// let inputs: Vec<_> = ds.images.iter().map(|im| quantize_input(&qm, im)).collect();
+///
+/// let runs = run_model_batch(&qm, &inputs, &modes_for(&qm), MacUnitConfig::full(), 4).unwrap();
+/// for (run, &label) in runs.iter().zip(&ds.labels) {
+///     println!("pred {} (label {label}), {} cycles", run.argmax(), run.total_cycles());
+/// }
+/// ```
 pub fn run_model_batch(
     qm: &QModel,
     inputs: &[Tensor<i8>],

@@ -1,0 +1,122 @@
+//! ISS-backed accuracy evaluation (`IssEval`) integration tests.
+//!
+//! The evaluator's whole point is that accuracy, cycles and the
+//! host-vs-ISS divergence metric come from the *same*
+//! `run_model_batch` executions, so the tests pin three properties:
+//!
+//! 1. on a small synthetic model, host and ISS evaluators agree
+//!    *exactly* (the ISS kernels are bit-exact vs the host reference),
+//!    and the differential check reads zero;
+//! 2. under a deliberate requant mismatch the divergence metric must
+//!    be nonzero — the failure mode the backend exists to catch is
+//!    actually caught;
+//! 3. a coordinator sweep over the synthetic-zoo fallback reports
+//!    accuracy, ISS-measured cycles and per-config divergence from the
+//!    ISS executions.
+
+use mpnn::coordinator::{AccuracyEval, Coordinator, HostEval, IssEval};
+use mpnn::models::format::{load_or_fallback, LoadedModel};
+use mpnn::models::infer::{calibrate, quantize_model, random_params};
+use mpnn::models::synthetic::{generate, generate_split};
+use mpnn::models::{analyze, LayerSpec, ModelSpec, Node};
+use mpnn::nn::quant::Requant;
+use std::path::Path;
+
+/// A tiny conv→pool→dense model with a synthetic train/test task.
+fn tiny_model(seed: u64) -> LoadedModel {
+    let spec = ModelSpec {
+        name: "tiny",
+        input: [8, 8, 3],
+        num_classes: 4,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::MaxPool2),
+            Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+        ],
+    };
+    let params = random_params(&spec, seed);
+    let calib = generate(seed ^ 1, 8, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(&spec, &params, &calib.images[..4]);
+    let test = generate_split(seed ^ 1, seed ^ 2, 12, spec.input, spec.num_classes, 0.4);
+    LoadedModel { spec, params, sites, float_acc: 1.0, test }
+}
+
+#[test]
+fn host_and_iss_evaluators_agree_exactly() {
+    let m = tiny_model(41);
+    let n_layers = analyze(&m.spec).layers.len();
+    for bits in [vec![8u32; n_layers], vec![4; n_layers], vec![2; n_layers]] {
+        let qm = quantize_model(&m.spec, &m.params, &m.sites, &bits);
+
+        let mut host = HostEval { test: m.test.clone() };
+        let hr = host.evaluate(&qm, 12).unwrap();
+        assert!(hr.iss_cycles.is_none() && hr.divergence.is_none());
+
+        let mut iss = IssEval::new(m.test.clone(), 3);
+        let ir = iss.evaluate(&qm, 12).unwrap();
+        assert_eq!(ir.accuracy, hr.accuracy, "bits {bits:?}: host vs ISS accuracy");
+        assert_eq!(ir.divergence, Some(0.0), "bits {bits:?}: bit-exact paths must not diverge");
+        assert!(ir.iss_cycles.unwrap() > 0);
+        assert!(ir.iss_mem_accesses.unwrap() > 0);
+    }
+}
+
+#[test]
+fn deliberate_requant_mismatch_surfaces_as_nonzero_divergence() {
+    let m = tiny_model(43);
+    let n_layers = analyze(&m.spec).layers.len();
+    let qm = quantize_model(&m.spec, &m.params, &m.sites, &vec![8u32; n_layers]);
+
+    // Perturbed host references: requant multiplier 0 on the first
+    // layer zeroes every activation, so the reference's logits collapse
+    // to the last layer's bias alone — a constant prediction per
+    // reference. Two references with different constant classes cannot
+    // both agree with the ISS on any input, so at least one divergence
+    // reading is nonzero, deterministically.
+    let divergence_vs_constant_class = |class: usize| -> f32 {
+        let mut bad = qm.clone();
+        bad.layers[0].rq = Requant { m: 0, shift: 0 };
+        let last = bad.layers.last_mut().unwrap();
+        for b in last.bias.iter_mut() {
+            *b = 0;
+        }
+        last.bias[class] = 1_000;
+        let mut iss = IssEval::new(m.test.clone(), 2);
+        iss.reference = Some(bad);
+        let r = iss.evaluate(&qm, 8).unwrap();
+        r.divergence.expect("differential check enabled")
+    };
+
+    let d0 = divergence_vs_constant_class(0);
+    let d1 = divergence_vs_constant_class(1);
+    assert!(
+        d0 > 0.0 || d1 > 0.0,
+        "a mismatched requant reference must register divergence (got {d0} / {d1})"
+    );
+    assert!(d0 + d1 >= 0.999, "every input disagrees with at least one constant class");
+}
+
+#[test]
+fn coordinator_sweep_reports_iss_cycles_and_divergence_per_config() {
+    // Synthetic-zoo fallback model + ISS evaluator through the full
+    // coordinator path (acceptance criterion of the ISS-eval issue).
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", 9).unwrap();
+    let test = model.test.clone();
+    let c = Coordinator::new(model, Box::new(IssEval::new(test, 2)), 2).unwrap();
+    assert_eq!(c.evaluator_name(), "iss");
+
+    let n = c.analysis.layers.len();
+    let configs = vec![vec![8u32; n], vec![4; n], vec![2; n]];
+    let pts = c.run_sweep(&configs, 4).unwrap();
+    assert_eq!(pts.len(), 3);
+    for p in &pts {
+        assert!((0.0..=1.0).contains(&p.accuracy));
+        assert!(p.iss_cycles.unwrap() > 0, "ISS-measured cycles ride along with accuracy");
+        assert_eq!(p.divergence, Some(0.0), "bit-exact host/ISS paths: zero divergence");
+    }
+    // The ISS-measured whole-model cycles must show the extension's
+    // packing win, independently of the cycle model's composition.
+    assert!(pts[2].iss_cycles.unwrap() < pts[0].iss_cycles.unwrap());
+    // And no config was flagged divergent in the metrics.
+    assert_eq!(c.metrics.diverged_configs.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
