@@ -163,6 +163,21 @@ impl Asm {
         self.emit(Instr::Op { op: AluOp::Sra, rd, rs1, rs2 })
     }
 
+    /// `slt rd, rs1, rs2`.
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::Slt, rd, rs1, rs2 })
+    }
+
+    /// `xor rd, rs1, rs2`.
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+    }
+
+    /// `and rd, rs1, rs2`.
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.emit(Instr::Op { op: AluOp::And, rd, rs1, rs2 })
+    }
+
     /// `mul rd, rs1, rs2`.
     pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
         self.emit(Instr::MulDiv { op: MulOp::Mul, rd, rs1, rs2 })

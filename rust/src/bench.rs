@@ -1,7 +1,15 @@
 //! Micro-benchmark harness used by `benches/*.rs` (offline environment —
 //! criterion is not in the vendored crate set). Reports min/mean/p50/max
 //! over timed iterations after warm-up, in criterion-like one-line format.
+//!
+//! [`JsonReport`] adds the machine-readable side: each bench binary can
+//! collect its entries (name, iters, ns/iter, plus derived metrics like
+//! MIPS) and write a `BENCH_<name>.json` next to the human output, so
+//! the perf trajectory is tracked across PRs (CI uploads the files as
+//! artifacts).
 
+use crate::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected statistics.
@@ -71,6 +79,76 @@ pub fn bench_val<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> (Sta
     (stats, last.unwrap())
 }
 
+/// Measured iterations for a bench binary: the `BENCH_ITERS` env var
+/// overrides (CI smoke runs set `2` — the minimum at which
+/// `iss_throughput` enforces its ratio floors), else `default`.
+pub fn iters_from_env(default: usize) -> usize {
+    std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// Machine-readable bench report: collects per-benchmark entries and
+/// top-level summary figures, then writes `BENCH_<name>.json`.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    name: String,
+    entries: Vec<Json>,
+    summaries: Vec<(String, Json)>,
+}
+
+impl JsonReport {
+    /// Report for the bench binary `name` (file `BENCH_<name>.json`).
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Record one benchmark's stats plus derived numeric metrics
+    /// (e.g. `("mips", 840.0)`).
+    pub fn record(&mut self, stats: &Stats, extras: &[(&str, f64)]) {
+        let mut pairs = vec![
+            ("name", Json::s(&stats.name)),
+            ("iters", Json::i(stats.samples.len() as i64)),
+            ("ns_per_iter", Json::Num(stats.median().as_nanos() as f64)),
+            ("min_ns", Json::Num(stats.min().as_nanos() as f64)),
+            ("mean_ns", Json::Num(stats.mean().as_nanos() as f64)),
+        ];
+        for &(k, v) in extras {
+            pairs.push((k, Json::Num(v)));
+        }
+        self.entries.push(Json::obj(pairs));
+    }
+
+    /// Add a top-level summary figure (e.g. a worst-case speedup).
+    pub fn summary(&mut self, key: &str, value: f64) {
+        self.summaries.push((key.to_string(), Json::Num(value)));
+    }
+
+    /// The full document.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("bench".to_string(), Json::s(&self.name)),
+            ("entries".to_string(), Json::Arr(self.entries.clone())),
+        ];
+        pairs.extend(self.summaries.iter().cloned());
+        Json::Obj(pairs)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +166,26 @@ mod tests {
     fn bench_val_returns_value() {
         let (_, v) = bench_val("val", 3, || 42);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let s = bench("unit/json", 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut rep = JsonReport::new("unit_test_report");
+        rep.record(&s, &[("mips", 123.5)]);
+        rep.summary("worst_speedup", 2.0);
+        let path = rep.write_to(&std::env::temp_dir()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit_test_report"));
+        let entries = doc.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("name").unwrap().as_str(), Some("unit/json"));
+        assert_eq!(entries[0].get("iters").unwrap().as_i64(), Some(3));
+        assert_eq!(entries[0].get("mips").unwrap().as_f64(), Some(123.5));
+        assert!(entries[0].get("ns_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(doc.get("worst_speedup").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -4,7 +4,9 @@
 //! DSE configurations flow through a bounded job queue (backpressure)
 //! into a worker pool. Each worker assembles the quantized model for
 //! its configuration from the per-(layer, width) quantization cache,
-//! obtains accuracy from the shared [`AccuracyEval`] backend and
+//! obtains accuracy from the shared [`AccuracyEval`] backend —
+//! concurrently across workers; `evaluate` takes `&self`, so the
+//! dominant per-config cost of the ISS backend overlaps — and
 //! composes the predicted cycle/memory cost from the per-layer
 //! [`CycleModel`] — which is measured once, up front, on the ISS
 //! micro-op engine through the pooled
@@ -73,10 +75,15 @@ impl EvalReport {
     }
 }
 
-/// Accuracy-evaluation backend.
-pub trait AccuracyEval: Send {
+/// Accuracy-evaluation backend. `evaluate` takes `&self` so the
+/// coordinator's sweep workers can score configurations **in
+/// parallel** — with the ISS backend the evaluation dominates
+/// per-config cost, and serialising it behind a lock would idle the
+/// whole pool. Backends needing exclusive state (PJRT's raw session
+/// handle) serialise internally.
+pub trait AccuracyEval: Send + Sync {
     /// Evaluate `qm` over the first `n` test samples.
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport>;
+    fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport>;
     /// Backend label (metrics/logs).
     fn name(&self) -> &'static str;
 }
@@ -90,7 +97,7 @@ pub struct HostEval {
 }
 
 impl AccuracyEval for HostEval {
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
+    fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
         ensure!(n > 0, "HostEval: empty evaluation set");
         let mut correct = 0usize;
@@ -175,7 +182,7 @@ impl IssEval {
 }
 
 impl AccuracyEval for IssEval {
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
+    fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
         ensure!(n > 0, "IssEval: empty evaluation set");
         let inputs: Vec<Tensor<i8>> =
@@ -213,28 +220,39 @@ impl AccuracyEval for IssEval {
 }
 
 /// PJRT evaluator: batched inference through the AOT model artifact.
+/// The session handle is not thread-safe, so evaluations serialise on
+/// the internal mutex (the other backends run fully in parallel).
 pub struct PjrtEval {
-    /// PJRT session (executable cache inside).
-    pub session: crate::runtime::Session,
+    /// PJRT session (executable cache inside), serialised internally.
+    pub session: Mutex<crate::runtime::Session>,
     /// Evaluation set.
     pub test: Dataset,
     /// Artifact batch size.
     pub batch: usize,
 }
 
+impl PjrtEval {
+    /// Wrap an open PJRT session for coordinator use.
+    pub fn new(session: crate::runtime::Session, test: Dataset, batch: usize) -> Self {
+        PjrtEval { session: Mutex::new(session), test, batch }
+    }
+}
+
 // SAFETY: the `xla` crate's client/executable handles are raw C
-// pointers (hence !Send by default), but the PJRT CPU plugin has no
-// thread affinity and the coordinator serialises every access through
-// its evaluator Mutex — the value is only ever *used* by one thread at
-// a time.
+// pointers (hence !Send/!Sync by default), but the PJRT CPU plugin has
+// no thread affinity and every access goes through the internal
+// `session` Mutex — the value is only ever *used* by one thread at a
+// time.
 unsafe impl Send for PjrtEval {}
+unsafe impl Sync for PjrtEval {}
 
 impl AccuracyEval for PjrtEval {
-    fn evaluate(&mut self, qm: &QModel, n: usize) -> Result<EvalReport> {
+    fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
         ensure!(n > 0, "PjrtEval: empty evaluation set");
+        let mut session = self.session.lock().unwrap();
         crate::runtime::evaluate_accuracy(
-            &mut self.session,
+            &mut session,
             qm,
             &self.test.images[..n],
             &self.test.labels[..n],
@@ -273,7 +291,10 @@ pub struct Coordinator {
     /// these instead of re-running the MSE scale search (§Perf
     /// iteration 2 — the quantize step falls out of the sweep hot path).
     qcache: Vec<[crate::nn::QLayer; 3]>,
-    evaluator: Mutex<Box<dyn AccuracyEval>>,
+    /// Shared accuracy backend; `evaluate` takes `&self`, so sweep
+    /// workers score configurations concurrently (no coordinator-level
+    /// lock — the dominant per-config cost overlaps across the pool).
+    evaluator: Box<dyn AccuracyEval>,
     cache: Mutex<HashMap<Config, EvalReport>>,
     /// Worker threads for the sweep.
     pub workers: usize,
@@ -320,7 +341,7 @@ impl Coordinator {
             cycle_model,
             analysis,
             qcache,
-            evaluator: Mutex::new(evaluator),
+            evaluator,
             cache: Mutex::new(HashMap::new()),
             workers,
             queue_cap: 64,
@@ -364,7 +385,7 @@ impl Coordinator {
             None => {
                 let qm = self.quantized(cfg);
                 self.metrics.acc_evals.fetch_add(1, Ordering::Relaxed);
-                let r = self.evaluator.lock().unwrap().evaluate(&qm, n_eval)?;
+                let r = self.evaluator.evaluate(&qm, n_eval)?;
                 // Count divergent configs only on the fresh insert so a
                 // racing duplicate evaluation can't double-count.
                 let fresh = self.cache.lock().unwrap().insert(cfg.clone(), r).is_none();
@@ -388,7 +409,7 @@ impl Coordinator {
 
     /// Label of the evaluator backend in use.
     pub fn evaluator_name(&self) -> &'static str {
-        self.evaluator.lock().unwrap().name()
+        self.evaluator.name()
     }
 
     /// Evaluate a sweep of configurations through the worker pool

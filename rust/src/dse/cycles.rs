@@ -2,8 +2,8 @@
 //! **once** on the cycle-accurate ISS and cached; configuration costs
 //! compose from the table. This mirrors the paper's methodology — layer
 //! cycle counts are data-independent (the kernels have no data-dependent
-//! control flow except the requant clamps, a ±2-cycle effect), so one
-//! Verilator-style measurement per layer/mode suffices.
+//! control flow at all since the requant clamp went branchless), so one
+//! Verilator-style measurement per layer/mode suffices exactly.
 //!
 //! Measurements run on the micro-op engine through the global
 //! [`crate::sim::session::SimSession`] (kernel images cached, memories

@@ -124,11 +124,11 @@ impl ExpOpts {
                 if stem.exists() {
                     match crate::runtime::Session::open(&self.artifacts) {
                         Ok(session) => {
-                            return Ok(Box::new(PjrtEval {
+                            return Ok(Box::new(PjrtEval::new(
                                 session,
-                                test: model.test.clone(),
+                                model.test.clone(),
                                 batch,
-                            }))
+                            )))
                         }
                         Err(e) => {
                             eprintln!("[exp] PJRT unavailable ({e}); using the host evaluator");

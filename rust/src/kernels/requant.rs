@@ -11,7 +11,15 @@
 //! ```
 //!
 //! where `carry = (L + 2³⁰) overflowed`. The sequence costs 10 ALU ops +
-//! the `mulh`/`mul` pair, amortised over one output feature.
+//! the `mulh`/`mul` pair, followed by a **branchless** clamp (slt/mask
+//! min–max, 11 ALU ops), amortised over one output feature.
+//!
+//! The emitted shape is a **canonical form contract** with the micro-op
+//! engine: `sim::engine`'s `try_requant` matcher recognises exactly this
+//! sequence (plus the kernel's trailing `sb` of the result, where
+//! present) and collapses it into a single fused `Requant`
+//! superinstruction — straight-line code with no labels is what makes
+//! the whole epilogue fusible. Keep the two in sync.
 
 use crate::asm::Asm;
 use crate::isa::reg::*;
@@ -46,16 +54,21 @@ pub fn emit_requantize(a: &mut Asm, rq: Requant) {
     } else if rq.shift < 0 {
         a.slli(T0, T0, -rq.shift);
     }
-    // Clamp to [s6, 127].
-    let hi_ok = a.new_label();
-    let lo_ok = a.new_label();
+    // Branchless clamp to [s6, 127]: min then max via slt + mask
+    // (`min(a,b) = a ^ ((a^b) & -(b<a))`). Fixed-length straight-line
+    // code — no data-dependent control flow, and the engine can fuse
+    // the whole epilogue into one micro-op.
     a.li(T1, 127);
-    a.blt(T0, T1, hi_ok);
-    a.mv(T0, T1);
-    a.bind(hi_ok);
-    a.bge(T0, S6, lo_ok);
-    a.mv(T0, S6);
-    a.bind(lo_ok);
+    a.slt(T2, T1, T0); // t2 = (127 < t0)
+    a.sub(T2, ZERO, T2); // mask = -(127 < t0)
+    a.xor(T3, T0, T1);
+    a.and(T3, T3, T2);
+    a.xor(T0, T0, T3); // t0 = min(t0, 127)
+    a.slt(T2, T0, S6); // t2 = (t0 < lo)
+    a.sub(T2, ZERO, T2);
+    a.xor(T3, T0, S6);
+    a.and(T3, T3, T2);
+    a.xor(T0, T0, T3); // t0 = max(t0, lo)
     a.mv(A0, T0);
 }
 
@@ -99,5 +112,37 @@ mod tests {
         assert_eq!(run_requant(10_000, rq, false), 127);
         assert_eq!(run_requant(-10_000, rq, false), -128);
         assert_eq!(run_requant(-10_000, rq, true), 0);
+    }
+
+    /// Canonical-form contract: the exact sequence this module emits
+    /// must fuse into the engine's single `Requant` micro-op — for
+    /// positive, negative and zero shifts — and execute bit-identically
+    /// to the host reference on the fused path.
+    #[test]
+    fn epilogue_fuses_into_engine_superinstruction() {
+        for (scale, acc) in [(0.004, 123_456), (0.6, 37), (1.7, -95)] {
+            let rq = Requant::from_real_scale(scale);
+            let mut a = Asm::new();
+            emit_prologue(&mut a, rq, false);
+            a.li(A0, acc);
+            emit_requantize(&mut a, rq);
+            a.halt();
+            let mut core =
+                Core::new(CoreConfig { mem_size: 4096, ..Default::default() }, a.assemble(), 0);
+            let cp = core.compile();
+            assert_eq!(
+                cp.fusion_census()[3],
+                1,
+                "scale {scale}: epilogue must fuse (census {:?})",
+                cp.fusion_census()
+            );
+            assert_eq!(core.run_engine(&cp, 10_000), ExitReason::Ecall);
+            assert_eq!(core.engine_stats.requant, 1, "fused path must execute");
+            assert_eq!(
+                core.regs[A0 as usize] as i8,
+                requantize(acc, rq, false),
+                "scale {scale} acc {acc}"
+            );
+        }
     }
 }

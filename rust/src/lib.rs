@@ -15,9 +15,10 @@
 //!   the architectural model: the reference interpreter (`Core::step`)
 //!   and the pre-decoded **micro-op engine** (`sim::engine`) that the
 //!   hot measurement paths run on — branch targets resolved to program
-//!   indices at translation time, per-op cycle costs precomputed, and
-//!   the kernel generators' inner-loop strips fused into
-//!   superinstructions. `sim::session` adds the reuse layer:
+//!   indices at translation time, per-op cycle costs precomputed, the
+//!   kernel generators' inner-loop strips **and requant epilogues**
+//!   fused into superinstructions, and whole reduction loops executed
+//!   as native counted loops. `sim::session` adds the reuse layer:
 //!   [`sim::session::SimSession`] pools simulator memories and caches
 //!   translated kernels so repeated runs (DSE sweeps, whole-model
 //!   measurement) stop paying per-invocation assembly + allocation.

@@ -10,8 +10,24 @@
 //! * the instruction sequences the kernel generators actually emit are
 //!   **fused into superinstructions**: the packed-kernel inner-loop
 //!   strip (k× activation-word `lw` + weight `lw` + `nn_mac`), the
-//!   scalar baseline MAC (`lb`,`lb`,`mul`,`add`) and the pointer-bump
-//!   loop latch (up to 3× `addi` + conditional branch).
+//!   scalar baseline MAC (`lb`,`lb`,`mul`,`add`), the pointer-bump
+//!   loop latch (up to 3× `addi` + conditional branch) and the whole
+//!   requant epilogue (`mulh`/`mul` SRDHM chain + rounding shift +
+//!   branchless clamp + `mv`, plus the trailing `sb` of the quantized
+//!   output where present — the exact canonical form
+//!   `kernels::requant::emit_requantize` emits, with the shift amount
+//!   and cycle cost pre-resolved at translation time),
+//! * a backward-branching latch whose body is a **single fused strip**
+//!   becomes a *counted loop*: the entire reduction loop runs inside
+//!   one native Rust loop with no per-iteration micro-op dispatch.
+//!   When the latch's compare/stride registers are provably not
+//!   written by the strip body, the trip count is predicted once from
+//!   the register state at loop entry; otherwise (clobbered loop
+//!   registers) a guard falls back to re-evaluating the branch every
+//!   iteration — both paths replay exact sequential semantics.
+//!
+//! The full pattern → micro-op → cycle-accounting catalog is tabulated
+//! in `docs/ARCHITECTURE.md` (§ Superinstruction catalog).
 //!
 //! [`run`] dispatches the stream against a [`Core`]'s architectural
 //! state and is **observationally identical** to [`Core::run`]: same
@@ -19,17 +35,92 @@
 //! reason (property-tested in `tests/engine_equivalence.rs`). Programs
 //! the translator cannot prove clean (static control flow with
 //! non-multiple-of-4 offsets) and dynamic `jalr` entries into the
-//! interior of a fused strip fall back to the reference interpreter.
+//! interior of a fused strip fall back to the reference interpreter;
+//! per-class superinstruction hit counters (and the fallback count)
+//! are kept in [`EngineStats`] on the core.
 //!
-//! The only intentional divergence: the cycle *budget* is checked
-//! between micro-ops, so a fused strip is atomic with respect to
-//! `max_cycles` and a `MaxCycles` exit may be detected up to
-//! strip-length − 1 instructions later than the reference interpreter.
-//! Measurement paths run with an effectively unlimited budget, where
-//! the two are indistinguishable.
+//! The only intentional divergence: the cycle *budget* is checked per
+//! fused strip — after every micro-op **and after every iteration of a
+//! counted loop** (both between the latch and the strip and between
+//! the strip and the latch, exactly where op-at-a-time dispatch would
+//! check) — so a fused strip is atomic with respect to `max_cycles`
+//! and a `MaxCycles` exit may be detected at most one strip later than
+//! the reference interpreter (the longest strip is the ~25-instruction
+//! requant epilogue), never a whole loop later. Measurement paths run
+//! with an effectively unlimited budget, where the two are
+//! indistinguishable.
 
 use super::{alu_eval, Core, ExitReason, Timing};
 use crate::isa::*;
+
+/// Translation feature toggles. The default enables every fusion; the
+/// throughput bench translates the same kernel under [`TranslateOpts::v1`]
+/// to report the per-PR engine trajectory (new vs. previous generation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TranslateOpts {
+    /// Fuse the requant epilogue into a single `Requant` micro-op.
+    pub fuse_requant: bool,
+    /// Run strip-bodied backward latches as native counted loops.
+    pub counted_loops: bool,
+}
+
+impl Default for TranslateOpts {
+    fn default() -> Self {
+        TranslateOpts { fuse_requant: true, counted_loops: true }
+    }
+}
+
+impl TranslateOpts {
+    /// The first-generation engine feature set (PR 1): strip/MAC/latch
+    /// fusion only, no requant epilogue, no counted loops.
+    pub fn v1() -> Self {
+        TranslateOpts { fuse_requant: false, counted_loops: false }
+    }
+}
+
+/// Per-run superinstruction hit counters plus the interpreter-fallback
+/// count — the cheap stand-in for per-instruction trace hooks: they
+/// show *which* fused paths a workload actually exercised without
+/// slowing the engine down. Kept on [`Core`] (`Core::engine_stats`),
+/// reset per core, and aggregated session-wide by
+/// [`super::session::SessionStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Fused packed-kernel strips executed (`LoadMac`), including
+    /// iterations inside counted loops.
+    pub load_mac: u64,
+    /// Fused scalar baseline MACs executed (`ScalarMac`), including
+    /// iterations inside counted loops.
+    pub scalar_mac: u64,
+    /// Fused loop latches executed outside counted loops (a counted
+    /// loop whose branch falls through on first evaluation counts here
+    /// too — it behaved as a plain latch).
+    pub latch: u64,
+    /// Fused requant epilogues executed (`Requant`).
+    pub requant: u64,
+    /// Counted-loop entries (a taken latch whose body is one strip).
+    pub counted_loops: u64,
+    /// Strip iterations executed inside counted loops.
+    pub counted_iters: u64,
+    /// Runs delegated to the reference interpreter: unclean program,
+    /// entry pc inside a fused strip, or a dynamic `jalr` into a strip
+    /// interior.
+    pub fallbacks: u64,
+}
+
+impl EngineStats {
+    /// Elementwise accumulate (used by the session-wide totals).
+    pub fn add(&mut self, o: &EngineStats) {
+        self.load_mac += o.load_mac;
+        self.scalar_mac += o.scalar_mac;
+        self.latch += o.latch;
+        self.requant += o.requant;
+        self.counted_loops += o.counted_loops;
+        self.counted_iters += o.counted_iters;
+        self.fallbacks += o.fallbacks;
+    }
+
+}
 
 /// Pre-resolved control-flow target.
 #[derive(Debug, Clone, Copy)]
@@ -102,6 +193,50 @@ enum MicroOp {
         ct: u32,
         cnt: u32,
     },
+    /// Fused requant epilogue — the exact canonical sequence
+    /// `kernels::requant::emit_requantize` emits: 10-op SRDHM chain on
+    /// (`acc`, `m`), optional rounding shift (`shift` > 0: `add` of the
+    /// `rnd` register then `srai`; `shift` < 0: `slli`), 11-op
+    /// branchless clamp to `[lo, 127]` through scratch regs
+    /// `t0..t3`, `mv out, t0`, and optionally the trailing
+    /// `sb out, off(base)` of the quantized byte (`store`).
+    /// `n_pre` counts the fused instructions excluding the store;
+    /// `c` is their pre-summed cycle cost.
+    Requant {
+        acc: Reg,
+        m: Reg,
+        rnd: Reg,
+        lo: Reg,
+        t0: Reg,
+        t1: Reg,
+        t2: Reg,
+        t3: Reg,
+        out: Reg,
+        shift: i8,
+        store: Option<(Reg, u32)>,
+        n_pre: u8,
+        c: u32,
+        c_store: u32,
+    },
+    /// A latch whose taken target is the immediately preceding fused
+    /// strip (`body` = this op's index − 1, always a `LoadMac` or
+    /// `ScalarMac`): the whole reduction loop runs in one native loop.
+    /// `counted` is `Some((counter_is_rs1, step))` when the strip body
+    /// provably never writes the compare/bump registers, enabling
+    /// trip-count prediction from the register state at loop entry;
+    /// `None` falls back to re-evaluating the branch each iteration.
+    CountedLoop {
+        body: u32,
+        bumps: [(Reg, u32); 3],
+        n: u8,
+        bop: BranchOp,
+        rs1: Reg,
+        rs2: Reg,
+        c_bumps: u32,
+        ct: u32,
+        cnt: u32,
+        counted: Option<(bool, u32)>,
+    },
 }
 
 /// A program translated for the micro-op engine. Tied to the decoded
@@ -127,8 +262,20 @@ pub struct CompiledProgram {
 }
 
 impl CompiledProgram {
-    /// Translate a decoded program linked at `base` under `timing`.
+    /// Translate a decoded program linked at `base` under `timing`
+    /// with every fusion enabled.
     pub fn translate(program: &[Instr], base: u32, timing: Timing) -> CompiledProgram {
+        Self::translate_with(program, base, timing, TranslateOpts::default())
+    }
+
+    /// [`CompiledProgram::translate`] with explicit fusion toggles —
+    /// the throughput bench compares fusion generations this way.
+    pub fn translate_with(
+        program: &[Instr],
+        base: u32,
+        timing: Timing,
+        opts: TranslateOpts,
+    ) -> CompiledProgram {
         let n = program.len();
         let t = &timing;
 
@@ -187,7 +334,7 @@ impl CompiledProgram {
         while i < n {
             instr_to_op[i] = ops.len() as u32;
             op_pc.push(base.wrapping_add(4 * i as u32));
-            if let Some((op, len)) = try_fuse(program, i, &is_target, t, &mk_tgt) {
+            if let Some((op, len)) = try_fuse(program, i, &is_target, t, &mk_tgt, opts) {
                 ops.push(op);
                 fused_instrs += len;
                 i += len;
@@ -218,6 +365,85 @@ impl CompiledProgram {
             }
         }
 
+        // Pass 4: counted loops. A `Latch` whose taken target is the
+        // immediately preceding fused strip is the kernel generators'
+        // reduction-loop shape; rewrite it in place (op indices stay
+        // valid — the body op remains dispatchable on fall-through and
+        // for dynamic entries at the loop head).
+        if opts.counted_loops {
+            for j in 1..ops.len() {
+                let MicroOp::Latch { bumps, n: nb, bop, rs1, rs2, tgt, c_bumps, ct, cnt } = ops[j]
+                else {
+                    continue;
+                };
+                let Tgt::Op(tgt_op) = tgt else { continue };
+                if tgt_op as usize != j - 1 {
+                    continue;
+                }
+                // Architectural registers the strip body writes. x0 is
+                // dropped on write, so it can never really be clobbered.
+                let mut writes = [0u8; 6];
+                let nw = match ops[j - 1] {
+                    MicroOp::LoadMac { acc, act_rd, w_rd, k, .. } => {
+                        let mut nw = 0usize;
+                        for a in 0..k {
+                            writes[nw] = act_rd + a;
+                            nw += 1;
+                        }
+                        writes[nw] = w_rd;
+                        writes[nw + 1] = acc;
+                        nw + 2
+                    }
+                    MicroOp::ScalarMac { ra, rb, rm, acc, .. } => {
+                        writes[..4].copy_from_slice(&[ra, rb, rm, acc]);
+                        4
+                    }
+                    _ => continue,
+                };
+                let body_writes = &writes[..nw];
+                let bump_slice = &bumps[..nb as usize];
+                let body_clobbers = body_writes.iter().any(|&w| {
+                    w != 0
+                        && (w == rs1 || w == rs2 || bump_slice.iter().any(|&(r, _)| r == w))
+                });
+                // Trip-count prediction needs exactly one compare
+                // operand to be the (singly-)bumped counter and the
+                // other to be loop-invariant; everything else takes the
+                // re-evaluating guard path.
+                let counted = if body_clobbers || rs1 == rs2 {
+                    None
+                } else {
+                    // The counter must be bumped exactly once and the
+                    // bound not at all ("bumped twice" must not be
+                    // mistaken for "invariant").
+                    let count_of =
+                        |r: Reg| bump_slice.iter().filter(|&&(br, _)| br == r).count();
+                    let imm_of = |r: Reg| {
+                        bump_slice.iter().find(|&&(br, _)| br == r).map(|&(_, im)| im)
+                    };
+                    if rs1 != 0 && count_of(rs1) == 1 && count_of(rs2) == 0 {
+                        imm_of(rs1).filter(|&s| s != 0).map(|s| (true, s))
+                    } else if rs2 != 0 && count_of(rs2) == 1 && count_of(rs1) == 0 {
+                        imm_of(rs2).filter(|&s| s != 0).map(|s| (false, s))
+                    } else {
+                        None
+                    }
+                };
+                ops[j] = MicroOp::CountedLoop {
+                    body: (j - 1) as u32,
+                    bumps,
+                    n: nb,
+                    bop,
+                    rs1,
+                    rs2,
+                    c_bumps,
+                    ct,
+                    cnt,
+                    counted,
+                };
+            }
+        }
+
         CompiledProgram { ops, op_pc, instr_to_op, base, n_instrs: n, clean: true, fused_instrs }
     }
 
@@ -234,6 +460,23 @@ impl CompiledProgram {
     /// Instructions absorbed into fused superinstructions.
     pub fn fused_instr_count(&self) -> usize {
         self.fused_instrs
+    }
+
+    /// Static census of fused superinstructions in the op stream:
+    /// `[load_mac, scalar_mac, latch, requant, counted_loop]`.
+    pub fn fusion_census(&self) -> [usize; 5] {
+        let mut c = [0usize; 5];
+        for op in &self.ops {
+            match op {
+                MicroOp::LoadMac { .. } => c[0] += 1,
+                MicroOp::ScalarMac { .. } => c[1] += 1,
+                MicroOp::Latch { .. } => c[2] += 1,
+                MicroOp::Requant { .. } => c[3] += 1,
+                MicroOp::CountedLoop { .. } => c[4] += 1,
+                _ => {}
+            }
+        }
+        c
     }
 
     /// False when [`run`] will delegate to the reference interpreter.
@@ -312,11 +555,15 @@ fn try_fuse(
     is_target: &[bool],
     t: &Timing,
     mk_tgt: &impl Fn(usize, i32) -> Tgt,
+    opts: TranslateOpts,
 ) -> Option<(MicroOp, usize)> {
     match p[i] {
         Instr::Load { op: LoadOp::Lw, .. } => try_load_mac(p, i, is_target, t),
         Instr::Load { op: LoadOp::Lb, .. } => try_scalar_mac(p, i, is_target, t),
         Instr::OpImm { op: AluOp::Add, .. } => try_latch(p, i, is_target, t, mk_tgt),
+        Instr::MulDiv { op: MulOp::Mulh, .. } if opts.fuse_requant => {
+            try_requant(p, i, is_target, t)
+        }
         _ => None,
     }
 }
@@ -486,6 +733,271 @@ fn try_latch(
     ))
 }
 
+/// The requant epilogue in the canonical shape
+/// `kernels::requant::emit_requantize` emits (see the `Requant`
+/// micro-op docs): SRDHM chain, optional rounding shift, branchless
+/// clamp, `mv`, and optionally the trailing `sb` of the result. The
+/// fused executor computes the final values of every written register
+/// in closed form, so the register constraints below ensure the
+/// sequential dataflow really is the closed form (aliasing that would
+/// change it rejects the fusion — the ops then lower individually).
+fn try_requant(
+    p: &[Instr],
+    i: usize,
+    is_target: &[bool],
+    t: &Timing,
+) -> Option<(MicroOp, usize)> {
+    // ---- SRDHM chain: 10 instructions -------------------------------
+    let Instr::MulDiv { op: MulOp::Mulh, rd: t0, rs1: acc, rs2: m } = p[i] else {
+        return None;
+    };
+    let Some(&Instr::MulDiv { op: MulOp::Mul, rd: t1, rs1: m_a, rs2: m_b }) = p.get(i + 1)
+    else {
+        return None;
+    };
+    if m_a != acc || m_b != m {
+        return None;
+    }
+    let Some(&Instr::Lui { rd: t2, imm: 0x4000_0000 }) = p.get(i + 2) else {
+        return None;
+    };
+    let t3 = match p.get(i + 3) {
+        Some(&Instr::Op { op: AluOp::Add, rd, rs1, rs2 }) if rs1 == t1 && rs2 == t2 => rd,
+        _ => return None,
+    };
+    match p.get(i + 4) {
+        Some(&Instr::Op { op: AluOp::Sltu, rd, rs1, rs2 })
+            if rd == t1 && rs1 == t3 && rs2 == t1 => {}
+        _ => return None,
+    }
+    match p.get(i + 5) {
+        Some(&Instr::OpImm { op: AluOp::Srl, rd, rs1, imm: 31 }) if rd == t3 && rs1 == t3 => {}
+        _ => return None,
+    }
+    match p.get(i + 6) {
+        Some(&Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: 1 }) if rd == t0 && rs1 == t0 => {}
+        _ => return None,
+    }
+    match p.get(i + 7) {
+        Some(&Instr::Op { op: AluOp::Add, rd, rs1, rs2 })
+            if rd == t0 && rs1 == t0 && rs2 == t3 => {}
+        _ => return None,
+    }
+    match p.get(i + 8) {
+        Some(&Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: 1 }) if rd == t1 && rs1 == t1 => {}
+        _ => return None,
+    }
+    match p.get(i + 9) {
+        Some(&Instr::Op { op: AluOp::Add, rd, rs1, rs2 })
+            if rd == t0 && rs1 == t0 && rs2 == t1 => {}
+        _ => return None,
+    }
+
+    // ---- optional rounding shift ------------------------------------
+    let mut j = i + 10;
+    let mut shift = 0i32;
+    let mut rnd: Reg = 0;
+    match p.get(j) {
+        Some(&Instr::Op { op: AluOp::Add, rd, rs1, rs2 }) if rd == t0 && rs1 == t0 => {
+            match p.get(j + 1) {
+                Some(&Instr::OpImm { op: AluOp::Sra, rd: sr, rs1: ss, imm })
+                    if sr == t0 && ss == t0 && (1..32).contains(&imm) =>
+                {
+                    rnd = rs2;
+                    shift = imm;
+                    j += 2;
+                }
+                _ => return None,
+            }
+        }
+        Some(&Instr::OpImm { op: AluOp::Sll, rd, rs1, imm })
+            if rd == t0 && rs1 == t0 && (1..32).contains(&imm) =>
+        {
+            shift = -imm;
+            j += 1;
+        }
+        _ => {}
+    }
+
+    // ---- branchless clamp to [lo, 127]: 11 instructions -------------
+    match p.get(j) {
+        Some(&Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: 127 }) if rd == t1 => {}
+        _ => return None,
+    }
+    match p.get(j + 1) {
+        Some(&Instr::Op { op: AluOp::Slt, rd, rs1, rs2 })
+            if rd == t2 && rs1 == t1 && rs2 == t0 => {}
+        _ => return None,
+    }
+    match p.get(j + 2) {
+        Some(&Instr::Op { op: AluOp::Sub, rd, rs1: 0, rs2 }) if rd == t2 && rs2 == t2 => {}
+        _ => return None,
+    }
+    match p.get(j + 3) {
+        Some(&Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+            if rd == t3 && rs1 == t0 && rs2 == t1 => {}
+        _ => return None,
+    }
+    match p.get(j + 4) {
+        Some(&Instr::Op { op: AluOp::And, rd, rs1, rs2 })
+            if rd == t3 && rs1 == t3 && rs2 == t2 => {}
+        _ => return None,
+    }
+    match p.get(j + 5) {
+        Some(&Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+            if rd == t0 && rs1 == t0 && rs2 == t3 => {}
+        _ => return None,
+    }
+    let lo = match p.get(j + 6) {
+        Some(&Instr::Op { op: AluOp::Slt, rd, rs1, rs2 }) if rd == t2 && rs1 == t0 => rs2,
+        _ => return None,
+    };
+    match p.get(j + 7) {
+        Some(&Instr::Op { op: AluOp::Sub, rd, rs1: 0, rs2 }) if rd == t2 && rs2 == t2 => {}
+        _ => return None,
+    }
+    match p.get(j + 8) {
+        Some(&Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+            if rd == t3 && rs1 == t0 && rs2 == lo => {}
+        _ => return None,
+    }
+    match p.get(j + 9) {
+        Some(&Instr::Op { op: AluOp::And, rd, rs1, rs2 })
+            if rd == t3 && rs1 == t3 && rs2 == t2 => {}
+        _ => return None,
+    }
+    match p.get(j + 10) {
+        Some(&Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+            if rd == t0 && rs1 == t0 && rs2 == t3 => {}
+        _ => return None,
+    }
+    j += 11;
+
+    // ---- mv out, t0 --------------------------------------------------
+    let out = match p.get(j) {
+        Some(&Instr::OpImm { op: AluOp::Add, rd, rs1, imm: 0 }) if rs1 == t0 => rd,
+        _ => return None,
+    };
+    j += 1;
+
+    // ---- register constraints (closed-form soundness) ---------------
+    let ts = [t0, t1, t2, t3];
+    if ts.contains(&0)
+        || t0 == t1
+        || t0 == t2
+        || t0 == t3
+        || t1 == t2
+        || t1 == t3
+        || t2 == t3
+        || acc == t0
+        || m == t0
+        || ts.contains(&lo)
+        || (shift > 0 && ts.contains(&rnd))
+    {
+        return None;
+    }
+    if is_target[i + 1..j].iter().any(|&b| b) {
+        return None;
+    }
+
+    // ---- optional trailing store of the quantized byte --------------
+    let n_pre = (j - i) as u8;
+    let mut store = None;
+    if let Some(&Instr::Store { op: StoreOp::Sb, rs1: sbase, rs2: ssrc, offset }) = p.get(j) {
+        if ssrc == out && !is_target[j] {
+            store = Some((sbase, offset as u32));
+            j += 1;
+        }
+    }
+
+    // All fused instructions are single-cycle ALU ops except the
+    // mulh/mul pair (and the store, accounted separately).
+    let c = t.mulh + t.mul + (n_pre as u32 - 2) * t.alu;
+    Some((
+        MicroOp::Requant {
+            acc,
+            m,
+            rnd,
+            lo,
+            t0,
+            t1,
+            t2,
+            t3,
+            out,
+            shift: shift as i8,
+            store,
+            n_pre,
+            c,
+            c_store: t.store,
+        },
+        j - i,
+    ))
+}
+
+/// Closed-form trip-count prediction for a counted loop whose latch
+/// branch was just taken: the number of *additional* taken branches
+/// (strip executions = trips + 1) from the counter value `c0` (after
+/// the entry bumps), the loop-invariant `bound`, and the per-iteration
+/// `step`. O(1) — no per-iteration work. Returns `None` when the exit
+/// needs wrap-around modular arithmetic (non-unit `bne` strides, or an
+/// ordered comparison whose linear model leaves the 32-bit domain
+/// before failing); the caller then re-evaluates the branch per
+/// iteration, which handles every case.
+fn predict_trips(bop: BranchOp, ctr_is_rs1: bool, c0: u32, bound: u32, step: u32) -> Option<u64> {
+    let steps = step as i32 as i64;
+    match bop {
+        // Taken entry means counter == bound; the next evaluation
+        // (counter moved by step != 0) already falls out.
+        BranchOp::Beq => Some(0),
+        // Exact modular solution for the unit strides the kernels
+        // emit; other strides may step over the bound and wrap.
+        BranchOp::Bne => match steps {
+            1 => Some(bound.wrapping_sub(c0) as u64 - 1),
+            -1 => Some(c0.wrapping_sub(bound) as u64 - 1),
+            _ => None,
+        },
+        // Ordered comparisons: model the counter in i64 (wrap-free)
+        // and solve for the first failing evaluation; reject if the
+        // exit value leaves the 32-bit domain (the machine would wrap
+        // first and the linear model diverges).
+        _ => {
+            let signed = matches!(bop, BranchOp::Blt | BranchOp::Bge);
+            let (c, k, lo, hi) = if signed {
+                (c0 as i32 as i64, bound as i32 as i64, i32::MIN as i64, i32::MAX as i64)
+            } else {
+                (c0 as i64, bound as i64, 0i64, u32::MAX as i64)
+            };
+            // Normalize "taken" to a strict threshold on the counter:
+            // Blt/Bltu are rs1 < rs2, Bge/Bgeu are rs1 >= rs2.
+            let less = matches!(bop, BranchOp::Blt | BranchOp::Bltu);
+            let (rising, t) = match (less, ctr_is_rs1) {
+                (true, true) => (true, k),       // taken: c < k
+                (true, false) => (false, k),     // taken: k < c
+                (false, true) => (false, k - 1), // taken: c >= k  ⇔  c > k-1
+                (false, false) => (true, k + 1), // taken: k >= c  ⇔  c < k+1
+            };
+            let i_exit = if rising {
+                if steps <= 0 {
+                    return None; // exits only by wrapping
+                }
+                let d = t - c; // > 0: taken at the entry evaluation
+                (d + steps - 1) / steps
+            } else {
+                if steps >= 0 {
+                    return None;
+                }
+                let d = c - t; // > 0
+                (d - steps - 1) / (-steps)
+            };
+            let v_exit = c + i_exit * steps;
+            if v_exit < lo || v_exit > hi {
+                return None;
+            }
+            Some((i_exit - 1) as u64)
+        }
+    }
+}
+
 #[inline]
 fn branch_taken(op: BranchOp, a: u32, b: u32) -> bool {
     match op {
@@ -504,6 +1016,128 @@ enum Flow {
     Goto(Tgt),
 }
 
+/// Execute one fused packed-kernel strip (`LoadMac`) against `core`.
+/// `pc0` is the strip's first-instruction pc (fault reporting).
+/// Returns `Some(reason)` when the strip faults, `None` on completion.
+/// Shared by op dispatch and the counted-loop executor.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn exec_load_mac(
+    core: &mut Core,
+    mode: MacMode,
+    acc: Reg,
+    act_rd: Reg,
+    act_base: Reg,
+    act_off: u32,
+    w_rd: Reg,
+    w_base: Reg,
+    w_off: u32,
+    k: u8,
+    c_load: u32,
+    pc0: u32,
+) -> Option<ExitReason> {
+    let k = k as usize;
+    let base_addr = core.regs[act_base as usize].wrapping_add(act_off);
+    let mut buf = [0u32; 4];
+    match core.mem.load_word_run(base_addr, &mut buf[..k]) {
+        Ok(()) => {}
+        Err((j, f)) => {
+            // Partial strip: the first j loads completed exactly as
+            // they would have individually.
+            for (jj, &w) in buf.iter().enumerate().take(j) {
+                core.regs[act_rd as usize + jj] = w;
+            }
+            core.perf.loads += j as u64;
+            core.perf.cycles += j as u64 * c_load as u64;
+            core.perf.instret += j as u64;
+            core.pc = pc0.wrapping_add(4 * j as u32);
+            return Some(ExitReason::Fault(f));
+        }
+    }
+    for (j, &w) in buf.iter().enumerate().take(k) {
+        core.regs[act_rd as usize + j] = w;
+    }
+    let w_addr = core.regs[w_base as usize].wrapping_add(w_off);
+    let w_word = match core.mem.load(w_addr, 4) {
+        Ok(w) => w,
+        Err(f) => {
+            core.perf.loads += k as u64;
+            core.perf.cycles += k as u64 * c_load as u64;
+            core.perf.instret += k as u64;
+            core.pc = pc0.wrapping_add(4 * k as u32);
+            return Some(ExitReason::Fault(f));
+        }
+    };
+    core.regs[w_rd as usize] = w_word;
+    let issue = core.mac_unit.issue(
+        mode,
+        core.regs[acc as usize],
+        &core.regs[act_rd as usize..act_rd as usize + k],
+        w_word,
+    );
+    core.write_reg(acc, issue.acc);
+    core.perf.loads += (k + 1) as u64;
+    core.perf.macs += issue.macs as u64;
+    core.perf.nn_mac_instrs += 1;
+    core.perf.cycles += (k + 1) as u64 * c_load as u64 + issue.cycles as u64;
+    core.perf.instret += (k + 2) as u64;
+    core.engine_stats.load_mac += 1;
+    None
+}
+
+/// Execute one fused scalar baseline MAC (`ScalarMac`) against `core`.
+/// Same contract as [`exec_load_mac`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn exec_scalar_mac(
+    core: &mut Core,
+    ra: Reg,
+    a_base: Reg,
+    a_off: u32,
+    rb: Reg,
+    b_base: Reg,
+    b_off: u32,
+    rm: Reg,
+    acc: Reg,
+    c_load: u32,
+    c_tail: u32,
+    pc0: u32,
+) -> Option<ExitReason> {
+    let addr_a = core.regs[a_base as usize].wrapping_add(a_off);
+    let va = match core.mem.load(addr_a, 1) {
+        Ok(raw) => raw as u8 as i8 as i32 as u32,
+        Err(f) => {
+            core.pc = pc0;
+            return Some(ExitReason::Fault(f));
+        }
+    };
+    core.write_reg(ra, va);
+    let addr_b = core.regs[b_base as usize].wrapping_add(b_off);
+    let vb = match core.mem.load(addr_b, 1) {
+        Ok(raw) => raw as u8 as i8 as i32 as u32,
+        Err(f) => {
+            core.perf.loads += 1;
+            core.perf.cycles += c_load as u64;
+            core.perf.instret += 1;
+            core.pc = pc0.wrapping_add(4);
+            return Some(ExitReason::Fault(f));
+        }
+    };
+    core.write_reg(rb, vb);
+    let prod = core.regs[ra as usize].wrapping_mul(core.regs[rb as usize]);
+    core.write_reg(rm, prod);
+    let sum = core.regs[acc as usize].wrapping_add(core.regs[rm as usize]);
+    core.write_reg(acc, sum);
+    core.perf.loads += 2;
+    core.perf.muldiv_instrs += 1;
+    core.perf.macs += 1;
+    core.mac_unit.total_macs += 1;
+    core.perf.cycles += 2 * c_load as u64 + c_tail as u64;
+    core.perf.instret += 4;
+    core.engine_stats.scalar_mac += 1;
+    None
+}
+
 /// Run `core` on the micro-op engine until halt or `max_cycles`.
 ///
 /// Equivalent to [`Core::run`] (see the module docs for the cycle
@@ -512,11 +1146,13 @@ enum Flow {
 /// op boundary, or when a `jalr` lands inside a fused strip.
 pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason {
     if !cp.clean || core.prog_base != cp.base || core.program.len() != cp.n_instrs {
+        core.engine_stats.fallbacks += 1;
         return core.run(max_cycles);
     }
     // Entry: map the current pc onto the op stream.
     let rel = core.pc.wrapping_sub(cp.base);
     if rel % 4 != 0 {
+        core.engine_stats.fallbacks += 1;
         return core.run(max_cycles);
     }
     let ii = (rel / 4) as usize;
@@ -525,6 +1161,7 @@ pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason
     }
     let entry = cp.instr_to_op[ii];
     if entry == u32::MAX {
+        core.engine_stats.fallbacks += 1;
         return core.run(max_cycles);
     }
     let mut idx = entry as usize;
@@ -554,6 +1191,7 @@ pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason
                     if core.perf.cycles >= max_cycles {
                         return ExitReason::MaxCycles;
                     }
+                    core.engine_stats.fallbacks += 1;
                     return core.run(max_cycles);
                 }
                 let ti = (rel / 4) as usize;
@@ -572,6 +1210,7 @@ pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason
                     if core.perf.cycles >= max_cycles {
                         return ExitReason::MaxCycles;
                     }
+                    core.engine_stats.fallbacks += 1;
                     return core.run(max_cycles);
                 }
                 Flow::Goto(Tgt::Op(oi))
@@ -769,88 +1408,24 @@ pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason
                 k,
                 c_load,
             } => {
-                let k = k as usize;
-                let base_addr = core.regs[act_base as usize].wrapping_add(act_off);
-                let mut buf = [0u32; 4];
-                match core.mem.load_word_run(base_addr, &mut buf[..k]) {
-                    Ok(()) => {}
-                    Err((j, f)) => {
-                        // Partial strip: the first j loads completed
-                        // exactly as they would have individually.
-                        for (jj, &w) in buf.iter().enumerate().take(j) {
-                            core.regs[act_rd as usize + jj] = w;
-                        }
-                        core.perf.loads += j as u64;
-                        core.perf.cycles += j as u64 * c_load as u64;
-                        core.perf.instret += j as u64;
-                        core.pc = cp.op_pc[idx].wrapping_add(4 * j as u32);
-                        return ExitReason::Fault(f);
-                    }
+                match exec_load_mac(
+                    core, mode, acc, act_rd, act_base, act_off, w_rd, w_base, w_off, k, c_load,
+                    cp.op_pc[idx],
+                ) {
+                    None => Flow::Seq,
+                    Some(r) => return r,
                 }
-                for (j, &w) in buf.iter().enumerate().take(k) {
-                    core.regs[act_rd as usize + j] = w;
-                }
-                let w_addr = core.regs[w_base as usize].wrapping_add(w_off);
-                let w_word = match core.mem.load(w_addr, 4) {
-                    Ok(w) => w,
-                    Err(f) => {
-                        core.perf.loads += k as u64;
-                        core.perf.cycles += k as u64 * c_load as u64;
-                        core.perf.instret += k as u64;
-                        core.pc = cp.op_pc[idx].wrapping_add(4 * k as u32);
-                        return ExitReason::Fault(f);
-                    }
-                };
-                core.regs[w_rd as usize] = w_word;
-                let issue = core.mac_unit.issue(
-                    mode,
-                    core.regs[acc as usize],
-                    &core.regs[act_rd as usize..act_rd as usize + k],
-                    w_word,
-                );
-                core.write_reg(acc, issue.acc);
-                core.perf.loads += (k + 1) as u64;
-                core.perf.macs += issue.macs as u64;
-                core.perf.nn_mac_instrs += 1;
-                core.perf.cycles += (k + 1) as u64 * c_load as u64 + issue.cycles as u64;
-                core.perf.instret += (k + 2) as u64;
-                Flow::Seq
             }
             MicroOp::ScalarMac {
                 ra, a_base, a_off, rb, b_base, b_off, rm, acc, c_load, c_tail,
             } => {
-                let addr_a = core.regs[a_base as usize].wrapping_add(a_off);
-                let va = match core.mem.load(addr_a, 1) {
-                    Ok(raw) => raw as u8 as i8 as i32 as u32,
-                    Err(f) => {
-                        core.pc = cp.op_pc[idx];
-                        return ExitReason::Fault(f);
-                    }
-                };
-                core.write_reg(ra, va);
-                let addr_b = core.regs[b_base as usize].wrapping_add(b_off);
-                let vb = match core.mem.load(addr_b, 1) {
-                    Ok(raw) => raw as u8 as i8 as i32 as u32,
-                    Err(f) => {
-                        core.perf.loads += 1;
-                        core.perf.cycles += c_load as u64;
-                        core.perf.instret += 1;
-                        core.pc = cp.op_pc[idx].wrapping_add(4);
-                        return ExitReason::Fault(f);
-                    }
-                };
-                core.write_reg(rb, vb);
-                let prod = core.regs[ra as usize].wrapping_mul(core.regs[rb as usize]);
-                core.write_reg(rm, prod);
-                let sum = core.regs[acc as usize].wrapping_add(core.regs[rm as usize]);
-                core.write_reg(acc, sum);
-                core.perf.loads += 2;
-                core.perf.muldiv_instrs += 1;
-                core.perf.macs += 1;
-                core.mac_unit.total_macs += 1;
-                core.perf.cycles += 2 * c_load as u64 + c_tail as u64;
-                core.perf.instret += 4;
-                Flow::Seq
+                match exec_scalar_mac(
+                    core, ra, a_base, a_off, rb, b_base, b_off, rm, acc, c_load, c_tail,
+                    cp.op_pc[idx],
+                ) {
+                    None => Flow::Seq,
+                    Some(r) => return r,
+                }
             }
             MicroOp::Latch { bumps, n, bop, rs1, rs2, tgt, c_bumps, ct, cnt } => {
                 for &(r, imm) in bumps.iter().take(n as usize) {
@@ -860,12 +1435,173 @@ pub fn run(core: &mut Core, cp: &CompiledProgram, max_cycles: u64) -> ExitReason
                 let a = core.regs[rs1 as usize];
                 let b = core.regs[rs2 as usize];
                 core.perf.instret += n as u64 + 1;
+                core.engine_stats.latch += 1;
                 if branch_taken(bop, a, b) {
                     core.perf.taken_branches += 1;
                     core.perf.cycles += (c_bumps + ct) as u64;
                     Flow::Goto(tgt)
                 } else {
                     core.perf.cycles += (c_bumps + cnt) as u64;
+                    Flow::Seq
+                }
+            }
+            MicroOp::Requant {
+                acc, m, rnd, lo, t0, t1, t2, t3, out, shift, store, n_pre, c, c_store,
+            } => {
+                // Closed-form replay of the fused sequence (bit-exact
+                // per-instruction semantics; see `try_requant` for the
+                // aliasing constraints that make this sound).
+                let av = core.regs[acc as usize] as i32;
+                let mv = core.regs[m as usize] as i32;
+                let p = (av as i64) * (mv as i64);
+                let h = (p >> 32) as u32; // mulh
+                let l = p as u32; // mul
+                let lr = l.wrapping_add(0x4000_0000); // add t3, t1, t2
+                let carry = (lr < l) as u32; // sltu
+                let t3v = lr >> 31; // srli
+                let t1v = carry << 1; // slli t1
+                let s = h.wrapping_shl(1).wrapping_add(t3v).wrapping_add(t1v);
+                let shifted = if shift > 0 {
+                    ((s.wrapping_add(core.regs[rnd as usize]) as i32) >> shift) as u32
+                } else if shift < 0 {
+                    s.wrapping_shl((-(shift as i32)) as u32)
+                } else {
+                    s
+                };
+                // Branchless clamp: min(·, 127) then max(·, lo).
+                let gt = ((127i32) < (shifted as i32)) as u32;
+                let minv = shifted ^ ((shifted ^ 127) & 0u32.wrapping_sub(gt));
+                let lov = core.regs[lo as usize];
+                let lt = ((minv as i32) < (lov as i32)) as u32;
+                let mask2 = 0u32.wrapping_sub(lt);
+                let x2 = (minv ^ lov) & mask2;
+                let clamped = minv ^ x2;
+                // Final register state of the sequential execution: the
+                // scratch regs carry their last intermediate values and
+                // the `mv` (last write) lands after them.
+                core.regs[t0 as usize] = clamped;
+                core.regs[t1 as usize] = 127;
+                core.regs[t2 as usize] = mask2;
+                core.regs[t3 as usize] = x2;
+                core.write_reg(out, clamped);
+                core.perf.muldiv_instrs += 2;
+                core.perf.macs += 1; // the SRDHM `mul` counts as one scalar MAC
+                core.mac_unit.total_macs += 1;
+                core.perf.cycles += c as u64;
+                core.perf.instret += n_pre as u64;
+                core.engine_stats.requant += 1;
+                if let Some((sbase, off)) = store {
+                    let addr = core.regs[sbase as usize].wrapping_add(off);
+                    match core.mem.store(addr, 1, core.regs[out as usize]) {
+                        Ok(()) => {
+                            core.perf.stores += 1;
+                            core.perf.cycles += c_store as u64;
+                            core.perf.instret += 1;
+                        }
+                        Err(f) => {
+                            core.pc = cp.op_pc[idx].wrapping_add(4 * n_pre as u32);
+                            return ExitReason::Fault(f);
+                        }
+                    }
+                }
+                Flow::Seq
+            }
+            MicroOp::CountedLoop { body, bumps, n, bop, rs1, rs2, c_bumps, ct, cnt, counted } => {
+                for &(r, imm) in bumps.iter().take(n as usize) {
+                    let v = core.regs[r as usize].wrapping_add(imm);
+                    core.write_reg(r, v);
+                }
+                let a = core.regs[rs1 as usize];
+                let b = core.regs[rs2 as usize];
+                core.perf.instret += n as u64 + 1;
+                if !branch_taken(bop, a, b) {
+                    core.perf.cycles += (c_bumps + cnt) as u64;
+                    core.engine_stats.latch += 1;
+                    Flow::Seq
+                } else {
+                    core.perf.taken_branches += 1;
+                    core.perf.cycles += (c_bumps + ct) as u64;
+                    core.engine_stats.counted_loops += 1;
+                    let body_idx = body as usize;
+                    let body_pc = cp.op_pc[body_idx];
+                    let latch_pc = cp.op_pc[idx];
+                    // Predict the remaining taken-branch count in
+                    // closed form from the entry register state when
+                    // the loop registers are provably unclobbered
+                    // (translation-time guard); otherwise re-evaluate
+                    // the branch every iteration.
+                    let mut remaining = counted.and_then(|(ctr_is_rs1, step)| {
+                        let (cv, bound) = if ctr_is_rs1 { (a, b) } else { (b, a) };
+                        predict_trips(bop, ctr_is_rs1, cv, bound, step)
+                    });
+                    loop {
+                        // Identical budget placement to op-at-a-time
+                        // dispatch: after the taken latch (pc at the
+                        // strip) and after the strip (pc at the latch).
+                        if core.perf.cycles >= max_cycles {
+                            core.pc = body_pc;
+                            return ExitReason::MaxCycles;
+                        }
+                        let halt = match cp.ops[body_idx] {
+                            MicroOp::LoadMac {
+                                mode,
+                                acc,
+                                act_rd,
+                                act_base,
+                                act_off,
+                                w_rd,
+                                w_base,
+                                w_off,
+                                k,
+                                c_load,
+                            } => exec_load_mac(
+                                core, mode, acc, act_rd, act_base, act_off, w_rd, w_base,
+                                w_off, k, c_load, body_pc,
+                            ),
+                            MicroOp::ScalarMac {
+                                ra, a_base, a_off, rb, b_base, b_off, rm, acc, c_load, c_tail,
+                            } => exec_scalar_mac(
+                                core, ra, a_base, a_off, rb, b_base, b_off, rm, acc, c_load,
+                                c_tail, body_pc,
+                            ),
+                            _ => unreachable!("counted-loop body is always a fused strip"),
+                        };
+                        core.engine_stats.counted_iters += 1;
+                        if let Some(r) = halt {
+                            return r;
+                        }
+                        if core.perf.cycles >= max_cycles {
+                            core.pc = latch_pc;
+                            return ExitReason::MaxCycles;
+                        }
+                        for &(r, imm) in bumps.iter().take(n as usize) {
+                            let v = core.regs[r as usize].wrapping_add(imm);
+                            core.write_reg(r, v);
+                        }
+                        core.perf.instret += n as u64 + 1;
+                        let taken = match remaining.as_mut() {
+                            Some(t) => {
+                                if *t > 0 {
+                                    *t -= 1;
+                                    true
+                                } else {
+                                    false
+                                }
+                            }
+                            None => branch_taken(
+                                bop,
+                                core.regs[rs1 as usize],
+                                core.regs[rs2 as usize],
+                            ),
+                        };
+                        if taken {
+                            core.perf.taken_branches += 1;
+                            core.perf.cycles += (c_bumps + ct) as u64;
+                        } else {
+                            core.perf.cycles += (c_bumps + cnt) as u64;
+                            break;
+                        }
+                    }
                     Flow::Seq
                 }
             }

@@ -24,11 +24,16 @@
 //!   cycle costs pre-computed from [`Timing`], and the kernel
 //!   generators' inner-loop strips fused into superinstructions
 //!   (activation-word loads + weight load + `nn_mac`; the scalar
-//!   load-load-mul-add MAC; pointer-bump/branch loop latches). Programs
-//!   the translator cannot prove clean (misaligned static control flow)
-//!   and dynamic jumps into fused strips fall back to the reference
-//!   interpreter, so the engine is observationally identical on every
-//!   program — it is purely a throughput optimisation.
+//!   load-load-mul-add MAC; pointer-bump/branch loop latches; the
+//!   whole requant epilogue incl. the trailing output store; and
+//!   counted loops — a latch back-branching to a single fused strip
+//!   runs the entire reduction loop natively, with the cycle budget
+//!   checked per strip iteration). Programs the translator cannot
+//!   prove clean (misaligned static control flow) and dynamic jumps
+//!   into fused strips fall back to the reference interpreter, so the
+//!   engine is observationally identical on every program — it is
+//!   purely a throughput optimisation. Per-class superinstruction hit
+//!   counters live in [`engine::EngineStats`] (`Core::engine_stats`).
 //!
 //! [`session`] layers compile-once/run-many reuse on top:
 //! [`session::SimSession`] pools [`Memory`] buffers (a run recycles a
@@ -46,7 +51,7 @@ pub mod session;
 use crate::isa::decode::decode;
 use crate::isa::*;
 use std::sync::Arc;
-pub use engine::CompiledProgram;
+pub use engine::{CompiledProgram, EngineStats, TranslateOpts};
 pub use mac_unit::{MacUnit, MacUnitConfig};
 pub use memory::{MemFault, Memory};
 pub use perf::PerfCounters;
@@ -146,6 +151,9 @@ pub struct Core {
     pub perf: PerfCounters,
     /// The mixed-precision MAC block.
     pub mac_unit: MacUnit,
+    /// Micro-op-engine superinstruction hit counters for this core's
+    /// runs (all-zero under the reference interpreter).
+    pub engine_stats: EngineStats,
     timing: Timing,
     program: Arc<[Instr]>,
     prog_base: u32,
@@ -173,6 +181,7 @@ impl Core {
             mem,
             perf: PerfCounters::default(),
             mac_unit: MacUnit::new(cfg.mac),
+            engine_stats: EngineStats::default(),
             timing: cfg.timing,
             program,
             prog_base: base,

@@ -20,7 +20,7 @@
 //! The session is `Sync`; the DSE/coordinator worker pools share one
 //! global instance ([`SimSession::global`]).
 
-use super::engine::CompiledProgram;
+use super::engine::{CompiledProgram, EngineStats, TranslateOpts};
 use super::{engine, Core, CoreConfig, ExitReason, Memory, Timing};
 use crate::isa::Instr;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -49,9 +49,61 @@ pub struct CompiledImage {
 impl CompiledImage {
     /// Assemble an image from a decoded program under `timing`.
     pub fn new(prog: Vec<Instr>, base: u32, timing: Timing) -> Self {
+        Self::new_with_opts(prog, base, timing, TranslateOpts::default())
+    }
+
+    /// [`CompiledImage::new`] with explicit engine translation options —
+    /// the throughput bench builds images of older fusion generations
+    /// to report the per-PR engine trajectory.
+    pub fn new_with_opts(
+        prog: Vec<Instr>,
+        base: u32,
+        timing: Timing,
+        opts: TranslateOpts,
+    ) -> Self {
         let words = crate::isa::encode::encode_program(&prog);
-        let compiled = CompiledProgram::translate(&prog, base, timing);
+        let compiled = CompiledProgram::translate_with(&prog, base, timing, opts);
         CompiledImage { prog: Arc::from(prog), words, compiled, base, timing }
+    }
+}
+
+/// Atomic accumulation of [`EngineStats`] across runs — the
+/// session-wide view of which superinstruction classes fire (printed
+/// by the `iss_throughput` bench).
+#[derive(Debug, Default)]
+pub struct EngineHitTotals {
+    load_mac: AtomicU64,
+    scalar_mac: AtomicU64,
+    latch: AtomicU64,
+    requant: AtomicU64,
+    counted_loops: AtomicU64,
+    counted_iters: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+impl EngineHitTotals {
+    /// Fold one run's counters in (lock-free).
+    pub fn absorb(&self, s: &EngineStats) {
+        self.load_mac.fetch_add(s.load_mac, Ordering::Relaxed);
+        self.scalar_mac.fetch_add(s.scalar_mac, Ordering::Relaxed);
+        self.latch.fetch_add(s.latch, Ordering::Relaxed);
+        self.requant.fetch_add(s.requant, Ordering::Relaxed);
+        self.counted_loops.fetch_add(s.counted_loops, Ordering::Relaxed);
+        self.counted_iters.fetch_add(s.counted_iters, Ordering::Relaxed);
+        self.fallbacks.fetch_add(s.fallbacks, Ordering::Relaxed);
+    }
+
+    /// Snapshot the totals as a plain [`EngineStats`].
+    pub fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            load_mac: self.load_mac.load(Ordering::Relaxed),
+            scalar_mac: self.scalar_mac.load(Ordering::Relaxed),
+            latch: self.latch.load(Ordering::Relaxed),
+            requant: self.requant.load(Ordering::Relaxed),
+            counted_loops: self.counted_loops.load(Ordering::Relaxed),
+            counted_iters: self.counted_iters.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -64,6 +116,8 @@ pub struct SessionStats {
     pub mem_allocs: AtomicU64,
     /// Engine executions completed.
     pub runs: AtomicU64,
+    /// Cumulative superinstruction hits across engine runs.
+    pub engine: EngineHitTotals,
 }
 
 /// A pool of simulator memories + the execution entry point.
@@ -161,6 +215,7 @@ impl SimSession {
             core.run(u64::MAX)
         };
         self.stats.runs.fetch_add(1, Ordering::Relaxed);
+        self.stats.engine.absorb(&core.engine_stats);
         let out = read(&core);
         self.checkin(core.into_memory());
         (out, reason)
@@ -224,6 +279,32 @@ mod tests {
             image.compiled.fused_instr_count(),
             kp.prog.len()
         );
+        // The requant epilogue must fuse too (one per output feature).
+        let census = image.compiled.fusion_census();
+        assert!(census[0] > 0, "no LoadMac strips fused: {census:?}");
+        assert!(census[3] > 0, "no Requant epilogues fused: {census:?}");
+        // A v1 translation of the same program has no requant fusion.
+        let v1 = CompiledImage::new_with_opts(
+            kp.prog,
+            crate::kernels::PROG_BASE,
+            Timing::default(),
+            super::TranslateOpts::v1(),
+        );
+        assert_eq!(v1.compiled.fusion_census()[3], 0);
+        assert_eq!(v1.compiled.fusion_census()[4], 0);
+
+        // Executing through a session aggregates the hit counters.
+        let s = SimSession::new();
+        let cfg = CoreConfig {
+            mem_size: crate::kernels::DATA_BASE as usize + 8192,
+            ..Default::default()
+        };
+        let (_, reason) = s.execute(cfg, &image, |_| {}, |_| ());
+        assert_eq!(reason, ExitReason::Ecall);
+        let hits = s.stats.engine.snapshot();
+        assert!(hits.requant > 0, "session never saw a Requant hit: {hits:?}");
+        assert!(hits.load_mac > 0, "session never saw a LoadMac hit: {hits:?}");
+        assert_eq!(hits.fallbacks, 0, "kernel run must not fall back: {hits:?}");
     }
 
     #[test]

@@ -81,8 +81,24 @@ fn docs_mention_live_symbols() {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
     let arch = fs::read_to_string("docs/ARCHITECTURE.md").unwrap();
-    for sym in ["SimSession", "run_model_batch", "Coordinator", "AccuracyEval", "CompiledImage"] {
+    for sym in [
+        "SimSession",
+        "run_model_batch",
+        "Coordinator",
+        "AccuracyEval",
+        "CompiledImage",
+        // The superinstruction catalog must keep naming the engine's
+        // fused op classes and their hit-counter surface.
+        "Requant",
+        "CountedLoop",
+        "EngineStats",
+    ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
+    }
+    // The engine symbols the catalog documents must still exist.
+    let engine = fs::read_to_string("rust/src/sim/engine.rs").unwrap();
+    for sym in ["Requant", "CountedLoop", "pub struct EngineStats", "fusion_census"] {
+        assert!(engine.contains(sym), "sim/engine.rs lost `{sym}` — update the docs catalog");
     }
     // The symbols the docs name must still exist in the crate (grep
     // over the source tree keeps this honest without a compiler).

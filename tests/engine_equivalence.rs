@@ -7,19 +7,23 @@
 //!
 //! The generator emits every instruction class, the exact inner-loop
 //! strips the engine fuses (packed-MAC, scalar-MAC, loop latches with
-//! backward branches), deliberate memory faults, and `jalr`s that land
-//! near (or inside) fused strips to exercise the dynamic-entry
-//! fallback. Programs terminate by construction: control flow is
-//! forward-only except bounded counted loops.
+//! backward branches, the requant epilogue in its canonical branchless
+//! form, counted reduction loops with clean and clobbered loop
+//! registers), deliberate memory faults, and `jalr`s that land near
+//! (or inside) fused strips to exercise the dynamic-entry fallback.
+//! Programs terminate by construction: control flow is forward-only
+//! except bounded counted loops.
 
 use mpnn::isa::*;
 use mpnn::rng::Rng;
-use mpnn::sim::{Core, CoreConfig, ExitReason};
+use mpnn::sim::{Core, CoreConfig, EngineStats, ExitReason};
 
 const MEM: usize = 4096;
 
 /// Run `prog` on both interpreters and assert identical outcomes.
-fn assert_equiv(prog: Vec<Instr>, max_cycles: u64, tag: &str) -> ExitReason {
+/// Returns the exit reason and the engine's superinstruction hit
+/// counters (to assert the fused paths actually ran).
+fn assert_equiv(prog: Vec<Instr>, max_cycles: u64, tag: &str) -> (ExitReason, EngineStats) {
     let cfg = CoreConfig { mem_size: MEM, ..Default::default() };
     let mut legacy = Core::new(cfg, prog.clone(), 0);
     let mut fast = Core::new(cfg, prog, 0);
@@ -41,7 +45,8 @@ fn assert_equiv(prog: Vec<Instr>, max_cycles: u64, tag: &str) -> ExitReason {
     );
     assert_eq!(legacy.mac_unit.total_macs, fast.mac_unit.total_macs, "{tag}: mac count");
     assert_eq!(legacy.mac_unit.total_issues, fast.mac_unit.total_issues, "{tag}: mac issues");
-    r1
+    assert_eq!(legacy.engine_stats, EngineStats::default(), "{tag}: legacy ran no engine");
+    (r1, fast.engine_stats)
 }
 
 /// Registers the generator may clobber with arbitrary values.
@@ -90,9 +95,115 @@ impl Gen {
         ])
     }
 
+    /// The requant epilogue in the exact canonical shape
+    /// `kernels::requant::emit_requantize` emits (SRDHM chain, random
+    /// rounding shift, branchless clamp, `mv`), over whatever random
+    /// values the operand registers hold; roughly half the time with
+    /// the trailing `sb` of the result that the kernels emit.
+    fn emit_requant_epilogue(&mut self) {
+        let (t0, t1, t2, t3) = (5u8, 6u8, 7u8, 8u8);
+        let (acc, m, rnd, lo) = (10u8, 11u8, 12u8, 13u8);
+        let shift = self.rng.range_i32(-4, 12);
+        let p = &mut self.prog;
+        p.push(Instr::MulDiv { op: MulOp::Mulh, rd: t0, rs1: acc, rs2: m });
+        p.push(Instr::MulDiv { op: MulOp::Mul, rd: t1, rs1: acc, rs2: m });
+        p.push(Instr::Lui { rd: t2, imm: 0x4000_0000 });
+        p.push(Instr::Op { op: AluOp::Add, rd: t3, rs1: t1, rs2: t2 });
+        p.push(Instr::Op { op: AluOp::Sltu, rd: t1, rs1: t3, rs2: t1 });
+        p.push(Instr::OpImm { op: AluOp::Srl, rd: t3, rs1: t3, imm: 31 });
+        p.push(Instr::OpImm { op: AluOp::Sll, rd: t0, rs1: t0, imm: 1 });
+        p.push(Instr::Op { op: AluOp::Add, rd: t0, rs1: t0, rs2: t3 });
+        p.push(Instr::OpImm { op: AluOp::Sll, rd: t1, rs1: t1, imm: 1 });
+        p.push(Instr::Op { op: AluOp::Add, rd: t0, rs1: t0, rs2: t1 });
+        if shift > 0 {
+            p.push(Instr::Op { op: AluOp::Add, rd: t0, rs1: t0, rs2: rnd });
+            p.push(Instr::OpImm { op: AluOp::Sra, rd: t0, rs1: t0, imm: shift });
+        } else if shift < 0 {
+            p.push(Instr::OpImm { op: AluOp::Sll, rd: t0, rs1: t0, imm: -shift });
+        }
+        p.push(Instr::OpImm { op: AluOp::Add, rd: t1, rs1: 0, imm: 127 });
+        p.push(Instr::Op { op: AluOp::Slt, rd: t2, rs1: t1, rs2: t0 });
+        p.push(Instr::Op { op: AluOp::Sub, rd: t2, rs1: 0, rs2: t2 });
+        p.push(Instr::Op { op: AluOp::Xor, rd: t3, rs1: t0, rs2: t1 });
+        p.push(Instr::Op { op: AluOp::And, rd: t3, rs1: t3, rs2: t2 });
+        p.push(Instr::Op { op: AluOp::Xor, rd: t0, rs1: t0, rs2: t3 });
+        p.push(Instr::Op { op: AluOp::Slt, rd: t2, rs1: t0, rs2: lo });
+        p.push(Instr::Op { op: AluOp::Sub, rd: t2, rs1: 0, rs2: t2 });
+        p.push(Instr::Op { op: AluOp::Xor, rd: t3, rs1: t0, rs2: lo });
+        p.push(Instr::Op { op: AluOp::And, rd: t3, rs1: t3, rs2: t2 });
+        p.push(Instr::Op { op: AluOp::Xor, rd: t0, rs1: t0, rs2: t3 });
+        p.push(Instr::OpImm { op: AluOp::Add, rd: acc, rs1: t0, imm: 0 });
+        if self.rng.next_u32() % 2 == 0 {
+            let off = (self.rng.next_u32() % 64) as i32;
+            p.push(Instr::Store { op: StoreOp::Sb, rs1: 25, rs2: acc, offset: off });
+        }
+    }
+
+    /// A bounded reduction loop whose body is a single fusible strip —
+    /// the counted-loop shape. Variants: 0 = packed LoadMac body
+    /// (clean), 1 = scalar-MAC body (clean), 2 = scalar-MAC body that
+    /// clobbers its own (bumped) base pointer, forcing the engine's
+    /// re-evaluating guard path. Variant 2 chases loaded bytes as
+    /// addresses and may fault, so it only runs in `faulty` mode.
+    fn emit_counted_loop(&mut self, faulty: bool) {
+        let variant = self.rng.next_u32() % if faulty { 3 } else { 2 };
+        let count = 1 + (self.rng.next_u32() % 4) as i32;
+        self.prog.push(Instr::OpImm { op: AluOp::Add, rd: CTR, rs1: 0, imm: count });
+        let body_start = self.prog.len();
+        match variant {
+            0 => {
+                // k× lw + lw + nn_mac, then optional base bump + counter.
+                let mode = self.pick(&[MacMode::W8, MacMode::W4, MacMode::W2]);
+                let k = mode.activation_regs() as usize;
+                let act_off = ((self.rng.next_u32() % 32) * 4) as i32;
+                for j in 0..k {
+                    self.prog.push(Instr::Load {
+                        op: LoadOp::Lw,
+                        rd: 12 + j as u8,
+                        rs1: 21,
+                        offset: act_off + 4 * j as i32,
+                    });
+                }
+                let w_off = ((self.rng.next_u32() % 32) * 4) as i32;
+                self.prog.push(Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 22, offset: w_off });
+                self.prog.push(Instr::NnMac { mode, rd: 10, rs1: 12, rs2: 11 });
+                if self.rng.next_u32() % 2 == 0 {
+                    self.prog.push(Instr::OpImm { op: AluOp::Add, rd: 21, rs1: 21, imm: 4 });
+                }
+            }
+            _ => {
+                // lb/lb/mul/add; variant 2 loads the a-side byte *into*
+                // its own base pointer x23 (a bumped register), which
+                // defeats trip-count prediction.
+                let ra = if variant == 2 { 23u8 } else { 5u8 };
+                let a_off = (self.rng.next_u32() % 128) as i32;
+                let b_off = (self.rng.next_u32() % 128) as i32;
+                self.prog.push(Instr::Load { op: LoadOp::Lb, rd: ra, rs1: 23, offset: a_off });
+                self.prog.push(Instr::Load { op: LoadOp::Lb, rd: 6, rs1: 24, offset: b_off });
+                self.prog.push(Instr::MulDiv { op: MulOp::Mul, rd: 7, rs1: ra, rs2: 6 });
+                self.prog.push(Instr::Op { op: AluOp::Add, rd: 8, rs1: 8, rs2: 7 });
+                self.prog.push(Instr::OpImm { op: AluOp::Add, rd: 23, rs1: 23, imm: 1 });
+            }
+        }
+        self.prog.push(Instr::OpImm { op: AluOp::Add, rd: CTR, rs1: CTR, imm: -1 });
+        let branch_at = self.prog.len();
+        self.prog.push(Instr::Branch {
+            op: BranchOp::Blt,
+            rs1: 0,
+            rs2: CTR,
+            offset: -4 * (branch_at - body_start) as i32,
+        });
+        if variant != 0 {
+            // x23 drifted (or was clobbered outright): restore it to an
+            // aligned in-bounds base so later random loads/stores off
+            // it behave. Same constant on both interpreters.
+            self.prog.push(Instr::OpImm { op: AluOp::Add, rd: 23, rs1: 0, imm: 1280 });
+        }
+    }
+
     /// One random body item; may emit several instructions.
     fn emit_item(&mut self, faulty: bool) {
-        match self.rng.next_u32() % 14 {
+        match self.rng.next_u32() % 16 {
             0 => {
                 let (op, rd, rs1) = (self.alu_op(), self.scratch(), self.scratch());
                 let op = if op == AluOp::Sub { AluOp::Add } else { op }; // OP-IMM has no sub
@@ -225,6 +336,8 @@ impl Gen {
                 self.prog.push(Instr::MulDiv { op: MulOp::Mul, rd: 7, rs1: 5, rs2: 6 });
                 self.prog.push(Instr::Op { op: AluOp::Add, rd: 8, rs1: 8, rs2: 7 });
             }
+            13 => self.emit_requant_epilogue(),
+            14 => self.emit_counted_loop(faulty),
             _ => {
                 if faulty && self.rng.next_u32() % 3 == 0 {
                     // Deliberate fault: out-of-bounds (x27 holds an
@@ -276,8 +389,10 @@ impl Gen {
 fn random_program(seed: u64, faulty: bool, with_jalr: bool) -> Vec<Instr> {
     let mut g = Gen { rng: Rng::new(seed), prog: Vec::new() };
 
-    // Prologue. Slot 0 is patched with the final ecall's pc below.
+    // Prologue. Slots 0–1 are patched with the final ecall's pc below
+    // (lui + addi, so programs longer than 2 KiB still patch cleanly).
     g.prog.push(Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: 0, imm: 0 });
+    g.prog.push(Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: JREG, imm: 0 });
     // x27 → the first address past the 4 KiB memory (fault pointer).
     g.prog.push(Instr::Lui { rd: OOB, imm: 0x1000 });
     for (i, &b) in BASES.iter().enumerate() {
@@ -307,26 +422,37 @@ fn random_program(seed: u64, faulty: bool, with_jalr: bool) -> Vec<Instr> {
     }
     g.prog.push(Instr::Ecall);
 
-    // Patch x30 with the ecall pc (fits in a 12-bit immediate as long
-    // as programs stay short).
+    // Patch x30 with the ecall pc via lui + addi (li splitting).
     let ecall_pc = 4 * (g.prog.len() as i32 - 1);
-    assert!(ecall_pc <= 2047, "generated program too long: {} instrs", g.prog.len());
-    g.prog[0] = Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: 0, imm: ecall_pc };
+    let hi = ecall_pc.wrapping_add(0x800) & !0xfff;
+    let lo = ecall_pc - hi;
+    g.prog[0] = Instr::Lui { rd: JREG, imm: hi };
+    g.prog[1] = Instr::OpImm { op: AluOp::Add, rd: JREG, rs1: JREG, imm: lo };
     g.prog
 }
 
 #[test]
 fn random_programs_equivalent_1000() {
     let mut ecalls = 0u32;
+    let mut hits = EngineStats::default();
     for seed in 0..1000u64 {
         let prog = random_program(seed * 7919 + 13, false, false);
-        let r = assert_equiv(prog, 1_000_000, &format!("seed {seed}"));
+        let (r, st) = assert_equiv(prog, 1_000_000, &format!("seed {seed}"));
+        hits.add(&st);
         if r == ExitReason::Ecall {
             ecalls += 1;
         }
     }
     // Sanity: the generator must overwhelmingly produce clean runs.
     assert!(ecalls >= 990, "only {ecalls}/1000 programs ran to ecall");
+    // ... and actually exercise every fused superinstruction class,
+    // including the new requant epilogue and counted loops.
+    assert!(hits.load_mac > 0, "LoadMac never fused/executed: {hits:?}");
+    assert!(hits.scalar_mac > 0, "ScalarMac never fused/executed: {hits:?}");
+    assert!(hits.latch > 0, "Latch never fused/executed: {hits:?}");
+    assert!(hits.requant > 0, "Requant never fused/executed: {hits:?}");
+    assert!(hits.counted_loops > 0, "counted loops never entered: {hits:?}");
+    assert!(hits.counted_iters > 0, "counted loops never iterated: {hits:?}");
 }
 
 #[test]
@@ -334,7 +460,7 @@ fn random_faulting_programs_equivalent() {
     let mut faults = 0u32;
     for seed in 0..200u64 {
         let prog = random_program(seed * 104729 + 7, true, false);
-        let r = assert_equiv(prog, 1_000_000, &format!("faulty seed {seed}"));
+        let (r, _) = assert_equiv(prog, 1_000_000, &format!("faulty seed {seed}"));
         if matches!(r, ExitReason::Fault(_)) {
             faults += 1;
         }
@@ -368,8 +494,9 @@ fn jalr_into_fused_strip_interior_falls_back() {
     // interpreter. The mul→add→jalr sequence then loops until the
     // cycle budget trips — both interpreters must stop in exactly the
     // same state.
-    let r = assert_equiv(prog, 10_000, "jalr-interior");
+    let (r, st) = assert_equiv(prog, 10_000, "jalr-interior");
     assert_eq!(r, ExitReason::MaxCycles);
+    assert!(st.fallbacks > 0, "dynamic strip entry must count as a fallback");
 }
 
 #[test]
@@ -387,19 +514,19 @@ fn misaligned_static_branch_falls_back_whole_program() {
 #[test]
 fn infinite_loop_hits_budget_identically() {
     let prog = vec![Instr::Jal { rd: 0, offset: 0 }];
-    let r = assert_equiv(prog, 1_000, "jal-self");
+    let (r, _) = assert_equiv(prog, 1_000, "jal-self");
     assert_eq!(r, ExitReason::MaxCycles);
 }
 
 #[test]
 fn fall_off_end_and_wild_branch_are_illegal_pc() {
-    let r = assert_equiv(
+    let (r, _) = assert_equiv(
         vec![Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 }],
         1_000,
         "fall-off-end",
     );
     assert!(matches!(r, ExitReason::IllegalPc(_)));
-    let r = assert_equiv(
+    let (r, _) = assert_equiv(
         vec![Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 1024 }, Instr::Ecall],
         1_000,
         "wild-branch",
@@ -419,6 +546,110 @@ fn fault_inside_fused_load_mac_strip() {
         Instr::NnMac { mode: MacMode::W4, rd: 10, rs1: 12, rs2: 11 },
         Instr::Ecall,
     ];
-    let r = assert_equiv(prog, 10_000, "fault-in-strip");
+    let (r, _) = assert_equiv(prog, 10_000, "fault-in-strip");
     assert!(matches!(r, ExitReason::Fault(_)));
+}
+
+#[test]
+fn clobbered_counted_loop_takes_guard_path() {
+    // The strip body writes x8, which is also a latch bump register:
+    // trip-count prediction is unsound, so the engine must take the
+    // re-evaluating guard path — and still match the interpreter.
+    let prog = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 9, rs1: 0, imm: 4 }, // counter
+        Instr::OpImm { op: AluOp::Add, rd: 23, rs1: 0, imm: 1024 },
+        Instr::OpImm { op: AluOp::Add, rd: 24, rs1: 0, imm: 1032 },
+        Instr::Load { op: LoadOp::Lb, rd: 5, rs1: 23, offset: 0 }, // 3: loop head
+        Instr::Load { op: LoadOp::Lb, rd: 6, rs1: 24, offset: 0 },
+        Instr::MulDiv { op: MulOp::Mul, rd: 7, rs1: 5, rs2: 6 },
+        Instr::Op { op: AluOp::Add, rd: 8, rs1: 8, rs2: 7 },
+        Instr::OpImm { op: AluOp::Add, rd: 8, rs1: 8, imm: 1 }, // bump == body reg
+        Instr::OpImm { op: AluOp::Add, rd: 9, rs1: 9, imm: -1 },
+        Instr::Branch { op: BranchOp::Blt, rs1: 0, rs2: 9, offset: -24 }, // → instr 3
+        Instr::Ecall,
+    ];
+    let (r, st) = assert_equiv(prog, 10_000, "clobbered-counted-loop");
+    assert_eq!(r, ExitReason::Ecall);
+    assert!(st.counted_loops > 0, "clobbered loop still runs natively: {st:?}");
+    assert_eq!(st.counted_iters, 3, "4 trips = 1 dispatched body + 3 native: {st:?}");
+}
+
+#[test]
+fn jalr_into_counted_loop_strip_interior_falls_back() {
+    // A counted reduction loop (LoadMac body + latch), then a jalr that
+    // lands on the weight `lw` *inside* the strip: the engine must run
+    // the loop natively, then replay the dynamic entry on the
+    // reference interpreter. From there the lw→nn_mac→addi→jalr chain
+    // re-enters forever, so both interpreters must trip the budget in
+    // exactly the same state.
+    let prog = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 30, rs1: 0, imm: 5 * 4 }, // → instr 5
+        Instr::OpImm { op: AluOp::Add, rd: 21, rs1: 0, imm: 1024 },
+        Instr::OpImm { op: AluOp::Add, rd: 22, rs1: 0, imm: 1100 },
+        Instr::OpImm { op: AluOp::Add, rd: 9, rs1: 0, imm: 2 }, // counter
+        Instr::Load { op: LoadOp::Lw, rd: 12, rs1: 21, offset: 0 }, // 4: loop head
+        Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 22, offset: 0 }, // 5: interior
+        Instr::NnMac { mode: MacMode::W8, rd: 10, rs1: 12, rs2: 11 }, // 6
+        Instr::OpImm { op: AluOp::Add, rd: 9, rs1: 9, imm: -1 }, // 7
+        Instr::Branch { op: BranchOp::Blt, rs1: 0, rs2: 9, offset: -16 }, // 8 → instr 4
+        Instr::Jalr { rd: 1, rs1: 30, offset: 0 }, // 9 → instr 5
+        Instr::Ecall,
+    ];
+    let (r, st) = assert_equiv(prog, 10_000, "jalr-into-counted-loop");
+    assert_eq!(r, ExitReason::MaxCycles);
+    assert!(st.counted_loops > 0, "loop must run on the counted path first: {st:?}");
+    assert!(st.fallbacks > 0, "dynamic strip entry must fall back: {st:?}");
+}
+
+/// The acceptance shape for the packed kernels: chunk-looped mode
+/// kernels and scalar baselines must light up the `Requant` and
+/// counted-loop counters while staying bit-identical to the reference
+/// interpreter end to end.
+#[test]
+fn packed_kernels_exercise_requant_and_counted_loops() {
+    use mpnn::kernels::dense::{build_baseline, build_mode, DenseSpec};
+    use mpnn::nn::quant::Requant;
+
+    let rq = Requant::from_real_scale(0.004);
+    let looped = build_mode(
+        MacMode::W4,
+        DenseSpec { in_dim: 2304, out_dim: 3, rq, relu: true, out_i32: false },
+    );
+    let baseline = build_baseline(DenseSpec {
+        in_dim: 64,
+        out_dim: 4,
+        rq,
+        relu: false,
+        out_i32: false,
+    });
+    for (kp, tag) in [(looped, "dense-mode-looped"), (baseline, "dense-baseline")] {
+        let mem_size = kp.mem_size as usize;
+        let cfg = CoreConfig { mem_size, ..Default::default() };
+        let mut legacy = Core::new(cfg, kp.prog.clone(), 0);
+        let mut fast = Core::new(cfg, kp.prog, 0);
+        let cp = fast.compile();
+        let census = cp.fusion_census();
+        assert!(census[3] > 0, "{tag}: no Requant ops fused ({census:?})");
+        assert!(census[4] > 0, "{tag}: no counted loops formed ({census:?})");
+        let r1 = legacy.run(u64::MAX);
+        let r2 = fast.run_engine(&cp, u64::MAX);
+        assert_eq!(r1, ExitReason::Ecall, "{tag}");
+        assert_eq!(r1, r2, "{tag}: exit reason");
+        assert_eq!(legacy.regs, fast.regs, "{tag}: registers");
+        assert_eq!(legacy.pc, fast.pc, "{tag}: pc");
+        assert_eq!(legacy.perf, fast.perf, "{tag}: perf counters");
+        assert_eq!(legacy.mem.loads, fast.mem.loads, "{tag}: mem loads");
+        assert_eq!(legacy.mem.stores, fast.mem.stores, "{tag}: mem stores");
+        assert_eq!(
+            legacy.mem.read_bytes(0, mem_size),
+            fast.mem.read_bytes(0, mem_size),
+            "{tag}: memory image"
+        );
+        assert_eq!(legacy.mac_unit.total_macs, fast.mac_unit.total_macs, "{tag}: macs");
+        let st = fast.engine_stats;
+        assert!(st.requant > 0, "{tag}: Requant never executed ({st:?})");
+        assert!(st.counted_loops > 0, "{tag}: counted loop never entered ({st:?})");
+        assert!(st.counted_iters > 0, "{tag}: counted loop never iterated ({st:?})");
+        assert_eq!(st.fallbacks, 0, "{tag}: kernel run must not fall back ({st:?})");
+    }
 }

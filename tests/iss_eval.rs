@@ -48,11 +48,11 @@ fn host_and_iss_evaluators_agree_exactly() {
     for bits in [vec![8u32; n_layers], vec![4; n_layers], vec![2; n_layers]] {
         let qm = quantize_model(&m.spec, &m.params, &m.sites, &bits);
 
-        let mut host = HostEval { test: m.test.clone() };
+        let host = HostEval { test: m.test.clone() };
         let hr = host.evaluate(&qm, 12).unwrap();
         assert!(hr.iss_cycles.is_none() && hr.divergence.is_none());
 
-        let mut iss = IssEval::new(m.test.clone(), 3);
+        let iss = IssEval::new(m.test.clone(), 3);
         let ir = iss.evaluate(&qm, 12).unwrap();
         assert_eq!(ir.accuracy, hr.accuracy, "bits {bits:?}: host vs ISS accuracy");
         assert_eq!(ir.divergence, Some(0.0), "bits {bits:?}: bit-exact paths must not diverge");
