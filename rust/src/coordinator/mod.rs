@@ -457,6 +457,25 @@ impl Coordinator {
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+
+    /// Evaluate only the configurations of `configs` that `shard` owns
+    /// (see [`ShardSpec`](crate::dse::shard::ShardSpec)), through the
+    /// same worker pool as [`Coordinator::run_sweep`]. Returns
+    /// `(global enumeration index, point)` pairs in enumeration order —
+    /// the payload a [`ShardArtifact`](crate::dse::shard::ShardArtifact)
+    /// serialises so the merger can restore the single-sweep order
+    /// bit-for-bit. The 1-way shard degenerates to `run_sweep`.
+    pub fn sweep_sharded(
+        &self,
+        configs: &[Config],
+        n_eval: usize,
+        shard: &crate::dse::shard::ShardSpec,
+    ) -> Result<Vec<(usize, EvalPoint)>> {
+        let indices = shard.member_indices(configs);
+        let mine: Vec<Config> = indices.iter().map(|&i| configs[i].clone()).collect();
+        let points = self.run_sweep(&mine, n_eval)?;
+        Ok(indices.into_iter().zip(points).collect())
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@
 
 pub mod cycles;
 pub mod pareto;
+pub mod shard;
 
 use crate::models::infer::{quantize_model, ModelParams, QModel};
 use crate::models::ModelSpec;
@@ -132,8 +133,10 @@ pub fn total_mac_instructions(analysis: &crate::models::ModelAnalysis, cfg: &Con
     analysis.layers.iter().zip(cfg).map(|(info, &b)| mac_instructions(info, Some(b))).sum()
 }
 
-/// One evaluated design point.
-#[derive(Debug, Clone)]
+/// One evaluated design point. `PartialEq` compares every field
+/// exactly (the shard merger bit-compares floats separately via
+/// [`shard::point_divergence`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalPoint {
     /// The configuration.
     pub config: Config,

@@ -1,10 +1,29 @@
 //! Pareto-front extraction for the Fig.-6 accuracy-vs-cost spaces.
+//!
+//! The cost axis is a closure so every consumer picks its own x-axis:
+//! Fig. 6 ranks by `mac_instructions`, the DSE integration and Fig. 8
+//! by `cycles`, and the Fig.-4-style memory views by `mem_accesses` —
+//! the in-module tests exercise all three. The extraction is
+//! **deterministic**: for a given `(points, cost)` input the returned
+//! indices are a pure function of the values, which is what lets the
+//! sharded-sweep merger ([`super::shard::merge`]) recompute the global
+//! front and land on the exact single-instance indices.
 
 use super::EvalPoint;
 
 /// Indices of the non-dominated points: maximize accuracy, minimize
 /// `cost(point)`. A point is dominated if another is at least as good
 /// on both axes and strictly better on one.
+///
+/// Contract (relied on by the harnesses and the shard merger):
+///
+/// * indices come back sorted by cost ascending with **strictly**
+///   increasing accuracy;
+/// * every non-dominated `(cost, accuracy)` value pair is represented
+///   by exactly **one** index — for exact duplicates, the lowest
+///   original index (the sort is stable);
+/// * among points tied on cost, only the highest-accuracy one can
+///   appear (the others are dominated).
 pub fn pareto_front(points: &[EvalPoint], cost: impl Fn(&EvalPoint) -> u64) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
     // Sort by cost ascending, accuracy descending.
@@ -29,15 +48,47 @@ mod tests {
     use super::*;
 
     fn p(acc: f32, cycles: u64) -> EvalPoint {
+        p2(acc, cycles, 0)
+    }
+
+    /// Point with independent cycle and memory-access costs, so the
+    /// cost closure can be exercised on both axes (Fig. 6 consumes
+    /// `mac_instructions`/`cycles`, the Fig.-4-style memory view
+    /// `mem_accesses`).
+    fn p2(acc: f32, cycles: u64, mem_accesses: u64) -> EvalPoint {
         EvalPoint {
             config: vec![],
             accuracy: acc,
             mac_instructions: cycles,
             cycles,
-            mem_accesses: 0,
+            mem_accesses,
             iss_cycles: None,
             divergence: None,
         }
+    }
+
+    /// O(n²) reference: indices of all non-dominated points, one
+    /// representative (lowest index) per distinct `(cost, accuracy)`
+    /// value pair — the contract `pareto_front` documents.
+    fn oracle(points: &[EvalPoint], cost: impl Fn(&EvalPoint) -> u64) -> Vec<usize> {
+        let mut front: Vec<usize> = (0..points.len())
+            .filter(|&i| {
+                // Not dominated by anyone…
+                !points.iter().enumerate().any(|(j, q)| {
+                    j != i
+                        && q.accuracy >= points[i].accuracy
+                        && cost(q) <= cost(&points[i])
+                        && (q.accuracy > points[i].accuracy || cost(q) < cost(&points[i]))
+                })
+                // …and the first among exact value duplicates.
+                    && !(0..i).any(|j| {
+                        points[j].accuracy == points[i].accuracy
+                            && cost(&points[j]) == cost(&points[i])
+                    })
+            })
+            .collect();
+        front.sort_by_key(|&i| cost(&points[i]));
+        front
     }
 
     #[test]
@@ -68,6 +119,82 @@ mod tests {
         for w in front.windows(2) {
             assert!(pts[w[0]].cycles <= pts[w[1]].cycles);
             assert!(pts[w[0]].accuracy < pts[w[1]].accuracy);
+        }
+    }
+
+    #[test]
+    fn single_point_and_empty() {
+        assert_eq!(pareto_front(&[], |e| e.cycles), Vec::<usize>::new());
+        assert_eq!(pareto_front(&[p(0.5, 100)], |e| e.cycles), vec![0]);
+        // A single point is on the front whatever its values.
+        assert_eq!(pareto_front(&[p(0.0, u64::MAX)], |e| e.cycles), vec![0]);
+    }
+
+    #[test]
+    fn ties_on_both_axes_pick_one_stable_representative() {
+        // Four exact duplicates: exactly one survives, and it is the
+        // lowest original index (the extraction sort is stable).
+        let pts = vec![p(0.5, 100), p(0.5, 100), p(0.5, 100), p(0.5, 100)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![0]);
+        // Duplicates behind a distinct better point: representative
+        // stability is per value pair, not global.
+        let pts = vec![p(0.5, 100), p(0.9, 100), p(0.5, 100), p(0.3, 10)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![3, 1]);
+        // Cost tie with different accuracies: only the best survives.
+        let pts = vec![p(0.5, 100), p(0.7, 100), p(0.6, 100)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![1]);
+        // Accuracy tie with different costs: only the cheapest survives.
+        let pts = vec![p(0.5, 100), p(0.5, 50), p(0.5, 70)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![1]);
+    }
+
+    #[test]
+    fn fully_dominated_chains_collapse_to_one() {
+        // Strictly worse on both axes as the index grows: everything
+        // after the first point is dominated.
+        let pts: Vec<EvalPoint> =
+            (0..10).map(|i| p(1.0 - i as f32 * 0.05, 100 + i * 10)).collect();
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![0]);
+        // Same set reversed: the front member keeps its (new) index.
+        let rev: Vec<EvalPoint> = pts.iter().rev().cloned().collect();
+        assert_eq!(pareto_front(&rev, |e| e.cycles), vec![9]);
+    }
+
+    #[test]
+    fn mem_accesses_cost_axis_is_independent_of_cycles() {
+        // Cycle- and memory-cheap orderings disagree on purpose: the
+        // front must follow the supplied closure, not `cycles`.
+        let pts = vec![
+            p2(0.9, 10, 400), // cycle-cheapest but dominated on the memory axis
+            p2(0.8, 300, 20), // memory-cheapest
+            p2(0.95, 200, 300),
+            p2(0.5, 500, 500), // dominated on both axes
+        ];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![0, 2]);
+        assert_eq!(pareto_front(&pts, |e| e.mem_accesses), vec![1, 2]);
+        assert_eq!(oracle(&pts, |e| e.mem_accesses), vec![1, 2]);
+    }
+
+    #[test]
+    fn matches_oracle_on_random_tie_heavy_spaces() {
+        // Small value ranges force plenty of ties on both axes; compare
+        // against the O(n²) reference on both cost closures.
+        let mut rng = crate::rng::Rng::new(41);
+        for round in 0..50 {
+            let n = 1 + rng.below(60) as usize;
+            let pts: Vec<EvalPoint> = (0..n)
+                .map(|_| {
+                    p2(
+                        (rng.below(8) as f32) / 8.0,
+                        rng.below(6) * 100,
+                        rng.below(6) * 100,
+                    )
+                })
+                .collect();
+            let by_cycles = pareto_front(&pts, |e| e.cycles);
+            assert_eq!(by_cycles, oracle(&pts, |e| e.cycles), "round {round} (cycles)");
+            let by_mem = pareto_front(&pts, |e| e.mem_accesses);
+            assert_eq!(by_mem, oracle(&pts, |e| e.mem_accesses), "round {round} (mem)");
         }
     }
 }

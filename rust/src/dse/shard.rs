@@ -1,0 +1,931 @@
+//! Sharded DSE sweeps: deterministic config-space partitioning, a
+//! versioned per-shard sweep artifact, and a merger whose output is
+//! **bit-identical** to the single-instance sweep (the invariant
+//! `tests/sweep_sharding.rs` property-tests).
+//!
+//! The co-design loop (paper Fig. 5) sweeps a per-network configuration
+//! space that PR 1–3 made cheap to evaluate *per config*; the next
+//! scale step is splitting one sweep across processes/hosts. The
+//! pipeline is partition → evaluate → merge:
+//!
+//! * [`ShardSpec`] names one shard of an N-way split and owns the
+//!   partitioning rule. Both strategies are pure functions of the
+//!   enumerated space (never of runtime state), so every instance
+//!   computes the same split from the same `(model, seed, budget)`
+//!   inputs with no coordination channel.
+//! * [`ShardArtifact`] is what one shard run serialises: its evaluated
+//!   points tagged with their **global enumeration index**, plus the
+//!   [`SessionSnapshot`] delta attributing engine/session activity to
+//!   this sweep. The JSON schema is versioned
+//!   ([`SHARD_SCHEMA_VERSION`]); corrupted or mismatched files fail
+//!   with a typed [`ShardError`], never a panic.
+//! * [`merge`] recombines shard artifacts: deduplicates configs
+//!   (bit-compare — two shards disagreeing on the same config is a
+//!   divergence-style [`ShardError::Conflict`], mirroring the
+//!   host-vs-ISS differential check), verifies full coverage of the
+//!   space, restores enumeration order from the global indices,
+//!   recomputes the Pareto front via [`pareto_front`] and sums the
+//!   per-shard stats. Merging is order- and duplicate-insensitive.
+//!
+//! `docs/ARCHITECTURE.md` § "Sharded sweeps" documents the dataflow and
+//! the determinism contract end to end.
+
+use super::pareto::pareto_front;
+use super::{Config, EvalPoint};
+use crate::json::{Json, ParseError, SchemaError};
+use crate::sim::session::SessionSnapshot;
+use std::collections::BTreeMap;
+use std::fmt;
+
+// ------------------------------------------------------- partitioning ---
+
+/// How a config space is split across shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardStrategy {
+    /// FNV-1a hash of the per-layer widths, mod shard count. A config's
+    /// hash never depends on the shard count, so membership is stable
+    /// under resharding (only the modulus changes) and insensitive to
+    /// enumeration order. Shard sizes are balanced in expectation.
+    #[default]
+    Hash,
+    /// Contiguous index ranges over the enumeration order (shard `i` of
+    /// `n` owns `[i·T/n, (i+1)·T/n)` of `T` configs). Sizes differ by
+    /// at most one, and a shard maps to a contiguous slice of the
+    /// deterministic [`enumerate`](super::enumerate) output — the
+    /// easiest split to reason about in logs.
+    Range,
+}
+
+impl ShardStrategy {
+    /// Parse a CLI name (`hash | range`).
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "hash" => Some(ShardStrategy::Hash),
+            "range" => Some(ShardStrategy::Range),
+            _ => None,
+        }
+    }
+
+    /// Label for logs/artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::Hash => "hash",
+            ShardStrategy::Range => "range",
+        }
+    }
+}
+
+/// One shard of an N-way sweep split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// This shard's index, `0 <= index < count`.
+    pub index: usize,
+    /// Total number of shards.
+    pub count: usize,
+    /// Partitioning rule.
+    pub strategy: ShardStrategy,
+}
+
+impl ShardSpec {
+    /// A validated shard spec.
+    pub fn new(index: usize, count: usize, strategy: ShardStrategy) -> Result<Self, ShardError> {
+        if count == 0 {
+            return Err(ShardError::BadSpec("shard count must be >= 1".to_string()));
+        }
+        if index >= count {
+            return Err(ShardError::BadSpec(format!(
+                "shard index {index} out of range for {count} shard(s)"
+            )));
+        }
+        Ok(ShardSpec { index, count, strategy })
+    }
+
+    /// Parse the CLI form `i/n` (e.g. `--shard 0/4`), hash strategy.
+    pub fn parse(s: &str) -> Result<Self, ShardError> {
+        let bad = || ShardError::BadSpec(format!("expected `i/n` (e.g. `0/4`), got `{s}`"));
+        let (i, n) = s.split_once('/').ok_or_else(bad)?;
+        let index: usize = i.trim().parse().map_err(|_| bad())?;
+        let count: usize = n.trim().parse().map_err(|_| bad())?;
+        ShardSpec::new(index, count, ShardStrategy::default())
+    }
+
+    /// The trivial 1-way "split" (sharding disabled).
+    pub fn whole() -> Self {
+        ShardSpec { index: 0, count: 1, strategy: ShardStrategy::default() }
+    }
+
+    /// Does this shard own the config at `global_index` of a
+    /// `total`-config space?
+    pub fn owns(&self, global_index: usize, cfg: &Config, total: usize) -> bool {
+        match self.strategy {
+            ShardStrategy::Hash => config_hash(cfg) as usize % self.count == self.index,
+            ShardStrategy::Range => {
+                let (lo, hi) = range_bounds(total, self.count, self.index);
+                (lo..hi).contains(&global_index)
+            }
+        }
+    }
+
+    /// The global enumeration indices this shard owns, in order.
+    pub fn member_indices(&self, configs: &[Config]) -> Vec<usize> {
+        (0..configs.len()).filter(|&i| self.owns(i, &configs[i], configs.len())).collect()
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{} ({})", self.index, self.count, self.strategy.name())
+    }
+}
+
+/// FNV-1a over the per-layer widths — the hash-strategy shard key.
+/// Deliberately independent of the shard count and of the config's
+/// position in the enumeration.
+pub fn config_hash(cfg: &Config) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in cfg {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+/// `[lo, hi)` bounds of range-shard `index` of `count` over `total`
+/// configs (balanced: sizes differ by at most one).
+fn range_bounds(total: usize, count: usize, index: usize) -> (usize, usize) {
+    (index * total / count, (index + 1) * total / count)
+}
+
+// ------------------------------------------------------- typed errors ---
+
+/// Everything that can go wrong loading or merging shard artifacts. A
+/// dedicated error type (not the crate's opaque [`Error`](crate::Error))
+/// so callers — and the property tests — can match on the failure class;
+/// it converts into the crate error via the blanket
+/// `From<E: std::error::Error>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardError {
+    /// The file is not JSON at all.
+    Parse(ParseError),
+    /// The JSON is well-formed but a schema field is missing/mistyped.
+    Schema(SchemaError),
+    /// The artifact was written by a different schema generation.
+    SchemaVersion {
+        /// Version recorded in the file.
+        found: u64,
+        /// Version this build reads/writes.
+        expected: u64,
+    },
+    /// An invalid shard spec (bad index/count or CLI syntax).
+    BadSpec(String),
+    /// Two artifacts describe different sweeps (model/seed/… mismatch)
+    /// and cannot be merged.
+    Incompatible {
+        /// The metadata field that differs.
+        field: &'static str,
+        /// Value in the first artifact.
+        a: String,
+        /// Conflicting value.
+        b: String,
+    },
+    /// Two shards evaluated the same config and **disagree** — the
+    /// sharded analogue of the host-vs-ISS divergence report. This is
+    /// always a bug (non-deterministic evaluator or mixed backends) and
+    /// the merge refuses to pick a winner silently.
+    Conflict {
+        /// Global enumeration index of the conflicting config.
+        global_index: usize,
+        /// The config both shards evaluated.
+        config: Config,
+        /// First [`EvalPoint`] field that differs.
+        field: &'static str,
+        /// Value from the shard merged first.
+        a: String,
+        /// Conflicting value.
+        b: String,
+    },
+    /// The merged shards do not cover the whole space.
+    Coverage {
+        /// Configs the space enumerates.
+        expected: usize,
+        /// Distinct configs the shards delivered.
+        got: usize,
+        /// Lowest uncovered global index, if any.
+        first_missing: Option<usize>,
+    },
+    /// No artifacts were given to merge.
+    Empty,
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::Parse(e) => write!(f, "shard artifact: {e}"),
+            ShardError::Schema(e) => write!(f, "shard artifact: {e}"),
+            ShardError::SchemaVersion { found, expected } => write!(
+                f,
+                "shard artifact schema version {found} (this build reads version {expected})"
+            ),
+            ShardError::BadSpec(m) => write!(f, "bad shard spec: {m}"),
+            ShardError::Incompatible { field, a, b } => {
+                write!(f, "shard artifacts disagree on `{field}`: `{a}` vs `{b}`")
+            }
+            ShardError::Conflict { global_index, config, field, a, b } => write!(
+                f,
+                "shard conflict at config #{global_index} {config:?}: `{field}` {a} vs {b} \
+                 (non-deterministic evaluator or mixed backends?)"
+            ),
+            ShardError::Coverage { expected, got, first_missing } => write!(
+                f,
+                "merged shards cover {got}/{expected} configs{}",
+                match first_missing {
+                    Some(i) => format!(" (first missing: #{i})"),
+                    None => String::new(),
+                }
+            ),
+            ShardError::Empty => write!(f, "no shard artifacts to merge"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ShardError::Parse(e) => Some(e),
+            ShardError::Schema(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SchemaError> for ShardError {
+    fn from(e: SchemaError) -> Self {
+        ShardError::Schema(e)
+    }
+}
+
+// ------------------------------------------------------- the artifact ---
+
+/// Version of the shard-artifact JSON schema this build reads/writes.
+/// Bump on any incompatible change; readers reject other versions with
+/// [`ShardError::SchemaVersion`].
+pub const SHARD_SCHEMA_VERSION: u64 = 1;
+
+/// What one shard run serialises: sweep identity (enough to prove two
+/// artifacts partition the *same* space), the evaluated points tagged
+/// with their global enumeration indices, and the session/engine stats
+/// delta attributable to this sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardArtifact {
+    /// Model name.
+    pub model: String,
+    /// Accuracy backend that scored the points (`host`/`iss`/`pjrt`).
+    pub evaluator: String,
+    /// Which shard of which split this is.
+    pub spec: ShardSpec,
+    /// Size of the full enumerated space.
+    pub total_configs: usize,
+    /// Enumeration seed.
+    pub seed: u64,
+    /// Images per accuracy evaluation.
+    pub eval_n: usize,
+    /// Float baseline accuracy (bit-compared on merge).
+    pub float_acc: f32,
+    /// Baseline MAC-instruction count.
+    pub baseline_instrs: u64,
+    /// `(global enumeration index, evaluated point)` — exactly the
+    /// configs this shard owns, in enumeration order.
+    pub points: Vec<(usize, EvalPoint)>,
+    /// Session/engine activity attributed to this sweep (before/after
+    /// delta on the global [`SimSession`](crate::sim::session::SimSession)).
+    pub stats: SessionSnapshot,
+}
+
+fn point_json(p: &EvalPoint) -> Json {
+    Json::obj(vec![
+        ("bits", Json::Arr(p.config.iter().map(|&b| Json::i(b as i64)).collect())),
+        ("acc", Json::Num(p.accuracy as f64)),
+        ("mac_instrs", Json::i(p.mac_instructions as i64)),
+        ("cycles", Json::i(p.cycles as i64)),
+        ("mem_accesses", Json::i(p.mem_accesses as i64)),
+        ("iss_cycles", p.iss_cycles.map_or(Json::Null, |c| Json::i(c as i64))),
+        ("divergence", p.divergence.map_or(Json::Null, |d| Json::Num(d as f64))),
+    ])
+}
+
+fn point_from_json(j: &Json) -> Result<EvalPoint, SchemaError> {
+    let config: Config = j
+        .req_arr("bits")?
+        .iter()
+        .map(|b| match b.as_i64() {
+            Some(v) if (0..=32).contains(&v) => Ok(v as u32),
+            _ => Err(SchemaError { field: "bits".to_string(), msg: "bad width".to_string() }),
+        })
+        .collect::<Result<_, _>>()?;
+    Ok(EvalPoint {
+        config,
+        accuracy: j.req_f64("acc")? as f32,
+        mac_instructions: j.req_u64("mac_instrs")?,
+        cycles: j.req_u64("cycles")?,
+        mem_accesses: j.req_u64("mem_accesses")?,
+        iss_cycles: j.opt("iss_cycles", |v| match v.as_f64() {
+            Some(c) if c.is_finite() && c >= 0.0 && c == c.trunc() => Ok(c as u64),
+            _ => Err(SchemaError {
+                field: "iss_cycles".to_string(),
+                msg: "expected a non-negative integer".to_string(),
+            }),
+        })?,
+        divergence: j.opt("divergence", |v| match v.as_f64() {
+            Some(d) if d.is_finite() => Ok(d as f32),
+            _ => Err(SchemaError {
+                field: "divergence".to_string(),
+                msg: "expected a finite number".to_string(),
+            }),
+        })?,
+    })
+}
+
+fn stats_json(s: &SessionSnapshot) -> Json {
+    Json::obj(vec![
+        ("mem_reuses", Json::i(s.mem_reuses as i64)),
+        ("mem_allocs", Json::i(s.mem_allocs as i64)),
+        ("runs", Json::i(s.runs as i64)),
+        ("load_mac", Json::i(s.engine.load_mac as i64)),
+        ("scalar_mac", Json::i(s.engine.scalar_mac as i64)),
+        ("latch", Json::i(s.engine.latch as i64)),
+        ("requant", Json::i(s.engine.requant as i64)),
+        ("counted_loops", Json::i(s.engine.counted_loops as i64)),
+        ("counted_iters", Json::i(s.engine.counted_iters as i64)),
+        ("fallbacks", Json::i(s.engine.fallbacks as i64)),
+    ])
+}
+
+fn stats_from_json(j: &Json) -> Result<SessionSnapshot, SchemaError> {
+    Ok(SessionSnapshot {
+        mem_reuses: j.req_u64("mem_reuses")?,
+        mem_allocs: j.req_u64("mem_allocs")?,
+        runs: j.req_u64("runs")?,
+        engine: crate::sim::engine::EngineStats {
+            load_mac: j.req_u64("load_mac")?,
+            scalar_mac: j.req_u64("scalar_mac")?,
+            latch: j.req_u64("latch")?,
+            requant: j.req_u64("requant")?,
+            counted_loops: j.req_u64("counted_loops")?,
+            counted_iters: j.req_u64("counted_iters")?,
+            fallbacks: j.req_u64("fallbacks")?,
+        },
+    })
+}
+
+impl ShardArtifact {
+    /// Serialise to the versioned JSON schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::i(SHARD_SCHEMA_VERSION as i64)),
+            ("kind", Json::s("mpnn_shard_sweep")),
+            ("model", Json::s(&self.model)),
+            ("evaluator", Json::s(&self.evaluator)),
+            ("strategy", Json::s(self.spec.strategy.name())),
+            ("shard_index", Json::i(self.spec.index as i64)),
+            ("shard_count", Json::i(self.spec.count as i64)),
+            ("total_configs", Json::i(self.total_configs as i64)),
+            // Decimal string, not a JSON number: seeds are full-range
+            // u64 and must survive the round trip bit-exactly (numbers
+            // travel through f64 and lose precision past 2^53).
+            ("seed", Json::s(&self.seed.to_string())),
+            ("eval_n", Json::i(self.eval_n as i64)),
+            ("float_acc", Json::Num(self.float_acc as f64)),
+            ("baseline_mac_instrs", Json::i(self.baseline_instrs as i64)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|(i, p)| {
+                            let mut obj = point_json(p);
+                            if let Json::Obj(kv) = &mut obj {
+                                kv.insert(0, ("index".to_string(), Json::i(*i as i64)));
+                            }
+                            obj
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stats", stats_json(&self.stats)),
+        ])
+    }
+
+    /// Deserialise from a parsed document, rejecting unknown schema
+    /// versions and malformed fields with typed errors.
+    pub fn from_json(j: &Json) -> Result<Self, ShardError> {
+        let version = j.req_u64("schema_version")?;
+        if version != SHARD_SCHEMA_VERSION {
+            return Err(ShardError::SchemaVersion {
+                found: version,
+                expected: SHARD_SCHEMA_VERSION,
+            });
+        }
+        let strategy_name = j.req_str("strategy")?;
+        let strategy = ShardStrategy::parse(strategy_name).ok_or_else(|| {
+            ShardError::Schema(SchemaError {
+                field: "strategy".to_string(),
+                msg: format!("unknown strategy `{strategy_name}`"),
+            })
+        })?;
+        let spec =
+            ShardSpec::new(j.req_u64("shard_index")? as usize, j.req_u64("shard_count")? as usize, strategy)?;
+        let mut points = Vec::new();
+        for pj in j.req_arr("points")? {
+            let idx = pj.req_u64("index")? as usize;
+            points.push((idx, point_from_json(pj)?));
+        }
+        Ok(ShardArtifact {
+            model: j.req_str("model")?.to_string(),
+            evaluator: j.req_str("evaluator")?.to_string(),
+            spec,
+            total_configs: j.req_u64("total_configs")? as usize,
+            seed: j.req_str("seed")?.parse().map_err(|_| {
+                ShardError::Schema(SchemaError {
+                    field: "seed".to_string(),
+                    msg: "expected a u64 decimal string".to_string(),
+                })
+            })?,
+            eval_n: j.req_u64("eval_n")? as usize,
+            float_acc: j.req_f64("float_acc")? as f32,
+            baseline_instrs: j.req_u64("baseline_mac_instrs")?,
+            points,
+            stats: stats_from_json(j.req("stats")?)?,
+        })
+    }
+
+    /// Parse an artifact from JSON text.
+    pub fn from_str(text: &str) -> Result<Self, ShardError> {
+        let j = Json::parse(text).map_err(ShardError::Parse)?;
+        ShardArtifact::from_json(&j)
+    }
+
+    /// Load an artifact file. IO errors surface as the crate error;
+    /// format errors keep their [`ShardError`] class in the chain.
+    pub fn load(path: &std::path::Path) -> crate::error::Result<Self> {
+        use crate::error::Context;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard artifact {}", path.display()))?;
+        ShardArtifact::from_str(&text)
+            .map_err(crate::error::Error::from)
+            .with_context(|| format!("loading shard artifact {}", path.display()))
+    }
+
+    /// Write the artifact to `path` (parent directories created).
+    pub fn save(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ merging ---
+
+/// The result of merging shard artifacts back into one sweep.
+#[derive(Debug, Clone)]
+pub struct MergedSweep {
+    /// Model name.
+    pub model: String,
+    /// Accuracy backend label.
+    pub evaluator: String,
+    /// Enumeration seed.
+    pub seed: u64,
+    /// Images per accuracy evaluation.
+    pub eval_n: usize,
+    /// Float baseline accuracy.
+    pub float_acc: f32,
+    /// Baseline MAC-instruction count.
+    pub baseline_instrs: u64,
+    /// Every evaluated point, restored to global enumeration order —
+    /// bit-identical to what a single-instance sweep returns.
+    pub points: Vec<EvalPoint>,
+    /// Global Pareto front by MAC instructions (recomputed; matches the
+    /// single-instance front index-for-index).
+    pub front: Vec<usize>,
+    /// Summed per-shard session/engine stats.
+    pub stats: SessionSnapshot,
+    /// Distinct shard artifacts merged (after dropping exact duplicates).
+    pub shards: usize,
+    /// Configs delivered identically by more than one shard (expected
+    /// with overlapping hash/range splits; conflicts are errors).
+    pub duplicate_points: usize,
+}
+
+/// First [`EvalPoint`] field on which `a` and `b` differ, bit-compared
+/// (floats via `to_bits`, so `-0.0 != 0.0` and NaNs never compare
+/// equal-by-accident).
+pub fn point_divergence(a: &EvalPoint, b: &EvalPoint) -> Option<(&'static str, String, String)> {
+    if a.config != b.config {
+        return Some(("config", format!("{:?}", a.config), format!("{:?}", b.config)));
+    }
+    if a.accuracy.to_bits() != b.accuracy.to_bits() {
+        return Some(("accuracy", format!("{}", a.accuracy), format!("{}", b.accuracy)));
+    }
+    if a.mac_instructions != b.mac_instructions {
+        return Some((
+            "mac_instructions",
+            a.mac_instructions.to_string(),
+            b.mac_instructions.to_string(),
+        ));
+    }
+    if a.cycles != b.cycles {
+        return Some(("cycles", a.cycles.to_string(), b.cycles.to_string()));
+    }
+    if a.mem_accesses != b.mem_accesses {
+        return Some(("mem_accesses", a.mem_accesses.to_string(), b.mem_accesses.to_string()));
+    }
+    if a.iss_cycles != b.iss_cycles {
+        return Some(("iss_cycles", format!("{:?}", a.iss_cycles), format!("{:?}", b.iss_cycles)));
+    }
+    if a.divergence.map(f32::to_bits) != b.divergence.map(f32::to_bits) {
+        return Some(("divergence", format!("{:?}", a.divergence), format!("{:?}", b.divergence)));
+    }
+    None
+}
+
+fn incompatible(field: &'static str, a: impl fmt::Display, b: impl fmt::Display) -> ShardError {
+    ShardError::Incompatible { field, a: a.to_string(), b: b.to_string() }
+}
+
+/// Same shard run: identical identity, spec and evaluated points —
+/// everything except the [`SessionSnapshot`], which legitimately
+/// differs between a shard and its retry (warm caches change the pool
+/// counters). Such artifacts must count **once** toward merged stats.
+fn same_run(a: &ShardArtifact, b: &ShardArtifact) -> bool {
+    a.spec == b.spec
+        && a.model == b.model
+        && a.evaluator == b.evaluator
+        && a.total_configs == b.total_configs
+        && a.seed == b.seed
+        && a.eval_n == b.eval_n
+        && a.float_acc.to_bits() == b.float_acc.to_bits()
+        && a.baseline_instrs == b.baseline_instrs
+        && a.points.len() == b.points.len()
+        && a.points
+            .iter()
+            .zip(&b.points)
+            .all(|((ia, pa), (ib, pb))| ia == ib && point_divergence(pa, pb).is_none())
+}
+
+/// Total order over stats snapshots — the deterministic tie-break for
+/// which of a shard's retries contributes its stats to the merge.
+fn stats_key(s: &SessionSnapshot) -> [u64; 10] {
+    [
+        s.mem_reuses,
+        s.mem_allocs,
+        s.runs,
+        s.engine.load_mac,
+        s.engine.scalar_mac,
+        s.engine.latch,
+        s.engine.requant,
+        s.engine.counted_loops,
+        s.engine.counted_iters,
+        s.engine.fallbacks,
+    ]
+}
+
+/// Merge shard artifacts into the exact single-instance sweep result.
+///
+/// Deterministic, order-insensitive (inputs are canonically reordered)
+/// and duplicate-insensitive: duplicate artifacts — byte-identical
+/// copies *and* retries of the same shard whose only difference is the
+/// stats snapshot — collapse to one (smallest stats snapshot wins, so
+/// the result is order-independent), as do identically-evaluated
+/// duplicate configs across overlapping splits; *disagreeing*
+/// duplicates are [`ShardError::Conflict`]s. Fails typed when the
+/// artifacts describe different sweeps or leave part of the space
+/// uncovered.
+pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
+    if artifacts.is_empty() {
+        return Err(ShardError::Empty);
+    }
+    // Collapse duplicate runs so stats are not double-counted: the
+    // same file merged twice, and also a shard plus its *retry* — same
+    // identity/points, different pool-stats snapshot (warm caches).
+    // Among retries the smallest stats snapshot wins, so the outcome
+    // is independent of input order. An artifact whose *points* differ
+    // for the same slot stays in and is caught by the point-level
+    // conflict check below.
+    let mut arts: Vec<&ShardArtifact> = Vec::new();
+    for a in artifacts {
+        match arts.iter_mut().find(|kept| same_run(kept, a)) {
+            Some(kept) => {
+                if stats_key(&a.stats) < stats_key(&kept.stats) {
+                    *kept = a;
+                }
+            }
+            None => arts.push(a),
+        }
+    }
+    // Canonical order: (strategy, count, index). Sums are commutative
+    // anyway; this pins the error *reporting* order too.
+    arts.sort_by_key(|a| (a.spec.strategy.name(), a.spec.count, a.spec.index));
+
+    let first = arts[0];
+    for a in &arts[1..] {
+        if a.model != first.model {
+            return Err(incompatible("model", &first.model, &a.model));
+        }
+        if a.evaluator != first.evaluator {
+            return Err(incompatible("evaluator", &first.evaluator, &a.evaluator));
+        }
+        if a.seed != first.seed {
+            return Err(incompatible("seed", first.seed, a.seed));
+        }
+        if a.eval_n != first.eval_n {
+            return Err(incompatible("eval_n", first.eval_n, a.eval_n));
+        }
+        if a.total_configs != first.total_configs {
+            return Err(incompatible("total_configs", first.total_configs, a.total_configs));
+        }
+        if a.float_acc.to_bits() != first.float_acc.to_bits() {
+            return Err(incompatible("float_acc", first.float_acc, a.float_acc));
+        }
+        if a.baseline_instrs != first.baseline_instrs {
+            return Err(incompatible("baseline_mac_instrs", first.baseline_instrs, a.baseline_instrs));
+        }
+    }
+
+    let mut by_index: BTreeMap<usize, &EvalPoint> = BTreeMap::new();
+    let mut duplicate_points = 0usize;
+    let mut stats = SessionSnapshot::default();
+    for a in &arts {
+        stats.add(&a.stats);
+        for (i, p) in &a.points {
+            match by_index.get(i) {
+                None => {
+                    by_index.insert(*i, p);
+                }
+                Some(existing) => match point_divergence(existing, p) {
+                    None => duplicate_points += 1,
+                    Some((field, va, vb)) => {
+                        return Err(ShardError::Conflict {
+                            global_index: *i,
+                            config: p.config.clone(),
+                            field,
+                            a: va,
+                            b: vb,
+                        })
+                    }
+                },
+            }
+        }
+    }
+
+    let expected = first.total_configs;
+    let covered = by_index.len();
+    let contiguous = match by_index.keys().next_back() {
+        None => true,
+        Some(&last) => last + 1 == covered,
+    };
+    if covered != expected || !contiguous {
+        let first_missing = (0..expected).find(|i| !by_index.contains_key(i));
+        return Err(ShardError::Coverage { expected, got: covered, first_missing });
+    }
+
+    let points: Vec<EvalPoint> = by_index.into_values().cloned().collect();
+    let front = pareto_front(&points, |p| p.mac_instructions);
+    Ok(MergedSweep {
+        model: first.model.clone(),
+        evaluator: first.evaluator.clone(),
+        seed: first.seed,
+        eval_n: first.eval_n,
+        float_acc: first.float_acc,
+        baseline_instrs: first.baseline_instrs,
+        points,
+        front,
+        stats,
+        shards: arts.len(),
+        duplicate_points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(ws: &[u32]) -> Config {
+        ws.to_vec()
+    }
+
+    fn point(ws: &[u32], acc: f32, cycles: u64) -> EvalPoint {
+        EvalPoint {
+            config: cfg(ws),
+            accuracy: acc,
+            mac_instructions: cycles / 2,
+            cycles,
+            mem_accesses: cycles / 3,
+            iss_cycles: (cycles % 2 == 0).then_some(cycles * 10),
+            divergence: (cycles % 3 == 0).then_some(0.25),
+        }
+    }
+
+    fn artifact(spec: ShardSpec, total: usize, points: Vec<(usize, EvalPoint)>) -> ShardArtifact {
+        ShardArtifact {
+            model: "lenet5".to_string(),
+            evaluator: "host".to_string(),
+            spec,
+            total_configs: total,
+            seed: 7,
+            eval_n: 16,
+            float_acc: 0.875,
+            baseline_instrs: 1234,
+            points,
+            stats: SessionSnapshot { mem_reuses: 1, mem_allocs: 2, runs: 3, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn spec_validation_and_parse() {
+        assert!(ShardSpec::new(0, 1, ShardStrategy::Hash).is_ok());
+        assert!(matches!(ShardSpec::new(2, 2, ShardStrategy::Hash), Err(ShardError::BadSpec(_))));
+        assert!(matches!(ShardSpec::new(0, 0, ShardStrategy::Range), Err(ShardError::BadSpec(_))));
+        let s = ShardSpec::parse("1/4").unwrap();
+        assert_eq!((s.index, s.count), (1, 4));
+        assert!(ShardSpec::parse("4/4").is_err());
+        assert!(ShardSpec::parse("x/4").is_err());
+        assert!(ShardSpec::parse("14").is_err());
+    }
+
+    #[test]
+    fn partitions_are_disjoint_and_cover() {
+        let configs: Vec<Config> =
+            (0..50u32).map(|i| vec![8, [2, 4, 8][i as usize % 3], [2, 4][i as usize % 2]]).collect();
+        for strategy in [ShardStrategy::Hash, ShardStrategy::Range] {
+            for count in 1..=8 {
+                let mut seen = vec![0usize; configs.len()];
+                for index in 0..count {
+                    let spec = ShardSpec::new(index, count, strategy).unwrap();
+                    for i in spec.member_indices(&configs) {
+                        seen[i] += 1;
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "{strategy:?} x{count}: ownership counts {seen:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hash_is_independent_of_count_and_position() {
+        let c = cfg(&[8, 4, 2]);
+        let h = config_hash(&c);
+        assert_eq!(h, config_hash(&c.clone()));
+        // Same config owned by the same residue class whatever the count.
+        for count in 1..=8 {
+            let owner = (0..count)
+                .filter(|&i| {
+                    ShardSpec::new(i, count, ShardStrategy::Hash).unwrap().owns(17, &c, 100)
+                })
+                .count();
+            assert_eq!(owner, 1);
+        }
+        assert_ne!(config_hash(&cfg(&[8, 4, 2])), config_hash(&cfg(&[8, 2, 4])));
+    }
+
+    #[test]
+    fn artifact_round_trips_bit_exactly() {
+        let spec = ShardSpec::new(1, 3, ShardStrategy::Range).unwrap();
+        let a = artifact(spec, 9, vec![(3, point(&[8, 4], 0.5, 100)), (4, point(&[8, 2], 0.25, 60))]);
+        let text = a.to_json().to_string();
+        let back = ShardArtifact::from_str(&text).unwrap();
+        assert_eq!(back, a);
+        // Re-emission is byte-stable.
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn version_mismatch_and_corruption_are_typed_errors() {
+        let spec = ShardSpec::whole();
+        let a = artifact(spec, 1, vec![(0, point(&[8], 0.5, 100))]);
+        let text = a.to_json().to_string();
+
+        let bumped = text.replace("\"schema_version\":1", "\"schema_version\":999");
+        assert!(matches!(
+            ShardArtifact::from_str(&bumped),
+            Err(ShardError::SchemaVersion { found: 999, expected: SHARD_SCHEMA_VERSION })
+        ));
+
+        let truncated = &text[..text.len() / 2];
+        assert!(matches!(ShardArtifact::from_str(truncated), Err(ShardError::Parse(_))));
+
+        let missing = text.replace("\"model\":\"lenet5\",", "");
+        match ShardArtifact::from_str(&missing) {
+            Err(ShardError::Schema(e)) => assert_eq!(e.field, "model"),
+            other => panic!("expected Schema error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_detects_conflicts_and_coverage_gaps() {
+        let total = 2;
+        let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+        let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+        let a0 = artifact(s0, total, vec![(0, point(&[8, 8], 0.9, 100))]);
+        let a1 = artifact(s1, total, vec![(1, point(&[8, 4], 0.8, 50))]);
+
+        let m = merge(&[a1.clone(), a0.clone()]).unwrap();
+        assert_eq!(m.points.len(), 2);
+        assert_eq!(m.points[0].config, cfg(&[8, 8]));
+        assert_eq!(m.stats.runs, 6);
+
+        // Coverage gap.
+        match merge(&[a0.clone()]) {
+            Err(ShardError::Coverage { expected: 2, got: 1, first_missing: Some(1) }) => {}
+            other => panic!("expected Coverage, got {other:?}"),
+        }
+
+        // Conflict: same index, different accuracy.
+        let mut evil = a1.clone();
+        evil.spec = ShardSpec::new(1, 2, ShardStrategy::Hash).unwrap();
+        evil.points[0].1.accuracy = 0.5;
+        match merge(&[a0.clone(), a1.clone(), evil]) {
+            Err(ShardError::Conflict { global_index: 1, field: "accuracy", .. }) => {}
+            other => panic!("expected Conflict, got {other:?}"),
+        }
+
+        // Incompatible sweeps refuse to merge.
+        let mut other_model = a1.clone();
+        other_model.model = "cifar_cnn".to_string();
+        assert!(matches!(
+            merge(&[a0, other_model]),
+            Err(ShardError::Incompatible { field: "model", .. })
+        ));
+    }
+
+    #[test]
+    fn retried_shard_counts_its_stats_once() {
+        // Same shard re-run after a flaky failure: identical identity
+        // and points, different pool-stats snapshot (warm caches). The
+        // merge must count the slot once, pick the retry
+        // deterministically (smallest stats snapshot), and be
+        // order-independent about it.
+        let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+        let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+        let a0 = artifact(s0, 2, vec![(0, point(&[8, 8], 0.9, 100))]);
+        let a1 = artifact(s1, 2, vec![(1, point(&[8, 4], 0.8, 50))]);
+        let mut retry = a0.clone();
+        retry.stats.mem_reuses = 99;
+
+        let m1 = merge(&[a0.clone(), a1.clone(), retry.clone()]).unwrap();
+        let m2 = merge(&[retry.clone(), a1.clone(), a0.clone()]).unwrap();
+        assert_eq!(m1.stats, m2.stats);
+        assert_eq!(m1.shards, 2);
+        // One sweep's worth: a0 (mem_reuses 1, wins over the retry's
+        // 99) + a1 (mem_reuses 1).
+        assert_eq!(m1.stats.runs, 6);
+        assert_eq!(m1.stats.mem_reuses, 2);
+        // A retry whose *points* differ is not a retry — it conflicts.
+        let mut evil = a0.clone();
+        evil.stats.mem_reuses = 99;
+        evil.points[0].1.cycles += 1;
+        assert!(matches!(
+            merge(&[a0, a1, evil]),
+            Err(ShardError::Conflict { field: "cycles", .. })
+        ));
+    }
+
+    #[test]
+    fn seed_round_trips_full_u64_range() {
+        let spec = ShardSpec::whole();
+        let mut a = artifact(spec, 1, vec![(0, point(&[8], 0.5, 100))]);
+        a.seed = u64::MAX;
+        let back = ShardArtifact::from_str(&a.to_json().to_string()).unwrap();
+        assert_eq!(back.seed, u64::MAX);
+        assert_eq!(back, a);
+        // A non-numeric seed is a typed schema error.
+        let mangled = a.to_json().to_string().replace(&u64::MAX.to_string(), "not-a-seed");
+        match ShardArtifact::from_str(&mangled) {
+            Err(ShardError::Schema(e)) => assert_eq!(e.field, "seed"),
+            other => panic!("expected Schema(seed), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_is_duplicate_insensitive() {
+        let total = 2;
+        let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+        let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+        let a0 = artifact(s0, total, vec![(0, point(&[8, 8], 0.9, 100))]);
+        let a1 = artifact(s1, total, vec![(1, point(&[8, 4], 0.8, 50))]);
+        let once = merge(&[a0.clone(), a1.clone()]).unwrap();
+        let twice = merge(&[a1.clone(), a0.clone(), a0.clone(), a1.clone()]).unwrap();
+        assert_eq!(once.points, twice.points);
+        assert_eq!(once.front, twice.front);
+        // Byte-identical duplicates collapse: stats are not double-counted.
+        assert_eq!(once.stats, twice.stats);
+        assert_eq!(twice.shards, 2);
+    }
+}

@@ -1,13 +1,25 @@
 //! Fig. 6 — the accuracy-vs-MAC-instruction Pareto spaces from the
 //! mixed-precision DSE (gray points = all configurations, squares = the
 //! Pareto front, star = the float baseline).
+//!
+//! The sweep also runs **sharded**: `--shard i/n` evaluates only shard
+//! `i`'s slice of each model's config space and writes a versioned
+//! [`ShardArtifact`] instead of a full result; `--merge <files…>`
+//! recombines shard artifacts into the exact single-instance sweep
+//! (same points, same Pareto indices — see [`crate::dse::shard`]) and
+//! then prints/serialises through the identical code path, so the
+//! merged `results/fig6.json` is byte-for-byte what an unsharded run
+//! writes. The CI smoke job and `tests/sweep_sharding.rs` hold that
+//! equality.
 
 use super::ExpOpts;
 use crate::coordinator::Coordinator;
 use crate::dse::pareto::pareto_front;
+use crate::dse::shard::{merge, ShardArtifact, ShardSpec};
 use crate::dse::{default_pinned, enumerate, EvalPoint};
 use crate::json::Json;
 use crate::error::Result;
+use std::path::{Path, PathBuf};
 
 /// Sweep result for one model.
 pub struct Sweep {
@@ -95,13 +107,195 @@ fn point_json(p: &EvalPoint) -> Json {
     ])
 }
 
-/// Run the Fig.-6 harness over all four models.
+/// Run one shard of a model's sweep: enumerate the full space (the
+/// enumeration is deterministic, so every shard sees the same order),
+/// evaluate only the configs the shard owns, and package the points —
+/// tagged with their global enumeration indices — plus the session/
+/// engine stats delta attributable to this sweep into a versioned
+/// [`ShardArtifact`]. (The stats delta is read off the global
+/// [`SimSession`](crate::sim::SimSession) after the coordinator's
+/// cycle-model build, so it covers the sweep itself; concurrent
+/// unrelated simulation in the same process would fold in too.)
+pub fn sweep_shard(opts: &ExpOpts, name: &str, shard: &ShardSpec) -> Result<ShardArtifact> {
+    let coordinator = opts.coordinator(name)?;
+    let analysis = crate::models::analyze(&coordinator.model.spec);
+    let n = analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
+    let before = crate::sim::SimSession::global().stats.snapshot();
+    let points = coordinator.sweep_sharded(&configs, opts.eval_n, shard)?;
+    let stats = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
+    let baseline_instrs =
+        analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
+    Ok(ShardArtifact {
+        model: name.to_string(),
+        evaluator: coordinator.evaluator_name().to_string(),
+        spec: *shard,
+        total_configs: configs.len(),
+        seed: opts.seed,
+        eval_n: opts.eval_n,
+        float_acc: coordinator.model.float_acc,
+        baseline_instrs,
+        points,
+        stats,
+    })
+}
+
+/// Canonical artifact filename for one model's shard:
+/// `<dir>/fig6_<model>.s<i>of<n>.json`.
+pub fn shard_artifact_path(dir: &Path, model: &str, shard: &ShardSpec) -> PathBuf {
+    dir.join(format!("fig6_{model}.s{}of{}.json", shard.index, shard.count))
+}
+
+/// Map an artifact's evaluator label back to the static str [`Sweep`]
+/// carries (unknown labels — a future backend — read as themselves
+/// semantically but print as `merged`).
+fn evaluator_static(name: &str) -> &'static str {
+    match name {
+        "host" => "host",
+        "iss" => "iss",
+        "pjrt" => "pjrt",
+        _ => "merged",
+    }
+}
+
+/// Rebuild a full [`Sweep`] from one model's shard artifacts: merge
+/// (dedup + conflict check + coverage check + global Pareto front),
+/// then rebuild the coordinator so downstream consumers (Fig. 8's
+/// threshold selection needs the cycle model) work unchanged. The
+/// local model must match the artifacts — a differing float baseline
+/// accuracy means a different seed or artifacts directory, and the
+/// merge refuses rather than mixing sweeps.
+pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sweep> {
+    let merged = merge(arts)?;
+    let coordinator = opts.coordinator(&merged.model)?;
+    crate::ensure!(
+        coordinator.model.float_acc.to_bits() == merged.float_acc.to_bits(),
+        "shard artifacts for `{}` were produced from a different model state \
+         (float acc {} vs local {}); check --seed/--artifacts",
+        merged.model,
+        merged.float_acc,
+        coordinator.model.float_acc,
+    );
+    // Cross-check the merged points against a local re-enumeration:
+    // the coverage check inside `merge` proves the *indices* are all
+    // present, but only the enumeration itself can prove each index
+    // carries the right *config* — a mistagged artifact (hand-edited,
+    // bit-flipped, buggy writer) must fail here, not merge silently
+    // into a reordered sweep.
+    let n = crate::models::analyze(&coordinator.model.spec).layers.len();
+    let configs = enumerate(n, &default_pinned(), opts.budget, merged.seed);
+    crate::ensure!(
+        configs.len() == merged.points.len(),
+        "merged artifacts for `{}` carry {} configs but --budget {} with seed {} \
+         enumerates {}; rerun the merge with the shard run's --budget",
+        merged.model,
+        merged.points.len(),
+        opts.budget,
+        merged.seed,
+        configs.len(),
+    );
+    for (i, (cfg, p)) in configs.iter().zip(&merged.points).enumerate() {
+        crate::ensure!(
+            *cfg == p.config,
+            "shard artifacts for `{}` are mistagged: config #{i} should be {:?} \
+             but the merged point carries {:?}",
+            merged.model,
+            cfg,
+            p.config,
+        );
+    }
+    eprintln!(
+        "[fig6] merged {} shard artifact(s) for {}: {} points, {} duplicate(s), {} engine runs",
+        merged.shards,
+        merged.model,
+        merged.points.len(),
+        merged.duplicate_points,
+        merged.stats.runs,
+    );
+    Ok(Sweep {
+        model: merged.model,
+        float_acc: merged.float_acc,
+        baseline_instrs: merged.baseline_instrs,
+        points: merged.points,
+        front: merged.front,
+        evaluator: evaluator_static(&merged.evaluator),
+        coordinator,
+    })
+}
+
+/// Load `opts.merge` shard-artifact files and rebuild one [`Sweep`]
+/// per model, in paper model order (shared by `fig6 --merge` and
+/// `fig8 --merge`).
+pub fn sweeps_from_merge(opts: &ExpOpts) -> Result<Vec<Sweep>> {
+    crate::ensure!(!opts.merge.is_empty(), "--merge needs at least one shard artifact");
+    let mut groups: Vec<(String, Vec<ShardArtifact>)> = Vec::new();
+    for path in &opts.merge {
+        let art = ShardArtifact::load(path)?;
+        match groups.iter_mut().find(|(m, _)| *m == art.model) {
+            Some((_, g)) => g.push(art),
+            None => groups.push((art.model.clone(), vec![art])),
+        }
+    }
+    // Deterministic model order: paper order first, then anything else
+    // alphabetically.
+    groups.sort_by_key(|(m, _)| {
+        (super::MODEL_NAMES.iter().position(|n| n == m).unwrap_or(usize::MAX), m.clone())
+    });
+    groups.iter().map(|(_, arts)| sweep_from_artifacts(opts, arts)).collect()
+}
+
+/// Run the Fig.-6 harness: merge shard artifacts when `--merge` is
+/// given, write one shard's artifact(s) when `--shard` is given,
+/// full sweep over the selected models otherwise.
 pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
+    if !opts.merge.is_empty() {
+        crate::ensure!(
+            opts.shard.is_none(),
+            "--shard and --merge are mutually exclusive (run shards first, then merge)"
+        );
+        return finish(sweeps_from_merge(opts)?);
+    }
+    if let Some(shard) = opts.shard {
+        let dir = opts.shard_dir();
+        let mut arr = Vec::new();
+        for name in opts.model_names()? {
+            eprintln!(
+                "[fig6] sweeping shard {shard} of {name} ({} configs total, {} eval images)",
+                opts.budget, opts.eval_n
+            );
+            let art = sweep_shard(opts, name, &shard)?;
+            let path = shard_artifact_path(&dir, name, &shard);
+            art.save(&path)?;
+            println!(
+                "Fig. 6 — {name}: shard {shard} evaluated {}/{} configs -> {}",
+                art.points.len(),
+                art.total_configs,
+                path.display()
+            );
+            arr.push(Json::obj(vec![
+                ("model", Json::s(name)),
+                ("path", Json::s(&path.display().to_string())),
+                ("strategy", Json::s(shard.strategy.name())),
+                ("shard_index", Json::i(shard.index as i64)),
+                ("shard_count", Json::i(shard.count as i64)),
+                ("points", Json::i(art.points.len() as i64)),
+                ("total_configs", Json::i(art.total_configs as i64)),
+            ]));
+        }
+        return Ok((Vec::new(), Json::Arr(arr)));
+    }
     let mut sweeps = Vec::new();
-    for name in super::MODEL_NAMES {
+    for name in opts.model_names()? {
         eprintln!("[fig6] sweeping {name} ({} configs, {} eval images)", opts.budget, opts.eval_n);
         sweeps.push(sweep_model(opts, name)?);
     }
+    finish(sweeps)
+}
+
+/// Print + serialise sweeps — the single exit path for both the full
+/// and the merged run, which is what makes `results/fig6.json` from a
+/// merge byte-identical to the unsharded file.
+fn finish(sweeps: Vec<Sweep>) -> Result<(Vec<Sweep>, Json)> {
     let mut arr = Vec::new();
     for s in &sweeps {
         print_summary(s);

@@ -93,13 +93,31 @@ pub fn select(sweep: Sweep) -> ModelSelections {
     }
 }
 
-/// Run the Fig.-8 harness (shares sweeps with Fig. 6 in the CLI's `all`).
+/// Run the Fig.-8 harness (shares sweeps with Fig. 6 in the CLI's
+/// `all`). With `--merge <shard files…>` the threshold selection runs
+/// on sweeps recombined from shard artifacts instead of re-evaluating
+/// — and since the merge is bit-identical to the single-instance
+/// sweep, the selections are too. `--shard` is rejected here: the
+/// selection rule needs the *whole* Pareto space, so shards are
+/// produced by `fig6 --shard` and consumed here via `--merge`.
 pub fn run(opts: &ExpOpts) -> Result<(Vec<ModelSelections>, Json)> {
+    crate::ensure!(
+        opts.shard.is_none(),
+        "fig8 needs the full config space; run `fig6 --shard i/n` per shard, \
+         then `fig8 --merge <artifacts…>`"
+    );
     let mut out = Vec::new();
-    for name in super::MODEL_NAMES {
-        eprintln!("[fig8] {name}");
-        let sweep = sweep_model(opts, name)?;
-        out.push(select(sweep));
+    if opts.merge.is_empty() {
+        for name in opts.model_names()? {
+            eprintln!("[fig8] {name}");
+            let sweep = sweep_model(opts, name)?;
+            out.push(select(sweep));
+        }
+    } else {
+        for sweep in super::fig6::sweeps_from_merge(opts)? {
+            eprintln!("[fig8] {} (from merged shards)", sweep.model);
+            out.push(select(sweep));
+        }
     }
     let json = to_json(&out);
     print(&out);

@@ -85,6 +85,20 @@ pub struct ExpOpts {
     pub eval_workers: usize,
     /// Random seed.
     pub seed: u64,
+    /// Run only this shard of each model's sweep (`--shard i/n`): the
+    /// harness evaluates the shard's slice of the config space and
+    /// writes a [`ShardArtifact`](crate::dse::shard::ShardArtifact)
+    /// instead of a full result. `None` = unsharded.
+    pub shard: Option<crate::dse::shard::ShardSpec>,
+    /// Directory shard artifacts are written into (`--shard-out`,
+    /// default `results/shards`).
+    pub shard_out: Option<PathBuf>,
+    /// Shard artifacts to merge (`--merge <file>`, repeatable): the
+    /// sweep harnesses recombine these instead of re-evaluating.
+    pub merge: Vec<PathBuf>,
+    /// Restrict the sweep harnesses to these models (`--models a,b`);
+    /// `None` = all of [`MODEL_NAMES`].
+    pub models: Option<Vec<String>>,
 }
 
 impl Default for ExpOpts {
@@ -96,6 +110,10 @@ impl Default for ExpOpts {
             backend: EvalBackend::Auto,
             eval_workers: 4,
             seed: 0xD5E,
+            shard: None,
+            shard_out: None,
+            merge: Vec::new(),
+            models: None,
         }
     }
 }
@@ -150,6 +168,33 @@ impl ExpOpts {
         let model = self.load_model(name)?;
         let eval = self.evaluator(&model, 64)?;
         Coordinator::new(model, eval, 2)
+    }
+
+    /// The models the sweep harnesses (fig6/fig8) iterate: the
+    /// `--models` subset when given (validated against
+    /// [`MODEL_NAMES`], in paper order), all four otherwise.
+    pub fn model_names(&self) -> Result<Vec<&'static str>> {
+        match &self.models {
+            None => Ok(MODEL_NAMES.to_vec()),
+            Some(wanted) => {
+                for w in wanted {
+                    crate::ensure!(
+                        MODEL_NAMES.contains(&w.as_str()),
+                        "unknown model `{w}` (known: {})",
+                        MODEL_NAMES.join(", ")
+                    );
+                }
+                Ok(MODEL_NAMES
+                    .into_iter()
+                    .filter(|n| wanted.iter().any(|w| w == n))
+                    .collect())
+            }
+        }
+    }
+
+    /// Directory shard artifacts are written into.
+    pub fn shard_dir(&self) -> PathBuf {
+        self.shard_out.clone().unwrap_or_else(|| Path::new("results").join("shards"))
     }
 }
 

@@ -136,7 +136,7 @@ mod tests {
 // ------------------------------------------------------------- parsing ---
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     /// Byte offset of the error.
     pub at: usize,
@@ -369,6 +369,116 @@ impl Json {
             Json::Arr(v) => Some(v),
             _ => None,
         }
+    }
+}
+
+// ------------------------------------------------------------- schema ---
+
+/// Typed field-access error for schema'd documents (the shard-sweep
+/// artifacts): names the offending field and what was wrong with it,
+/// so a corrupted artifact surfaces as a diagnosable `Err`, never a
+/// panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchemaError {
+    /// Dotted path of the field that failed.
+    pub field: String,
+    /// What was expected / what was found.
+    pub msg: String,
+}
+
+impl std::fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON schema error at `{}`: {}", self.field, self.msg)
+    }
+}
+
+impl std::error::Error for SchemaError {}
+
+fn schema_err<T>(field: &str, msg: &str) -> Result<T, SchemaError> {
+    Err(SchemaError { field: field.to_string(), msg: msg.to_string() })
+}
+
+impl Json {
+    /// Required object field.
+    pub fn req(&self, field: &str) -> Result<&Json, SchemaError> {
+        match self.get(field) {
+            Some(v) => Ok(v),
+            None => schema_err(field, "missing required field"),
+        }
+    }
+
+    /// Required finite-number field.
+    pub fn req_f64(&self, field: &str) -> Result<f64, SchemaError> {
+        match self.req(field)?.as_f64() {
+            Some(v) if v.is_finite() => Ok(v),
+            Some(_) => schema_err(field, "expected a finite number"),
+            None => schema_err(field, "expected a number"),
+        }
+    }
+
+    /// Required non-negative integer field (rejects fractional values).
+    pub fn req_u64(&self, field: &str) -> Result<u64, SchemaError> {
+        let v = self.req_f64(field)?;
+        if v < 0.0 || v != v.trunc() {
+            return schema_err(field, "expected a non-negative integer");
+        }
+        Ok(v as u64)
+    }
+
+    /// Required string field.
+    pub fn req_str(&self, field: &str) -> Result<&str, SchemaError> {
+        match self.req(field)?.as_str() {
+            Some(s) => Ok(s),
+            None => schema_err(field, "expected a string"),
+        }
+    }
+
+    /// Required array field.
+    pub fn req_arr(&self, field: &str) -> Result<&[Json], SchemaError> {
+        match self.req(field)?.as_arr() {
+            Some(a) => Ok(a),
+            None => schema_err(field, "expected an array"),
+        }
+    }
+
+    /// Optional field: `None` when absent or `null`; otherwise the
+    /// value is handed to `f`, whose schema errors propagate.
+    pub fn opt<T>(
+        &self,
+        field: &str,
+        f: impl FnOnce(&Json) -> Result<T, SchemaError>,
+    ) -> Result<Option<T>, SchemaError> {
+        match self.get(field) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => f(v).map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod schema_tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors_and_errors() {
+        let j = Json::parse(r#"{"n": 3, "s": "x", "a": [1], "f": 1.5, "neg": -1, "z": null}"#)
+            .unwrap();
+        assert_eq!(j.req_u64("n").unwrap(), 3);
+        assert_eq!(j.req_str("s").unwrap(), "x");
+        assert_eq!(j.req_arr("a").unwrap().len(), 1);
+        assert_eq!(j.req_f64("f").unwrap(), 1.5);
+        assert_eq!(j.opt("z", |v| v.req_u64("x")).unwrap(), None);
+        assert_eq!(j.opt("missing", |v| v.req_u64("x")).unwrap(), None);
+        assert_eq!(j.opt("n", |v| Ok(v.as_i64().unwrap())).unwrap(), Some(3));
+
+        let e = j.req_u64("neg").unwrap_err();
+        assert_eq!(e.field, "neg");
+        let e = j.req_u64("f").unwrap_err();
+        assert!(e.msg.contains("integer"), "{e}");
+        let e = j.req_str("missing").unwrap_err();
+        assert!(e.msg.contains("missing"), "{e}");
+        // Display carries the field name for diagnosis.
+        assert!(format!("{e}").contains("missing"));
     }
 }
 

@@ -5,6 +5,7 @@
 //! subcommands expose the ISA/simulator substrate.
 
 use mpnn::{bail, Result};
+use mpnn::dse::shard::{ShardSpec, ShardStrategy};
 use mpnn::exp::{self, EvalBackend, ExpOpts};
 use mpnn::json::Json;
 
@@ -40,10 +41,26 @@ OPTIONS:
   --eval-workers <n>  ISS-evaluator batch worker threads (default 4)
   --host-eval         Shorthand for --evaluator host
   --seed <n>          Random seed (default 0xD5E)
+  --models <a,b,…>    Restrict fig6/fig8 sweeps to these models
+
+Sharded sweeps (fig6/fig8; see docs/ARCHITECTURE.md § Sharded sweeps):
+  --shard <i/n>       fig6: evaluate only shard i of an n-way split of
+                      each model's config space and write a versioned
+                      shard artifact instead of a full result. Every
+                      shard (process/host) must use the same --seed,
+                      --budget, --eval and --evaluator.
+  --shard-strategy <s>  hash | range partitioning (default hash)
+  --shard-out <dir>   Where shard artifacts go (default results/shards)
+  --merge <file>      Merge shard artifacts (repeatable) instead of
+                      sweeping: dedups configs, recomputes the global
+                      Pareto front and fails typed on shard conflicts.
+                      The merged result is bit-identical to the
+                      unsharded sweep.
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOpts> {
     let mut opts = ExpOpts::default();
+    let mut shard_strategy = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -67,9 +84,43 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
             }
             "--host-eval" => opts.backend = EvalBackend::Host,
             "--seed" => opts.seed = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.seed),
+            "--shard" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--shard needs `i/n`"))?;
+                opts.shard = Some(ShardSpec::parse(v).map_err(|e| mpnn::anyhow!("{e}"))?);
+            }
+            "--shard-strategy" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| mpnn::anyhow!("--shard-strategy needs a value (hash|range)"))?;
+                shard_strategy = Some(
+                    ShardStrategy::parse(v)
+                        .ok_or_else(|| mpnn::anyhow!("unknown shard strategy `{v}` (hash|range)"))?,
+                );
+            }
+            "--shard-out" => {
+                opts.shard_out = Some(
+                    it.next().ok_or_else(|| mpnn::anyhow!("--shard-out needs a directory"))?.into(),
+                )
+            }
+            "--merge" => opts
+                .merge
+                .push(it.next().ok_or_else(|| mpnn::anyhow!("--merge needs a file"))?.into()),
+            "--models" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--models needs a,b,…"))?;
+                opts.models =
+                    Some(v.split(',').map(|m| m.trim().to_string()).filter(|m| !m.is_empty()).collect());
+            }
             other => bail!("unknown option `{other}`\n{USAGE}"),
         }
     }
+    // Flag order must not matter: apply the strategy after the loop.
+    match (&mut opts.shard, shard_strategy) {
+        (Some(spec), Some(s)) => spec.strategy = s,
+        (None, Some(_)) => bail!("--shard-strategy requires --shard i/n"),
+        _ => {}
+    }
+    // Validate --models early so typos fail before a sweep starts.
+    opts.model_names()?;
     Ok(opts)
 }
 
@@ -80,13 +131,18 @@ fn save(name: &str, json: &Json) -> Result<()> {
 }
 
 fn cmd_all(opts: &ExpOpts) -> Result<()> {
+    mpnn::ensure!(
+        opts.shard.is_none() && opts.merge.is_empty(),
+        "`all` shares one full sweep per model; shard with `fig6 --shard` and \
+         merge with `fig6 --merge` / `fig8 --merge` instead"
+    );
     let (_, j3) = exp::table3::run(opts)?;
     save("table3", &j3)?;
     let (_, j7) = exp::fig7::run(opts)?;
     save("fig7", &j7)?;
     // One sweep per model feeds fig6 + fig8 + table4 + table5.
     let mut sweeps = Vec::new();
-    for name in exp::MODEL_NAMES {
+    for name in opts.model_names()? {
         eprintln!("[all] sweeping {name}");
         sweeps.push(exp::fig6::sweep_model(opts, name)?);
     }
@@ -103,14 +159,20 @@ fn cmd_all(opts: &ExpOpts) -> Result<()> {
     save("fig6", &Json::Arr(fig6_arr))?;
     exp::fig8::print(&sels);
     save("fig8", &exp::fig8::to_json(&sels))?;
-    // Fig. 4 with the actual selected MobileNet configs.
-    let mobile = sels.iter().find(|m| m.model == "mobilenet_v1").unwrap();
-    let cfgs: Vec<(String, Vec<u32>)> = mobile
-        .selections
+    // Fig. 4 with the actual selected MobileNet configs (defaults when
+    // `--models` filtered MobileNet out of the sweep set).
+    let cfgs: Vec<(String, Vec<u32>)> = sels
         .iter()
-        .flatten()
-        .map(|s| (format!("<{:.0}% loss", s.threshold * 100.0), s.bits.clone()))
-        .collect();
+        .find(|m| m.model == "mobilenet_v1")
+        .map(|mobile| {
+            mobile
+                .selections
+                .iter()
+                .flatten()
+                .map(|s| (format!("<{:.0}% loss", s.threshold * 100.0), s.bits.clone()))
+                .collect()
+        })
+        .unwrap_or_default();
     let (_, j4) = exp::fig4::run_with(opts, if cfgs.is_empty() { None } else { Some(cfgs) })?;
     save("fig4", &j4)?;
     let (_, jt4) = exp::table4::from_selections(opts, &sels)?;
@@ -192,7 +254,14 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "table3" => save("table3", &exp::table3::run(&parse_opts(rest)?)?.1),
         "fig4" => save("fig4", &exp::fig4::run(&parse_opts(rest)?)?.1),
-        "fig6" => save("fig6", &exp::fig6::run(&parse_opts(rest)?)?.1),
+        "fig6" => {
+            let opts = parse_opts(rest)?;
+            let (_, json) = exp::fig6::run(&opts)?;
+            // A shard run emits a shard-artifact manifest, not Fig.-6
+            // data — keep it away from results/fig6.json so a sharded
+            // rerun can't clobber a previously completed figure.
+            save(if opts.shard.is_some() { "fig6_shard" } else { "fig6" }, &json)
+        }
         "fig7" => save("fig7", &exp::fig7::run(&parse_opts(rest)?)?.1),
         "fig8" => save("fig8", &exp::fig8::run(&parse_opts(rest)?)?.1),
         "table4" => save("table4", &exp::table4::run(&parse_opts(rest)?)?.1),

@@ -120,6 +120,21 @@ impl EngineStats {
         self.fallbacks += o.fallbacks;
     }
 
+    /// Elementwise difference against an `earlier` snapshot of the same
+    /// monotone counters — how the shard-sweep runner attributes engine
+    /// activity to one sweep on the shared global session (saturating,
+    /// so a stale snapshot can never underflow).
+    pub fn delta_since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            load_mac: self.load_mac.saturating_sub(earlier.load_mac),
+            scalar_mac: self.scalar_mac.saturating_sub(earlier.scalar_mac),
+            latch: self.latch.saturating_sub(earlier.latch),
+            requant: self.requant.saturating_sub(earlier.requant),
+            counted_loops: self.counted_loops.saturating_sub(earlier.counted_loops),
+            counted_iters: self.counted_iters.saturating_sub(earlier.counted_iters),
+            fallbacks: self.fallbacks.saturating_sub(earlier.fallbacks),
+        }
+    }
 }
 
 /// Pre-resolved control-flow target.

@@ -120,6 +120,56 @@ pub struct SessionStats {
     pub engine: EngineHitTotals,
 }
 
+/// Plain-value snapshot of [`SessionStats`] — the unit the sharded DSE
+/// sweep serialises into its shard artifacts: a runner snapshots the
+/// global session before and after its sweep and records the delta, so
+/// the merged totals of N shards add up to exactly one sweep's worth of
+/// activity regardless of what else the process ran.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionSnapshot {
+    /// Memories handed out from the pool.
+    pub mem_reuses: u64,
+    /// Memories freshly allocated.
+    pub mem_allocs: u64,
+    /// Engine executions completed.
+    pub runs: u64,
+    /// Superinstruction hits.
+    pub engine: EngineStats,
+}
+
+impl SessionSnapshot {
+    /// Difference against an `earlier` snapshot of the same monotone
+    /// counters (saturating).
+    pub fn delta_since(&self, earlier: &SessionSnapshot) -> SessionSnapshot {
+        SessionSnapshot {
+            mem_reuses: self.mem_reuses.saturating_sub(earlier.mem_reuses),
+            mem_allocs: self.mem_allocs.saturating_sub(earlier.mem_allocs),
+            runs: self.runs.saturating_sub(earlier.runs),
+            engine: self.engine.delta_since(&earlier.engine),
+        }
+    }
+
+    /// Elementwise accumulate (the shard merger sums these).
+    pub fn add(&mut self, o: &SessionSnapshot) {
+        self.mem_reuses += o.mem_reuses;
+        self.mem_allocs += o.mem_allocs;
+        self.runs += o.runs;
+        self.engine.add(&o.engine);
+    }
+}
+
+impl SessionStats {
+    /// Capture the counters as plain values.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            mem_reuses: self.mem_reuses.load(Ordering::Relaxed),
+            mem_allocs: self.mem_allocs.load(Ordering::Relaxed),
+            runs: self.runs.load(Ordering::Relaxed),
+            engine: self.engine.snapshot(),
+        }
+    }
+}
+
 /// A pool of simulator memories + the execution entry point.
 #[derive(Debug, Default)]
 pub struct SimSession {

@@ -77,7 +77,7 @@ fn docs_mention_live_symbols() {
     // backends by their real type names, and the architecture tour the
     // load-bearing components of the unified accuracy+cycles path.
     let ev = fs::read_to_string("docs/EVALUATORS.md").unwrap();
-    for sym in ["HostEval", "IssEval", "PjrtEval", "run_model_batch", "divergence"] {
+    for sym in ["HostEval", "IssEval", "PjrtEval", "run_model_batch", "divergence", "--shard"] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
     let arch = fs::read_to_string("docs/ARCHITECTURE.md").unwrap();
@@ -92,8 +92,28 @@ fn docs_mention_live_symbols() {
         "Requant",
         "CountedLoop",
         "EngineStats",
+        // The sharded-sweeps section must keep naming the pipeline's
+        // load-bearing pieces.
+        "ShardSpec",
+        "ShardArtifact",
+        "sweep_sharded",
+        "SHARD_SCHEMA_VERSION",
+        "SessionSnapshot",
+        "ShardError",
+        "pareto_front",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
+    }
+    // The shard symbols the docs name must still exist in the crate.
+    let shard = fs::read_to_string("rust/src/dse/shard.rs").unwrap();
+    for sym in [
+        "pub struct ShardSpec",
+        "pub struct ShardArtifact",
+        "pub enum ShardError",
+        "pub fn merge",
+        "SHARD_SCHEMA_VERSION",
+    ] {
+        assert!(shard.contains(sym), "dse/shard.rs lost `{sym}` — update the docs");
     }
     // The engine symbols the catalog documents must still exist.
     let engine = fs::read_to_string("rust/src/sim/engine.rs").unwrap();

@@ -1,0 +1,137 @@
+//! Round-trip guards for the JSON formats CI uploads/consumes as
+//! artifacts: the sharded-sweep [`ShardArtifact`] schema and the bench
+//! harness's `BENCH_<name>.json` [`JsonReport`]. Each document must
+//! parse back and re-emit **byte-identically** — the property the
+//! sharded merge (files cross process/host boundaries) and the perf
+//! trajectory tooling (files are diffed across PRs) both lean on.
+
+use mpnn::bench::{JsonReport, Stats};
+use mpnn::dse::shard::{ShardArtifact, ShardSpec, ShardStrategy, SHARD_SCHEMA_VERSION};
+use mpnn::dse::EvalPoint;
+use mpnn::json::Json;
+use mpnn::sim::session::SessionSnapshot;
+use mpnn::sim::EngineStats;
+use std::time::Duration;
+
+fn rich_artifact() -> ShardArtifact {
+    let mk = |bits: &[u32], acc: f32, cyc: u64, iss: Option<u64>, div: Option<f32>| EvalPoint {
+        config: bits.to_vec(),
+        accuracy: acc,
+        mac_instructions: cyc / 2,
+        cycles: cyc,
+        mem_accesses: cyc / 3,
+        iss_cycles: iss,
+        divergence: div,
+    };
+    ShardArtifact {
+        model: "mcunet_vww".to_string(),
+        evaluator: "iss".to_string(),
+        spec: ShardSpec::new(2, 5, ShardStrategy::Range).unwrap(),
+        total_configs: 120,
+        // Full-range u64: the schema stores seeds as decimal strings
+        // precisely so this survives the f64-typed JSON number path.
+        seed: u64::MAX,
+        eval_n: 128,
+        // Awkward float: not exactly representable — the emitter must
+        // print a shortest round-trippable form.
+        float_acc: 0.8374999,
+        baseline_instrs: 987_654_321,
+        points: vec![
+            (48, mk(&[8, 4, 2, 4], 0.75, 1_000_001, Some(123_456_789), Some(0.0))),
+            (49, mk(&[8, 2, 2, 2], 0.015625, 7, None, None)),
+            (50, mk(&[8, 8, 8, 8], 1.0, u32::MAX as u64, Some(0), Some(0.33333334))),
+        ],
+        stats: SessionSnapshot {
+            mem_reuses: 12,
+            mem_allocs: 3,
+            runs: 15,
+            engine: EngineStats {
+                load_mac: 1 << 40,
+                scalar_mac: 2,
+                latch: 3,
+                requant: 4,
+                counted_loops: 5,
+                counted_iters: 6,
+                fallbacks: 0,
+            },
+        },
+    }
+}
+
+#[test]
+fn shard_artifact_parse_reemit_is_byte_identical() {
+    let art = rich_artifact();
+    let text = art.to_json().to_string();
+    // Schema version is embedded, so old readers can reject new files.
+    assert!(text.contains(&format!("\"schema_version\":{SHARD_SCHEMA_VERSION}")));
+
+    // Struct-level round trip: every field (floats bit-exact).
+    let back = ShardArtifact::from_str(&text).unwrap();
+    assert_eq!(back, art);
+    assert_eq!(back.float_acc.to_bits(), art.float_acc.to_bits());
+    assert_eq!(back.seed, u64::MAX);
+    assert_eq!(back.points[2].1.divergence.unwrap().to_bits(), 0.33333334f32.to_bits());
+
+    // Byte-level round trip: parse → re-emit compares equal, twice
+    // (a fixed point, not merely a cycle).
+    let reparsed = Json::parse(&text).unwrap().to_string();
+    assert_eq!(reparsed, text);
+    assert_eq!(back.to_json().to_string(), text);
+}
+
+#[test]
+fn shard_artifact_field_order_is_deterministic() {
+    // Two structurally identical artifacts serialise to identical
+    // bytes — the property that lets CI `cmp` merged vs unsharded
+    // outputs instead of doing a semantic diff.
+    assert_eq!(rich_artifact().to_json().to_string(), rich_artifact().to_json().to_string());
+}
+
+#[test]
+fn bench_json_report_parse_reemit_is_byte_identical() {
+    let mut report = JsonReport::new("iss_throughput");
+    let stats = Stats {
+        name: "dense_8b/engine".to_string(),
+        samples: vec![
+            Duration::from_nanos(1_200_345),
+            Duration::from_nanos(1_199_999),
+            Duration::from_nanos(1_300_000),
+        ],
+    };
+    report.record(&stats, &[("mips", 840.25), ("insns", 1.0e9)]);
+    let stats2 = Stats { name: "conv_4b/legacy".to_string(), samples: vec![Duration::from_nanos(42)] };
+    report.record(&stats2, &[]);
+    report.summary("worst_speedup", 2.125);
+    report.summary("engine_vs_v1", 1.5);
+
+    let text = report.to_json().to_string();
+    let parsed = Json::parse(&text).unwrap();
+    // parse → re-emit → byte-compare.
+    assert_eq!(parsed.to_string(), text);
+
+    // And the fields CI tooling reads are where the schema says.
+    assert_eq!(parsed.get("bench").unwrap().as_str(), Some("iss_throughput"));
+    let entries = parsed.get("entries").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 2);
+    assert_eq!(entries[0].get("name").unwrap().as_str(), Some("dense_8b/engine"));
+    assert_eq!(entries[0].get("iters").unwrap().as_i64(), Some(3));
+    assert_eq!(entries[0].get("mips").unwrap().as_f64(), Some(840.25));
+    assert_eq!(parsed.get("worst_speedup").unwrap().as_f64(), Some(2.125));
+}
+
+#[test]
+fn bench_json_file_round_trips_from_disk() {
+    let mut report = JsonReport::new("roundtrip_probe");
+    report.record(
+        &Stats { name: "probe".to_string(), samples: vec![Duration::from_nanos(5)] },
+        &[("ratio", 0.125)],
+    );
+    let dir = std::env::temp_dir().join(format!("mpnn_bench_json_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = report.write_to(&dir).unwrap();
+    assert!(path.ends_with("BENCH_roundtrip_probe.json"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    assert_eq!(text, report.to_json().to_string());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,389 @@
+//! Property tests for the sharded-sweep subsystem (`dse::shard`):
+//!
+//! (a) partitions are disjoint and cover the space for every strategy
+//!     and shard count;
+//! (b) merge(shard sweeps) is **bit-identical** to the single-instance
+//!     sweep — same point order, same `EvalPoint` fields (floats
+//!     bit-compared, `iss_cycles`/`divergence` included), same Pareto
+//!     indices, same summed session/engine stats — for shard counts
+//!     {1, 2, 3, 5, 8} on the synthetic-zoo fallback model, across
+//!     *separate coordinator instances* (the cross-process claim) and
+//!     through a full JSON round-trip of every shard artifact;
+//! (c) merging is order- and duplicate-insensitive;
+//! (d) corrupted / version-mismatched artifacts fail with typed
+//!     [`ShardError`]s, never a panic.
+
+use mpnn::coordinator::{Coordinator, HostEval, IssEval};
+use mpnn::dse::pareto::pareto_front;
+use mpnn::dse::shard::{
+    config_hash, merge, point_divergence, ShardArtifact, ShardError, ShardSpec, ShardStrategy,
+};
+use mpnn::dse::{default_pinned, enumerate, Config, EvalPoint};
+use mpnn::exp::{EvalBackend, ExpOpts};
+use mpnn::models::format::load_or_fallback;
+use mpnn::rng::Rng;
+use mpnn::sim::session::SessionSnapshot;
+use std::path::Path;
+
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 5, 8];
+
+fn host_coordinator(seed: u64) -> Coordinator {
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", seed).unwrap();
+    let test = model.test.clone();
+    Coordinator::new(model, Box::new(HostEval { test }), 2).unwrap()
+}
+
+/// Build one shard's artifact the way `fig6::sweep_shard` does, but on
+/// a caller-supplied coordinator (so the matrix of shard counts can
+/// reuse one instance without rebuilding the cycle model every time).
+fn shard_artifact(
+    c: &Coordinator,
+    configs: &[Config],
+    spec: ShardSpec,
+    seed: u64,
+    eval_n: usize,
+) -> ShardArtifact {
+    let points = c.sweep_sharded(configs, eval_n, &spec).unwrap();
+    ShardArtifact {
+        model: c.model.spec.name.to_string(),
+        evaluator: c.evaluator_name().to_string(),
+        spec,
+        total_configs: configs.len(),
+        seed,
+        eval_n,
+        float_acc: c.model.float_acc,
+        baseline_instrs: 1234, // sweep identity only; constant across shards
+        points,
+        stats: SessionSnapshot::default(),
+    }
+}
+
+fn assert_points_bit_identical(a: &[EvalPoint], b: &[EvalPoint], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: point count");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        if let Some((field, va, vb)) = point_divergence(pa, pb) {
+            panic!("{ctx}: point {i} differs on `{field}`: {va} vs {vb}");
+        }
+    }
+}
+
+// ----------------------------------------------------- (a) partitions ---
+
+#[test]
+fn partitions_are_disjoint_and_cover_random_spaces() {
+    let mut rng = Rng::new(0x5AAD);
+    for round in 0..12 {
+        // Random config space: either a real enumeration or raw random
+        // configs (the partitioner must not rely on enumeration shape).
+        let configs: Vec<Config> = if round % 2 == 0 {
+            let layers = 2 + rng.below(6) as usize;
+            let budget = 1 + rng.below(60) as usize;
+            enumerate(layers, &default_pinned(), budget, rng.next_u64())
+        } else {
+            let layers = 1 + rng.below(8) as usize;
+            (0..1 + rng.below(80))
+                .map(|_| (0..layers).map(|_| [2u32, 4, 8][rng.below(3) as usize]).collect())
+                .collect()
+        };
+        for strategy in [ShardStrategy::Hash, ShardStrategy::Range] {
+            for count in 1..=8usize {
+                let mut owners = vec![0u32; configs.len()];
+                for index in 0..count {
+                    let spec = ShardSpec::new(index, count, strategy).unwrap();
+                    let members = spec.member_indices(&configs);
+                    // Deterministic: same spec, same space, same answer.
+                    assert_eq!(members, spec.member_indices(&configs));
+                    // Members come back in enumeration order.
+                    assert!(members.windows(2).all(|w| w[0] < w[1]));
+                    for i in members {
+                        owners[i] += 1;
+                    }
+                }
+                assert!(
+                    owners.iter().all(|&c| c == 1),
+                    "round {round} {strategy:?} x{count}: every config must have exactly \
+                     one owner, got {owners:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hash_assignment_is_stable_across_shard_counts() {
+    // A config's hash — hence its residue class — never depends on the
+    // shard count or its position, so growing the fleet re-partitions
+    // without reshuffling identities.
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let cfg: Config = (0..1 + rng.below(10)).map(|_| [2u32, 4, 8][rng.below(3) as usize]).collect();
+        let h = config_hash(&cfg);
+        assert_eq!(h, config_hash(&cfg.clone()));
+        for count in 1..=8usize {
+            let owner: Vec<usize> = (0..count)
+                .filter(|&i| {
+                    ShardSpec::new(i, count, ShardStrategy::Hash).unwrap().owns(0, &cfg, 1)
+                })
+                .collect();
+            assert_eq!(owner, vec![h as usize % count]);
+        }
+    }
+}
+
+// ------------------------------------------- (b) bit-identical merges ---
+
+#[test]
+fn merged_shard_sweeps_equal_single_sweep_bit_for_bit() {
+    let seed = 11;
+    let eval_n = 16;
+    // Reference: one full sweep on its own coordinator instance.
+    let single = host_coordinator(seed);
+    let n = single.analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), 27, seed);
+    let single_points = single.run_sweep(&configs, eval_n).unwrap();
+    let single_front = pareto_front(&single_points, |p| p.mac_instructions);
+
+    // Shard side: a *different* coordinator instance stands in for the
+    // remote processes (its evaluation cache makes the matrix cheap;
+    // determinism across instances is exactly the property under test).
+    let remote = host_coordinator(seed);
+    for strategy in [ShardStrategy::Hash, ShardStrategy::Range] {
+        for count in SHARD_COUNTS {
+            let arts: Vec<ShardArtifact> = (0..count)
+                .map(|i| {
+                    let spec = ShardSpec::new(i, count, strategy).unwrap();
+                    let art = shard_artifact(&remote, &configs, spec, seed, eval_n);
+                    // Every artifact crosses a process boundary in
+                    // production: round-trip it through its JSON schema.
+                    ShardArtifact::from_str(&art.to_json().to_string()).unwrap()
+                })
+                .collect();
+            let ctx = format!("{strategy:?} x{count}");
+            // No shard evaluated more than its slice.
+            let evaluated: usize = arts.iter().map(|a| a.points.len()).sum();
+            assert_eq!(evaluated, configs.len(), "{ctx}: partition sizes");
+
+            let m = merge(&arts).unwrap();
+            assert_points_bit_identical(&m.points, &single_points, &ctx);
+            assert_eq!(m.front, single_front, "{ctx}: Pareto indices");
+            assert_eq!(m.shards, count, "{ctx}");
+            assert_eq!(m.duplicate_points, 0, "{ctx}");
+            assert_eq!(m.float_acc.to_bits(), single.model.float_acc.to_bits(), "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn merged_stats_are_the_sum_of_shard_stats() {
+    // Synthetic per-shard stats: the merger must add them elementwise
+    // (and only once per distinct artifact — see the duplicate test).
+    let single = host_coordinator(13);
+    let n = single.analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), 27, 13);
+    let mut arts: Vec<ShardArtifact> = (0..3)
+        .map(|i| {
+            let spec = ShardSpec::new(i, 3, ShardStrategy::Range).unwrap();
+            shard_artifact(&single, &configs, spec, 13, 8)
+        })
+        .collect();
+    let mut expected = SessionSnapshot::default();
+    for (i, a) in arts.iter_mut().enumerate() {
+        a.stats.mem_reuses = 10 * (i as u64 + 1);
+        a.stats.mem_allocs = i as u64;
+        a.stats.runs = 100 + i as u64;
+        a.stats.engine.requant = 7 * i as u64;
+        a.stats.engine.counted_iters = 1000 * i as u64;
+        expected.add(&a.stats);
+    }
+    let m = merge(&arts).unwrap();
+    assert_eq!(m.stats, expected);
+}
+
+#[test]
+fn iss_evaluated_points_survive_sharding_with_cycles_and_divergence() {
+    // The ISS backend populates `iss_cycles`/`divergence`; both must
+    // survive the artifact round-trip and merge bit-for-bit.
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", 9).unwrap();
+    let test = model.test.clone();
+    let c = Coordinator::new(model, Box::new(IssEval::new(test, 2)), 2).unwrap();
+    let n = c.analysis.layers.len();
+    let configs: Vec<Config> = vec![vec![8; n], vec![4; n], vec![2; n]];
+    let single = c.run_sweep(&configs, 3).unwrap();
+    assert!(single.iter().all(|p| p.iss_cycles.is_some() && p.divergence.is_some()));
+
+    let arts: Vec<ShardArtifact> = (0..2)
+        .map(|i| {
+            let spec = ShardSpec::new(i, 2, ShardStrategy::Hash).unwrap();
+            let art = shard_artifact(&c, &configs, spec, 9, 3);
+            ShardArtifact::from_str(&art.to_json().to_string()).unwrap()
+        })
+        .collect();
+    let m = merge(&arts).unwrap();
+    assert_points_bit_identical(&m.points, &single, "iss 2-shard");
+}
+
+#[test]
+fn production_shard_runner_matches_sweep_model() {
+    // The fig6 entry points end to end: `sweep_shard` per shard (fresh
+    // coordinator each, as separate processes would) and
+    // `sweep_from_artifacts` to recombine — against `sweep_model`.
+    let opts = ExpOpts {
+        artifacts: "/nonexistent".into(),
+        eval_n: 8,
+        budget: 27,
+        backend: EvalBackend::Host,
+        seed: 17,
+        ..ExpOpts::default()
+    };
+    let direct = mpnn::exp::fig6::sweep_model(&opts, "lenet5").unwrap();
+    let arts: Vec<ShardArtifact> = (0..2)
+        .map(|i| {
+            let spec = ShardSpec::new(i, 2, ShardStrategy::Hash).unwrap();
+            mpnn::exp::fig6::sweep_shard(&opts, "lenet5", &spec).unwrap()
+        })
+        .collect();
+    let merged = mpnn::exp::fig6::sweep_from_artifacts(&opts, &arts).unwrap();
+    assert_points_bit_identical(&merged.points, &direct.points, "fig6 path");
+    assert_eq!(merged.front, direct.front);
+    assert_eq!(merged.evaluator, direct.evaluator);
+    assert_eq!(merged.float_acc.to_bits(), direct.float_acc.to_bits());
+    assert_eq!(merged.baseline_instrs, direct.baseline_instrs);
+
+    // Mistagged artifact: swap two points' global indices. Coverage
+    // and conflict checks can't see it (indices stay distinct and in
+    // range), so the enumeration cross-check must refuse the merge.
+    let mut tampered = arts.clone();
+    {
+        let pts = &mut tampered[0].points;
+        assert!(pts.len() >= 2, "shard 0 needs two points to swap");
+        let tmp = pts[0].0;
+        pts[0].0 = pts[1].0;
+        pts[1].0 = tmp;
+    }
+    let err = mpnn::exp::fig6::sweep_from_artifacts(&opts, &tampered).unwrap_err();
+    assert!(format!("{err}").contains("mistagged"), "{err}");
+
+    // Wrong --budget at merge time: refused with guidance, not merged
+    // against a different enumeration.
+    let wrong_budget = ExpOpts { budget: 9, ..opts.clone() };
+    let err = mpnn::exp::fig6::sweep_from_artifacts(&wrong_budget, &arts).unwrap_err();
+    assert!(format!("{err}").contains("--budget"), "{err}");
+}
+
+// ------------------------------- (c) order/duplicate insensitivity ---
+
+#[test]
+fn merge_is_order_and_duplicate_insensitive() {
+    let c = host_coordinator(19);
+    let n = c.analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), 27, 19);
+    let arts: Vec<ShardArtifact> = (0..5)
+        .map(|i| {
+            let spec = ShardSpec::new(i, 5, ShardStrategy::Hash).unwrap();
+            shard_artifact(&c, &configs, spec, 19, 8)
+        })
+        .collect();
+    let canonical = merge(&arts).unwrap();
+
+    let mut rng = Rng::new(23);
+    for round in 0..6 {
+        let mut jumbled = arts.clone();
+        rng.shuffle(&mut jumbled);
+        // Duplicate a random prefix (same files merged twice).
+        let dup = 1 + rng.below(arts.len() as u64 - 1) as usize;
+        let extra: Vec<ShardArtifact> = jumbled[..dup].to_vec();
+        jumbled.extend(extra);
+        let m = merge(&jumbled).unwrap();
+        assert_points_bit_identical(&m.points, &canonical.points, &format!("round {round}"));
+        assert_eq!(m.front, canonical.front, "round {round}");
+        assert_eq!(m.stats, canonical.stats, "round {round}: duplicate stats must collapse");
+        assert_eq!(m.shards, canonical.shards, "round {round}");
+    }
+
+    // Overlapping strategies: hash shards + the full 1-way sweep cover
+    // every config twice with identical values — merge dedups, flags
+    // the duplicates and still matches.
+    let mut overlapping = arts.clone();
+    overlapping.push(shard_artifact(&c, &configs, ShardSpec::whole(), 19, 8));
+    let m = merge(&overlapping).unwrap();
+    assert_points_bit_identical(&m.points, &canonical.points, "overlapping strategies");
+    assert_eq!(m.duplicate_points, configs.len());
+}
+
+// ----------------------------------------------- (d) typed failures ---
+
+#[test]
+fn corrupted_and_mismatched_artifacts_fail_typed_not_panic() {
+    let c = host_coordinator(29);
+    let n = c.analysis.layers.len();
+    let configs = enumerate(n, &default_pinned(), 9, 29);
+    let spec = ShardSpec::whole();
+    let art = shard_artifact(&c, &configs, spec, 29, 4);
+    let text = art.to_json().to_string();
+
+    // Version bump.
+    let bumped = text.replace("\"schema_version\":1", "\"schema_version\":2");
+    match ShardArtifact::from_str(&bumped) {
+        Err(ShardError::SchemaVersion { found: 2, expected: 1 }) => {}
+        other => panic!("expected SchemaVersion, got {other:?}"),
+    }
+
+    // Truncations at many offsets: typed parse/schema errors only.
+    for cut in [1, text.len() / 4, text.len() / 2, text.len() - 2] {
+        match ShardArtifact::from_str(&text[..cut]) {
+            Err(ShardError::Parse(_)) | Err(ShardError::Schema(_)) => {}
+            other => panic!("truncate@{cut}: expected typed error, got {other:?}"),
+        }
+    }
+
+    // Field-level corruption.
+    let negative = text.replace("\"eval_n\":4", "\"eval_n\":-4");
+    match ShardArtifact::from_str(&negative) {
+        Err(ShardError::Schema(e)) => assert_eq!(e.field, "eval_n"),
+        other => panic!("expected Schema(eval_n), got {other:?}"),
+    }
+    let bad_strategy = text.replace("\"strategy\":\"hash\"", "\"strategy\":\"roulette\"");
+    match ShardArtifact::from_str(&bad_strategy) {
+        Err(ShardError::Schema(e)) => assert_eq!(e.field, "strategy"),
+        other => panic!("expected Schema(strategy), got {other:?}"),
+    }
+
+    // File-level: a corrupted file loads as Err (never a panic) and the
+    // message keeps the path context.
+    let dir = std::env::temp_dir().join(format!("mpnn_shard_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corrupt.json");
+    std::fs::write(&path, &text[..text.len() / 3]).unwrap();
+    let err = ShardArtifact::load(&path).unwrap_err();
+    assert!(format!("{err:?}").contains("corrupt.json"), "{err:?}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Conflicting shards: same config, different accuracy.
+    let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+    let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+    let a0 = shard_artifact(&c, &configs, s0, 29, 4);
+    let mut a1 = shard_artifact(&c, &configs, s1, 29, 4);
+    let mut evil = a0.clone();
+    evil.spec = ShardSpec::new(0, 2, ShardStrategy::Hash).unwrap();
+    evil.points[0].1.accuracy += 0.125;
+    match merge(&[a0.clone(), a1.clone(), evil]) {
+        Err(ShardError::Conflict { field: "accuracy", .. }) => {}
+        other => panic!("expected Conflict, got {other:?}"),
+    }
+
+    // Incompatible sweep identity.
+    a1.seed = 31;
+    match merge(&[a0.clone(), a1]) {
+        Err(ShardError::Incompatible { field: "seed", .. }) => {}
+        other => panic!("expected Incompatible(seed), got {other:?}"),
+    }
+
+    // Coverage gap (one shard of two) names the first missing config.
+    match merge(&[a0]) {
+        Err(ShardError::Coverage { first_missing: Some(_), .. }) => {}
+        other => panic!("expected Coverage, got {other:?}"),
+    }
+
+    // Empty input.
+    assert!(matches!(merge(&[]), Err(ShardError::Empty)));
+}
