@@ -176,6 +176,43 @@ fn main() {
     report.summary("hits_counted_iters", hits.counted_iters as f64);
     report.summary("engine_fallbacks", hits.fallbacks as f64);
 
+    // ---- Part 3: execution-plan cache on a 2-input batch ---------------
+    // Deterministic, not a timing assertion: a configuration must lower
+    // into its ExecutionPlan exactly once and the batch must replay it
+    // (>= 1 cache hit) — the compile-once / run-many contract of
+    // models::plan::plan_for.
+    {
+        use mpnn::models::infer::{quantize_input, quantize_model};
+        use mpnn::models::sim_exec::{modes_for, run_model_batch};
+        use std::sync::atomic::Ordering;
+
+        let stats = &session.stats;
+        let compiles0 = stats.plan_compiles.load(Ordering::Relaxed);
+        let hits0 = stats.plan_hits.load(Ordering::Relaxed);
+
+        let model = opts.load_model("lenet5").unwrap();
+        let n = mpnn::models::analyze(&model.spec).layers.len();
+        let qm = quantize_model(&model.spec, &model.params, &model.sites, &vec![4u32; n]);
+        let inputs: Vec<_> =
+            model.test.images[..2].iter().map(|im| quantize_input(&qm, im)).collect();
+        // Two 2-input batches of the same configuration: the first
+        // lowers the plan (one compile), the second resolves it from
+        // the cache (a hit) — across both, exactly one plan exists.
+        for round in 0..2 {
+            let runs =
+                run_model_batch(&qm, &inputs, &modes_for(&qm), MacUnitConfig::full(), 2).unwrap();
+            assert_eq!(runs.len(), 2, "round {round}");
+        }
+
+        let compiles = stats.plan_compiles.load(Ordering::Relaxed) - compiles0;
+        let hits = stats.plan_hits.load(Ordering::Relaxed) - hits0;
+        println!("plan cache across two 2-input run_model_batch calls: {compiles} compiled, {hits} hits");
+        assert_eq!(compiles, 1, "one configuration must compile exactly one plan");
+        assert!(hits >= 1, "a repeated batch must replay the compiled plan (hits {hits})");
+        report.summary("plan_compiles_2input_batch", compiles as f64);
+        report.summary("plan_hits_2input_batch", hits as f64);
+    }
+
     println!(
         "iss_throughput: worst engine-vs-legacy {mode_worst:.2}x (target >= 2x), \
          worst fusion-generation {fusion_worst:.2}x (target >= 1.5x)"

@@ -42,7 +42,8 @@ use crate::ensure;
 use crate::error::{Error, Result};
 use crate::models::format::LoadedModel;
 use crate::models::infer::{argmax_i32, qforward, quantize_input, QModel};
-use crate::models::sim_exec::{modes_for, run_model_batch};
+use crate::models::plan::{host_logits, plan_for};
+use crate::models::sim_exec::{baseline_modes, modes_for, run_plan_batch};
 use crate::models::synthetic::Dataset;
 use crate::nn::tensor::Tensor;
 use crate::sim::MacUnitConfig;
@@ -100,9 +101,18 @@ impl AccuracyEval for HostEval {
     fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport> {
         let n = n.min(self.test.images.len());
         ensure!(n > 0, "HostEval: empty evaluation set");
+        // Lower once per evaluation and replay the plan per image —
+        // going through `qpredict`/`qforward` would re-derive the plan
+        // cache key (an O(model size) content fingerprint) per input.
+        // Baseline modes: host logits are mode-independent, and the
+        // baseline lowering stages weights as zero-copy Arc clones
+        // instead of packing nn_mac word streams this evaluator would
+        // never read.
+        let plan = plan_for(qm, &baseline_modes(qm))?;
         let mut correct = 0usize;
         for (img, &label) in self.test.images.iter().zip(&self.test.labels).take(n) {
-            if crate::models::infer::qpredict(qm, img) == label {
+            let qi = quantize_input(qm, img);
+            if argmax_i32(&host_logits(&plan, &qi)) == label {
                 correct += 1;
             }
         }
@@ -113,9 +123,12 @@ impl AccuracyEval for HostEval {
     }
 }
 
-/// ISS-backed evaluator: scores a [`QModel`] by running labelled input
-/// batches through
-/// [`run_model_batch`](crate::models::sim_exec::run_model_batch) —
+/// ISS-backed evaluator: scores **execution plans, not specs** — each
+/// configuration lowers once (via the keyed plan cache,
+/// [`plan_for`](crate::models::plan::plan_for)) into an
+/// [`ExecutionPlan`](crate::models::plan::ExecutionPlan) whose staged
+/// kernels then run for every labelled input through
+/// [`run_plan_batch`](crate::models::sim_exec::run_plan_batch) —
 /// whole-model execution of the generated RV32 kernels on the micro-op
 /// engine. Kernel images come from the keyed kernel cache and simulator
 /// memories from the pooled global
@@ -187,8 +200,14 @@ impl AccuracyEval for IssEval {
         ensure!(n > 0, "IssEval: empty evaluation set");
         let inputs: Vec<Tensor<i8>> =
             self.test.images[..n].iter().map(|im| quantize_input(qm, im)).collect();
+        // The configuration lowers once into an ExecutionPlan; the ISS
+        // batch and the host differential check both interpret *that*
+        // plan, so the two paths agree structurally by construction —
+        // any residual divergence is arithmetic, which is exactly what
+        // the metric exists to catch.
         let modes = modes_for(qm);
-        let runs = run_model_batch(qm, &inputs, &modes, self.mac, self.workers)?;
+        let plan = plan_for(qm, &modes)?;
+        let runs = run_plan_batch(&plan, &inputs, self.mac, self.workers)?;
         let mut correct = 0usize;
         let mut disagree = 0usize;
         let mut cycles = 0u64;
@@ -199,8 +218,11 @@ impl AccuracyEval for IssEval {
                 correct += 1;
             }
             if self.differential {
-                let href = self.reference.as_ref().unwrap_or(qm);
-                if argmax_i32(&qforward(href, input)) != pred {
+                let host = match self.reference.as_ref() {
+                    None => host_logits(&plan, input),
+                    Some(href) => qforward(href, input),
+                };
+                if argmax_i32(&host) != pred {
                     disagree += 1;
                 }
             }

@@ -117,16 +117,86 @@ fn point_json(p: &EvalPoint) -> Json {
 /// cycle-model build, so it covers the sweep itself; concurrent
 /// unrelated simulation in the same process would fold in too.)
 pub fn sweep_shard(opts: &ExpOpts, name: &str, shard: &ShardSpec) -> Result<ShardArtifact> {
+    sweep_shard_resume(opts, name, shard, None, None)
+}
+
+/// Evaluated configs between checkpoint writes of a resumable shard
+/// run (see [`sweep_shard_resume`]): small enough that a killed run
+/// loses little work, large enough that artifact rewrites stay noise.
+pub const SHARD_CHECKPOINT_EVERY: usize = 8;
+
+/// [`sweep_shard`] resuming from a previously written artifact of the
+/// **same** shard run: configs whose global enumeration indices are
+/// already present in `prior` are skipped, only the missing points are
+/// evaluated, and the returned artifact carries the union (points
+/// restored to enumeration order, stats = prior stats + this run's
+/// delta). A prior artifact from a *different* sweep — other seed,
+/// budget, evaluator, shard spec or model state — is refused with an
+/// error rather than silently mixed; delete the stale file (or point
+/// `--shard-out` elsewhere) to start over.
+///
+/// `checkpoint`, when given, makes the run **incrementally durable**:
+/// the missing configs are evaluated in chunks of
+/// [`SHARD_CHECKPOINT_EVERY`] and the artifact is rewritten after each
+/// chunk, so a killed run leaves a cleanly-parsing partial artifact
+/// the next invocation resumes from — this is what turns the resume
+/// reader into actual crash recovery rather than a no-op rewriter of
+/// complete artifacts. The evaluated **points** of the final file are
+/// byte-identical to an uninterrupted run's (order-restored,
+/// deterministic evaluation), so merged figures come out bit-exact;
+/// the `stats` block records the *actual* session activity and may
+/// legitimately differ across a process restart (a resumed process
+/// starts with a cold memory pool, recording allocs where a warm one
+/// recorded reuses).
+pub fn sweep_shard_resume(
+    opts: &ExpOpts,
+    name: &str,
+    shard: &ShardSpec,
+    prior: Option<&ShardArtifact>,
+    checkpoint: Option<&Path>,
+) -> Result<ShardArtifact> {
     let coordinator = opts.coordinator(name)?;
     let analysis = crate::models::analyze(&coordinator.model.spec);
     let n = analysis.layers.len();
     let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
-    let before = crate::sim::SimSession::global().stats.snapshot();
-    let points = coordinator.sweep_sharded(&configs, opts.eval_n, shard)?;
-    let stats = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
-    let baseline_instrs =
+    let baseline_instrs: u64 =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
-    Ok(ShardArtifact {
+
+    let mut done: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    if let Some(p) = prior {
+        // The artifact must describe exactly this shard of exactly this
+        // sweep, or resuming would splice two different runs together.
+        crate::ensure!(
+            p.model == name
+                && p.spec == *shard
+                && p.total_configs == configs.len()
+                && p.seed == opts.seed
+                && p.eval_n == opts.eval_n
+                && p.evaluator == coordinator.evaluator_name()
+                && p.baseline_instrs == baseline_instrs
+                && p.float_acc.to_bits() == coordinator.model.float_acc.to_bits(),
+            "existing shard artifact for `{name}` was produced by a different sweep \
+             (model/shard/seed/budget/eval/evaluator mismatch); delete it or change --shard-out \
+             to start a fresh shard run"
+        );
+        for (i, pt) in &p.points {
+            crate::ensure!(
+                configs.get(*i).is_some_and(|c| *c == pt.config),
+                "existing shard artifact for `{name}` is mistagged at config #{i}; \
+                 delete it to re-evaluate the shard"
+            );
+            done.insert(*i);
+        }
+    }
+
+    let owned = shard.member_indices(&configs);
+    let missing: Vec<usize> = owned.iter().copied().filter(|i| !done.contains(i)).collect();
+
+    let mut points: Vec<(usize, crate::dse::EvalPoint)> =
+        prior.map(|p| p.points.clone()).unwrap_or_default();
+    let mut stats = prior.map(|p| p.stats).unwrap_or_default();
+    let mk_art = |points: Vec<(usize, crate::dse::EvalPoint)>,
+                  stats: crate::sim::session::SessionSnapshot| ShardArtifact {
         model: name.to_string(),
         evaluator: coordinator.evaluator_name().to_string(),
         spec: *shard,
@@ -137,7 +207,22 @@ pub fn sweep_shard(opts: &ExpOpts, name: &str, shard: &ShardSpec) -> Result<Shar
         baseline_instrs,
         points,
         stats,
-    })
+    };
+
+    for chunk in missing.chunks(SHARD_CHECKPOINT_EVERY) {
+        let mine: Vec<crate::dse::Config> = chunk.iter().map(|&i| configs[i].clone()).collect();
+        let before = crate::sim::SimSession::global().stats.snapshot();
+        let new_points = coordinator.run_sweep(&mine, opts.eval_n)?;
+        let delta = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
+        stats.add(&delta);
+        points.extend(chunk.iter().copied().zip(new_points));
+        points.sort_by_key(|(i, _)| *i);
+        if let Some(path) = checkpoint {
+            mk_art(points.clone(), stats).save(path)?;
+        }
+    }
+
+    Ok(mk_art(points, stats))
 }
 
 /// Canonical artifact filename for one model's shard:
@@ -223,13 +308,14 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
     })
 }
 
-/// Load `opts.merge` shard-artifact files and rebuild one [`Sweep`]
-/// per model, in paper model order (shared by `fig6 --merge` and
-/// `fig8 --merge`).
+/// Load the merge inputs (`--merge` files plus the `--merge-dir`
+/// glob) and rebuild one [`Sweep`] per model, in paper model order
+/// (shared by `fig6 --merge` and `fig8 --merge`).
 pub fn sweeps_from_merge(opts: &ExpOpts) -> Result<Vec<Sweep>> {
-    crate::ensure!(!opts.merge.is_empty(), "--merge needs at least one shard artifact");
+    let files = opts.merge_inputs()?;
+    crate::ensure!(!files.is_empty(), "--merge/--merge-dir needs at least one shard artifact");
     let mut groups: Vec<(String, Vec<ShardArtifact>)> = Vec::new();
-    for path in &opts.merge {
+    for path in &files {
         let art = ShardArtifact::load(path)?;
         match groups.iter_mut().find(|(m, _)| *m == art.model) {
             Some((_, g)) => g.push(art),
@@ -248,10 +334,11 @@ pub fn sweeps_from_merge(opts: &ExpOpts) -> Result<Vec<Sweep>> {
 /// given, write one shard's artifact(s) when `--shard` is given,
 /// full sweep over the selected models otherwise.
 pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
-    if !opts.merge.is_empty() {
+    if opts.wants_merge() {
         crate::ensure!(
             opts.shard.is_none(),
-            "--shard and --merge are mutually exclusive (run shards first, then merge)"
+            "--shard and --merge/--merge-dir are mutually exclusive \
+             (run shards first, then merge)"
         );
         return finish(sweeps_from_merge(opts)?);
     }
@@ -259,17 +346,42 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
         let dir = opts.shard_dir();
         let mut arr = Vec::new();
         for name in opts.model_names()? {
-            eprintln!(
-                "[fig6] sweeping shard {shard} of {name} ({} configs total, {} eval images)",
-                opts.budget, opts.eval_n
-            );
-            let art = sweep_shard(opts, name, &shard)?;
             let path = shard_artifact_path(&dir, name, &shard);
+            // Resumable shards: a cleanly-parsing artifact at the
+            // target path contributes its already-evaluated points; a
+            // corrupt/truncated file (killed run) is re-swept whole.
+            let prior = if path.exists() {
+                match ShardArtifact::load(&path) {
+                    Ok(a) => Some(a),
+                    Err(e) => {
+                        eprintln!(
+                            "[fig6] ignoring unreadable shard artifact {} ({e}); re-sweeping",
+                            path.display()
+                        );
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let resumed_from = prior.as_ref().map_or(0, |p| p.points.len());
+            eprintln!(
+                "[fig6] sweeping shard {shard} of {name} ({} configs total, {} eval images{})",
+                opts.budget,
+                opts.eval_n,
+                if resumed_from > 0 {
+                    format!(", resuming past {resumed_from} done")
+                } else {
+                    String::new()
+                }
+            );
+            let art = sweep_shard_resume(opts, name, &shard, prior.as_ref(), Some(&path))?;
             art.save(&path)?;
             println!(
-                "Fig. 6 — {name}: shard {shard} evaluated {}/{} configs -> {}",
+                "Fig. 6 — {name}: shard {shard} evaluated {}/{} configs ({} resumed) -> {}",
                 art.points.len(),
                 art.total_configs,
+                resumed_from,
                 path.display()
             );
             arr.push(Json::obj(vec![
@@ -279,16 +391,29 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<Sweep>, Json)> {
                 ("shard_index", Json::i(shard.index as i64)),
                 ("shard_count", Json::i(shard.count as i64)),
                 ("points", Json::i(art.points.len() as i64)),
+                ("resumed_points", Json::i(resumed_from as i64)),
                 ("total_configs", Json::i(art.total_configs as i64)),
             ]));
         }
         return Ok((Vec::new(), Json::Arr(arr)));
     }
+    let st = &crate::sim::SimSession::global().stats;
+    let compiles0 = st.plan_compiles.load(std::sync::atomic::Ordering::Relaxed);
+    let hits0 = st.plan_hits.load(std::sync::atomic::Ordering::Relaxed);
     let mut sweeps = Vec::new();
     for name in opts.model_names()? {
         eprintln!("[fig6] sweeping {name} ({} configs, {} eval images)", opts.budget, opts.eval_n);
         sweeps.push(sweep_model(opts, name)?);
     }
+    // Plan-cache observability, as a delta over this sweep so earlier
+    // commands in the same process (`all` runs fig4/fig7 first) don't
+    // inflate it: every configuration lowers exactly once (assertable
+    // — see SessionStats::plan_compiles and tests/plan_cache_stats.rs).
+    eprintln!(
+        "[fig6] plan cache: {} compiled, {} hits",
+        st.plan_compiles.load(std::sync::atomic::Ordering::Relaxed) - compiles0,
+        st.plan_hits.load(std::sync::atomic::Ordering::Relaxed) - hits0,
+    );
     finish(sweeps)
 }
 

@@ -107,7 +107,7 @@ pub fn run(opts: &ExpOpts) -> Result<(Vec<ModelSelections>, Json)> {
          then `fig8 --merge <artifacts…>`"
     );
     let mut out = Vec::new();
-    if opts.merge.is_empty() {
+    if !opts.wants_merge() {
         for name in opts.model_names()? {
             eprintln!("[fig8] {name}");
             let sweep = sweep_model(opts, name)?;

@@ -96,9 +96,16 @@ pub struct ExpOpts {
     /// Shard artifacts to merge (`--merge <file>`, repeatable): the
     /// sweep harnesses recombine these instead of re-evaluating.
     pub merge: Vec<PathBuf>,
+    /// Directory whose `*.s<i>of<n>.json` shard artifacts are all
+    /// merged (`--merge-dir`, the convenience form of repeating
+    /// `--merge`; combinable with explicit `--merge` files).
+    pub merge_dir: Option<PathBuf>,
     /// Restrict the sweep harnesses to these models (`--models a,b`);
     /// `None` = all of [`MODEL_NAMES`].
     pub models: Option<Vec<String>>,
+    /// JSONL output path for the `trace` command's per-step plan trace
+    /// (`--trace-steps`).
+    pub trace_steps: Option<PathBuf>,
 }
 
 impl Default for ExpOpts {
@@ -113,9 +120,25 @@ impl Default for ExpOpts {
             shard: None,
             shard_out: None,
             merge: Vec::new(),
+            merge_dir: None,
             models: None,
+            trace_steps: None,
         }
     }
+}
+
+/// Does `name` look like a shard-artifact filename,
+/// `<stem>.s<i>of<n>.json` (the shape [`crate::exp::fig6::shard_artifact_path`]
+/// writes)? The `--merge-dir` glob admits exactly these.
+pub fn is_shard_artifact_name(name: &str) -> bool {
+    let Some(stem) = name.strip_suffix(".json") else { return false };
+    let Some(pos) = stem.rfind(".s") else { return false };
+    let tail = &stem[pos + 2..];
+    let Some((i, n)) = tail.split_once("of") else { return false };
+    !i.is_empty()
+        && !n.is_empty()
+        && i.bytes().all(|b| b.is_ascii_digit())
+        && n.bytes().all(|b| b.is_ascii_digit())
 }
 
 impl ExpOpts {
@@ -195,6 +218,41 @@ impl ExpOpts {
     /// Directory shard artifacts are written into.
     pub fn shard_dir(&self) -> PathBuf {
         self.shard_out.clone().unwrap_or_else(|| Path::new("results").join("shards"))
+    }
+
+    /// Was any merge input given (`--merge` and/or `--merge-dir`)?
+    pub fn wants_merge(&self) -> bool {
+        !self.merge.is_empty() || self.merge_dir.is_some()
+    }
+
+    /// Every shard artifact to merge: the explicit `--merge` files plus
+    /// the `--merge-dir` directory's `*.s<i>of<n>.json` files (sorted
+    /// by path for determinism; the merge itself is order-insensitive).
+    /// An empty `--merge-dir` is an error — silently merging nothing
+    /// would mask a typo'd directory.
+    pub fn merge_inputs(&self) -> Result<Vec<PathBuf>> {
+        use crate::error::Context;
+        let mut files = self.merge.clone();
+        if let Some(dir) = &self.merge_dir {
+            let mut found: Vec<PathBuf> = std::fs::read_dir(dir)
+                .with_context(|| format!("reading --merge-dir {}", dir.display()))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(is_shard_artifact_name)
+                })
+                .collect();
+            found.sort();
+            crate::ensure!(
+                !found.is_empty(),
+                "--merge-dir {}: no `*.s<i>of<n>.json` shard artifacts found",
+                dir.display()
+            );
+            files.extend(found);
+        }
+        Ok(files)
     }
 }
 

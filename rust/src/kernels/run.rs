@@ -28,11 +28,56 @@ use super::KernelProgram;
 use crate::ensure;
 use crate::error::Result;
 use crate::isa::MacMode;
-use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
+use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise, words_per_group};
 use crate::sim::session::{CompiledImage, SimSession};
 use crate::sim::{Core, CoreConfig, ExitReason, MacUnitConfig, PerfCounters, Timing};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// A weight operand already in the form the kernel consumes from
+/// simulator memory: raw int8 for baseline kernels, packed `nn_mac`
+/// words for mode kernels. The `run_*_staged` entry points take this
+/// directly so callers that pre-stage weights — the execution-plan
+/// compiler ([`crate::models::plan`]) packs every kernel's stream once
+/// per configuration — skip the per-invocation packing the plain
+/// `run_*` wrappers perform.
+#[derive(Debug, Clone, Copy)]
+pub enum StagedWeights<'a> {
+    /// Raw int8 weight stream (baseline kernels).
+    Bytes(&'a [i8]),
+    /// Packed weight words (mode kernels).
+    Words(&'a [u32]),
+}
+
+impl StagedWeights<'_> {
+    /// Write the operand into kernel memory at `addr`.
+    fn write(&self, core: &mut Core, addr: u32) {
+        match self {
+            StagedWeights::Bytes(b) => core.mem.write_i8(addr, b),
+            StagedWeights::Words(w) => core.mem.write_words(addr, w),
+        }
+    }
+
+    /// Validate the staged form matches `mode` and carries exactly
+    /// `bytes` raw weights / `words` packed words.
+    fn check(&self, what: &str, mode: Option<MacMode>, bytes: usize, words: usize) -> Result<()> {
+        match (self, mode) {
+            (StagedWeights::Bytes(b), None) => {
+                ensure!(b.len() == bytes, "{what}: staged {} weight bytes, need {bytes}", b.len());
+            }
+            (StagedWeights::Words(w), Some(_)) => {
+                ensure!(w.len() == words, "{what}: staged {} weight words, need {words}", w.len());
+            }
+            (StagedWeights::Bytes(_), Some(m)) => {
+                crate::bail!("{what}: mode {m:?} kernel needs packed words, got raw bytes")
+            }
+            (StagedWeights::Words(_), None) => {
+                crate::bail!("{what}: baseline kernel needs raw bytes, got packed words")
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Which interpreter executes the kernel (see `sim::engine`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -182,13 +227,37 @@ pub fn run_dense_backend(
     w: &[i8],
     bias: &[i32],
 ) -> Result<(Vec<i8>, Vec<i32>, PerfCounters)> {
+    ensure!(w.len() == spec.in_dim * spec.out_dim, "dense: weight count mismatch");
+    match mode {
+        None => {
+            run_dense_staged(spec, mode, mac, backend, acts, StagedWeights::Bytes(w), bias)
+        }
+        Some(m) => {
+            let words = pack_dense(m, w, spec.out_dim, spec.in_dim);
+            run_dense_staged(spec, mode, mac, backend, acts, StagedWeights::Words(&words), bias)
+        }
+    }
+}
+
+/// [`run_dense_backend`] with the weights already in staged form (the
+/// execution-plan fast path: no per-invocation packing).
+pub fn run_dense_staged(
+    spec: DenseSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: StagedWeights<'_>,
+    bias: &[i32],
+) -> Result<(Vec<i8>, Vec<i32>, PerfCounters)> {
     ensure!(
         acts.len() == spec.in_dim,
         "dense: {} activations for in_dim {}",
         acts.len(),
         spec.in_dim
     );
-    ensure!(w.len() == spec.in_dim * spec.out_dim, "dense: weight count mismatch");
+    let words = mode.map_or(0, |m| spec.out_dim * words_per_group(m, spec.in_dim));
+    w.check("dense", mode, spec.in_dim * spec.out_dim, words)?;
     ensure!(bias.len() == spec.out_dim, "dense: bias count mismatch");
     let key = KernelKey::Dense {
         in_dim: spec.in_dim,
@@ -210,12 +279,7 @@ pub fn run_dense_backend(
         backend,
         |core| {
             core.mem.write_i8(kp.act_addr, acts);
-            match mode {
-                None => core.mem.write_i8(kp.w_addr, w),
-                Some(m) => core
-                    .mem
-                    .write_words(kp.w_addr, &pack_dense(m, w, spec.out_dim, spec.in_dim)),
-            }
+            w.write(core, kp.w_addr);
             core.mem.write_i32(kp.bias_addr, bias);
         },
         |core| {
@@ -262,8 +326,30 @@ pub fn run_conv_backend(
     w: &[i8],
     bias: &[i32],
 ) -> Result<(Vec<i8>, PerfCounters)> {
-    ensure!(acts.len() == spec.h * spec.w * spec.cin, "conv: activation count mismatch");
     ensure!(w.len() == spec.cout * spec.k * spec.k * spec.cin, "conv: weight count mismatch");
+    match mode {
+        None => run_conv_staged(spec, mode, mac, backend, acts, StagedWeights::Bytes(w), bias),
+        Some(m) => {
+            let words = pack_conv(m, w, spec.cout, spec.k, spec.cin);
+            run_conv_staged(spec, mode, mac, backend, acts, StagedWeights::Words(&words), bias)
+        }
+    }
+}
+
+/// [`run_conv_backend`] with the weights already in staged form (the
+/// execution-plan fast path: no per-invocation packing).
+pub fn run_conv_staged(
+    spec: ConvSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: StagedWeights<'_>,
+    bias: &[i32],
+) -> Result<(Vec<i8>, PerfCounters)> {
+    ensure!(acts.len() == spec.h * spec.w * spec.cin, "conv: activation count mismatch");
+    let words = mode.map_or(0, |m| spec.cout * spec.k * words_per_group(m, spec.k * spec.cin));
+    w.check("conv", mode, spec.cout * spec.k * spec.k * spec.cin, words)?;
     ensure!(bias.len() == spec.cout, "conv: bias count mismatch");
     let key = KernelKey::Conv {
         h: spec.h,
@@ -288,12 +374,7 @@ pub fn run_conv_backend(
         backend,
         |core| {
             core.mem.write_i8(kp.act_addr, acts);
-            match mode {
-                None => core.mem.write_i8(kp.w_addr, w),
-                Some(m) => core
-                    .mem
-                    .write_words(kp.w_addr, &pack_conv(m, w, spec.cout, spec.k, spec.cin)),
-            }
+            w.write(core, kp.w_addr);
             core.mem.write_i32(kp.bias_addr, bias);
         },
         |core| core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.cout),
@@ -334,8 +415,32 @@ pub fn run_depthwise_backend(
     w: &[i8],
     bias: &[i32],
 ) -> Result<(Vec<i8>, PerfCounters)> {
-    ensure!(acts.len() == spec.h * spec.w * spec.c, "depthwise: activation count mismatch");
     ensure!(w.len() == spec.c * spec.k * spec.k, "depthwise: weight count mismatch");
+    match mode {
+        None => {
+            run_depthwise_staged(spec, mode, mac, backend, acts, StagedWeights::Bytes(w), bias)
+        }
+        Some(m) => {
+            let words = pack_depthwise(m, w, spec.c, spec.k);
+            run_depthwise_staged(spec, mode, mac, backend, acts, StagedWeights::Words(&words), bias)
+        }
+    }
+}
+
+/// [`run_depthwise_backend`] with the weights already in staged form
+/// (the execution-plan fast path: no per-invocation packing).
+pub fn run_depthwise_staged(
+    spec: DwSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    backend: ExecBackend,
+    acts: &[i8],
+    w: StagedWeights<'_>,
+    bias: &[i32],
+) -> Result<(Vec<i8>, PerfCounters)> {
+    ensure!(acts.len() == spec.h * spec.w * spec.c, "depthwise: activation count mismatch");
+    let words = mode.map_or(0, |m| spec.c * words_per_group(m, spec.k * spec.k));
+    w.check("depthwise", mode, spec.c * spec.k * spec.k, words)?;
     ensure!(bias.len() == spec.c, "depthwise: bias count mismatch");
     let key = KernelKey::Dw {
         h: spec.h,
@@ -359,10 +464,7 @@ pub fn run_depthwise_backend(
         backend,
         |core| {
             core.mem.write_i8(kp.act_addr, acts);
-            match mode {
-                None => core.mem.write_i8(kp.w_addr, w),
-                Some(m) => core.mem.write_words(kp.w_addr, &pack_depthwise(m, w, spec.c, spec.k)),
-            }
+            w.write(core, kp.w_addr);
             core.mem.write_i32(kp.bias_addr, bias);
         },
         |core| core.mem.read_i8(kp.out_addr, spec.ho() * spec.wo() * spec.c),

@@ -32,6 +32,13 @@
 //!   Jacob-style fixed-point requantization.
 //! * [`models`] — the Table-3 model zoo (LeNet5, CIFAR-10 CNN, MCUNet-VWW,
 //!   MobileNetV1) with weights trained at build time by `python/compile`.
+//!   Execution lowers through [`models::plan`]: one compiled
+//!   `ExecutionPlan` per `(model, config)` — kernel specs, requant
+//!   parameters and pre-packed weight operands resolved once — drives
+//!   both the host golden reference (`qforward`) and the whole-model
+//!   ISS execution (`run_plan`), with per-step observer hooks for
+//!   tracing; a keyed plan cache makes sweeps compile each
+//!   configuration exactly once.
 //! * [`dse`] — the mixed-precision design-space exploration: enumeration,
 //!   pruning, Pareto extraction and accuracy-threshold selection.
 //! * [`coordinator`] — the evaluation orchestrator: a worker pool with a

@@ -27,6 +27,10 @@ Experiment commands (paper artifacts; results go to results/*.json):
 Utility commands:
   disasm <hex words...>     Decode/disassemble instruction words
   demo                      Assemble + run a small nn_mac program
+  trace                     Run one model on the ISS through its compiled
+                            execution plan and write a per-step JSONL
+                            trace (requires --trace-steps; first --models
+                            entry, default lenet5)
   xcheck                    Verify Rust arithmetic vs python xcheck.json
 
 OPTIONS:
@@ -42,13 +46,19 @@ OPTIONS:
   --host-eval         Shorthand for --evaluator host
   --seed <n>          Random seed (default 0xD5E)
   --models <a,b,…>    Restrict fig6/fig8 sweeps to these models
+  --trace-steps <p>   (trace) JSONL output path for the per-step
+                      execution-plan trace
 
 Sharded sweeps (fig6/fig8; see docs/ARCHITECTURE.md § Sharded sweeps):
   --shard <i/n>       fig6: evaluate only shard i of an n-way split of
                       each model's config space and write a versioned
                       shard artifact instead of a full result. Every
                       shard (process/host) must use the same --seed,
-                      --budget, --eval and --evaluator.
+                      --budget, --eval and --evaluator. Artifacts are
+                      checkpointed every few configs, and re-running a
+                      shard whose artifact already exists *resumes* it:
+                      cleanly-parsed points are kept and only missing
+                      configs are evaluated.
   --shard-strategy <s>  hash | range partitioning (default hash)
   --shard-out <dir>   Where shard artifacts go (default results/shards)
   --merge <file>      Merge shard artifacts (repeatable) instead of
@@ -56,6 +66,9 @@ Sharded sweeps (fig6/fig8; see docs/ARCHITECTURE.md § Sharded sweeps):
                       Pareto front and fails typed on shard conflicts.
                       The merged result is bit-identical to the
                       unsharded sweep.
+  --merge-dir <dir>   Merge every *.s<i>of<n>.json shard artifact found
+                      in <dir> (convenience form of repeating --merge;
+                      combinable with explicit --merge files)
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOpts> {
@@ -105,6 +118,18 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
             "--merge" => opts
                 .merge
                 .push(it.next().ok_or_else(|| mpnn::anyhow!("--merge needs a file"))?.into()),
+            "--merge-dir" => {
+                opts.merge_dir = Some(
+                    it.next()
+                        .ok_or_else(|| mpnn::anyhow!("--merge-dir needs a directory"))?
+                        .into(),
+                )
+            }
+            "--trace-steps" => {
+                opts.trace_steps = Some(
+                    it.next().ok_or_else(|| mpnn::anyhow!("--trace-steps needs a path"))?.into(),
+                )
+            }
             "--models" => {
                 let v = it.next().ok_or_else(|| mpnn::anyhow!("--models needs a,b,…"))?;
                 opts.models =
@@ -132,7 +157,7 @@ fn save(name: &str, json: &Json) -> Result<()> {
 
 fn cmd_all(opts: &ExpOpts) -> Result<()> {
     mpnn::ensure!(
-        opts.shard.is_none() && opts.merge.is_empty(),
+        opts.shard.is_none() && !opts.wants_merge(),
         "`all` shares one full sweep per model; shard with `fig6 --shard` and \
          merge with `fig6 --merge` / `fig8 --merge` instead"
     );
@@ -221,6 +246,50 @@ fn cmd_demo() -> Result<()> {
     Ok(())
 }
 
+/// Run one model on the ISS through its compiled execution plan with
+/// the step-trace observer attached, writing one JSON line per step —
+/// the step-granular trace surface of the plan executor (no legacy
+/// interpreter involved; see docs/ARCHITECTURE.md § Execution plans).
+fn cmd_trace(opts: &ExpOpts) -> Result<()> {
+    use mpnn::models::infer::{quantize_input, quantize_model};
+    use mpnn::models::plan::plan_for;
+    use mpnn::models::sim_exec::{modes_for, run_plan, StepTrace};
+    use mpnn::sim::MacUnitConfig;
+
+    let path = opts
+        .trace_steps
+        .clone()
+        .ok_or_else(|| mpnn::anyhow!("trace needs --trace-steps <path> (JSONL output)"))?;
+    let name = opts
+        .models
+        .as_ref()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "lenet5".to_string());
+    let model = opts.load_model(&name)?;
+    let n = mpnn::models::analyze(&model.spec).layers.len();
+    // A representative mixed configuration: sensitive first layer at
+    // 8-bit (the paper's pinning), 4-bit elsewhere.
+    let mut bits = vec![4u32; n];
+    bits[0] = 8;
+    let qm = quantize_model(&model.spec, &model.params, &model.sites, &bits);
+    let plan = plan_for(&qm, &modes_for(&qm))?;
+    let input = quantize_input(&qm, &model.test.images[0]);
+
+    let mut trace = StepTrace::create(&path)?;
+    let run = run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut trace))?;
+    let steps = trace.steps;
+    trace.finish()?;
+    println!(
+        "trace: {name} bits {bits:?} — {} plan steps ({} kernels), {} cycles, pred {} -> {}",
+        steps,
+        run.layers.len(),
+        run.total_cycles(),
+        run.argmax(),
+        path.display()
+    );
+    Ok(())
+}
+
 fn cmd_xcheck(opts: &ExpOpts) -> Result<()> {
     let path = opts.artifacts.join("xcheck.json");
     let text = std::fs::read_to_string(&path)?;
@@ -269,6 +338,7 @@ fn main() -> Result<()> {
         "all" => cmd_all(&parse_opts(rest)?),
         "disasm" => cmd_disasm(rest),
         "demo" => cmd_demo(),
+        "trace" => cmd_trace(&parse_opts(rest)?),
         "xcheck" => cmd_xcheck(&parse_opts(rest)?),
         "--help" | "-h" | "help" => {
             print!("{USAGE}");

@@ -206,65 +206,24 @@ pub fn residual_requants(qm: &QModel, r: usize) -> (Requant, Requant) {
     (rq_skip, rq_branch)
 }
 
-fn run_qlayer(qm: &QModel, l: &LayerSpec, x: Flow<i8>, li: &mut usize) -> Flow<i8> {
-    match *l {
-        LayerSpec::Conv { cout, k, stride, pad, relu } => {
-            let q = &qm.layers[*li];
-            *li += 1;
-            Flow::Map(qconv2d(&x.map(), &q.qw, &q.bias, cout, ConvGeom { k, stride, pad }, q.rq, relu))
-        }
-        LayerSpec::Depthwise { k, stride, pad, relu } => {
-            let q = &qm.layers[*li];
-            *li += 1;
-            Flow::Map(qdepthwise(&x.map(), &q.qw, &q.bias, ConvGeom { k, stride, pad }, q.rq, relu))
-        }
-        LayerSpec::Dense { out, relu } => {
-            let q = &qm.layers[*li];
-            debug_assert!(!qm.analysis.layers[*li].is_last, "last dense handled by qforward");
-            *li += 1;
-            let flat = x.to_flat();
-            let (qv, _) = qdense(&flat, &q.qw, &q.bias, out, Some(q.rq), relu);
-            Flow::Flat(qv)
-        }
-        LayerSpec::MaxPool2 => Flow::Map(qmaxpool2(&x.map())),
-        LayerSpec::AvgPoolGlobal => {
-            let m = x.map();
-            let c = m.shape[2];
-            Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m)))
-        }
-    }
-}
-
 /// Integer forward pass: int8 input → int32 logits. Bit-exact reference
 /// for the ISS execution and the JAX artifact.
+///
+/// This contains **no graph walk of its own**: the model lowers once
+/// (per configuration, through the keyed plan cache of
+/// [`super::plan::plan_for`]) into an
+/// [`ExecutionPlan`](super::plan::ExecutionPlan), and the host integer
+/// executor [`super::plan::host_logits`] interprets the same plan the
+/// ISS execution ([`super::sim_exec::run_plan`]) replays — host/ISS
+/// structural agreement by construction.
 pub fn qforward(qm: &QModel, input: &Tensor<i8>) -> Vec<i32> {
-    let mut x = Flow::Map(input.clone());
-    let mut li = 0usize;
-    let mut res_i = 0usize;
-    for node in &qm.spec.nodes {
-        match node {
-            Node::Layer(LayerSpec::Dense { out, .. }) if qm.analysis.layers[li].is_last => {
-                let q = &qm.layers[li];
-                let flat = x.to_flat();
-                let (_, accs) = qdense(&flat, &q.qw, &q.bias, *out, None, false);
-                return accs;
-            }
-            Node::Layer(l) => {
-                x = run_qlayer(qm, l, x, &mut li);
-            }
-            Node::Residual(inner) => {
-                let skip = x.map();
-                let mut b = Flow::Map(skip.clone());
-                for l in inner {
-                    b = run_qlayer(qm, l, b, &mut li);
-                }
-                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
-                res_i += 1;
-                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
-            }
-        }
-    }
-    panic!("model must end in a dense logits layer")
+    // Host logits are mode-independent, so lower with baseline modes:
+    // the baseline plan stages weights as zero-copy Arc clones instead
+    // of packing nn_mac word streams this executor would never read.
+    let modes = vec![None; qm.layers.len()];
+    let plan = super::plan::plan_for(qm, &modes)
+        .expect("model must lower to an execution plan (ends in a dense logits layer)");
+    super::plan::host_logits(&plan, input)
 }
 
 /// Classify a batch: argmax of the integer logits.

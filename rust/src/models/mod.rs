@@ -12,9 +12,16 @@
 //! site. The Python trainer exports one calibrated scale per site; the
 //! site walk here and in `python/compile/model.py` is structurally
 //! identical (cross-checked by the artifact loader).
+//!
+//! Execution lowers through [`plan`]: a `(QModel, modes)` pair
+//! compiles **once** into an immutable [`plan::ExecutionPlan`], and
+//! both the host golden reference ([`infer::qforward`]) and the ISS
+//! execution ([`sim_exec::run_model`]) are thin interpreters over that
+//! same plan — host/ISS structural agreement by construction.
 
 pub mod format;
 pub mod infer;
+pub mod plan;
 pub mod sim_exec;
 pub mod synthetic;
 pub mod zoo;

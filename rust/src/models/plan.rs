@@ -1,0 +1,708 @@
+//! Lowered execution-plan IR: one compiled model plan driving **both**
+//! the host golden reference and the ISS execution.
+//!
+//! Before this layer existed, [`super::infer::qforward`] and
+//! [`super::sim_exec::run_model`] each re-walked the [`ModelSpec`]
+//! graph on every run of every batch input — re-deriving kernel specs,
+//! requant parameters, spatial/channel padding and residual-site
+//! bookkeeping twice, in two hand-synchronized code paths. An
+//! [`ExecutionPlan`] lowers a `(QModel, modes)` pair **once** into a
+//! linear step list with everything resolved:
+//!
+//! * [`Step::Kernel`] carries the fully-resolved
+//!   [`ConvSpec`] / [`DwSpec`] / [`DenseSpec`], the [`MacMode`], the
+//!   requant parameters, the activation-site indices **and the staged
+//!   weight operands** — spatially/channel-padded and (for mode
+//!   kernels) packed into the exact `nn_mac` word stream the ISS
+//!   runner writes into simulator memory. Per-run work shrinks to
+//!   per-input tensor movement.
+//! * The host glue the paper keeps off the core — pooling, residual
+//!   save/add — lowers to [`Step::MaxPool2`] / [`Step::AvgPoolGlobal`]
+//!   / [`Step::SaveSkip`] / [`Step::AddSkip`] with the residual
+//!   requant pair pre-computed.
+//!
+//! Both executors are thin interpreters over the *same* plan:
+//! [`host_logits`] (the integer golden reference behind
+//! [`super::infer::qforward`]) and
+//! [`super::sim_exec::run_plan`] (the ISS execution). Structural
+//! host-vs-ISS agreement is therefore true **by construction** — the
+//! two paths cannot walk the graph differently because neither walks
+//! the graph at all.
+//!
+//! ## Plan cache
+//!
+//! [`plan_for`] memoises compiled plans in a process-wide keyed cache:
+//! the key is `(model name, bits, modes)` plus a content fingerprint
+//! (FNV-1a over the spec structure, site scales and quantized layer
+//! parameters), so two models that merely share a name never collide
+//! and an in-place mutated `QModel` (the divergence tests do this)
+//! recompiles instead of replaying a stale plan. DSE sweeps and
+//! [`super::sim_exec::run_model_batch`] compile each configuration
+//! exactly once and replay it across the whole input batch; hits and
+//! compiles are counted on the global
+//! [`SessionStats`](crate::sim::session::SessionStats)
+//! (`plan_compiles` / `plan_hits`). The cache is bounded
+//! ([`MAX_PLANS`], FIFO eviction) because plans own staged weight
+//! copies.
+//!
+//! ## Observer hooks
+//!
+//! The ISS plan executor accepts an optional [`PlanObserver`]: one
+//! [`StepEvent`] per executed step, in plan order, *after* the step
+//! completes — kernel steps carry the layer's [`PerfCounters`], host
+//! glue steps carry `None`. This is the step-granular trace surface
+//! (see [`super::sim_exec::StepTrace`] and `mpnn trace
+//! --trace-steps`); it needs no legacy-interpreter fallback because
+//! the plan executor *is* the production path.
+
+use super::infer::{residual_requants, QModel};
+use super::{LayerSpec, ModelSpec, Node};
+use crate::error::Result;
+use crate::isa::MacMode;
+use crate::kernels::conv::ConvSpec;
+use crate::kernels::dense::DenseSpec;
+use crate::kernels::depthwise::DwSpec;
+use crate::nn::layers::{qadd, qavgpool_global, qconv2d, qdense, qdepthwise, qmaxpool2, ConvGeom};
+use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
+use crate::nn::quant::Requant;
+use crate::nn::tensor::Tensor;
+use crate::sim::PerfCounters;
+use crate::{bail, ensure};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Staged weight operand owned by a plan — exactly the bytes/words the
+/// ISS runner writes into simulator memory, produced once at compile.
+#[derive(Debug, Clone)]
+pub enum PlanWeights {
+    /// Raw int8 stream (baseline kernels; channel-padded for conv).
+    Bytes(Arc<Vec<i8>>),
+    /// Packed `nn_mac` word stream (mode kernels).
+    Words(Arc<Vec<u32>>),
+}
+
+impl PlanWeights {
+    /// Borrow as the kernel runners' staged-weight view.
+    pub fn staged(&self) -> crate::kernels::run::StagedWeights<'_> {
+        match self {
+            PlanWeights::Bytes(b) => crate::kernels::run::StagedWeights::Bytes(b.as_slice()),
+            PlanWeights::Words(w) => crate::kernels::run::StagedWeights::Words(w.as_slice()),
+        }
+    }
+}
+
+/// Fully-resolved geometry of one kernel step.
+#[derive(Debug, Clone)]
+pub enum KernelOp {
+    /// Standard convolution.
+    Conv {
+        /// ISS kernel spec: pre-padded spatial dims, channel-padded
+        /// `cin` (mode kernels need `Cin % 4 == 0`).
+        spec: ConvSpec,
+        /// Logical geometry for the host reference (pads internally).
+        geom: ConvGeom,
+        /// Output channels.
+        cout: usize,
+        /// Logical (unpadded) input channels.
+        cin: usize,
+    },
+    /// Depthwise convolution.
+    Depthwise {
+        /// ISS kernel spec (pre-padded spatial dims).
+        spec: DwSpec,
+        /// Logical geometry for the host reference.
+        geom: ConvGeom,
+    },
+    /// Fully-connected layer.
+    Dense {
+        /// ISS kernel spec (`out_i32` set on the logits layer).
+        spec: DenseSpec,
+    },
+}
+
+/// One quantizable layer lowered to a kernel invocation.
+#[derive(Debug, Clone)]
+pub struct KernelStep {
+    /// Quantizable-layer index (canonical [`super::analyze`] order).
+    pub layer: usize,
+    /// Resolved geometry + ISS kernel spec.
+    pub op: KernelOp,
+    /// Kernel mode (`None` = scalar baseline).
+    pub mode: Option<MacMode>,
+    /// Fused ReLU.
+    pub relu: bool,
+    /// Output requantization parameters.
+    pub rq: Requant,
+    /// Input activation-scale site.
+    pub site_in: usize,
+    /// Output activation-scale site.
+    pub site_out: usize,
+    /// Final logits layer (raw int32 out, terminates the plan).
+    pub is_last: bool,
+    /// Weights in the host reference's logical layout.
+    pub host_w: Arc<Vec<i8>>,
+    /// Weights staged for the ISS (padded and/or packed).
+    pub iss_w: PlanWeights,
+    /// Int32 biases (accumulator scale).
+    pub bias: Arc<Vec<i32>>,
+}
+
+/// One lowered step of the plan.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// A quantizable layer executed as a kernel.
+    Kernel(KernelStep),
+    /// 2×2 stride-2 max pool (host glue; site unchanged).
+    MaxPool2,
+    /// Global average pool (host glue; site unchanged).
+    AvgPoolGlobal,
+    /// Push the current tensor as the residual skip input.
+    SaveSkip,
+    /// Pop the saved skip and add:
+    /// `out = rescale(skip) + rescale(branch)` ([`qadd`] semantics).
+    AddSkip {
+        /// Skip-path requant into the output site.
+        rq_skip: Requant,
+        /// Branch-path requant into the output site.
+        rq_branch: Requant,
+        /// The add's output activation-scale site.
+        site_out: usize,
+    },
+}
+
+impl Step {
+    /// Short step-kind label (observer events, traces).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Step::Kernel(k) => match k.op {
+                KernelOp::Conv { .. } => "conv",
+                KernelOp::Depthwise { .. } => "depthwise",
+                KernelOp::Dense { .. } => "dense",
+            },
+            Step::MaxPool2 => "maxpool2",
+            Step::AvgPoolGlobal => "avgpool_global",
+            Step::SaveSkip => "save_skip",
+            Step::AddSkip { .. } => "add_skip",
+        }
+    }
+}
+
+/// A lowered, immutable execution plan — compiled once per
+/// `(QModel, modes)`, replayed for every input.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Model name.
+    pub model: String,
+    /// Per-layer weight bit-widths (the DSE configuration).
+    pub bits: Vec<u32>,
+    /// Per-layer kernel modes this plan was lowered for.
+    pub modes: Vec<Option<MacMode>>,
+    /// Expected input shape `[H, W, C]`.
+    pub input_shape: [usize; 3],
+    /// Classification classes (logits length).
+    pub num_classes: usize,
+    /// The linear step list; the final step is the `is_last` dense.
+    pub steps: Vec<Step>,
+}
+
+impl ExecutionPlan {
+    /// Number of kernel (quantizable-layer) steps.
+    pub fn kernel_steps(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Kernel(_))).count()
+    }
+}
+
+/// Per-step observer for the ISS plan executor (tracing/profiling).
+/// Called once per executed step, in plan order, after the step
+/// completes.
+pub trait PlanObserver {
+    /// Observe one executed step.
+    fn on_step(&mut self, ev: &StepEvent<'_>);
+}
+
+/// What one executed step looked like.
+#[derive(Debug)]
+pub struct StepEvent<'a> {
+    /// Step index into [`ExecutionPlan::steps`].
+    pub index: usize,
+    /// Step kind label ([`Step::kind`]).
+    pub kind: &'static str,
+    /// Quantizable-layer index (kernel steps only).
+    pub layer: Option<usize>,
+    /// Kernel mode (kernel steps only; `None` also means baseline).
+    pub mode: Option<MacMode>,
+    /// The step's own perf counters (kernel steps only — host glue
+    /// runs off-core and has no cycle cost by the paper's accounting).
+    pub perf: Option<&'a PerfCounters>,
+}
+
+/// The kernel modes matching each layer's quantized bit-width — the
+/// extended-ISA execution this plan cache keys the host reference on.
+pub fn canonical_modes(qm: &QModel) -> Vec<Option<MacMode>> {
+    qm.bits.iter().map(|&b| MacMode::from_weight_bits(b)).collect()
+}
+
+/// Pad conv weights `[Cout][K][K][Cin]` to `[Cout][K][K][Cin_p]` with
+/// zeros (mode kernels need word-aligned channel runs).
+fn pad_conv_weights(qw: &[i8], cout: usize, k: usize, cin: usize, cin_p: usize) -> Vec<i8> {
+    if cin == cin_p {
+        return qw.to_vec();
+    }
+    let mut out = vec![0i8; cout * k * k * cin_p];
+    for oc in 0..cout {
+        for t in 0..k * k {
+            let src = (oc * k * k + t) * cin;
+            let dst = (oc * k * k + t) * cin_p;
+            out[dst..dst + cin].copy_from_slice(&qw[src..src + cin]);
+        }
+    }
+    out
+}
+
+/// Lower one quantized model under a per-layer mode assignment into an
+/// [`ExecutionPlan`]. This is the **only** graph walk left in the
+/// execution stack; everything downstream interprets the step list.
+pub fn compile(qm: &QModel, modes: &[Option<MacMode>]) -> Result<ExecutionPlan> {
+    ensure!(modes.len() == qm.layers.len(), "one mode per quantizable layer");
+    let mut steps = Vec::new();
+    let mut li = 0usize;
+    let mut res_i = 0usize;
+    let mut done = false;
+
+    let mut lower_layer = |l: &LayerSpec, steps: &mut Vec<Step>| -> Result<bool> {
+        match *l {
+            LayerSpec::MaxPool2 => {
+                steps.push(Step::MaxPool2);
+                return Ok(false);
+            }
+            LayerSpec::AvgPoolGlobal => {
+                steps.push(Step::AvgPoolGlobal);
+                return Ok(false);
+            }
+            _ => {}
+        }
+        let idx = li;
+        li += 1;
+        let q = &qm.layers[idx];
+        let info = &qm.analysis.layers[idx];
+        let mode = modes[idx];
+        if let Some(m) = mode {
+            ensure!(
+                m.weight_bits() == q.w_bits,
+                "layer {idx}: kernel mode {m:?} vs quantized bits {}",
+                q.w_bits
+            );
+        }
+        let host_w = Arc::new(q.qw.clone());
+        let bias = Arc::new(q.bias.clone());
+        let step = match *l {
+            LayerSpec::Conv { cout, k, stride, pad, relu } => {
+                let cin = info.in_shape[2];
+                // Mode kernels need Cin % 4 == 0: the executor
+                // channel-pads the input, the plan pre-pads the weights.
+                let cin_p = if mode.is_some() { cin.div_ceil(4) * 4 } else { cin };
+                let spec = ConvSpec {
+                    h: info.in_shape[0] + 2 * pad,
+                    w: info.in_shape[1] + 2 * pad,
+                    cin: cin_p,
+                    cout,
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let iss_w = match mode {
+                    None => PlanWeights::Bytes(Arc::clone(&host_w)),
+                    Some(m) => {
+                        let padded = pad_conv_weights(&q.qw, cout, k, cin, cin_p);
+                        PlanWeights::Words(Arc::new(pack_conv(m, &padded, cout, k, cin_p)))
+                    }
+                };
+                KernelStep {
+                    layer: idx,
+                    op: KernelOp::Conv { spec, geom: ConvGeom { k, stride, pad }, cout, cin },
+                    mode,
+                    relu,
+                    rq: q.rq,
+                    site_in: info.site_in,
+                    site_out: info.site_out,
+                    is_last: false,
+                    host_w,
+                    iss_w,
+                    bias,
+                }
+            }
+            LayerSpec::Depthwise { k, stride, pad, relu } => {
+                let c = info.in_shape[2];
+                let spec = DwSpec {
+                    h: info.in_shape[0] + 2 * pad,
+                    w: info.in_shape[1] + 2 * pad,
+                    c,
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let iss_w = match mode {
+                    None => PlanWeights::Bytes(Arc::clone(&host_w)),
+                    Some(m) => PlanWeights::Words(Arc::new(pack_depthwise(m, &q.qw, c, k))),
+                };
+                KernelStep {
+                    layer: idx,
+                    op: KernelOp::Depthwise { spec, geom: ConvGeom { k, stride, pad } },
+                    mode,
+                    relu,
+                    rq: q.rq,
+                    site_in: info.site_in,
+                    site_out: info.site_out,
+                    is_last: false,
+                    host_w,
+                    iss_w,
+                    bias,
+                }
+            }
+            LayerSpec::Dense { out, relu } => {
+                let in_dim = info.in_shape[2];
+                let is_last = info.is_last;
+                let spec = DenseSpec { in_dim, out_dim: out, rq: q.rq, relu, out_i32: is_last };
+                let iss_w = match mode {
+                    None => PlanWeights::Bytes(Arc::clone(&host_w)),
+                    Some(m) => PlanWeights::Words(Arc::new(pack_dense(m, &q.qw, out, in_dim))),
+                };
+                KernelStep {
+                    layer: idx,
+                    op: KernelOp::Dense { spec },
+                    mode,
+                    relu,
+                    rq: q.rq,
+                    site_in: info.site_in,
+                    site_out: info.site_out,
+                    is_last,
+                    host_w,
+                    iss_w,
+                    bias,
+                }
+            }
+            _ => unreachable!("pool handled above"),
+        };
+        let is_last = step.is_last;
+        steps.push(Step::Kernel(step));
+        Ok(is_last)
+    };
+
+    'nodes: for node in &qm.spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                if lower_layer(l, &mut steps)? {
+                    done = true;
+                    break 'nodes;
+                }
+            }
+            Node::Residual(inner) => {
+                steps.push(Step::SaveSkip);
+                for l in inner {
+                    ensure!(
+                        !lower_layer(l, &mut steps)?,
+                        "model must end in a dense logits layer (not inside a residual)"
+                    );
+                }
+                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
+                let (_, _, site_out) = qm.analysis.residuals[res_i];
+                res_i += 1;
+                steps.push(Step::AddSkip { rq_skip, rq_branch, site_out });
+            }
+        }
+    }
+    if !done {
+        bail!("model must end in a dense logits layer");
+    }
+    Ok(ExecutionPlan {
+        model: qm.spec.name.to_string(),
+        bits: qm.bits.clone(),
+        modes: modes.to_vec(),
+        input_shape: qm.spec.input,
+        num_classes: qm.spec.num_classes,
+        steps,
+    })
+}
+
+// ----------------------------------------------------- host executor ---
+
+/// Tensor-or-flat value flowing between steps — shared by both plan
+/// interpreters (host here, ISS in [`super::sim_exec::run_plan`]).
+pub(crate) enum Flow {
+    /// A feature map (HWC tensor).
+    Map(Tensor<i8>),
+    /// A flattened activation vector (dense layers).
+    Flat(Vec<i8>),
+}
+
+impl Flow {
+    pub(crate) fn flat(self) -> Vec<i8> {
+        match self {
+            Flow::Map(t) => t.data,
+            Flow::Flat(v) => v,
+        }
+    }
+    pub(crate) fn map(self) -> Tensor<i8> {
+        match self {
+            Flow::Map(t) => t,
+            Flow::Flat(_) => panic!("expected a feature map"),
+        }
+    }
+}
+
+/// Host integer executor: interpret the plan with the bit-exact `nn`
+/// layer implementations. This **is** the golden reference — the same
+/// plan the ISS executor replays, so the two paths agree structurally
+/// by construction. Returns the raw int32 logits.
+pub fn host_logits(plan: &ExecutionPlan, input: &Tensor<i8>) -> Vec<i32> {
+    let mut x = Flow::Map(input.clone());
+    let mut skips: Vec<Tensor<i8>> = Vec::new();
+    for step in &plan.steps {
+        match step {
+            Step::Kernel(ks) => match &ks.op {
+                KernelOp::Conv { geom, cout, .. } => {
+                    x = Flow::Map(qconv2d(
+                        &x.map(),
+                        &ks.host_w,
+                        &ks.bias,
+                        *cout,
+                        *geom,
+                        ks.rq,
+                        ks.relu,
+                    ));
+                }
+                KernelOp::Depthwise { geom, .. } => {
+                    x = Flow::Map(qdepthwise(&x.map(), &ks.host_w, &ks.bias, *geom, ks.rq, ks.relu));
+                }
+                KernelOp::Dense { spec } => {
+                    let flat = x.flat();
+                    if ks.is_last {
+                        let (_, accs) =
+                            qdense(&flat, &ks.host_w, &ks.bias, spec.out_dim, None, false);
+                        return accs;
+                    }
+                    let (qv, _) =
+                        qdense(&flat, &ks.host_w, &ks.bias, spec.out_dim, Some(ks.rq), ks.relu);
+                    x = Flow::Flat(qv);
+                }
+            },
+            Step::MaxPool2 => x = Flow::Map(qmaxpool2(&x.map())),
+            Step::AvgPoolGlobal => {
+                let m = x.map();
+                let c = m.shape[2];
+                x = Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m)));
+            }
+            Step::SaveSkip => {
+                let m = x.map();
+                skips.push(m.clone());
+                x = Flow::Map(m);
+            }
+            Step::AddSkip { rq_skip, rq_branch, .. } => {
+                let skip = skips.pop().expect("AddSkip without SaveSkip");
+                x = Flow::Map(qadd(&skip, *rq_skip, &x.map(), *rq_branch));
+            }
+        }
+    }
+    unreachable!("compile guarantees the plan ends in an is_last dense step")
+}
+
+// -------------------------------------------------------- plan cache ---
+
+/// Bound on cached plans (FIFO eviction). Plans own staged weight
+/// copies (~2× the model's weight bytes each), so an unbounded
+/// never-evicted cache — fine for the kernel cache, whose entries are
+/// instruction streams — would retain large dead plans: a DSE sweep
+/// touches each `(model, config)` key exactly once, and the reuse
+/// that matters (batch replay) holds the `Arc` directly. The bound is
+/// therefore deliberately small; eviction never forces a recompile in
+/// a sweep because each configuration is evaluated once.
+pub const MAX_PLANS: usize = 32;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    model: String,
+    bits: Vec<u32>,
+    modes: Vec<Option<MacMode>>,
+    fingerprint: u64,
+}
+
+/// FNV-1a content fingerprint of everything the plan lowers from: the
+/// spec structure, the site scales and the quantized layer parameters.
+/// Two `QModel`s that merely share `(name, bits)` — different seeds,
+/// or a test-mutated copy — therefore never share a plan.
+fn fingerprint(qm: &QModel, spec_repr: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    for b in spec_repr.bytes() {
+        eat(b);
+    }
+    for &s in &qm.sites {
+        for b in s.to_bits().to_le_bytes() {
+            eat(b);
+        }
+    }
+    for l in &qm.layers {
+        for b in l.w_bits.to_le_bytes() {
+            eat(b);
+        }
+        for b in l.rq.m.to_le_bytes() {
+            eat(b);
+        }
+        for b in l.rq.shift.to_le_bytes() {
+            eat(b);
+        }
+        for &w in &l.qw {
+            eat(w as u8);
+        }
+        for &b32 in &l.bias {
+            for b in b32.to_le_bytes() {
+                eat(b);
+            }
+        }
+    }
+    h
+}
+
+fn key_for(qm: &QModel, modes: &[Option<MacMode>]) -> PlanKey {
+    let spec_repr = spec_structure(&qm.spec);
+    PlanKey {
+        model: qm.spec.name.to_string(),
+        bits: qm.bits.clone(),
+        modes: modes.to_vec(),
+        fingerprint: fingerprint(qm, &spec_repr),
+    }
+}
+
+/// Canonical textual form of the graph structure (Debug is stable and
+/// covers every geometry field the lowering reads).
+fn spec_structure(spec: &ModelSpec) -> String {
+    format!("{:?}|{:?}|{}", spec.input, spec.nodes, spec.num_classes)
+}
+
+#[derive(Default)]
+struct PlanCache {
+    map: HashMap<PlanKey, Arc<ExecutionPlan>>,
+    order: VecDeque<PlanKey>,
+}
+
+fn cache() -> &'static Mutex<PlanCache> {
+    static CACHE: OnceLock<Mutex<PlanCache>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(PlanCache::default()))
+}
+
+/// Distinct plans currently cached (observability/tests).
+pub fn plan_cache_len() -> usize {
+    cache().lock().unwrap().map.len()
+}
+
+/// Fetch (or compile + insert) the plan for `(qm, modes)`.
+///
+/// Cache traffic is counted on the global session stats
+/// ([`SessionStats::plan_compiles`](crate::sim::session::SessionStats)
+/// / `plan_hits`): a DSE sweep compiles each `(model, config)` exactly
+/// once, and every cache-resolved replay — each input of a
+/// `run_model_batch`, a repeated `run_model`/`qforward` — is a hit.
+/// (Callers holding the returned `Arc` replay it directly with no
+/// further lookups — `IssEval` and `HostEval` do exactly that.)
+pub fn plan_for(qm: &QModel, modes: &[Option<MacMode>]) -> Result<Arc<ExecutionPlan>> {
+    let stats = &crate::sim::session::SimSession::global().stats;
+    let key = key_for(qm, modes);
+    if let Some(p) = cache().lock().unwrap().map.get(&key) {
+        stats.plan_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(Arc::clone(p));
+    }
+    // Compile outside the lock — lowering packs whole weight streams
+    // and other configurations shouldn't serialise behind it. A racing
+    // compiler of the same key loses its work and counts as a hit, so
+    // `plan_compiles` equals the number of distinct plans built.
+    let plan = Arc::new(compile(qm, modes)?);
+    let mut c = cache().lock().unwrap();
+    if let Some(p) = c.map.get(&key) {
+        stats.plan_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(Arc::clone(p));
+    }
+    stats.plan_compiles.fetch_add(1, Ordering::Relaxed);
+    c.map.insert(key.clone(), Arc::clone(&plan));
+    c.order.push_back(key);
+    if c.order.len() > MAX_PLANS {
+        if let Some(old) = c.order.pop_front() {
+            c.map.remove(&old);
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::infer::{calibrate, quantize_model, random_params};
+    use crate::models::synthetic::generate;
+    use crate::models::{analyze, zoo};
+
+    fn lenet_qm(seed: u64, bits: u32) -> QModel {
+        let spec = zoo::lenet5();
+        let n = analyze(&spec).layers.len();
+        let params = random_params(&spec, seed);
+        let ds = generate(seed ^ 1, 2, spec.input, spec.num_classes, 0.4);
+        let sites = calibrate(&spec, &params, &ds.images[..2]);
+        quantize_model(&spec, &params, &sites, &vec![bits; n])
+    }
+
+    #[test]
+    fn compile_lowers_one_kernel_step_per_quantizable_layer() {
+        let qm = lenet_qm(3, 4);
+        let plan = compile(&qm, &canonical_modes(&qm)).unwrap();
+        assert_eq!(plan.kernel_steps(), qm.layers.len());
+        // The final step is the logits dense.
+        match plan.steps.last().unwrap() {
+            Step::Kernel(ks) => {
+                assert!(ks.is_last);
+                assert!(matches!(ks.op, KernelOp::Dense { .. }));
+            }
+            other => panic!("plan must end in a kernel step, got {}", other.kind()),
+        }
+        // Mode kernel steps carry pre-packed word streams.
+        let packed = plan
+            .steps
+            .iter()
+            .filter(|s| match s {
+                Step::Kernel(ks) => matches!(ks.iss_w, PlanWeights::Words(_)),
+                _ => false,
+            })
+            .count();
+        assert_eq!(packed, qm.layers.len(), "every mode kernel pre-packs its weights");
+    }
+
+    #[test]
+    fn mode_bits_mismatch_is_a_compile_error() {
+        let qm = lenet_qm(4, 4);
+        let mut modes = canonical_modes(&qm);
+        modes[1] = Some(MacMode::W8); // layer is quantized at 4 bits
+        assert!(compile(&qm, &modes).is_err());
+        assert!(compile(&qm, &modes[..1]).is_err(), "mode-count mismatch");
+    }
+
+    #[test]
+    fn plan_cache_compiles_once_and_distinguishes_content() {
+        let qm = lenet_qm(5, 8);
+        let modes = canonical_modes(&qm);
+        let a = plan_for(&qm, &modes).unwrap();
+        let b = plan_for(&qm, &modes).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must replay the compiled plan");
+        // Same name + bits, different weights: a different plan.
+        let other = lenet_qm(6, 8);
+        let c = plan_for(&other, &canonical_modes(&other)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "content fingerprint must separate models");
+        // A mutated copy (the divergence tests do this) recompiles.
+        let mut bad = qm.clone();
+        bad.layers[0].rq = Requant { m: 0, shift: 0 };
+        let d = plan_for(&bad, &modes).unwrap();
+        assert!(!Arc::ptr_eq(&a, &d), "in-place mutation must not replay a stale plan");
+    }
+}

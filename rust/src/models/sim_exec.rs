@@ -13,30 +13,49 @@
 //! the ISS-backed accuracy evaluator
 //! ([`IssEval`](crate::coordinator::IssEval)).
 //!
-//! ## Session / cache architecture (post micro-op-engine refactor)
+//! ## Plan-driven execution (post execution-plan refactor)
 //!
-//! Layer kernels execute on the micro-op engine through the global
+//! There is **no graph walk here anymore**: a `(QModel, modes)` pair
+//! lowers once — through the keyed plan cache of
+//! [`plan_for`](crate::models::plan::plan_for) — into an
+//! [`ExecutionPlan`] whose kernel steps carry fully-resolved specs and
+//! pre-staged (padded + packed) weight operands. [`run_plan`]
+//! interprets that step list on the ISS via the staged kernel runners
+//! (`kernels::run::run_*_staged`), and the host golden reference
+//! ([`host_logits`](crate::models::plan::host_logits)) interprets the
+//! *same* plan — so the two executions cannot disagree structurally.
+//! Per-run work is reduced to per-input tensor movement; the
+//! per-configuration derivation (kernel specs, requant parameters,
+//! weight padding/packing, residual bookkeeping) is paid exactly once
+//! per batch/sweep.
+//!
+//! Kernels execute on the micro-op engine through the global
 //! [`crate::sim::session::SimSession`]: every `(spec, mode)` pair is
 //! assembled and engine-translated exactly once into the keyed kernel
 //! cache (`kernels::run`), and simulator memories are recycled through
-//! the session's pool — across a whole model (and across a whole DSE
-//! sweep) the per-invocation assembly and 16 MiB allocation are paid
-//! once. One model execution is inherently sequential (each layer
-//! consumes the previous layer's activations), so the parallel axis is
-//! the *input batch*: [`run_model_batch`] fans independent inputs out
-//! over a worker pool sharing the kernel cache and memory pool.
+//! the session's pool. One model execution is inherently sequential
+//! (each layer consumes the previous layer's activations), so the
+//! parallel axis is the *input batch*: [`run_model_batch`] /
+//! [`run_plan_batch`] fan independent inputs out over a worker pool
+//! sharing the kernel cache and memory pool.
 //!
-//! See `docs/ARCHITECTURE.md` for the dataflow diagram of the unified
-//! accuracy+cycles path.
+//! [`run_plan`] additionally takes an optional
+//! [`PlanObserver`](crate::models::plan::PlanObserver): one event per
+//! executed step, with the kernel steps' own perf counters — the
+//! step-granular trace surface ([`StepTrace`] writes it as JSON lines
+//! for `mpnn trace --trace-steps`).
+//!
+//! See `docs/ARCHITECTURE.md` for the lowering diagram and the unified
+//! accuracy+cycles dataflow.
 
-use super::infer::{residual_requants, QModel};
-use super::{LayerSpec, Node, QKind};
+use super::infer::QModel;
+use super::plan::{
+    plan_for, ExecutionPlan, Flow, KernelOp, PlanObserver, Step, StepEvent,
+};
+use super::QKind;
 use crate::error::Result;
 use crate::isa::MacMode;
-use crate::kernels::conv::ConvSpec;
-use crate::kernels::dense::DenseSpec;
-use crate::kernels::depthwise::DwSpec;
-use crate::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
+use crate::kernels::run::{run_conv_staged, run_dense_staged, run_depthwise_staged, ExecBackend};
 use crate::nn::layers::{pad_spatial, qadd, qavgpool_global, qmaxpool2};
 use crate::nn::tensor::{pad_channels, Tensor};
 use crate::sim::{MacUnitConfig, PerfCounters};
@@ -86,183 +105,190 @@ impl SimRun {
     }
 }
 
-/// Pad conv weights `[Cout][K][K][Cin]` to `[Cout][K][K][Cin_p]` with
-/// zeros (mode kernels need word-aligned channel runs).
-fn pad_conv_weights(qw: &[i8], cout: usize, k: usize, cin: usize, cin_p: usize) -> Vec<i8> {
-    if cin == cin_p {
-        return qw.to_vec();
-    }
-    let mut out = vec![0i8; cout * k * k * cin_p];
-    for oc in 0..cout {
-        for t in 0..k * k {
-            let src = (oc * k * k + t) * cin;
-            let dst = (oc * k * k + t) * cin_p;
-            out[dst..dst + cin].copy_from_slice(&qw[src..src + cin]);
+/// Execute a compiled [`ExecutionPlan`] on the ISS for one input.
+///
+/// This is the plan interpreter: each [`Step::Kernel`] stages its
+/// pre-padded/pre-packed operands into pooled simulator memory and runs
+/// through the keyed kernel cache; host glue steps (pool / residual
+/// save & add) run between kernels. A kernel that misbehaves on the
+/// core (memory fault, runaway pc) surfaces as an `Err`.
+///
+/// `observer`, when given, receives one [`StepEvent`] per executed step
+/// in plan order — kernel steps carry the layer's own [`PerfCounters`],
+/// host glue steps carry `None`. On error, no event is emitted for the
+/// failing step.
+pub fn run_plan(
+    plan: &ExecutionPlan,
+    input: &Tensor<i8>,
+    mac: MacUnitConfig,
+    mut observer: Option<&mut dyn PlanObserver>,
+) -> Result<SimRun> {
+    ensure!(
+        input.shape == plan.input_shape,
+        "plan for {} expects input {:?}, got {:?}",
+        plan.model,
+        plan.input_shape,
+        input.shape
+    );
+    let mut layers = Vec::new();
+    let mut skips: Vec<Tensor<i8>> = Vec::new();
+    let mut x = Flow::Map(input.clone());
+
+    fn notify(
+        index: usize,
+        kind: &'static str,
+        layer: Option<usize>,
+        mode: Option<MacMode>,
+        perf: Option<&PerfCounters>,
+        observer: &mut Option<&mut dyn PlanObserver>,
+    ) {
+        if let Some(obs) = observer.as_deref_mut() {
+            obs.on_step(&StepEvent { index, kind, layer, mode, perf });
         }
     }
-    out
+
+    for (si, step) in plan.steps.iter().enumerate() {
+        match step {
+            Step::Kernel(ks) => {
+                let (nx, logits, perf) = match &ks.op {
+                    KernelOp::Conv { spec, geom, cout, .. } => {
+                        let mut xp = pad_spatial(&x.map(), geom.pad);
+                        if xp.shape[2] != spec.cin {
+                            // Mode kernels need Cin % 4 == 0; the plan
+                            // pre-padded the weights to match.
+                            xp = pad_channels(&xp, 4, 0);
+                            ensure!(
+                                xp.shape[2] == spec.cin,
+                                "layer {}: channel-padded input {} vs plan cin {}",
+                                ks.layer,
+                                xp.shape[2],
+                                spec.cin
+                            );
+                        }
+                        let (out, perf) = run_conv_staged(
+                            *spec,
+                            ks.mode,
+                            mac,
+                            ExecBackend::default(),
+                            &xp.data,
+                            ks.iss_w.staged(),
+                            &ks.bias,
+                        )?;
+                        (
+                            Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), *cout], out)),
+                            None,
+                            perf,
+                        )
+                    }
+                    KernelOp::Depthwise { spec, geom } => {
+                        let xp = pad_spatial(&x.map(), geom.pad);
+                        let (out, perf) = run_depthwise_staged(
+                            *spec,
+                            ks.mode,
+                            mac,
+                            ExecBackend::default(),
+                            &xp.data,
+                            ks.iss_w.staged(),
+                            &ks.bias,
+                        )?;
+                        (
+                            Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)),
+                            None,
+                            perf,
+                        )
+                    }
+                    KernelOp::Dense { spec } => {
+                        let flat = x.flat();
+                        let (qv, accs, perf) = run_dense_staged(
+                            *spec,
+                            ks.mode,
+                            mac,
+                            ExecBackend::default(),
+                            &flat,
+                            ks.iss_w.staged(),
+                            &ks.bias,
+                        )?;
+                        if ks.is_last {
+                            (Flow::Flat(Vec::new()), Some(accs), perf)
+                        } else {
+                            (Flow::Flat(qv), None, perf)
+                        }
+                    }
+                };
+                layers.push(LayerRun { layer: ks.layer, mode: ks.mode, perf });
+                notify(si, step.kind(), Some(ks.layer), ks.mode, Some(&perf), &mut observer);
+                if let Some(logits) = logits {
+                    return Ok(SimRun { logits, layers });
+                }
+                x = nx;
+            }
+            Step::MaxPool2 => {
+                x = Flow::Map(qmaxpool2(&x.map()));
+                notify(si, step.kind(), None, None, None, &mut observer);
+            }
+            Step::AvgPoolGlobal => {
+                let m = x.map();
+                let c = m.shape[2];
+                x = Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m)));
+                notify(si, step.kind(), None, None, None, &mut observer);
+            }
+            Step::SaveSkip => {
+                let m = x.map();
+                skips.push(m.clone());
+                x = Flow::Map(m);
+                notify(si, step.kind(), None, None, None, &mut observer);
+            }
+            Step::AddSkip { rq_skip, rq_branch, .. } => {
+                let skip = match skips.pop() {
+                    Some(s) => s,
+                    None => bail!("plan step {si}: AddSkip without a SaveSkip"),
+                };
+                x = Flow::Map(qadd(&skip, *rq_skip, &x.map(), *rq_branch));
+                notify(si, step.kind(), None, None, None, &mut observer);
+            }
+        }
+    }
+    bail!("plan did not terminate in a logits step")
+}
+
+/// Run a compiled plan over a batch of independent inputs in parallel
+/// (the plan is compiled once by the caller and replayed per input).
+pub fn run_plan_batch(
+    plan: &ExecutionPlan,
+    inputs: &[Tensor<i8>],
+    mac: MacUnitConfig,
+    workers: usize,
+) -> Result<Vec<SimRun>> {
+    crate::par::parallel_map(inputs.len(), workers, |j| run_plan(plan, &inputs[j], mac, None))
 }
 
 /// Execute the quantized model on the ISS.
 ///
 /// `modes[i]` selects the kernel for quantizable layer `i`: `None` runs
 /// the scalar baseline, `Some(mode)` the packed kernel (the mode must
-/// match the layer's quantization grid — checked). `mac` configures the
-/// MAC-unit features (Fig. 7 ablations). A kernel that misbehaves on
-/// the core (memory fault, runaway pc) surfaces as an `Err`.
+/// match the layer's quantization grid — checked at plan compile). The
+/// `(qm, modes)` pair resolves through the keyed plan cache
+/// ([`plan_for`]), so repeated runs replay one compiled plan. `mac`
+/// configures the MAC-unit features (Fig. 7 ablations).
 pub fn run_model(
     qm: &QModel,
     input: &Tensor<i8>,
     modes: &[Option<MacMode>],
     mac: MacUnitConfig,
 ) -> Result<SimRun> {
-    ensure!(modes.len() == qm.layers.len(), "one mode per quantizable layer");
-    let mut layers = Vec::new();
-    let mut li = 0usize;
-    let mut res_i = 0usize;
-
-    enum Flow {
-        Map(Tensor<i8>),
-        Flat(Vec<i8>),
-    }
-    impl Flow {
-        fn flat(self) -> Vec<i8> {
-            match self {
-                Flow::Map(t) => t.data,
-                Flow::Flat(v) => v,
-            }
-        }
-        fn map(self) -> Tensor<i8> {
-            match self {
-                Flow::Map(t) => t,
-                Flow::Flat(_) => panic!("expected feature map"),
-            }
-        }
-    }
-
-    let run_one = |l: &LayerSpec,
-                   x: Flow,
-                   li: &mut usize,
-                   layers: &mut Vec<LayerRun>|
-     -> Result<(Flow, Option<Vec<i32>>)> {
-        let idx = *li;
-        let q = &qm.layers[idx];
-        let info = &qm.analysis.layers[idx];
-        let mode = modes[idx];
-        if let Some(m) = mode {
-            ensure!(
-                m.weight_bits() == q.w_bits,
-                "layer {idx}: kernel mode {m:?} vs quantized bits {}",
-                q.w_bits
-            );
-        }
-        match *l {
-            LayerSpec::Conv { cout, k, stride, pad, relu } => {
-                *li += 1;
-                let xp = pad_spatial(&x.map(), pad);
-                // Mode kernels need Cin % 4 == 0: channel-pad with zeros.
-                let (xp, cin_p) = if mode.is_some() && xp.shape[2] % 4 != 0 {
-                    let p = pad_channels(&xp, 4, 0);
-                    let c = p.shape[2];
-                    (p, c)
-                } else {
-                    let c = xp.shape[2];
-                    (xp, c)
-                };
-                let w = pad_conv_weights(&q.qw, cout, k, info.in_shape[2], cin_p);
-                let spec = ConvSpec {
-                    h: xp.shape[0],
-                    w: xp.shape[1],
-                    cin: cin_p,
-                    cout,
-                    k,
-                    stride,
-                    rq: q.rq,
-                    relu,
-                };
-                let (out, perf) = run_conv_with(spec, mode, mac, &xp.data, &w, &q.bias)?;
-                layers.push(LayerRun { layer: idx, mode, perf });
-                Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), cout], out)), None))
-            }
-            LayerSpec::Depthwise { k, stride, pad, relu } => {
-                *li += 1;
-                let xp = pad_spatial(&x.map(), pad);
-                let spec = DwSpec {
-                    h: xp.shape[0],
-                    w: xp.shape[1],
-                    c: xp.shape[2],
-                    k,
-                    stride,
-                    rq: q.rq,
-                    relu,
-                };
-                let (out, perf) = run_depthwise_with(spec, mode, mac, &xp.data, &q.qw, &q.bias)?;
-                layers.push(LayerRun { layer: idx, mode, perf });
-                Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None))
-            }
-            LayerSpec::Dense { out, relu } => {
-                let is_last = info.is_last;
-                *li += 1;
-                let flat = x.flat();
-                let spec = DenseSpec {
-                    in_dim: flat.len(),
-                    out_dim: out,
-                    rq: q.rq,
-                    relu,
-                    out_i32: is_last,
-                };
-                let (qv, accs, perf) = run_dense_with(spec, mode, mac, &flat, &q.qw, &q.bias)?;
-                layers.push(LayerRun { layer: idx, mode, perf });
-                if is_last {
-                    Ok((Flow::Flat(Vec::new()), Some(accs)))
-                } else {
-                    Ok((Flow::Flat(qv), None))
-                }
-            }
-            LayerSpec::MaxPool2 => Ok((Flow::Map(qmaxpool2(&x.map())), None)),
-            LayerSpec::AvgPoolGlobal => {
-                let m = x.map();
-                let c = m.shape[2];
-                Ok((Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m))), None))
-            }
-        }
-    };
-
-    let mut x = Flow::Map(input.clone());
-    for node in &qm.spec.nodes {
-        match node {
-            Node::Layer(l) => {
-                let (nx, logits) = run_one(l, x, &mut li, &mut layers)?;
-                if let Some(logits) = logits {
-                    return Ok(SimRun { logits, layers });
-                }
-                x = nx;
-            }
-            Node::Residual(inner) => {
-                let skip = x.map();
-                let mut b = Flow::Map(skip.clone());
-                for l in inner {
-                    let (nb, _) = run_one(l, b, &mut li, &mut layers)?;
-                    b = nb;
-                }
-                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
-                res_i += 1;
-                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
-            }
-        }
-    }
-    bail!("model must end in a dense logits layer")
+    let plan = plan_for(qm, modes)?;
+    run_plan(&plan, input, mac, None)
 }
 
 /// Run one model over a batch of independent inputs in parallel.
 ///
-/// Each worker runs the full sequential layer pipeline for its input;
-/// all workers share the global kernel cache and memory pool, so the
-/// per-input setup cost is amortised batch-wide. Results are in input
-/// order and identical to per-input [`run_model`] calls. Every
-/// [`SimRun`] carries the integer logits and [`SimRun::argmax`] class
-/// alongside the perf counters, so accuracy and cycles for a batch
-/// come out of the same executions.
+/// The configuration's [`ExecutionPlan`] is compiled once (warm plan
+/// cache) and replayed for every input; each worker then runs the full
+/// sequential step list for its input, sharing the global kernel cache
+/// and memory pool. Results are in input order and identical to
+/// per-input [`run_model`] calls. Every [`SimRun`] carries the integer
+/// logits and [`SimRun::argmax`] class alongside the perf counters, so
+/// accuracy and cycles for a batch come out of the same executions.
 ///
 /// # Example
 ///
@@ -293,13 +319,17 @@ pub fn run_model_batch(
     mac: MacUnitConfig,
     workers: usize,
 ) -> Result<Vec<SimRun>> {
-    crate::par::parallel_map(inputs.len(), workers, |j| run_model(qm, &inputs[j], modes, mac))
+    // One cache resolution for the whole batch: the workers replay the
+    // `Arc` directly instead of re-deriving the O(model size) cache
+    // key per input.
+    let plan = plan_for(qm, modes)?;
+    run_plan_batch(&plan, inputs, mac, workers)
 }
 
 /// Kernel modes for a quantized model: the mode matching each layer's
 /// bit-width (the extended-ISA execution).
 pub fn modes_for(qm: &QModel) -> Vec<Option<MacMode>> {
-    qm.bits.iter().map(|&b| MacMode::from_weight_bits(b)).collect()
+    super::plan::canonical_modes(qm)
 }
 
 /// All-baseline modes (the original-Ibex execution).
@@ -311,6 +341,90 @@ pub fn baseline_modes(qm: &QModel) -> Vec<Option<MacMode>> {
 /// paper's depthwise observation)?
 pub fn is_depthwise(qm: &QModel, idx: usize) -> bool {
     qm.analysis.layers[idx].kind == QKind::Depthwise
+}
+
+// ------------------------------------------------------ trace sidecar ---
+
+/// [`PlanObserver`] that writes one JSON line per executed step — the
+/// trace sidecar behind `mpnn trace --trace-steps <path>`. Each record
+/// carries the step index/kind, the quantizable-layer index and mode
+/// (kernel steps), and the step's own cycles / retired instructions /
+/// memory accesses. Host glue steps record `null` counters (they run
+/// off-core).
+///
+/// IO errors are latched and reported by [`StepTrace::finish`] so the
+/// observer callback stays infallible.
+pub struct StepTrace {
+    out: std::io::BufWriter<std::fs::File>,
+    path: std::path::PathBuf,
+    err: Option<std::io::Error>,
+    /// Steps written so far.
+    pub steps: usize,
+}
+
+impl StepTrace {
+    /// Create (truncate) the JSONL trace file at `path`.
+    pub fn create(path: &std::path::Path) -> Result<Self> {
+        use crate::error::Context;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating step trace {}", path.display()))?;
+        Ok(StepTrace {
+            out: std::io::BufWriter::new(file),
+            path: path.to_path_buf(),
+            err: None,
+            steps: 0,
+        })
+    }
+
+    /// Flush the trace and surface any latched IO error.
+    pub fn finish(mut self) -> Result<()> {
+        use crate::error::Context;
+        use std::io::Write;
+        if let Some(e) = self.err.take() {
+            return Err(crate::error::Error::from(e))
+                .with_context(|| format!("writing step trace {}", self.path.display()));
+        }
+        self.out
+            .flush()
+            .with_context(|| format!("flushing step trace {}", self.path.display()))
+    }
+}
+
+impl PlanObserver for StepTrace {
+    fn on_step(&mut self, ev: &StepEvent<'_>) {
+        use crate::json::Json;
+        use std::io::Write;
+        if self.err.is_some() {
+            return;
+        }
+        let record = Json::obj(vec![
+            ("step", Json::i(ev.index as i64)),
+            ("kind", Json::s(ev.kind)),
+            ("layer", ev.layer.map_or(Json::Null, |l| Json::i(l as i64))),
+            (
+                "mode",
+                ev.mode.map_or(Json::Null, |m| Json::s(&format!("{m:?}").to_lowercase())),
+            ),
+            ("cycles", ev.perf.map_or(Json::Null, |p| Json::i(p.cycles as i64))),
+            ("instret", ev.perf.map_or(Json::Null, |p| Json::i(p.instret as i64))),
+            (
+                "mem_accesses",
+                ev.perf.map_or(Json::Null, |p| Json::i(p.mem_accesses() as i64)),
+            ),
+        ]);
+        // `Json::to_string` is inherent (no `Display` impl on `Json`).
+        let line = record.to_string();
+        if let Err(e) = writeln!(self.out, "{line}") {
+            self.err = Some(e);
+        } else {
+            self.steps += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -397,5 +511,84 @@ mod tests {
             assert_eq!(batch[i].logits, solo.logits, "input {i}");
             assert_eq!(batch[i].total_cycles(), solo.total_cycles(), "input {i}");
         }
+    }
+
+    #[test]
+    fn observer_sees_every_step_with_kernel_perf() {
+        struct Collect {
+            events: Vec<(usize, &'static str, Option<usize>, bool)>,
+        }
+        impl PlanObserver for Collect {
+            fn on_step(&mut self, ev: &StepEvent<'_>) {
+                self.events.push((ev.index, ev.kind, ev.layer, ev.perf.is_some()));
+            }
+        }
+        let spec = toy_residual_model();
+        let n = crate::models::analyze(&spec).layers.len();
+        let params = random_params(&spec, 21);
+        let ds = generate(22, 3, spec.input, spec.num_classes, 0.4);
+        let sites = calibrate(&spec, &params, &ds.images[..2]);
+        let qm = quantize_model(&spec, &params, &sites, &vec![4; n]);
+        let input = quantize_input(&qm, &ds.images[2]);
+        let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+
+        let mut obs = Collect { events: Vec::new() };
+        let run = run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut obs)).unwrap();
+        // One event per step, in plan order.
+        assert_eq!(obs.events.len(), plan.steps.len());
+        for (i, ev) in obs.events.iter().enumerate() {
+            assert_eq!(ev.0, i, "events arrive in plan order");
+        }
+        // Kernel events carry perf and the layer index; glue events don't.
+        let kernel_events: Vec<_> = obs.events.iter().filter(|e| e.3).collect();
+        assert_eq!(kernel_events.len(), run.layers.len());
+        assert_eq!(kernel_events.len(), qm.layers.len());
+        for (ev, lr) in kernel_events.iter().zip(&run.layers) {
+            assert_eq!(ev.2, Some(lr.layer));
+        }
+        // Glue kinds appear (pool + residual save/add).
+        let kinds: Vec<&str> = obs.events.iter().map(|e| e.1).collect();
+        for k in ["maxpool2", "avgpool_global", "save_skip", "add_skip"] {
+            assert!(kinds.contains(&k), "missing {k} in {kinds:?}");
+        }
+        // An un-observed run is identical (observers are read-only).
+        let bare = run_plan(&plan, &input, MacUnitConfig::full(), None).unwrap();
+        assert_eq!(bare.logits, run.logits);
+        assert_eq!(bare.total_cycles(), run.total_cycles());
+    }
+
+    #[test]
+    fn step_trace_writes_one_json_line_per_step() {
+        let spec = toy_residual_model();
+        let n = crate::models::analyze(&spec).layers.len();
+        let params = random_params(&spec, 31);
+        let ds = generate(32, 3, spec.input, spec.num_classes, 0.4);
+        let sites = calibrate(&spec, &params, &ds.images[..2]);
+        let qm = quantize_model(&spec, &params, &sites, &vec![8; n]);
+        let input = quantize_input(&qm, &ds.images[1]);
+        let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("mpnn_trace_{}", std::process::id()));
+        let path = dir.join("steps.jsonl");
+        let mut trace = StepTrace::create(&path).unwrap();
+        run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut trace)).unwrap();
+        let steps = trace.steps;
+        trace.finish().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), plan.steps.len());
+        assert_eq!(steps, plan.steps.len());
+        let mut kernel_lines = 0;
+        for line in &lines {
+            let j = crate::json::Json::parse(line).unwrap();
+            assert!(j.get("step").and_then(|v| v.as_i64()).is_some());
+            assert!(j.get("kind").is_some());
+            if j.get("cycles").and_then(|v| v.as_i64()).is_some() {
+                kernel_lines += 1;
+            }
+        }
+        assert_eq!(kernel_lines, qm.layers.len(), "kernel steps carry cycle counters");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

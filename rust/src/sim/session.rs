@@ -118,6 +118,18 @@ pub struct SessionStats {
     pub runs: AtomicU64,
     /// Cumulative superinstruction hits across engine runs.
     pub engine: EngineHitTotals,
+    /// Execution plans compiled — one per distinct
+    /// `(model, config, modes)` the process ever lowered (see
+    /// [`crate::models::plan::plan_for`]). A DSE sweep compiles each
+    /// configuration exactly once; everything else is a `plan_hits`.
+    pub plan_compiles: AtomicU64,
+    /// Plan-cache hits: replays of an already-compiled plan (batch
+    /// inputs, the host differential check, repeated configs).
+    ///
+    /// The plan counters are process-local observability and are
+    /// deliberately **not** part of [`SessionSnapshot`] — the shard
+    /// artifact schema stays at its current version.
+    pub plan_hits: AtomicU64,
 }
 
 /// Plain-value snapshot of [`SessionStats`] — the unit the sharded DSE

@@ -101,8 +101,40 @@ fn docs_mention_live_symbols() {
         "SessionSnapshot",
         "ShardError",
         "pareto_front",
+        // The execution-plan section must keep naming the lowering
+        // pipeline, the cache keying and the observer contract.
+        "ExecutionPlan",
+        "plan_for",
+        "host_logits",
+        "run_plan",
+        "PlanObserver",
+        "StepTrace",
+        "plan_compiles",
+        "--trace-steps",
+        "--merge-dir",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
+    }
+    // The plan symbols the docs name must still exist in the crate.
+    let plan = fs::read_to_string("rust/src/models/plan.rs").unwrap();
+    for sym in [
+        "pub struct ExecutionPlan",
+        "pub fn plan_for",
+        "pub fn compile",
+        "pub fn host_logits",
+        "pub trait PlanObserver",
+        "pub struct StepEvent",
+        "pub enum Step",
+    ] {
+        assert!(plan.contains(sym), "models/plan.rs lost `{sym}` — update the docs");
+    }
+    let sim_exec = fs::read_to_string("rust/src/models/sim_exec.rs").unwrap();
+    for sym in ["pub fn run_plan", "pub fn run_plan_batch", "pub struct StepTrace"] {
+        assert!(sim_exec.contains(sym), "models/sim_exec.rs lost `{sym}` — update the docs");
+    }
+    let session = fs::read_to_string("rust/src/sim/session.rs").unwrap();
+    for sym in ["plan_compiles", "plan_hits"] {
+        assert!(session.contains(sym), "sim/session.rs lost `{sym}` — update the docs");
     }
     // The shard symbols the docs name must still exist in the crate.
     let shard = fs::read_to_string("rust/src/dse/shard.rs").unwrap();

@@ -1,0 +1,103 @@
+//! Plan-cache accounting acceptance: a DSE sweep through the
+//! ISS-backed coordinator compiles each `(model, config)` execution
+//! plan **exactly once**, observed via the cache stats on the global
+//! [`SessionStats`](mpnn::sim::session::SessionStats).
+//!
+//! This file deliberately holds a single `#[test]`: integration-test
+//! files are separate processes, so this test is the sole owner of the
+//! process-global `plan_compiles` / `plan_hits` counters and can
+//! assert them exactly (the sibling `tests/plan_equivalence.rs` checks
+//! the same contract structurally, via `Arc` identity, where counter
+//! exactness would race with concurrent tests).
+
+use mpnn::coordinator::{Coordinator, IssEval};
+use mpnn::models::format::LoadedModel;
+use mpnn::models::infer::{calibrate, random_params};
+use mpnn::models::sim_exec::{modes_for, run_model};
+use mpnn::models::synthetic::{generate, generate_split};
+use mpnn::models::{LayerSpec, ModelSpec, Node};
+use mpnn::sim::MacUnitConfig;
+use std::sync::atomic::Ordering;
+
+fn tiny_model(seed: u64) -> LoadedModel {
+    let spec = ModelSpec {
+        name: "tiny",
+        input: [8, 8, 3],
+        num_classes: 4,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::MaxPool2),
+            Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+        ],
+    };
+    let params = random_params(&spec, seed);
+    let calib = generate(seed ^ 1, 8, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(&spec, &params, &calib.images[..4]);
+    let test = generate_split(seed ^ 1, seed ^ 2, 8, spec.input, spec.num_classes, 0.4);
+    LoadedModel { spec, params, sites, float_acc: 1.0, test }
+}
+
+#[test]
+fn iss_sweep_compiles_each_config_plan_exactly_once() {
+    let model = tiny_model(77);
+    let test = model.test.clone();
+    let c = Coordinator::new(model, Box::new(IssEval::new(test, 2)), 2).unwrap();
+    let n = c.analysis.layers.len();
+
+    let stats = &mpnn::sim::SimSession::global().stats;
+    let compiles0 = stats.plan_compiles.load(Ordering::Relaxed);
+    let hits0 = stats.plan_hits.load(Ordering::Relaxed);
+
+    // Four distinct configurations plus one duplicate: the duplicate is
+    // served from the coordinator's result cache and never reaches the
+    // evaluator, so exactly four plans compile.
+    let configs = vec![
+        vec![8u32; n],
+        vec![4u32; n],
+        vec![2u32; n],
+        {
+            let mut m = vec![8u32; n];
+            m[n - 1] = 2;
+            m
+        },
+        vec![8u32; n], // duplicate
+    ];
+    let pts = c.run_sweep(&configs, 4).unwrap();
+    assert_eq!(pts.len(), configs.len());
+    for p in &pts {
+        assert!(p.iss_cycles.unwrap() > 0);
+        assert_eq!(p.divergence, Some(0.0), "plan-driven host/ISS paths must agree");
+    }
+
+    let compiles_sweep = stats.plan_compiles.load(Ordering::Relaxed) - compiles0;
+    let hits_sweep = stats.plan_hits.load(Ordering::Relaxed) - hits0;
+    assert_eq!(compiles_sweep, 4, "one plan per distinct (model, config)");
+    // IssEval lowers once per config and replays the Arc directly, so
+    // the sweep itself produces no lookups — except when the duplicate
+    // config races its first instance past the coordinator's result
+    // cache, in which case the losing evaluation is a plan-cache hit.
+    assert!(hits_sweep <= 1, "unexpected plan-cache traffic during the sweep: {hits_sweep}");
+
+    // Re-sweeping the same configs is entirely cache-served at the
+    // coordinator layer: no new plans, no new lookups.
+    let hits_after_sweep = stats.plan_hits.load(Ordering::Relaxed);
+    let again = c.run_sweep(&configs, 4).unwrap();
+    assert_eq!(again.len(), pts.len());
+    assert_eq!(stats.plan_compiles.load(Ordering::Relaxed) - compiles0, 4);
+    assert_eq!(stats.plan_hits.load(Ordering::Relaxed), hits_after_sweep);
+
+    // A direct ISS run of a swept configuration resolves the *same*
+    // plan through the cache — content-addressed, even though this
+    // QModel is assembled by a different code path (coordinator qcache
+    // vs quantize_model): a hit, not a fifth compile.
+    let qm = c.quantized(&vec![4u32; n]);
+    let input =
+        mpnn::models::infer::quantize_input(&qm, &c.model.test.images[0]);
+    run_model(&qm, &input, &modes_for(&qm), MacUnitConfig::full()).unwrap();
+    assert_eq!(
+        stats.plan_compiles.load(Ordering::Relaxed) - compiles0,
+        4,
+        "direct run of a swept config must not recompile"
+    );
+    assert!(stats.plan_hits.load(Ordering::Relaxed) - hits0 >= 1);
+}

@@ -1,0 +1,403 @@
+//! Execution-plan equivalence property tests.
+//!
+//! The plan refactor's contract is *behaviour-preserving lowering*:
+//! compiling a `(QModel, modes)` pair into an `ExecutionPlan` and
+//! interpreting it must be bit-identical to the pre-refactor graph
+//! walks. To pin that against the actual pre-refactor behaviour, this
+//! file carries **verbatim reimplementations of the legacy walkers**
+//! (the old `infer::qforward` and `sim_exec::run_model` bodies, which
+//! re-derived kernel specs / padding / requants on every run) built on
+//! the same public layer/kernel APIs, and property-checks:
+//!
+//! 1. plan-driven host logits ([`qforward`]) == legacy host walk,
+//!    bit-identical, and
+//! 2. plan-driven ISS runs ([`run_model`]) == legacy ISS walk —
+//!    logits, per-layer cycle counts and memory accesses — for both
+//!    the extended (per-layer modes) and baseline executions,
+//!
+//! across the synthetic zoo models and seeded-random mixed-precision
+//! configurations.
+
+use mpnn::isa::MacMode;
+use mpnn::kernels::conv::ConvSpec;
+use mpnn::kernels::dense::DenseSpec;
+use mpnn::kernels::depthwise::DwSpec;
+use mpnn::kernels::run::{run_conv_with, run_dense_with, run_depthwise_with};
+use mpnn::models::infer::{
+    calibrate, qforward, quantize_input, quantize_model, random_params, residual_requants, QModel,
+};
+use mpnn::models::plan::{canonical_modes, compile, plan_for};
+use mpnn::models::sim_exec::{baseline_modes, modes_for, run_model, run_plan};
+use mpnn::models::synthetic::generate;
+use mpnn::models::{zoo, LayerSpec, ModelSpec, Node};
+use mpnn::nn::layers::{
+    pad_spatial, qadd, qavgpool_global, qconv2d, qdense, qdepthwise, qmaxpool2, ConvGeom,
+};
+use mpnn::nn::tensor::{pad_channels, Tensor};
+use mpnn::rng::Rng;
+use mpnn::sim::{MacUnitConfig, PerfCounters};
+
+// ------------------------------------------------ legacy host walker ---
+
+enum Flow {
+    Map(Tensor<i8>),
+    Flat(Vec<i8>),
+}
+
+impl Flow {
+    fn flat(self) -> Vec<i8> {
+        match self {
+            Flow::Map(t) => t.data,
+            Flow::Flat(v) => v,
+        }
+    }
+    fn map(self) -> Tensor<i8> {
+        match self {
+            Flow::Map(t) => t,
+            Flow::Flat(_) => panic!("expected a feature map"),
+        }
+    }
+}
+
+fn legacy_run_qlayer(qm: &QModel, l: &LayerSpec, x: Flow, li: &mut usize) -> Flow {
+    match *l {
+        LayerSpec::Conv { cout, k, stride, pad, relu } => {
+            let q = &qm.layers[*li];
+            *li += 1;
+            Flow::Map(qconv2d(&x.map(), &q.qw, &q.bias, cout, ConvGeom { k, stride, pad }, q.rq, relu))
+        }
+        LayerSpec::Depthwise { k, stride, pad, relu } => {
+            let q = &qm.layers[*li];
+            *li += 1;
+            Flow::Map(qdepthwise(&x.map(), &q.qw, &q.bias, ConvGeom { k, stride, pad }, q.rq, relu))
+        }
+        LayerSpec::Dense { out, relu } => {
+            let q = &qm.layers[*li];
+            *li += 1;
+            let flat = x.flat();
+            let (qv, _) = qdense(&flat, &q.qw, &q.bias, out, Some(q.rq), relu);
+            Flow::Flat(qv)
+        }
+        LayerSpec::MaxPool2 => Flow::Map(qmaxpool2(&x.map())),
+        LayerSpec::AvgPoolGlobal => {
+            let m = x.map();
+            let c = m.shape[2];
+            Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m)))
+        }
+    }
+}
+
+/// The pre-refactor `infer::qforward`: a per-run graph walk.
+fn legacy_qforward(qm: &QModel, input: &Tensor<i8>) -> Vec<i32> {
+    let mut x = Flow::Map(input.clone());
+    let mut li = 0usize;
+    let mut res_i = 0usize;
+    for node in &qm.spec.nodes {
+        match node {
+            Node::Layer(LayerSpec::Dense { out, .. }) if qm.analysis.layers[li].is_last => {
+                let q = &qm.layers[li];
+                let flat = x.flat();
+                let (_, accs) = qdense(&flat, &q.qw, &q.bias, *out, None, false);
+                return accs;
+            }
+            Node::Layer(l) => {
+                x = legacy_run_qlayer(qm, l, x, &mut li);
+            }
+            Node::Residual(inner) => {
+                let skip = x.map();
+                let mut b = Flow::Map(skip.clone());
+                for l in inner {
+                    b = legacy_run_qlayer(qm, l, b, &mut li);
+                }
+                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
+                res_i += 1;
+                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
+            }
+        }
+    }
+    panic!("model must end in a dense logits layer")
+}
+
+// ------------------------------------------------- legacy ISS walker ---
+
+fn pad_conv_weights(qw: &[i8], cout: usize, k: usize, cin: usize, cin_p: usize) -> Vec<i8> {
+    if cin == cin_p {
+        return qw.to_vec();
+    }
+    let mut out = vec![0i8; cout * k * k * cin_p];
+    for oc in 0..cout {
+        for t in 0..k * k {
+            let src = (oc * k * k + t) * cin;
+            let dst = (oc * k * k + t) * cin_p;
+            out[dst..dst + cin].copy_from_slice(&qw[src..src + cin]);
+        }
+    }
+    out
+}
+
+/// The pre-refactor `sim_exec::run_model`: per-run spec derivation,
+/// weight padding and packing (packing happens inside `run_*_with`).
+fn legacy_run_model(
+    qm: &QModel,
+    input: &Tensor<i8>,
+    modes: &[Option<MacMode>],
+    mac: MacUnitConfig,
+) -> (Vec<i32>, Vec<PerfCounters>) {
+    assert_eq!(modes.len(), qm.layers.len());
+    let mut perfs: Vec<PerfCounters> = Vec::new();
+    let mut li = 0usize;
+    let mut res_i = 0usize;
+
+    fn run_one(
+        qm: &QModel,
+        modes: &[Option<MacMode>],
+        mac: MacUnitConfig,
+        l: &LayerSpec,
+        x: Flow,
+        li: &mut usize,
+        perfs: &mut Vec<PerfCounters>,
+    ) -> (Flow, Option<Vec<i32>>) {
+        let idx = *li;
+        let q = &qm.layers[idx];
+        let info = &qm.analysis.layers[idx];
+        let mode = modes[idx];
+        match *l {
+            LayerSpec::Conv { cout, k, stride, pad, relu } => {
+                *li += 1;
+                let xp = pad_spatial(&x.map(), pad);
+                let (xp, cin_p) = if mode.is_some() && xp.shape[2] % 4 != 0 {
+                    let p = pad_channels(&xp, 4, 0);
+                    let c = p.shape[2];
+                    (p, c)
+                } else {
+                    let c = xp.shape[2];
+                    (xp, c)
+                };
+                let w = pad_conv_weights(&q.qw, cout, k, info.in_shape[2], cin_p);
+                let spec = ConvSpec {
+                    h: xp.shape[0],
+                    w: xp.shape[1],
+                    cin: cin_p,
+                    cout,
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let (out, perf) = run_conv_with(spec, mode, mac, &xp.data, &w, &q.bias).unwrap();
+                perfs.push(perf);
+                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), cout], out)), None)
+            }
+            LayerSpec::Depthwise { k, stride, pad, relu } => {
+                *li += 1;
+                let xp = pad_spatial(&x.map(), pad);
+                let spec = DwSpec {
+                    h: xp.shape[0],
+                    w: xp.shape[1],
+                    c: xp.shape[2],
+                    k,
+                    stride,
+                    rq: q.rq,
+                    relu,
+                };
+                let (out, perf) = run_depthwise_with(spec, mode, mac, &xp.data, &q.qw, &q.bias).unwrap();
+                perfs.push(perf);
+                (Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None)
+            }
+            LayerSpec::Dense { out, relu } => {
+                let is_last = info.is_last;
+                *li += 1;
+                let flat = x.flat();
+                let spec = DenseSpec {
+                    in_dim: flat.len(),
+                    out_dim: out,
+                    rq: q.rq,
+                    relu,
+                    out_i32: is_last,
+                };
+                let (qv, accs, perf) = run_dense_with(spec, mode, mac, &flat, &q.qw, &q.bias).unwrap();
+                perfs.push(perf);
+                if is_last {
+                    (Flow::Flat(Vec::new()), Some(accs))
+                } else {
+                    (Flow::Flat(qv), None)
+                }
+            }
+            LayerSpec::MaxPool2 => (Flow::Map(qmaxpool2(&x.map())), None),
+            LayerSpec::AvgPoolGlobal => {
+                let m = x.map();
+                let c = m.shape[2];
+                (Flow::Map(Tensor::from_vec(&[1, 1, c], qavgpool_global(&m))), None)
+            }
+        }
+    }
+
+    let mut x = Flow::Map(input.clone());
+    for node in &qm.spec.nodes {
+        match node {
+            Node::Layer(l) => {
+                let (nx, logits) = run_one(qm, modes, mac, l, x, &mut li, &mut perfs);
+                if let Some(logits) = logits {
+                    return (logits, perfs);
+                }
+                x = nx;
+            }
+            Node::Residual(inner) => {
+                let skip = x.map();
+                let mut b = Flow::Map(skip.clone());
+                for l in inner {
+                    let (nb, _) = run_one(qm, modes, mac, l, b, &mut li, &mut perfs);
+                    b = nb;
+                }
+                let (rq_skip, rq_branch) = residual_requants(qm, res_i);
+                res_i += 1;
+                x = Flow::Map(qadd(&skip, rq_skip, &b.map(), rq_branch));
+            }
+        }
+    }
+    panic!("model must end in a dense logits layer")
+}
+
+// ------------------------------------------------------- the property ---
+
+fn toy_residual_model() -> ModelSpec {
+    ModelSpec {
+        name: "toy",
+        input: [8, 8, 3],
+        num_classes: 4,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::MaxPool2),
+            Node::Residual(vec![
+                LayerSpec::Conv { cout: 16, k: 1, stride: 1, pad: 0, relu: true },
+                LayerSpec::Depthwise { k: 3, stride: 1, pad: 1, relu: true },
+                LayerSpec::Conv { cout: 8, k: 1, stride: 1, pad: 0, relu: false },
+            ]),
+            Node::Layer(LayerSpec::AvgPoolGlobal),
+            Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+        ],
+    }
+}
+
+/// Depthwise + stride-2 geometry (non-trivial channel padding at the
+/// first mode conv: Cin = 3).
+fn toy_dw_stride_model() -> ModelSpec {
+    ModelSpec {
+        name: "toy_dw",
+        input: [9, 9, 3],
+        num_classes: 3,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 6, k: 3, stride: 2, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Depthwise { k: 3, stride: 2, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 8, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 3, relu: false }),
+        ],
+    }
+}
+
+fn random_bits(rng: &mut Rng, n: usize) -> Vec<u32> {
+    (0..n).map(|_| [8u32, 4, 2][rng.below(3) as usize]).collect()
+}
+
+fn check_equivalence(spec: &ModelSpec, bits: &[u32], seed: u64) {
+    let n = mpnn::models::analyze(spec).layers.len();
+    assert_eq!(bits.len(), n);
+    let params = random_params(spec, seed);
+    let ds = generate(seed ^ 0xA5, 4, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(spec, &params, &ds.images[..2]);
+    let qm = quantize_model(spec, &params, &sites, bits);
+    let mac = MacUnitConfig::full();
+
+    for (mi, input_img) in ds.images[2..].iter().enumerate() {
+        let input = quantize_input(&qm, input_img);
+
+        // 1. Host: plan-driven qforward == legacy walk, bit-identical.
+        let legacy_logits = legacy_qforward(&qm, &input);
+        let plan_logits = qforward(&qm, &input);
+        assert_eq!(plan_logits, legacy_logits, "{} bits {bits:?} input {mi}: host", spec.name);
+
+        // 2. ISS: plan-driven run == legacy walk — logits AND per-layer
+        // counters (cycles, memory accesses, instret), extended and
+        // baseline executions alike.
+        for modes in [modes_for(&qm), baseline_modes(&qm)] {
+            let (llogits, lperfs) = legacy_run_model(&qm, &input, &modes, mac);
+            let run = run_model(&qm, &input, &modes, mac).unwrap();
+            assert_eq!(run.logits, llogits, "{} bits {bits:?} input {mi}: ISS logits", spec.name);
+            assert_eq!(run.logits, legacy_logits, "{}: ISS vs host", spec.name);
+            assert_eq!(run.layers.len(), lperfs.len());
+            for (lr, lp) in run.layers.iter().zip(&lperfs) {
+                assert_eq!(
+                    lr.perf, *lp,
+                    "{} bits {bits:?} input {mi} layer {}: perf counters",
+                    spec.name, lr.layer
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_executors_match_legacy_walks_on_toy_residual() {
+    let spec = toy_residual_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_equivalence(&spec, &vec![8; n], 500);
+    check_equivalence(&spec, &vec![2; n], 501);
+    let mut rng = Rng::new(0xE0_01);
+    for round in 0..2 {
+        let bits = random_bits(&mut rng, n);
+        check_equivalence(&spec, &bits, 510 + round);
+    }
+}
+
+#[test]
+fn plan_executors_match_legacy_walks_on_dw_stride_geometry() {
+    let spec = toy_dw_stride_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_equivalence(&spec, &vec![4; n], 520);
+    let mut rng = Rng::new(0xE0_02);
+    let bits = random_bits(&mut rng, n);
+    check_equivalence(&spec, &bits, 521);
+}
+
+#[test]
+fn plan_executors_match_legacy_walks_on_lenet5() {
+    let spec = zoo::lenet5();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_equivalence(&spec, &vec![4; n], 530);
+    let mut rng = Rng::new(0xE0_03);
+    let bits = random_bits(&mut rng, n);
+    check_equivalence(&spec, &bits, 531);
+}
+
+#[test]
+fn run_plan_replays_one_compiled_plan_per_config() {
+    // Structural cache contract at the API level (process-global
+    // counter exactness lives in tests/plan_cache_stats.rs, which owns
+    // its process): repeated lookups of the same configuration return
+    // the *same* compiled plan, different modes get different plans,
+    // and a direct `compile` is interchangeable with the cached plan.
+    let spec = toy_residual_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    let params = random_params(&spec, 540);
+    let ds = generate(541, 3, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(&spec, &params, &ds.images[..2]);
+    let qm = quantize_model(&spec, &params, &sites, &vec![4; n]);
+    let input = quantize_input(&qm, &ds.images[2]);
+
+    let ext = modes_for(&qm);
+    let a = plan_for(&qm, &ext).unwrap();
+    let b = plan_for(&qm, &ext).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "same config must replay one plan");
+    let base = plan_for(&qm, &baseline_modes(&qm)).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &base), "modes are part of the plan key");
+
+    // A freshly compiled (uncached) plan is behaviourally identical to
+    // the cached one.
+    let fresh = compile(&qm, &ext).unwrap();
+    let r_cached = run_plan(&a, &input, MacUnitConfig::full(), None).unwrap();
+    let r_fresh = run_plan(&fresh, &input, MacUnitConfig::full(), None).unwrap();
+    assert_eq!(r_cached.logits, r_fresh.logits);
+    assert_eq!(r_cached.total_cycles(), r_fresh.total_cycles());
+    assert_eq!(r_cached.logits, qforward(&qm, &input), "plan ISS vs plan host");
+    assert_eq!(canonical_modes(&qm), ext);
+}

@@ -387,3 +387,81 @@ fn corrupted_and_mismatched_artifacts_fail_typed_not_panic() {
     // Empty input.
     assert!(matches!(merge(&[]), Err(ShardError::Empty)));
 }
+
+// --------------------------------------------- (e) resumable shards ---
+
+#[test]
+fn shard_resume_skips_present_indices_and_reproduces_the_full_artifact() {
+    let opts = ExpOpts {
+        artifacts: "/nonexistent".into(),
+        eval_n: 8,
+        budget: 27,
+        backend: EvalBackend::Host,
+        seed: 37,
+        ..ExpOpts::default()
+    };
+    let spec = ShardSpec::new(0, 2, ShardStrategy::Hash).unwrap();
+    let full = mpnn::exp::fig6::sweep_shard(&opts, "lenet5", &spec).unwrap();
+    assert!(full.points.len() >= 2, "need a splittable shard for this test");
+
+    // A killed run left only the first half of the shard's points: the
+    // resume must evaluate exactly the missing tail and reproduce the
+    // full artifact's points bit-for-bit (evaluation is deterministic).
+    let mut partial = full.clone();
+    partial.points.truncate(full.points.len() / 2);
+    let resumed =
+        mpnn::exp::fig6::sweep_shard_resume(&opts, "lenet5", &spec, Some(&partial), None).unwrap();
+    let rp: Vec<EvalPoint> = resumed.points.iter().map(|(_, p)| p.clone()).collect();
+    let fp: Vec<EvalPoint> = full.points.iter().map(|(_, p)| p.clone()).collect();
+    assert_eq!(
+        resumed.points.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        full.points.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        "resume restores enumeration order"
+    );
+    assert_points_bit_identical(&rp, &fp, "resumed vs fresh shard");
+
+    // Resuming an already-complete artifact evaluates nothing: points
+    // and stats are unchanged (the host sweep adds a zero session
+    // delta), so the rewritten file is byte-identical.
+    let noop = mpnn::exp::fig6::sweep_shard_resume(&opts, "lenet5", &spec, Some(&full), None).unwrap();
+    assert_eq!(noop, full, "complete artifact must resume to itself");
+    assert_eq!(noop.to_json().to_string(), full.to_json().to_string());
+
+    // Checkpointed run: with a checkpoint path the artifact is
+    // rewritten after every SHARD_CHECKPOINT_EVERY-config chunk, so a
+    // kill at any point leaves a cleanly-parsing partial artifact the
+    // next run resumes from. Same process + host evaluator = zero
+    // session deltas, so here the final file is fully byte-identical;
+    // in general only the points payload is (a cross-process ISS
+    // resume records different pool-warmth stats).
+    let dir = std::env::temp_dir().join(format!("mpnn_resume_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("lenet5.s0of2.json");
+    let checkpointed =
+        mpnn::exp::fig6::sweep_shard_resume(&opts, "lenet5", &spec, None, Some(&ckpt)).unwrap();
+    assert_eq!(checkpointed, full, "checkpointing must not change the result");
+    let on_disk = ShardArtifact::load(&ckpt).unwrap();
+    assert_eq!(on_disk, full, "last checkpoint write is the complete artifact");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // And the resumed artifact still merges into the exact full sweep.
+    let other = ShardSpec::new(1, 2, ShardStrategy::Hash).unwrap();
+    let art1 = mpnn::exp::fig6::sweep_shard(&opts, "lenet5", &other).unwrap();
+    let merged = merge(&[resumed, art1]).unwrap();
+    let direct = mpnn::exp::fig6::sweep_model(&opts, "lenet5").unwrap();
+    assert_points_bit_identical(&merged.points, &direct.points, "merged-after-resume");
+    assert_eq!(merged.front, direct.front);
+
+    // A prior artifact from a *different* sweep is refused, not mixed.
+    let mut stale = full.clone();
+    stale.seed = 38;
+    let err =
+        mpnn::exp::fig6::sweep_shard_resume(&opts, "lenet5", &spec, Some(&stale), None).unwrap_err();
+    assert!(format!("{err}").contains("different sweep"), "{err}");
+    // A mistagged point (wrong config at an index) is caught too.
+    let mut evil = full.clone();
+    evil.points[0].1.config[1] = 33;
+    let err =
+        mpnn::exp::fig6::sweep_shard_resume(&opts, "lenet5", &spec, Some(&evil), None).unwrap_err();
+    assert!(format!("{err}").contains("mistagged"), "{err}");
+}
