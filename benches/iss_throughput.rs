@@ -11,14 +11,18 @@
 //!    requant-epilogue superinstruction and counted-loop strip
 //!    execution, across dense/conv kernel families. Timing is
 //!    value-independent, so the kernels run over zeroed operand
-//!    buffers through the pooled session.
+//!    buffers through the pooled session,
+//! 3. **analytic fast path vs full ISS** on a warm 16-input lenet5
+//!    batch — the `ExecMode::Analytic` replay speedup, landed in its
+//!    own `BENCH_analytic_speedup.json` trajectory after a bit-identity
+//!    check of logits and counters.
 //!
 //! `BENCH_ITERS` overrides the measured iteration count (CI smoke runs
-//! set 2); `ISS_BENCH_ASSERT` / `ISS_FUSION_ASSERT` gate the two
-//! worst-case speedups (floors well below target so shared-runner
-//! noise can't flake CI, while a true regression still fails) — the
-//! floors are skipped on single-sample runs, where a ratio of two
-//! single timings is meaningless.
+//! set 2); `ISS_BENCH_ASSERT` / `ISS_FUSION_ASSERT` /
+//! `ANALYTIC_BENCH_ASSERT` gate the worst-case speedups (floors well
+//! below target so shared-runner noise can't flake CI, while a true
+//! regression still fails) — the floors are skipped on single-sample
+//! runs, where a ratio of two single timings is meaningless.
 
 use mpnn::bench::{bench_val, iters_from_env, JsonReport};
 use mpnn::dse::cycles::measure_layer_backend;
@@ -213,9 +217,65 @@ fn main() {
         report.summary("plan_hits_2input_batch", hits as f64);
     }
 
+    // ---- Part 4: analytic fast path vs full ISS on a 16-input batch ----
+    // The §Perf metric of the analytic backend: once the session cost
+    // cache knows every kernel step of a configuration, a batch replays
+    // as host kernels with cache-served counters — the ISS runs zero
+    // times. Results are bit-compared against the full ISS batch before
+    // any timing claim, and land in their own trajectory file
+    // (`BENCH_analytic_speedup.json`).
+    let analytic_speedup = {
+        use mpnn::models::infer::{quantize_input, quantize_model};
+        use mpnn::models::plan::plan_for;
+        use mpnn::models::sim_exec::{modes_for, run_plan_batch, ExecMode};
+        use std::sync::atomic::Ordering;
+
+        let mut areport = JsonReport::new("analytic_speedup");
+        let model = opts.load_model("lenet5").unwrap();
+        let n = mpnn::models::analyze(&model.spec).layers.len();
+        let qm = quantize_model(&model.spec, &model.params, &model.sites, &vec![4u32; n]);
+        let inputs: Vec<_> =
+            model.test.images[..16].iter().map(|im| quantize_input(&qm, im)).collect();
+        let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+        let mac = MacUnitConfig::full();
+
+        // Warm the cost cache outside the timed region: the comparison
+        // is full-ISS batch vs the analytic steady state a sweep sits
+        // in, not vs the one-off cold measurement pass.
+        run_plan_batch(&plan, &inputs[..1], mac, ExecMode::Analytic, 1).unwrap();
+
+        println!("analytic fast path vs full ISS: lenet5 4-bit, 16-input batch, 4 workers");
+        let (iss_stats, iss_runs) = bench_val("iss/lenet5-batch16/iss", iters, || {
+            run_plan_batch(&plan, &inputs, mac, ExecMode::Iss, 4).unwrap()
+        });
+        let (an_stats, an_runs) = bench_val("iss/lenet5-batch16/analytic", iters, || {
+            run_plan_batch(&plan, &inputs, mac, ExecMode::Analytic, 4).unwrap()
+        });
+        // Bit-identity sanity before any timing claim.
+        assert_eq!(iss_runs.len(), an_runs.len());
+        for (a, b) in iss_runs.iter().zip(&an_runs) {
+            assert_eq!(a.logits, b.logits, "analytic logits must match the ISS");
+            assert_eq!(a.total_cycles(), b.total_cycles(), "analytic counters must match the ISS");
+        }
+        let speedup = iss_stats.median().as_secs_f64() / an_stats.median().as_secs_f64();
+        let hits = session.stats.analytic_hits.load(Ordering::Relaxed);
+        println!(
+            "  => analytic replay speedup on the 16-input batch: {speedup:.1}x \
+             (analytic cost-cache hits so far: {hits})"
+        );
+        areport.record(&iss_stats, &[("batch", 16.0)]);
+        areport.record(&an_stats, &[("batch", 16.0)]);
+        areport.summary("analytic_speedup_batch16", speedup);
+        areport.summary("analytic_hits", hits as f64);
+        let apath = areport.write().expect("write bench json");
+        println!("bench json: {}", apath.display());
+        speedup
+    };
+
     println!(
         "iss_throughput: worst engine-vs-legacy {mode_worst:.2}x (target >= 2x), \
-         worst fusion-generation {fusion_worst:.2}x (target >= 1.5x)"
+         worst fusion-generation {fusion_worst:.2}x (target >= 1.5x), \
+         analytic batch replay {analytic_speedup:.1}x (target >= 5x)"
     );
 
     // Regression gates, opt-in via env (CI uses conservative floors).
@@ -236,6 +296,13 @@ fn main() {
             assert!(
                 fusion_worst >= min,
                 "fusion regression: worst generation speedup {fusion_worst:.2}x < {min}x"
+            );
+        }
+        if let Some(min) = env_floor("ANALYTIC_BENCH_ASSERT") {
+            assert!(
+                analytic_speedup >= min,
+                "analytic fast-path regression: 16-input batch speedup \
+                 {analytic_speedup:.2}x < {min}x"
             );
         }
     }

@@ -14,7 +14,7 @@
 //! cache ([`crate::kernels::run`]). Results are cached per
 //! configuration so repeated sweeps (Fig. 6 → Fig. 8 reuse) are free.
 //!
-//! Three accuracy backends implement [`AccuracyEval`] (see
+//! Four accuracy backends implement [`AccuracyEval`] (see
 //! `docs/EVALUATORS.md` for the fidelity/speed trade-offs and how to
 //! pick one per experiment):
 //!
@@ -28,6 +28,14 @@
 //!   come from the shared kernel cache and simulator memories from the
 //!   global session pool, so per-configuration cost during sweeps
 //!   stays amortised.
+//! * [`AnalyticEval`] — [`IssEval`]'s analytic sibling: kernel steps
+//!   run on the ISS only until the session
+//!   [`CostCache`](crate::sim::session::CostCache) knows their cost
+//!   key, then replay as host kernels with cache-served counters
+//!   ([`ExecMode::Analytic`](crate::models::sim_exec::ExecMode)) — a
+//!   batch of N inputs costs ~1 ISS execution per distinct kernel step
+//!   and a warm sweep ~0, with a seeded sampled audit
+//!   (`--audit-every K`) re-checking the contract on the real ISS.
 //! * [`PjrtEval`] — batched inference through the AOT model artifact
 //!   (needs the `pjrt` feature plus artifacts).
 //!
@@ -43,7 +51,9 @@ use crate::error::{Error, Result};
 use crate::models::format::LoadedModel;
 use crate::models::infer::{argmax_i32, qforward, quantize_input, QModel};
 use crate::models::plan::{host_logits, plan_for};
-use crate::models::sim_exec::{baseline_modes, modes_for, run_plan_batch};
+use crate::models::sim_exec::{
+    audit_indices, audit_run, baseline_modes, modes_for, run_plan_batch, ExecMode,
+};
 use crate::models::synthetic::Dataset;
 use crate::nn::tensor::Tensor;
 use crate::sim::MacUnitConfig;
@@ -67,6 +77,11 @@ pub struct EvalReport {
     /// Host-vs-backend top-1 disagreement fraction from [`IssEval`]'s
     /// differential check (`Some(0.0)` is the healthy reading).
     pub divergence: Option<f32>,
+    /// Batch elements the analytic backend replayed on the real ISS
+    /// for its sampled differential audit ([`AnalyticEval`] with
+    /// `audit_every > 0` only). A mismatch never reaches this report —
+    /// it fails the evaluation with a typed error instead.
+    pub audited: Option<u32>,
 }
 
 impl EvalReport {
@@ -207,7 +222,7 @@ impl AccuracyEval for IssEval {
         // the metric exists to catch.
         let modes = modes_for(qm);
         let plan = plan_for(qm, &modes)?;
-        let runs = run_plan_batch(&plan, &inputs, self.mac, self.workers)?;
+        let runs = run_plan_batch(&plan, &inputs, self.mac, ExecMode::Iss, self.workers)?;
         let mut correct = 0usize;
         let mut disagree = 0usize;
         let mut cycles = 0u64;
@@ -234,10 +249,104 @@ impl AccuracyEval for IssEval {
             iss_cycles: Some(cycles / n as u64),
             iss_mem_accesses: Some(accesses / n as u64),
             divergence: if self.differential { Some(disagree as f32 / n as f32) } else { None },
+            audited: None,
         })
     }
     fn name(&self) -> &'static str {
         "iss"
+    }
+}
+
+/// Analytic evaluator: [`IssEval`]'s fast sibling. The batch runs under
+/// [`ExecMode::Analytic`] — each distinct kernel step executes on the
+/// ISS only until the session's
+/// [`CostCache`](crate::sim::session::CostCache) holds its counters,
+/// then every further execution runs the bit-exact host kernel and
+/// takes cycles/mem/instret/macs from the cache. Accuracy, cycles and
+/// memory traffic come out of the same report fields as [`IssEval`],
+/// and because the per-layer counters are cache-exact, a warm analytic
+/// evaluation is **byte-identical** to the full-ISS one — only the
+/// evaluator label differs (CI's analytic smoke asserts exactly this
+/// with `audit_every = 1`).
+///
+/// `audit_every = K > 0` replays every Kth batch element (seeded,
+/// deterministic — [`audit_indices`]) on the real ISS and bit-compares
+/// logits and per-layer counters; any disagreement fails the
+/// evaluation with a typed "analytic audit mismatch" error and bumps
+/// `SessionStats::audit_mismatches`.
+pub struct AnalyticEval {
+    /// Evaluation set.
+    pub test: Dataset,
+    /// MAC-unit features of the simulated core.
+    pub mac: MacUnitConfig,
+    /// Worker threads fanning the input batch over the executors.
+    pub workers: usize,
+    /// Run the host-reference differential check and report
+    /// [`EvalReport::divergence`]. On by default.
+    pub differential: bool,
+    /// Audit cadence: replay every `audit_every`-th batch element on
+    /// the real ISS (0 = off, 1 = every element).
+    pub audit_every: usize,
+    /// Seed for the audit phase ([`audit_indices`]).
+    pub audit_seed: u64,
+}
+
+impl AnalyticEval {
+    /// Analytic evaluator with the full MAC unit, the differential
+    /// check enabled and auditing off.
+    pub fn new(test: Dataset, workers: usize) -> Self {
+        AnalyticEval {
+            test,
+            mac: MacUnitConfig::full(),
+            workers: workers.max(1),
+            differential: true,
+            audit_every: 0,
+            audit_seed: 0,
+        }
+    }
+}
+
+impl AccuracyEval for AnalyticEval {
+    fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport> {
+        let n = n.min(self.test.images.len());
+        ensure!(n > 0, "AnalyticEval: empty evaluation set");
+        let inputs: Vec<Tensor<i8>> =
+            self.test.images[..n].iter().map(|im| quantize_input(qm, im)).collect();
+        let modes = modes_for(qm);
+        let plan = plan_for(qm, &modes)?;
+        let runs = run_plan_batch(&plan, &inputs, self.mac, ExecMode::Analytic, self.workers)?;
+        // Sampled differential audit: a mismatch is a hard, typed
+        // failure — an analytic sweep must never silently drift from
+        // what the ISS would have measured.
+        let audits = audit_indices(self.audit_seed, n, self.audit_every);
+        for &i in &audits {
+            audit_run(&plan, &inputs[i], self.mac, &runs[i])?;
+        }
+        let mut correct = 0usize;
+        let mut disagree = 0usize;
+        let mut cycles = 0u64;
+        let mut accesses = 0u64;
+        for ((run, input), &label) in runs.iter().zip(&inputs).zip(&self.test.labels) {
+            let pred = run.argmax();
+            if pred == label {
+                correct += 1;
+            }
+            if self.differential && argmax_i32(&host_logits(&plan, input)) != pred {
+                disagree += 1;
+            }
+            cycles += run.total_cycles();
+            accesses += run.total_accesses();
+        }
+        Ok(EvalReport {
+            accuracy: correct as f32 / n as f32,
+            iss_cycles: Some(cycles / n as u64),
+            iss_mem_accesses: Some(accesses / n as u64),
+            divergence: if self.differential { Some(disagree as f32 / n as f32) } else { None },
+            audited: if self.audit_every > 0 { Some(audits.len() as u32) } else { None },
+        })
+    }
+    fn name(&self) -> &'static str {
+        "analytic"
     }
 }
 

@@ -10,17 +10,32 @@
 //! pooled), and [`CycleModel::build`] fans the independent
 //! (layer × variant) measurements out over a worker pool — the
 //! measurement matrix is embarrassingly parallel.
+//!
+//! [`measure_layer`] shares the session-level analytic
+//! [`CostCache`](crate::sim::session::CostCache) with the analytic
+//! execution backend
+//! ([`ExecMode::Analytic`](crate::models::sim_exec::ExecMode)): both
+//! consult and populate the same `(shape, mode, mac)`-keyed counters,
+//! so the per-layer table and whole-model analytic runs can never
+//! disagree — and a table built after an analytic sweep (or vice versa)
+//! measures nothing twice.
 
 use crate::error::Result;
 use crate::isa::MacMode;
 use crate::kernels::conv::ConvSpec;
 use crate::kernels::dense::DenseSpec;
 use crate::kernels::depthwise::DwSpec;
-use crate::kernels::run::{run_conv_backend, run_dense_backend, run_depthwise_backend, ExecBackend};
+use crate::kernels::run::{
+    conv_cost_key, dense_cost_key, depthwise_cost_key, run_conv_staged, run_dense_staged,
+    run_depthwise_staged, ExecBackend, StagedWeights,
+};
 use crate::models::{ModelAnalysis, QKind, QLayerInfo};
+use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
 use crate::nn::quant::Requant;
 use crate::rng::Rng;
-use crate::sim::MacUnitConfig;
+use crate::sim::session::{CostKey, SimSession};
+use crate::sim::{MacUnitConfig, PerfCounters};
+use std::sync::atomic::Ordering;
 
 /// Measured cost of one layer kernel execution.
 #[derive(Debug, Clone, Copy, Default)]
@@ -56,30 +71,16 @@ impl LayerCost {
     }
 }
 
-/// Measure one layer under a kernel variant on the ISS.
-///
-/// `mode = None` measures the scalar baseline. Timing is
-/// value-independent, so operands are random at the right shapes.
-pub fn measure_layer(
-    info: &QLayerInfo,
-    mode: Option<MacMode>,
-    mac: MacUnitConfig,
-    seed: u64,
-) -> Result<LayerCost> {
-    measure_layer_backend(info, mode, mac, seed, ExecBackend::Engine)
+/// The fully-resolved kernel spec a layer/variant measurement runs —
+/// derived once and shared between the measurement and its analytic
+/// [`CostKey`], so the two can never drift apart.
+enum MeasuredSpec {
+    Conv(ConvSpec),
+    Dw(DwSpec),
+    Dense(DenseSpec),
 }
 
-/// [`measure_layer`] with an explicit interpreter choice — the
-/// throughput bench uses this to report the engine-vs-legacy gap.
-pub fn measure_layer_backend(
-    info: &QLayerInfo,
-    mode: Option<MacMode>,
-    mac: MacUnitConfig,
-    seed: u64,
-    backend: ExecBackend,
-) -> Result<LayerCost> {
-    let mut rng = Rng::new(seed);
-    let bits = mode.map_or(8, |m| m.weight_bits());
+fn measured_spec(info: &QLayerInfo, mode: Option<MacMode>) -> MeasuredSpec {
     let rq = Requant::from_real_scale(0.01);
     match info.kind {
         QKind::Conv => {
@@ -91,37 +92,187 @@ pub fn measure_layer_backend(
                 info.in_shape[2]
             };
             let (h, w) = (info.in_shape[0] + 2 * info.pad, info.in_shape[1] + 2 * info.pad);
-            let cout = info.out_shape[2];
-            let spec =
-                ConvSpec { h, w, cin, cout, k: info.k, stride: info.stride, rq, relu: info.relu };
-            let acts: Vec<i8> = (0..h * w * cin).map(|_| rng.i8()).collect();
-            let wts: Vec<i8> =
-                (0..cout * info.k * info.k * cin).map(|_| rng.int_bits(bits)).collect();
-            let bias: Vec<i32> = (0..cout).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, perf) = run_conv_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
-            Ok(LayerCost::from_perf(&perf))
+            MeasuredSpec::Conv(ConvSpec {
+                h,
+                w,
+                cin,
+                cout: info.out_shape[2],
+                k: info.k,
+                stride: info.stride,
+                rq,
+                relu: info.relu,
+            })
         }
         QKind::Depthwise => {
-            let c = info.in_shape[2];
             let (h, w) = (info.in_shape[0] + 2 * info.pad, info.in_shape[1] + 2 * info.pad);
-            let spec = DwSpec { h, w, c, k: info.k, stride: info.stride, rq, relu: info.relu };
-            let acts: Vec<i8> = (0..h * w * c).map(|_| rng.i8()).collect();
-            let wts: Vec<i8> = (0..c * info.k * info.k).map(|_| rng.int_bits(bits)).collect();
-            let bias: Vec<i32> = (0..c).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, perf) = run_depthwise_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
-            Ok(LayerCost::from_perf(&perf))
+            MeasuredSpec::Dw(DwSpec {
+                h,
+                w,
+                c: info.in_shape[2],
+                k: info.k,
+                stride: info.stride,
+                rq,
+                relu: info.relu,
+            })
         }
-        QKind::Dense => {
-            let (i, o) = (info.in_shape[2], info.out_shape[2]);
-            let spec =
-                DenseSpec { in_dim: i, out_dim: o, rq, relu: info.relu, out_i32: info.is_last };
-            let acts: Vec<i8> = (0..i).map(|_| rng.i8()).collect();
-            let wts: Vec<i8> = (0..i * o).map(|_| rng.int_bits(bits)).collect();
-            let bias: Vec<i32> = (0..o).map(|_| rng.range_i32(-100, 100)).collect();
-            let (_, _, perf) = run_dense_backend(spec, mode, mac, backend, &acts, &wts, &bias)?;
-            Ok(LayerCost::from_perf(&perf))
+        QKind::Dense => MeasuredSpec::Dense(DenseSpec {
+            in_dim: info.in_shape[2],
+            out_dim: info.out_shape[2],
+            rq,
+            relu: info.relu,
+            out_i32: info.is_last,
+        }),
+    }
+}
+
+fn spec_cost_key(spec: &MeasuredSpec, mode: Option<MacMode>, mac: MacUnitConfig) -> CostKey {
+    match spec {
+        MeasuredSpec::Conv(s) => conv_cost_key(s, mode, mac),
+        MeasuredSpec::Dw(s) => depthwise_cost_key(s, mode, mac),
+        MeasuredSpec::Dense(s) => dense_cost_key(s, mode, mac),
+    }
+}
+
+/// Run the measurement for real: random operands at the right shapes
+/// (timing is value-independent), weights staged once through the
+/// `run_*_staged` entry points — no pack-per-call wrapper in the
+/// measurement matrix.
+fn measure_spec_perf(
+    spec: &MeasuredSpec,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    seed: u64,
+    backend: ExecBackend,
+) -> Result<PerfCounters> {
+    let mut rng = Rng::new(seed);
+    let bits = mode.map_or(8, |m| m.weight_bits());
+    match spec {
+        MeasuredSpec::Conv(s) => {
+            let acts: Vec<i8> = (0..s.h * s.w * s.cin).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> = (0..s.cout * s.k * s.k * s.cin).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..s.cout).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, perf) = match mode {
+                None => {
+                    run_conv_staged(*s, mode, mac, backend, &acts, StagedWeights::Bytes(&wts), &bias)?
+                }
+                Some(m) => {
+                    let words = pack_conv(m, &wts, s.cout, s.k, s.cin);
+                    run_conv_staged(
+                        *s,
+                        mode,
+                        mac,
+                        backend,
+                        &acts,
+                        StagedWeights::Words(&words),
+                        &bias,
+                    )?
+                }
+            };
+            Ok(perf)
+        }
+        MeasuredSpec::Dw(s) => {
+            let acts: Vec<i8> = (0..s.h * s.w * s.c).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> = (0..s.c * s.k * s.k).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..s.c).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, perf) = match mode {
+                None => run_depthwise_staged(
+                    *s,
+                    mode,
+                    mac,
+                    backend,
+                    &acts,
+                    StagedWeights::Bytes(&wts),
+                    &bias,
+                )?,
+                Some(m) => {
+                    let words = pack_depthwise(m, &wts, s.c, s.k);
+                    run_depthwise_staged(
+                        *s,
+                        mode,
+                        mac,
+                        backend,
+                        &acts,
+                        StagedWeights::Words(&words),
+                        &bias,
+                    )?
+                }
+            };
+            Ok(perf)
+        }
+        MeasuredSpec::Dense(s) => {
+            let acts: Vec<i8> = (0..s.in_dim).map(|_| rng.i8()).collect();
+            let wts: Vec<i8> = (0..s.in_dim * s.out_dim).map(|_| rng.int_bits(bits)).collect();
+            let bias: Vec<i32> = (0..s.out_dim).map(|_| rng.range_i32(-100, 100)).collect();
+            let (_, _, perf) = match mode {
+                None => run_dense_staged(
+                    *s,
+                    mode,
+                    mac,
+                    backend,
+                    &acts,
+                    StagedWeights::Bytes(&wts),
+                    &bias,
+                )?,
+                Some(m) => {
+                    let words = pack_dense(m, &wts, s.out_dim, s.in_dim);
+                    run_dense_staged(
+                        *s,
+                        mode,
+                        mac,
+                        backend,
+                        &acts,
+                        StagedWeights::Words(&words),
+                        &bias,
+                    )?
+                }
+            };
+            Ok(perf)
         }
     }
+}
+
+/// Measure one layer under a kernel variant on the ISS.
+///
+/// `mode = None` measures the scalar baseline. Timing is
+/// value-independent, so operands are random at the right shapes.
+///
+/// The measurement goes through the session-level analytic
+/// [`CostCache`](crate::sim::session::CostCache): a key already
+/// measured — by a previous table build *or* by an analytic-mode plan
+/// execution — is served from the cache (counted in
+/// `SessionStats::analytic_hits`); a miss runs the micro-op engine and
+/// populates it.
+pub fn measure_layer(
+    info: &QLayerInfo,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    seed: u64,
+) -> Result<LayerCost> {
+    let spec = measured_spec(info, mode);
+    let key = spec_cost_key(&spec, mode, mac);
+    let session = SimSession::global();
+    if let Some(p) = session.costs.get(&key) {
+        session.stats.analytic_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(LayerCost::from_perf(&p));
+    }
+    let p = measure_spec_perf(&spec, mode, mac, seed, ExecBackend::Engine)?;
+    session.costs.insert(key, p);
+    Ok(LayerCost::from_perf(&p))
+}
+
+/// [`measure_layer`] with an explicit interpreter choice — the
+/// throughput bench uses this to report the engine-vs-legacy gap.
+/// Always measures for real (never consults the cost cache): the
+/// engine-vs-legacy comparisons need two genuine executions.
+pub fn measure_layer_backend(
+    info: &QLayerInfo,
+    mode: Option<MacMode>,
+    mac: MacUnitConfig,
+    seed: u64,
+    backend: ExecBackend,
+) -> Result<LayerCost> {
+    let spec = measured_spec(info, mode);
+    Ok(LayerCost::from_perf(&measure_spec_perf(&spec, mode, mac, seed, backend)?))
 }
 
 /// The per-model cycle table: baseline + one entry per mode per layer.

@@ -238,6 +238,7 @@ fn evaluator_static(name: &str) -> &'static str {
     match name {
         "host" => "host",
         "iss" => "iss",
+        "analytic" => "analytic",
         "pjrt" => "pjrt",
         _ => "merged",
     }

@@ -22,7 +22,7 @@ pub mod table3;
 pub mod table4;
 pub mod table5;
 
-use crate::coordinator::{AccuracyEval, Coordinator, HostEval, IssEval, PjrtEval};
+use crate::coordinator::{AccuracyEval, AnalyticEval, Coordinator, HostEval, IssEval, PjrtEval};
 use crate::json::Json;
 use crate::models::format::{load_or_fallback, LoadedModel};
 use crate::error::Result;
@@ -42,18 +42,24 @@ pub enum EvalBackend {
     /// Whole-model execution on the ISS: accuracy and cycles from the
     /// same binary-level runs, plus the host-vs-ISS divergence metric.
     Iss,
+    /// The ISS evaluator's analytic fast path: each distinct kernel
+    /// shape runs on the ISS once, then replays as a host kernel with
+    /// cache-served counters; `--audit-every K` samples real-ISS
+    /// replays to re-check the contract.
+    Analytic,
     /// Batched PJRT inference (needs artifacts + the `pjrt` feature;
     /// degrades to the host evaluator with a note).
     Pjrt,
 }
 
 impl EvalBackend {
-    /// Parse a CLI name (`auto | host | iss | pjrt`).
+    /// Parse a CLI name (`auto | host | iss | analytic | pjrt`).
     pub fn parse(s: &str) -> Option<EvalBackend> {
         match s {
             "auto" => Some(EvalBackend::Auto),
             "host" => Some(EvalBackend::Host),
             "iss" => Some(EvalBackend::Iss),
+            "analytic" => Some(EvalBackend::Analytic),
             "pjrt" => Some(EvalBackend::Pjrt),
             _ => None,
         }
@@ -65,6 +71,7 @@ impl EvalBackend {
             EvalBackend::Auto => "auto",
             EvalBackend::Host => "host",
             EvalBackend::Iss => "iss",
+            EvalBackend::Analytic => "analytic",
             EvalBackend::Pjrt => "pjrt",
         }
     }
@@ -106,6 +113,11 @@ pub struct ExpOpts {
     /// JSONL output path for the `trace` command's per-step plan trace
     /// (`--trace-steps`).
     pub trace_steps: Option<PathBuf>,
+    /// Audit cadence for the analytic evaluator (`--audit-every <k>`):
+    /// replay every kth batch element on the real ISS and bit-compare.
+    /// 0 (the default) disables auditing; 1 degenerates to a full ISS
+    /// check of every element.
+    pub audit_every: usize,
 }
 
 impl Default for ExpOpts {
@@ -123,6 +135,7 @@ impl Default for ExpOpts {
             merge_dir: None,
             models: None,
             trace_steps: None,
+            audit_every: 0,
         }
     }
 }
@@ -158,6 +171,12 @@ impl ExpOpts {
             EvalBackend::Host => Ok(Box::new(HostEval { test: model.test.clone() })),
             EvalBackend::Iss => {
                 Ok(Box::new(IssEval::new(model.test.clone(), self.eval_workers)))
+            }
+            EvalBackend::Analytic => {
+                let mut ev = AnalyticEval::new(model.test.clone(), self.eval_workers);
+                ev.audit_every = self.audit_every;
+                ev.audit_seed = self.seed;
+                Ok(Box::new(ev))
             }
             EvalBackend::Auto | EvalBackend::Pjrt => {
                 let stem =

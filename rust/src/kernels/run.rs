@@ -29,7 +29,7 @@ use crate::ensure;
 use crate::error::Result;
 use crate::isa::MacMode;
 use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise, words_per_group};
-use crate::sim::session::{CompiledImage, SimSession};
+use crate::sim::session::{CompiledImage, CostKey, KernelShape, SimSession};
 use crate::sim::{Core, CoreConfig, ExitReason, MacUnitConfig, PerfCounters, Timing};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -138,6 +138,63 @@ enum KernelKey {
         relu: bool,
         mode: Option<MacMode>,
     },
+}
+
+/// Analytic cost-cache key for a dense execution — the same fields as
+/// the kernel-cache key plus the MAC-unit configuration, which changes
+/// the counters but not the program (see
+/// [`crate::sim::session::CostKey`]).
+pub fn dense_cost_key(spec: &DenseSpec, mode: Option<MacMode>, mac: MacUnitConfig) -> CostKey {
+    CostKey {
+        shape: KernelShape::Dense {
+            in_dim: spec.in_dim,
+            out_dim: spec.out_dim,
+            m: spec.rq.m,
+            shift: spec.rq.shift,
+            relu: spec.relu,
+            out_i32: spec.out_i32,
+        },
+        mode,
+        mac,
+    }
+}
+
+/// Analytic cost-cache key for a conv execution (see [`dense_cost_key`]).
+pub fn conv_cost_key(spec: &ConvSpec, mode: Option<MacMode>, mac: MacUnitConfig) -> CostKey {
+    CostKey {
+        shape: KernelShape::Conv {
+            h: spec.h,
+            w: spec.w,
+            cin: spec.cin,
+            cout: spec.cout,
+            k: spec.k,
+            stride: spec.stride,
+            m: spec.rq.m,
+            shift: spec.rq.shift,
+            relu: spec.relu,
+        },
+        mode,
+        mac,
+    }
+}
+
+/// Analytic cost-cache key for a depthwise execution (see
+/// [`dense_cost_key`]).
+pub fn depthwise_cost_key(spec: &DwSpec, mode: Option<MacMode>, mac: MacUnitConfig) -> CostKey {
+    CostKey {
+        shape: KernelShape::Dw {
+            h: spec.h,
+            w: spec.w,
+            c: spec.c,
+            k: spec.k,
+            stride: spec.stride,
+            m: spec.rq.m,
+            shift: spec.rq.shift,
+            relu: spec.relu,
+        },
+        mode,
+        mac,
+    }
 }
 
 fn cache() -> &'static Mutex<HashMap<KernelKey, Arc<CompiledKernel>>> {

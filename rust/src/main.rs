@@ -37,11 +37,17 @@ OPTIONS:
   --artifacts <dir>   Artifacts directory (default: auto-discover)
   --eval <n>          Images per accuracy evaluation (default 128)
   --budget <n>        DSE configuration budget per model (default 120)
-  --evaluator <b>     Accuracy backend: auto|host|iss|pjrt (default auto).
-                      `iss` runs every evaluation batch through the
-                      simulated core: accuracy + cycles from the same
-                      binary-level runs, with host-vs-ISS divergence
-                      reported per config (see docs/EVALUATORS.md)
+  --evaluator <b>     Accuracy backend: auto|host|iss|analytic|pjrt
+                      (default auto). `iss` runs every evaluation batch
+                      through the simulated core: accuracy + cycles from
+                      the same binary-level runs, with host-vs-ISS
+                      divergence reported per config. `analytic` is its
+                      fast path: each distinct kernel shape simulates
+                      once, then replays as a host kernel with
+                      cache-served counters (see docs/EVALUATORS.md)
+  --audit-every <k>   (analytic) replay every kth batch element on the
+                      real ISS and bit-compare logits + counters
+                      (0 = off, default; 1 = check every element)
   --eval-workers <n>  ISS-evaluator batch worker threads (default 4)
   --host-eval         Shorthand for --evaluator host
   --seed <n>          Random seed (default 0xD5E)
@@ -85,11 +91,17 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
                 opts.budget = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.budget)
             }
             "--evaluator" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| mpnn::anyhow!("--evaluator needs a value (auto|host|iss|pjrt)"))?;
-                opts.backend = EvalBackend::parse(v)
-                    .ok_or_else(|| mpnn::anyhow!("unknown evaluator `{v}` (auto|host|iss|pjrt)"))?;
+                let v = it.next().ok_or_else(|| {
+                    mpnn::anyhow!("--evaluator needs a value (auto|host|iss|analytic|pjrt)")
+                })?;
+                opts.backend = EvalBackend::parse(v).ok_or_else(|| {
+                    mpnn::anyhow!("unknown evaluator `{v}` (auto|host|iss|analytic|pjrt)")
+                })?;
+            }
+            "--audit-every" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--audit-every needs a count"))?;
+                opts.audit_every =
+                    v.parse().map_err(|_| mpnn::anyhow!("--audit-every: bad count `{v}`"))?;
             }
             "--eval-workers" => {
                 opts.eval_workers =
@@ -253,7 +265,7 @@ fn cmd_demo() -> Result<()> {
 fn cmd_trace(opts: &ExpOpts) -> Result<()> {
     use mpnn::models::infer::{quantize_input, quantize_model};
     use mpnn::models::plan::plan_for;
-    use mpnn::models::sim_exec::{modes_for, run_plan, StepTrace};
+    use mpnn::models::sim_exec::{modes_for, run_plan, ExecMode, StepTrace};
     use mpnn::sim::MacUnitConfig;
 
     let path = opts
@@ -276,7 +288,7 @@ fn cmd_trace(opts: &ExpOpts) -> Result<()> {
     let input = quantize_input(&qm, &model.test.images[0]);
 
     let mut trace = StepTrace::create(&path)?;
-    let run = run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut trace))?;
+    let run = run_plan(&plan, &input, MacUnitConfig::full(), ExecMode::Iss, Some(&mut trace))?;
     let steps = trace.steps;
     trace.finish()?;
     println!(

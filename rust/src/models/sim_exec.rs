@@ -45,21 +45,42 @@
 //! step-granular trace surface ([`StepTrace`] writes it as JSON lines
 //! for `mpnn trace --trace-steps`).
 //!
+//! ## Analytic fast path ([`ExecMode::Analytic`])
+//!
+//! Since the kernels became fully data-independent in timing
+//! (branchless requant epilogue, counted strip loops), a kernel step's
+//! [`PerfCounters`] are a pure function of `(shape, mode, mac)`. The
+//! analytic mode makes that contract load-bearing: the **first** time a
+//! given cost key runs, it executes on the real ISS and its counters
+//! land in the session-level
+//! [`CostCache`](crate::sim::session::CostCache); every subsequent
+//! execution runs the bit-exact **host** kernel for the values and
+//! fills the counters from the cache. A batch of N inputs then costs
+//! ~1 ISS execution per distinct kernel step instead of N, and a warm
+//! sweep costs ~0. [`audit_run`] + [`audit_indices`] implement the
+//! sampled differential audit (`--audit-every K`) that re-checks the
+//! contract on the real ISS.
+//!
 //! See `docs/ARCHITECTURE.md` for the lowering diagram and the unified
 //! accuracy+cycles dataflow.
 
 use super::infer::QModel;
 use super::plan::{
-    plan_for, ExecutionPlan, Flow, KernelOp, PlanObserver, Step, StepEvent,
+    plan_for, ExecutionPlan, Flow, KernelOp, KernelStep, PlanObserver, Step, StepEvent,
 };
 use super::QKind;
 use crate::error::Result;
 use crate::isa::MacMode;
-use crate::kernels::run::{run_conv_staged, run_dense_staged, run_depthwise_staged, ExecBackend};
-use crate::nn::layers::{pad_spatial, qadd, qavgpool_global, qmaxpool2};
+use crate::kernels::run::{
+    conv_cost_key, dense_cost_key, depthwise_cost_key, run_conv_staged, run_dense_staged,
+    run_depthwise_staged, ExecBackend,
+};
+use crate::nn::layers::{pad_spatial, qadd, qavgpool_global, qconv2d, qdense, qdepthwise, qmaxpool2};
 use crate::nn::tensor::{pad_channels, Tensor};
+use crate::sim::session::{CostKey, SimSession};
 use crate::sim::{MacUnitConfig, PerfCounters};
 use crate::{bail, ensure};
+use std::sync::atomic::Ordering;
 
 /// Per-layer measurement from an ISS execution.
 #[derive(Debug, Clone)]
@@ -105,22 +126,142 @@ impl SimRun {
     }
 }
 
-/// Execute a compiled [`ExecutionPlan`] on the ISS for one input.
+/// How a plan's kernel steps execute (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Every kernel step runs on the cycle-accurate ISS (the default,
+    /// and the semantic oracle the analytic mode is audited against).
+    #[default]
+    Iss,
+    /// Kernel steps whose cost key is already in the session
+    /// [`CostCache`](crate::sim::session::CostCache) run the bit-exact
+    /// host kernel and take their counters from the cache; cache misses
+    /// run the ISS once and populate it.
+    Analytic,
+}
+
+/// The analytic cost-cache key of a kernel step under `mac` — the same
+/// `(spec, mode)` fingerprint the kernel-image cache uses, plus the
+/// MAC-unit configuration (shared across plans: two steps with equal
+/// keys run the identical program, so their counters agree).
+pub fn cost_key_for(ks: &KernelStep, mac: MacUnitConfig) -> CostKey {
+    match &ks.op {
+        KernelOp::Conv { spec, .. } => conv_cost_key(spec, ks.mode, mac),
+        KernelOp::Depthwise { spec, .. } => depthwise_cost_key(spec, ks.mode, mac),
+        KernelOp::Dense { spec } => dense_cost_key(spec, ks.mode, mac),
+    }
+}
+
+/// Execute one kernel step on the ISS. Returns the outgoing flow, the
+/// final logits (`is_last` dense only) and the step's measured perf.
+fn exec_kernel_iss(
+    ks: &KernelStep,
+    x: Flow,
+    mac: MacUnitConfig,
+) -> Result<(Flow, Option<Vec<i32>>, PerfCounters)> {
+    match &ks.op {
+        KernelOp::Conv { spec, geom, cout, .. } => {
+            let mut xp = pad_spatial(&x.map(), geom.pad);
+            if xp.shape[2] != spec.cin {
+                // Mode kernels need Cin % 4 == 0; the plan
+                // pre-padded the weights to match.
+                xp = pad_channels(&xp, 4, 0);
+                ensure!(
+                    xp.shape[2] == spec.cin,
+                    "layer {}: channel-padded input {} vs plan cin {}",
+                    ks.layer,
+                    xp.shape[2],
+                    spec.cin
+                );
+            }
+            let (out, perf) = run_conv_staged(
+                *spec,
+                ks.mode,
+                mac,
+                ExecBackend::default(),
+                &xp.data,
+                ks.iss_w.staged(),
+                &ks.bias,
+            )?;
+            Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), *cout], out)), None, perf))
+        }
+        KernelOp::Depthwise { spec, geom } => {
+            let xp = pad_spatial(&x.map(), geom.pad);
+            let (out, perf) = run_depthwise_staged(
+                *spec,
+                ks.mode,
+                mac,
+                ExecBackend::default(),
+                &xp.data,
+                ks.iss_w.staged(),
+                &ks.bias,
+            )?;
+            Ok((Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)), None, perf))
+        }
+        KernelOp::Dense { spec } => {
+            let flat = x.flat();
+            let (qv, accs, perf) = run_dense_staged(
+                *spec,
+                ks.mode,
+                mac,
+                ExecBackend::default(),
+                &flat,
+                ks.iss_w.staged(),
+                &ks.bias,
+            )?;
+            if ks.is_last {
+                Ok((Flow::Flat(Vec::new()), Some(accs), perf))
+            } else {
+                Ok((Flow::Flat(qv), None, perf))
+            }
+        }
+    }
+}
+
+/// Execute one kernel step with the bit-exact host implementations —
+/// the same arms [`host_logits`](crate::models::plan::host_logits)
+/// interprets, so mixing host and ISS steps inside one analytic run
+/// cannot change a single activation byte.
+fn exec_kernel_host(ks: &KernelStep, x: Flow) -> (Flow, Option<Vec<i32>>) {
+    match &ks.op {
+        KernelOp::Conv { geom, cout, .. } => {
+            (Flow::Map(qconv2d(&x.map(), &ks.host_w, &ks.bias, *cout, *geom, ks.rq, ks.relu)), None)
+        }
+        KernelOp::Depthwise { geom, .. } => {
+            (Flow::Map(qdepthwise(&x.map(), &ks.host_w, &ks.bias, *geom, ks.rq, ks.relu)), None)
+        }
+        KernelOp::Dense { spec } => {
+            let flat = x.flat();
+            if ks.is_last {
+                let (_, accs) = qdense(&flat, &ks.host_w, &ks.bias, spec.out_dim, None, false);
+                (Flow::Flat(Vec::new()), Some(accs))
+            } else {
+                let (qv, _) = qdense(&flat, &ks.host_w, &ks.bias, spec.out_dim, Some(ks.rq), ks.relu);
+                (Flow::Flat(qv), None)
+            }
+        }
+    }
+}
+
+/// Execute a compiled [`ExecutionPlan`] for one input.
 ///
 /// This is the plan interpreter: each [`Step::Kernel`] stages its
 /// pre-padded/pre-packed operands into pooled simulator memory and runs
-/// through the keyed kernel cache; host glue steps (pool / residual
-/// save & add) run between kernels. A kernel that misbehaves on the
-/// core (memory fault, runaway pc) surfaces as an `Err`.
+/// through the keyed kernel cache (or, under [`ExecMode::Analytic`]
+/// with a warm cost cache, runs the host kernel and takes its counters
+/// from the cache); host glue steps (pool / residual save & add) run
+/// between kernels. A kernel that misbehaves on the core (memory fault,
+/// runaway pc) surfaces as an `Err`.
 ///
 /// `observer`, when given, receives one [`StepEvent`] per executed step
-/// in plan order — kernel steps carry the layer's own [`PerfCounters`],
-/// host glue steps carry `None`. On error, no event is emitted for the
-/// failing step.
+/// in plan order — kernel steps carry the layer's own [`PerfCounters`]
+/// (measured or cache-served), host glue steps carry `None`. On error,
+/// no event is emitted for the failing step.
 pub fn run_plan(
     plan: &ExecutionPlan,
     input: &Tensor<i8>,
     mac: MacUnitConfig,
+    mode: ExecMode,
     mut observer: Option<&mut dyn PlanObserver>,
 ) -> Result<SimRun> {
     ensure!(
@@ -150,68 +291,24 @@ pub fn run_plan(
     for (si, step) in plan.steps.iter().enumerate() {
         match step {
             Step::Kernel(ks) => {
-                let (nx, logits, perf) = match &ks.op {
-                    KernelOp::Conv { spec, geom, cout, .. } => {
-                        let mut xp = pad_spatial(&x.map(), geom.pad);
-                        if xp.shape[2] != spec.cin {
-                            // Mode kernels need Cin % 4 == 0; the plan
-                            // pre-padded the weights to match.
-                            xp = pad_channels(&xp, 4, 0);
-                            ensure!(
-                                xp.shape[2] == spec.cin,
-                                "layer {}: channel-padded input {} vs plan cin {}",
-                                ks.layer,
-                                xp.shape[2],
-                                spec.cin
-                            );
-                        }
-                        let (out, perf) = run_conv_staged(
-                            *spec,
-                            ks.mode,
-                            mac,
-                            ExecBackend::default(),
-                            &xp.data,
-                            ks.iss_w.staged(),
-                            &ks.bias,
-                        )?;
-                        (
-                            Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), *cout], out)),
-                            None,
-                            perf,
-                        )
-                    }
-                    KernelOp::Depthwise { spec, geom } => {
-                        let xp = pad_spatial(&x.map(), geom.pad);
-                        let (out, perf) = run_depthwise_staged(
-                            *spec,
-                            ks.mode,
-                            mac,
-                            ExecBackend::default(),
-                            &xp.data,
-                            ks.iss_w.staged(),
-                            &ks.bias,
-                        )?;
-                        (
-                            Flow::Map(Tensor::from_vec(&[spec.ho(), spec.wo(), spec.c], out)),
-                            None,
-                            perf,
-                        )
-                    }
-                    KernelOp::Dense { spec } => {
-                        let flat = x.flat();
-                        let (qv, accs, perf) = run_dense_staged(
-                            *spec,
-                            ks.mode,
-                            mac,
-                            ExecBackend::default(),
-                            &flat,
-                            ks.iss_w.staged(),
-                            &ks.bias,
-                        )?;
-                        if ks.is_last {
-                            (Flow::Flat(Vec::new()), Some(accs), perf)
-                        } else {
-                            (Flow::Flat(qv), None, perf)
+                let (nx, logits, perf) = match mode {
+                    ExecMode::Iss => exec_kernel_iss(ks, x, mac)?,
+                    ExecMode::Analytic => {
+                        let session = SimSession::global();
+                        let key = cost_key_for(ks, mac);
+                        match session.costs.get(&key) {
+                            Some(perf) => {
+                                session.stats.analytic_hits.fetch_add(1, Ordering::Relaxed);
+                                let (nx, logits) = exec_kernel_host(ks, x);
+                                (nx, logits, perf)
+                            }
+                            None => {
+                                // First sighting of this kernel shape:
+                                // measure it for real, remember forever.
+                                let out = exec_kernel_iss(ks, x, mac)?;
+                                session.costs.insert(key, out.2);
+                                out
+                            }
                         }
                     }
                 };
@@ -253,13 +350,85 @@ pub fn run_plan(
 
 /// Run a compiled plan over a batch of independent inputs in parallel
 /// (the plan is compiled once by the caller and replayed per input).
+///
+/// Under [`ExecMode::Analytic`] the first input runs alone before the
+/// pool fans out: every kernel step misses the cost cache at most once,
+/// so an N-input batch costs ~(unique kernel steps) ISS executions —
+/// not steps × N, and not steps × workers as a racing cold start would.
 pub fn run_plan_batch(
     plan: &ExecutionPlan,
     inputs: &[Tensor<i8>],
     mac: MacUnitConfig,
+    mode: ExecMode,
     workers: usize,
 ) -> Result<Vec<SimRun>> {
-    crate::par::parallel_map(inputs.len(), workers, |j| run_plan(plan, &inputs[j], mac, None))
+    if mode == ExecMode::Analytic && inputs.len() > 1 {
+        let first = run_plan(plan, &inputs[0], mac, mode, None)?;
+        let rest = crate::par::parallel_map(inputs.len() - 1, workers, |j| {
+            run_plan(plan, &inputs[j + 1], mac, mode, None)
+        })?;
+        let mut out = Vec::with_capacity(inputs.len());
+        out.push(first);
+        out.extend(rest);
+        return Ok(out);
+    }
+    crate::par::parallel_map(inputs.len(), workers, |j| run_plan(plan, &inputs[j], mac, mode, None))
+}
+
+// -------------------------------------------------- sampled audit ---
+
+/// Deterministic audit-sample selection for `--audit-every K`: every
+/// Kth batch element starting from a seeded phase, so repeated runs —
+/// and any sharding of the same element order — audit the same
+/// elements. `every == 0` disables auditing; `every == 1` selects the
+/// whole batch (the degenerate full-ISS check CI's byte-identity smoke
+/// relies on).
+pub fn audit_indices(seed: u64, n: usize, every: usize) -> Vec<usize> {
+    if every == 0 || n == 0 {
+        return Vec::new();
+    }
+    // FNV-1a over the seed bytes → phase in [0, every).
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in seed.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let phase = (h % every as u64) as usize;
+    (phase..n).step_by(every).collect()
+}
+
+/// Differential audit of one analytic execution: replay `input` on the
+/// real ISS and bit-compare logits **and** per-layer perf counters
+/// against the analytic run. A disagreement increments
+/// `SessionStats::audit_mismatches` and fails with a typed
+/// "analytic audit mismatch" error — the analytic fast path never
+/// silently serves counters the ISS wouldn't produce.
+pub fn audit_run(
+    plan: &ExecutionPlan,
+    input: &Tensor<i8>,
+    mac: MacUnitConfig,
+    analytic: &SimRun,
+) -> Result<()> {
+    let stats = &SimSession::global().stats;
+    stats.analytic_audits.fetch_add(1, Ordering::Relaxed);
+    let iss = run_plan(plan, input, mac, ExecMode::Iss, None)?;
+    let logits_ok = iss.logits == analytic.logits;
+    let counters_ok = iss.layers.len() == analytic.layers.len()
+        && iss
+            .layers
+            .iter()
+            .zip(&analytic.layers)
+            .all(|(a, b)| a.layer == b.layer && a.mode == b.mode && a.perf == b.perf);
+    if !logits_ok || !counters_ok {
+        stats.audit_mismatches.fetch_add(1, Ordering::Relaxed);
+        bail!(
+            "analytic audit mismatch for {}: ISS replay disagrees with the analytic \
+             execution (logits {}, per-layer counters {})",
+            plan.model,
+            if logits_ok { "agree" } else { "DIFFER" },
+            if counters_ok { "agree" } else { "DIFFER" }
+        );
+    }
+    Ok(())
 }
 
 /// Execute the quantized model on the ISS.
@@ -277,7 +446,7 @@ pub fn run_model(
     mac: MacUnitConfig,
 ) -> Result<SimRun> {
     let plan = plan_for(qm, modes)?;
-    run_plan(&plan, input, mac, None)
+    run_plan(&plan, input, mac, ExecMode::Iss, None)
 }
 
 /// Run one model over a batch of independent inputs in parallel.
@@ -323,7 +492,7 @@ pub fn run_model_batch(
     // `Arc` directly instead of re-deriving the O(model size) cache
     // key per input.
     let plan = plan_for(qm, modes)?;
-    run_plan_batch(&plan, inputs, mac, workers)
+    run_plan_batch(&plan, inputs, mac, ExecMode::Iss, workers)
 }
 
 /// Kernel modes for a quantized model: the mode matching each layer's
@@ -533,7 +702,8 @@ mod tests {
         let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
 
         let mut obs = Collect { events: Vec::new() };
-        let run = run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut obs)).unwrap();
+        let run =
+            run_plan(&plan, &input, MacUnitConfig::full(), ExecMode::Iss, Some(&mut obs)).unwrap();
         // One event per step, in plan order.
         assert_eq!(obs.events.len(), plan.steps.len());
         for (i, ev) in obs.events.iter().enumerate() {
@@ -552,7 +722,7 @@ mod tests {
             assert!(kinds.contains(&k), "missing {k} in {kinds:?}");
         }
         // An un-observed run is identical (observers are read-only).
-        let bare = run_plan(&plan, &input, MacUnitConfig::full(), None).unwrap();
+        let bare = run_plan(&plan, &input, MacUnitConfig::full(), ExecMode::Iss, None).unwrap();
         assert_eq!(bare.logits, run.logits);
         assert_eq!(bare.total_cycles(), run.total_cycles());
     }
@@ -571,7 +741,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("mpnn_trace_{}", std::process::id()));
         let path = dir.join("steps.jsonl");
         let mut trace = StepTrace::create(&path).unwrap();
-        run_plan(&plan, &input, MacUnitConfig::full(), Some(&mut trace)).unwrap();
+        run_plan(&plan, &input, MacUnitConfig::full(), ExecMode::Iss, Some(&mut trace)).unwrap();
         let steps = trace.steps;
         trace.finish().unwrap();
 

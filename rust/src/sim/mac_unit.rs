@@ -36,7 +36,10 @@ fn unpack_lanes(mode: MacMode, word: u32, out: &mut [i8; 16]) -> usize {
 }
 
 /// Datapath feature toggles (Fig. 7's standalone-Mode ablations flip these).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` because the analytic [`crate::sim::session::CostCache`] keys
+/// on it: the kernel *program* is identical across ablations, but its
+/// cycle counters are not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MacUnitConfig {
     /// 2× clock domain for the MAC block (Mode-2 optimisation).
     pub multipump: bool,

@@ -21,8 +21,11 @@
 //! global instance ([`SimSession::global`]).
 
 use super::engine::{CompiledProgram, EngineStats, TranslateOpts};
+use super::mac_unit::MacUnitConfig;
+use super::perf::PerfCounters;
 use super::{engine, Core, CoreConfig, ExitReason, Memory, Timing};
-use crate::isa::Instr;
+use crate::isa::{Instr, MacMode};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -107,6 +110,126 @@ impl EngineHitTotals {
     }
 }
 
+/// Shape half of a [`CostKey`]: every field of the kernel builder's
+/// cache key except the packing mode (mirrors the private `KernelKey`
+/// in `kernels::run` — two executions with equal shapes run the same
+/// program text).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelShape {
+    /// Dense / fully-connected layer.
+    Dense {
+        /// Input features.
+        in_dim: usize,
+        /// Output features.
+        out_dim: usize,
+        /// Requant multiplier.
+        m: i32,
+        /// Requant shift.
+        shift: i32,
+        /// ReLU fused into the requant epilogue.
+        relu: bool,
+        /// Raw 32-bit accumulators requested (logits layer).
+        out_i32: bool,
+    },
+    /// im2col convolution.
+    Conv {
+        /// Padded input height.
+        h: usize,
+        /// Padded input width.
+        w: usize,
+        /// Input channels (lane-padded when a packing mode is active).
+        cin: usize,
+        /// Output channels.
+        cout: usize,
+        /// Kernel size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Requant multiplier.
+        m: i32,
+        /// Requant shift.
+        shift: i32,
+        /// Fused ReLU.
+        relu: bool,
+    },
+    /// Depthwise convolution.
+    Dw {
+        /// Padded input height.
+        h: usize,
+        /// Padded input width.
+        w: usize,
+        /// Channels.
+        c: usize,
+        /// Kernel size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Requant multiplier.
+        m: i32,
+        /// Requant shift.
+        shift: i32,
+        /// Fused ReLU.
+        relu: bool,
+    },
+}
+
+/// Key of the analytic cost cache: the kernel's shape, its packing
+/// mode, and the MAC-unit configuration. Since PR 3 made kernel timing
+/// fully data-independent (branchless requant, counted strip loops),
+/// the [`PerfCounters`] of a kernel execution are a pure function of
+/// this triple — `dse/cycles.rs` documents the contract; the analytic
+/// backend makes it load-bearing and the sampled audit enforces it.
+///
+/// Unlike the kernel-image cache (which deliberately omits
+/// [`MacUnitConfig`] because the *program* is identical across Fig. 7
+/// ablations), the cost key must include it: multi-pumping and soft
+/// SIMD change cycle counts without changing a single instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    /// Kernel shape (geometry + requant constants).
+    pub shape: KernelShape,
+    /// Packing mode (`None` = byte-weight baseline).
+    pub mode: Option<MacMode>,
+    /// Datapath feature toggles.
+    pub mac: MacUnitConfig,
+}
+
+/// Session-level analytic cost cache: the measured [`PerfCounters`] of
+/// every kernel execution shape the process has run on the ISS, shared
+/// across plans and with `dse/cycles.rs::CycleModel::build` so the
+/// per-layer table and whole-model analytic runs can never disagree.
+///
+/// `insert` overwrites — last measurement wins. That is sound because
+/// equal keys imply equal counters (data-independent timing), and it is
+/// exactly the hook the audit tests use to inject a perturbation and
+/// prove a poisoned cache fails typed, never silently.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<CostKey, PerfCounters>>,
+}
+
+impl CostCache {
+    /// Cached counters for `key`, if any.
+    pub fn get(&self, key: &CostKey) -> Option<PerfCounters> {
+        self.map.lock().unwrap().get(key).copied()
+    }
+
+    /// Record (or overwrite) the counters measured for `key`.
+    pub fn insert(&self, key: CostKey, perf: PerfCounters) {
+        self.map.lock().unwrap().insert(key, perf);
+    }
+
+    /// Distinct kernel shapes measured so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing has been measured yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Counters for observability (hit rates show up in bench output).
 #[derive(Debug, Default)]
 pub struct SessionStats {
@@ -130,6 +253,21 @@ pub struct SessionStats {
     /// deliberately **not** part of [`SessionSnapshot`] — the shard
     /// artifact schema stays at its current version.
     pub plan_hits: AtomicU64,
+    /// Analytic cost-cache hits: kernel steps (and cycle-model
+    /// measurements) whose counters came from [`CostCache`] instead of
+    /// an ISS execution — how much simulation the sweep skipped.
+    ///
+    /// Like the plan counters, the analytic trio below is process-local
+    /// observability, excluded from [`SessionSnapshot`] so the shard
+    /// artifact schema stays at its current version.
+    pub analytic_hits: AtomicU64,
+    /// Sampled differential audits executed (`--audit-every K`): batch
+    /// elements replayed on the real ISS and bit-compared.
+    pub analytic_audits: AtomicU64,
+    /// Audits whose ISS replay disagreed with the analytic path. Any
+    /// nonzero value means the data-independence contract broke (or a
+    /// test injected a perturbation); the run fails with a typed error.
+    pub audit_mismatches: AtomicU64,
 }
 
 /// Plain-value snapshot of [`SessionStats`] — the unit the sharded DSE
@@ -188,6 +326,8 @@ pub struct SimSession {
     pool: Mutex<Vec<Memory>>,
     /// Usage counters.
     pub stats: SessionStats,
+    /// Analytic per-kernel cost cache (see [`CostCache`]).
+    pub costs: CostCache,
 }
 
 /// Keep at most this many idle memories around (bounds resident RAM at

@@ -1,0 +1,259 @@
+//! Analytic fast-path acceptance: [`ExecMode::Analytic`] is
+//! **observationally identical** to the full ISS execution.
+//!
+//! 1. Property: across the synthetic zoo models and seeded-random
+//!    mixed-precision configurations, an analytic `run_plan_batch` is
+//!    bit-identical to per-input ISS runs — logits AND per-layer
+//!    cycle / memory-access / instret counters. The analytic path may
+//!    only change *how much* simulation happens, never a single
+//!    reported number.
+//! 2. The seeded audit-element selection ([`audit_indices`]) is a pure
+//!    function of `(seed, n, every)`: repeated calls agree, prefixes
+//!    agree across shard sizes, and the degenerate cadences (0 = off,
+//!    1 = everything) behave as documented.
+//! 3. A perturbed cost cache **fails typed, never silently**: poisoning
+//!    one kernel's cached counters makes an audited [`AnalyticEval`]
+//!    return the "analytic audit mismatch" error and bumps the
+//!    `audit_mismatches` session counter.
+//!
+//! Counter *exactness* for the session-global `runs` statistic lives in
+//! `tests/analytic_stats.rs`, which owns its own process.
+
+use mpnn::coordinator::{AccuracyEval, AnalyticEval};
+use mpnn::models::infer::{calibrate, quantize_input, quantize_model, random_params};
+use mpnn::models::plan::{plan_for, Step};
+use mpnn::models::sim_exec::{
+    audit_indices, cost_key_for, modes_for, run_plan, run_plan_batch, ExecMode,
+};
+use mpnn::models::synthetic::generate;
+use mpnn::models::{zoo, LayerSpec, ModelSpec, Node};
+use mpnn::nn::tensor::Tensor;
+use mpnn::rng::Rng;
+use mpnn::sim::{MacUnitConfig, SimSession};
+use std::sync::atomic::Ordering;
+
+fn toy_residual_model() -> ModelSpec {
+    ModelSpec {
+        name: "toy",
+        input: [8, 8, 3],
+        num_classes: 4,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::MaxPool2),
+            Node::Residual(vec![
+                LayerSpec::Conv { cout: 16, k: 1, stride: 1, pad: 0, relu: true },
+                LayerSpec::Depthwise { k: 3, stride: 1, pad: 1, relu: true },
+                LayerSpec::Conv { cout: 8, k: 1, stride: 1, pad: 0, relu: false },
+            ]),
+            Node::Layer(LayerSpec::AvgPoolGlobal),
+            Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+        ],
+    }
+}
+
+fn toy_dw_stride_model() -> ModelSpec {
+    ModelSpec {
+        name: "toy_dw",
+        input: [9, 9, 3],
+        num_classes: 3,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 6, k: 3, stride: 2, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Depthwise { k: 3, stride: 2, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 8, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 3, relu: false }),
+        ],
+    }
+}
+
+fn random_bits(rng: &mut Rng, n: usize) -> Vec<u32> {
+    (0..n).map(|_| [8u32, 4, 2][rng.below(3) as usize]).collect()
+}
+
+/// Analytic batch vs per-input ISS: bit-identical logits and per-layer
+/// counters for every batch element.
+fn check_analytic_matches_iss(spec: &ModelSpec, bits: &[u32], seed: u64) {
+    let n = mpnn::models::analyze(spec).layers.len();
+    assert_eq!(bits.len(), n);
+    let params = random_params(spec, seed);
+    let ds = generate(seed ^ 0x5A, 5, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(spec, &params, &ds.images[..2]);
+    let qm = quantize_model(spec, &params, &sites, bits);
+    let mac = MacUnitConfig::full();
+    let inputs: Vec<Tensor<i8>> = ds.images.iter().map(|im| quantize_input(&qm, im)).collect();
+
+    let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+    let analytic = run_plan_batch(&plan, &inputs, mac, ExecMode::Analytic, 3).unwrap();
+    assert_eq!(analytic.len(), inputs.len());
+    for (mi, (input, arun)) in inputs.iter().zip(&analytic).enumerate() {
+        let iss = run_plan(&plan, input, mac, ExecMode::Iss, None).unwrap();
+        assert_eq!(arun.logits, iss.logits, "{} bits {bits:?} input {mi}: logits", spec.name);
+        assert_eq!(arun.layers.len(), iss.layers.len());
+        for (a, b) in arun.layers.iter().zip(&iss.layers) {
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.mode, b.mode);
+            assert_eq!(
+                a.perf, b.perf,
+                "{} bits {bits:?} input {mi} layer {}: cache-served counters must equal \
+                 an ISS measurement",
+                spec.name, a.layer
+            );
+        }
+        assert_eq!(arun.total_cycles(), iss.total_cycles());
+        assert_eq!(arun.total_accesses(), iss.total_accesses());
+        assert_eq!(arun.total_instret(), iss.total_instret());
+    }
+}
+
+#[test]
+fn analytic_matches_iss_on_toy_residual() {
+    let spec = toy_residual_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_analytic_matches_iss(&spec, &vec![8; n], 700);
+    check_analytic_matches_iss(&spec, &vec![2; n], 701);
+    let mut rng = Rng::new(0xA7_01);
+    let bits = random_bits(&mut rng, n);
+    check_analytic_matches_iss(&spec, &bits, 702);
+}
+
+#[test]
+fn analytic_matches_iss_on_dw_stride_geometry() {
+    let spec = toy_dw_stride_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_analytic_matches_iss(&spec, &vec![4; n], 710);
+    let mut rng = Rng::new(0xA7_02);
+    let bits = random_bits(&mut rng, n);
+    check_analytic_matches_iss(&spec, &bits, 711);
+}
+
+#[test]
+fn analytic_matches_iss_on_lenet5() {
+    let spec = zoo::lenet5();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    check_analytic_matches_iss(&spec, &vec![4; n], 720);
+    let mut rng = Rng::new(0xA7_03);
+    let bits = random_bits(&mut rng, n);
+    check_analytic_matches_iss(&spec, &bits, 721);
+}
+
+// ------------------------------------------------- audit selection ---
+
+#[test]
+fn audit_selection_is_deterministic_and_strided() {
+    for seed in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+        for every in [1usize, 2, 3, 7] {
+            let a = audit_indices(seed, 16, every);
+            let b = audit_indices(seed, 16, every);
+            assert_eq!(a, b, "selection must be a pure function of (seed, n, every)");
+            assert!(!a.is_empty());
+            assert!(a[0] < every, "phase must land inside the first stride");
+            for w in a.windows(2) {
+                assert_eq!(w[1] - w[0], every, "every {every}th element, exactly");
+            }
+        }
+    }
+    // Different seeds move the phase (the audit is sampled, not fixed
+    // to element 0 forever).
+    let phases: std::collections::BTreeSet<usize> =
+        (0..64u64).map(|s| audit_indices(s, 16, 7)[0]).collect();
+    assert!(phases.len() > 1, "seed must influence the audit phase");
+}
+
+#[test]
+fn audit_selection_agrees_across_shard_sizes() {
+    // Shards of the same element order audit the same elements: the
+    // global selection restricted to a shard's prefix IS the shard's
+    // own selection — no shard strategy can change which inputs get
+    // replayed on the ISS.
+    for seed in [3u64, 0xC0FFEE] {
+        for every in [2usize, 5] {
+            let whole = audit_indices(seed, 32, every);
+            let prefix = audit_indices(seed, 16, every);
+            let cut: Vec<usize> = whole.iter().copied().filter(|&i| i < 16).collect();
+            assert_eq!(prefix, cut, "prefix selection must agree with the global one");
+        }
+    }
+}
+
+#[test]
+fn audit_degenerate_cadences() {
+    assert!(audit_indices(9, 16, 0).is_empty(), "every = 0 disables auditing");
+    assert!(audit_indices(9, 0, 3).is_empty(), "empty batch audits nothing");
+    // every = 1 is the full-ISS differential check CI's byte-identity
+    // smoke relies on: every element, regardless of seed.
+    for seed in [0u64, 42, u64::MAX] {
+        assert_eq!(audit_indices(seed, 16, 1), (0..16).collect::<Vec<_>>());
+    }
+}
+
+// ---------------------------------------------- perturbation audit ---
+
+/// Geometry used by no other test in this binary, so the poisoned
+/// [`CostKey`](mpnn::sim::session::CostKey) below cannot collide with a
+/// key the bit-identity properties above legitimately cached.
+fn perturb_model() -> ModelSpec {
+    ModelSpec {
+        name: "toy_perturb",
+        input: [6, 6, 3],
+        num_classes: 3,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 5, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 3, relu: false }),
+        ],
+    }
+}
+
+#[test]
+fn perturbed_cost_cache_trips_the_audit_with_a_typed_error() {
+    let spec = perturb_model();
+    let n = mpnn::models::analyze(&spec).layers.len();
+    let params = random_params(&spec, 730);
+    let ds = generate(731, 6, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(&spec, &params, &ds.images[..2]);
+    let qm = quantize_model(&spec, &params, &sites, &vec![4; n]);
+    let mac = MacUnitConfig::full();
+    let session = SimSession::global();
+
+    let mut ev = AnalyticEval::new(ds.clone(), 2);
+    ev.audit_every = 1;
+    ev.audit_seed = 7;
+
+    // Healthy run first: the cache fills from real ISS measurements and
+    // the full-batch audit passes.
+    ev.evaluate(&qm, ds.images.len()).expect("unperturbed analytic eval must audit clean");
+
+    // Poison the conv step's cached counters through the documented
+    // overwrite hook. The next analytic run serves the poisoned cycle
+    // count; its ISS replay cannot.
+    let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+    let ks = plan
+        .steps
+        .iter()
+        .find_map(|s| match s {
+            Step::Kernel(ks) => Some(ks),
+            _ => None,
+        })
+        .expect("plan has a kernel step");
+    let key = cost_key_for(ks, mac);
+    let mut perf = session.costs.get(&key).expect("healthy run must have cached the conv cost");
+    perf.cycles += 1;
+    session.costs.insert(key, perf);
+
+    let mismatches0 = session.stats.audit_mismatches.load(Ordering::Relaxed);
+    let err = ev
+        .evaluate(&qm, ds.images.len())
+        .expect_err("a poisoned cost cache must fail the audited evaluation");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("analytic audit mismatch"),
+        "mismatch must surface as the typed audit error, got: {msg}"
+    );
+    assert!(
+        session.stats.audit_mismatches.load(Ordering::Relaxed) > mismatches0,
+        "audit_mismatches must count the tripped audit"
+    );
+
+    // Repair the cache so a hypothetical later analytic user of this
+    // exact geometry (none today) would see honest numbers again.
+    perf.cycles -= 1;
+    session.costs.insert(key, perf);
+}

@@ -1,0 +1,86 @@
+//! Analytic-execution accounting acceptance: a cold analytic batch of
+//! N inputs runs the ISS **once per unique kernel step** — not
+//! steps × N, and not steps × workers — observed via the engine-run
+//! counter on the global [`SessionStats`](mpnn::sim::session::SessionStats).
+//!
+//! This file deliberately holds a single `#[test]`: integration-test
+//! files are separate processes, so this test is the sole owner of the
+//! process-global `runs` / `analytic_hits` counters and can assert them
+//! exactly (the sibling `tests/analytic_exec.rs` checks bit-identity of
+//! the analytic results, where counter exactness would race with its
+//! concurrent tests).
+
+use mpnn::models::infer::{calibrate, quantize_input, quantize_model, random_params};
+use mpnn::models::plan::{plan_for, Step};
+use mpnn::models::sim_exec::{modes_for, run_plan_batch, ExecMode};
+use mpnn::models::synthetic::generate;
+use mpnn::models::{LayerSpec, ModelSpec, Node};
+use mpnn::nn::tensor::Tensor;
+use mpnn::sim::{MacUnitConfig, SimSession};
+use std::sync::atomic::Ordering;
+
+#[test]
+fn analytic_batch_runs_the_iss_once_per_unique_kernel_step() {
+    let spec = ModelSpec {
+        name: "tiny_analytic",
+        input: [8, 8, 3],
+        num_classes: 4,
+        nodes: vec![
+            Node::Layer(LayerSpec::Conv { cout: 8, k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::MaxPool2),
+            Node::Layer(LayerSpec::Depthwise { k: 3, stride: 1, pad: 1, relu: true }),
+            Node::Layer(LayerSpec::Dense { out: 4, relu: false }),
+        ],
+    };
+    let n = mpnn::models::analyze(&spec).layers.len();
+    let params = random_params(&spec, 90);
+    let ds = generate(91, 8, spec.input, spec.num_classes, 0.4);
+    let sites = calibrate(&spec, &params, &ds.images[..3]);
+    let qm = quantize_model(&spec, &params, &sites, &vec![4; n]);
+    let mac = MacUnitConfig::full();
+    let inputs: Vec<Tensor<i8>> = ds.images.iter().map(|im| quantize_input(&qm, im)).collect();
+    let batch = inputs.len();
+
+    let plan = plan_for(&qm, &modes_for(&qm)).unwrap();
+    let kernel_steps = plan.steps.iter().filter(|s| matches!(s, Step::Kernel(_))).count();
+    assert_eq!(kernel_steps, n, "every quantizable layer lowers to one kernel step");
+
+    let stats = &SimSession::global().stats;
+    let runs0 = stats.runs.load(Ordering::Relaxed);
+    let hits0 = stats.analytic_hits.load(Ordering::Relaxed);
+
+    // Cold batch: the warm-up input misses every kernel step once (one
+    // ISS execution each); the other batch - 1 inputs are pure cache
+    // hits even with a parallel worker pool.
+    let runs =
+        run_plan_batch(&plan, &inputs, mac, ExecMode::Analytic, 4).unwrap();
+    assert_eq!(runs.len(), batch);
+    let iss_execs = stats.runs.load(Ordering::Relaxed) - runs0;
+    let hits = stats.analytic_hits.load(Ordering::Relaxed) - hits0;
+    assert_eq!(
+        iss_execs as usize, kernel_steps,
+        "a cold analytic batch must cost one ISS execution per unique kernel step, \
+         not steps x batch"
+    );
+    assert_eq!(hits as usize, kernel_steps * (batch - 1), "every replay is a cache hit");
+
+    // Warm batch: zero ISS executions, everything cache-served.
+    let runs1 = stats.runs.load(Ordering::Relaxed);
+    let again = run_plan_batch(&plan, &inputs, mac, ExecMode::Analytic, 4).unwrap();
+    assert_eq!(again.len(), batch);
+    assert_eq!(
+        stats.runs.load(Ordering::Relaxed) - runs1,
+        0,
+        "a warm analytic batch must not touch the ISS at all"
+    );
+    assert_eq!(
+        (stats.analytic_hits.load(Ordering::Relaxed) - hits0) as usize,
+        kernel_steps * (2 * batch - 1)
+    );
+
+    // And the replays are the same numbers the cold batch reported.
+    for (a, b) in runs.iter().zip(&again) {
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_cycles(), b.total_cycles());
+    }
+}

@@ -77,7 +77,17 @@ fn docs_mention_live_symbols() {
     // backends by their real type names, and the architecture tour the
     // load-bearing components of the unified accuracy+cycles path.
     let ev = fs::read_to_string("docs/EVALUATORS.md").unwrap();
-    for sym in ["HostEval", "IssEval", "PjrtEval", "run_model_batch", "divergence", "--shard"] {
+    for sym in [
+        "HostEval",
+        "IssEval",
+        "AnalyticEval",
+        "PjrtEval",
+        "run_model_batch",
+        "divergence",
+        "--shard",
+        "--audit-every",
+        "CostCache",
+    ] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
     let arch = fs::read_to_string("docs/ARCHITECTURE.md").unwrap();
@@ -112,6 +122,14 @@ fn docs_mention_live_symbols() {
         "plan_compiles",
         "--trace-steps",
         "--merge-dir",
+        // The analytic-fast-path section must keep naming the cost
+        // cache, the execution-mode switch and the audit counters.
+        "CostCache",
+        "ExecMode",
+        "audit_indices",
+        "analytic_hits",
+        "audit_mismatches",
+        "--audit-every",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
     }
@@ -129,11 +147,26 @@ fn docs_mention_live_symbols() {
         assert!(plan.contains(sym), "models/plan.rs lost `{sym}` — update the docs");
     }
     let sim_exec = fs::read_to_string("rust/src/models/sim_exec.rs").unwrap();
-    for sym in ["pub fn run_plan", "pub fn run_plan_batch", "pub struct StepTrace"] {
+    for sym in [
+        "pub fn run_plan",
+        "pub fn run_plan_batch",
+        "pub struct StepTrace",
+        "pub enum ExecMode",
+        "pub fn audit_indices",
+        "pub fn audit_run",
+    ] {
         assert!(sim_exec.contains(sym), "models/sim_exec.rs lost `{sym}` — update the docs");
     }
     let session = fs::read_to_string("rust/src/sim/session.rs").unwrap();
-    for sym in ["plan_compiles", "plan_hits"] {
+    for sym in [
+        "plan_compiles",
+        "plan_hits",
+        "pub struct CostCache",
+        "pub struct CostKey",
+        "analytic_hits",
+        "analytic_audits",
+        "audit_mismatches",
+    ] {
         assert!(session.contains(sym), "sim/session.rs lost `{sym}` — update the docs");
     }
     // The shard symbols the docs name must still exist in the crate.
@@ -155,7 +188,12 @@ fn docs_mention_live_symbols() {
     // The symbols the docs name must still exist in the crate (grep
     // over the source tree keeps this honest without a compiler).
     let coord = fs::read_to_string("rust/src/coordinator/mod.rs").unwrap();
-    for sym in ["pub struct HostEval", "pub struct IssEval", "pub struct PjrtEval"] {
+    for sym in [
+        "pub struct HostEval",
+        "pub struct IssEval",
+        "pub struct AnalyticEval",
+        "pub struct PjrtEval",
+    ] {
         assert!(coord.contains(sym), "coordinator lost `{sym}` — update docs/EVALUATORS.md");
     }
 }

@@ -27,7 +27,7 @@ use mpnn::models::infer::{
     calibrate, qforward, quantize_input, quantize_model, random_params, residual_requants, QModel,
 };
 use mpnn::models::plan::{canonical_modes, compile, plan_for};
-use mpnn::models::sim_exec::{baseline_modes, modes_for, run_model, run_plan};
+use mpnn::models::sim_exec::{baseline_modes, modes_for, run_model, run_plan, ExecMode};
 use mpnn::models::synthetic::generate;
 use mpnn::models::{zoo, LayerSpec, ModelSpec, Node};
 use mpnn::nn::layers::{
@@ -394,8 +394,8 @@ fn run_plan_replays_one_compiled_plan_per_config() {
     // A freshly compiled (uncached) plan is behaviourally identical to
     // the cached one.
     let fresh = compile(&qm, &ext).unwrap();
-    let r_cached = run_plan(&a, &input, MacUnitConfig::full(), None).unwrap();
-    let r_fresh = run_plan(&fresh, &input, MacUnitConfig::full(), None).unwrap();
+    let r_cached = run_plan(&a, &input, MacUnitConfig::full(), ExecMode::Iss, None).unwrap();
+    let r_fresh = run_plan(&fresh, &input, MacUnitConfig::full(), ExecMode::Iss, None).unwrap();
     assert_eq!(r_cached.logits, r_fresh.logits);
     assert_eq!(r_cached.total_cycles(), r_fresh.total_cycles());
     assert_eq!(r_cached.logits, qforward(&qm, &input), "plan ISS vs plan host");
