@@ -43,6 +43,14 @@
 //! into the [`EvalPoint`] it hands to the DSE, so ISS-measured cycles
 //! and the divergence metric ride along with accuracy through the
 //! whole experiment stack.
+//!
+//! Sweeps run exhaustively ([`Coordinator::run_sweep`], optionally
+//! sharded) or guided ([`Coordinator::sweep_guided`]): the guided
+//! driver prices every configuration with the already-measured
+//! [`CycleModel`], runs successive-halving rungs on eval-set prefixes,
+//! and full-evaluates only what the analytic bounds cannot prove
+//! dominated — same points, fewer evaluations (see
+//! [`crate::dse::search`]).
 
 use crate::dse::cycles::CycleModel;
 use crate::dse::{total_mac_instructions, Config, EvalPoint};
@@ -102,6 +110,11 @@ pub trait AccuracyEval: Send + Sync {
     fn evaluate(&self, qm: &QModel, n: usize) -> Result<EvalReport>;
     /// Backend label (metrics/logs).
     fn name(&self) -> &'static str;
+    /// Size of the backend's evaluation set — the `n` a full evaluation
+    /// clamps to. The guided search uses this to scale its rung
+    /// prefixes so the accuracy interval bounds are computed against
+    /// the true full-evaluation denominator.
+    fn eval_len(&self) -> usize;
 }
 
 /// Host-reference evaluator: the Rust integer forward pass. Always
@@ -135,6 +148,9 @@ impl AccuracyEval for HostEval {
     }
     fn name(&self) -> &'static str {
         "host"
+    }
+    fn eval_len(&self) -> usize {
+        self.test.images.len()
     }
 }
 
@@ -255,6 +271,9 @@ impl AccuracyEval for IssEval {
     fn name(&self) -> &'static str {
         "iss"
     }
+    fn eval_len(&self) -> usize {
+        self.test.images.len()
+    }
 }
 
 /// Analytic evaluator: [`IssEval`]'s fast sibling. The batch runs under
@@ -348,6 +367,9 @@ impl AccuracyEval for AnalyticEval {
     fn name(&self) -> &'static str {
         "analytic"
     }
+    fn eval_len(&self) -> usize {
+        self.test.images.len()
+    }
 }
 
 /// PJRT evaluator: batched inference through the AOT model artifact.
@@ -394,6 +416,9 @@ impl AccuracyEval for PjrtEval {
     fn name(&self) -> &'static str {
         "pjrt"
     }
+    fn eval_len(&self) -> usize {
+        self.test.images.len()
+    }
 }
 
 /// Coordinator metrics.
@@ -408,6 +433,11 @@ pub struct Metrics {
     /// Configurations whose evaluation reported a nonzero host-vs-ISS
     /// top-1 divergence (only the [`IssEval`] backend feeds this).
     pub diverged_configs: AtomicU64,
+    /// Prefix (partial) evaluations performed by guided-search rungs
+    /// ([`Coordinator::sweep_guided`]). These bypass the per-config
+    /// report cache — the cache is keyed by configuration alone and
+    /// must only ever hold full-length reports.
+    pub partial_evals: AtomicU64,
 }
 
 /// The evaluation coordinator.
@@ -606,6 +636,58 @@ impl Coordinator {
         let mine: Vec<Config> = indices.iter().map(|&i| configs[i].clone()).collect();
         let points = self.run_sweep(&mine, n_eval)?;
         Ok(indices.into_iter().zip(points).collect())
+    }
+
+    /// Guided sweep
+    /// ([`guided_search`](crate::dse::search::guided_search)): analytic
+    /// cost bounds prune the space, successive halving on growing
+    /// eval-set prefixes promotes
+    /// the rest, and only the survivors (plus whatever the zero-regret
+    /// repair pass re-admits) are evaluated on the full eval set.
+    ///
+    /// The analytic cost triple per configuration comes from the
+    /// already-measured [`CycleModel`] — pricing the whole space costs
+    /// no ISS runs. Rung prefix evaluations call the backend directly
+    /// with the prefix length and **bypass the per-config report
+    /// cache** (it is keyed by configuration alone, so a partial report
+    /// would poison later full evaluations); full evaluations go
+    /// through [`Coordinator::evaluate`], the exact path
+    /// [`Coordinator::run_sweep`] uses, so every returned point is
+    /// bit-identical to what the exhaustive sweep would produce for
+    /// that configuration.
+    pub fn sweep_guided(
+        &self,
+        configs: &[Config],
+        n_eval: usize,
+        opts: &crate::dse::search::GuidedOpts,
+    ) -> Result<crate::dse::search::GuidedSweep> {
+        let n = n_eval.min(self.evaluator.eval_len()).max(1);
+        let costs: Vec<crate::dse::search::CostVec> = configs
+            .iter()
+            .map(|cfg| {
+                let c = self.cycle_model.config_total(cfg);
+                crate::dse::search::CostVec {
+                    cycles: c.cycles,
+                    mac: total_mac_instructions(&self.analysis, cfg),
+                    mem: c.mem_accesses,
+                }
+            })
+            .collect();
+        let eval_partial = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+            self.metrics.partial_evals.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+            crate::par::parallel_map(idxs.len(), self.workers, |j| {
+                let qm = self.quantized(&configs[idxs[j]]);
+                let r = self.evaluator.evaluate(&qm, m)?;
+                // The backends score `correct / m` in f32; m is far
+                // below 2^24, so the hit count round-trips exactly.
+                Ok((r.accuracy * m as f32).round() as u32)
+            })
+        };
+        let eval_full = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+            let mine: Vec<Config> = idxs.iter().map(|&i| configs[i].clone()).collect();
+            self.run_sweep(&mine, n_eval)
+        };
+        crate::dse::search::guided_search(&costs, n, opts, &eval_partial, &eval_full)
     }
 }
 

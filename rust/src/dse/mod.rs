@@ -10,6 +10,7 @@
 
 pub mod cycles;
 pub mod pareto;
+pub mod search;
 pub mod shard;
 
 use crate::models::infer::{quantize_model, ModelParams, QModel};

@@ -1,0 +1,705 @@
+//! Predictor-guided DSE: successive halving over analytic cost bounds.
+//!
+//! The exhaustive sweep evaluates every enumerated configuration on the
+//! full evaluation set — exact, but combinatorial in depth. This module
+//! adds the guided driver (`--search guided`): configurations are first
+//! priced with the **analytic cost model** (cycles / MAC instructions /
+//! memory accesses from [`CycleModel`](super::cycles::CycleModel) — no
+//! ISS runs beyond the session `CostCache` warm-up), then pass through
+//! a successive-halving loop that scores them on growing deterministic
+//! *prefixes* of the evaluation set and promotes only the top `1/eta`
+//! per rung. Between rungs an **interval prune** drops every
+//! configuration whose accuracy upper bound already sits under an alive
+//! configuration's lower bound at no more cost — provably dominated, so
+//! it never reaches full evaluation.
+//!
+//! The driver is *zero-regret by construction*: after the survivors are
+//! fully evaluated, a repair pass re-admits any dropped configuration
+//! the measured points cannot prove dominated (accuracy-at-optimism vs.
+//! every cost axis) and iterates until none remain. At that fixpoint
+//! every configuration that was never fully evaluated is dominated by a
+//! fully-evaluated one on **all** cost axes, so the Pareto front of the
+//! evaluated subset equals the exhaustive front exactly — same points,
+//! same representatives — on any of the three cost axes. The exhaustive
+//! sweep stays the default and doubles as the property-test oracle
+//! (`tests/search_oracle.rs`); what the guided path buys is *fewer full
+//! evaluations*, which on landscapes with cheap high-accuracy
+//! configurations is most of them.
+//!
+//! Everything is deterministic: prefixes are leading slices of the eval
+//! set, rung tie-breaks go through the shared seeded stride
+//! ([`crate::rng::seeded_stride`], the same FNV-phase helper the
+//! analytic audit sampler uses), and two runs with one seed are
+//! byte-identical.
+
+use super::pareto::pareto_front;
+use super::EvalPoint;
+use crate::error::Result;
+use crate::{bail, ensure};
+
+/// Which DSE driver a sweep runs (and which produced an artifact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchStrategy {
+    /// Evaluate every enumerated configuration on the full eval set
+    /// (the default, and the guided path's test oracle).
+    #[default]
+    Exhaustive,
+    /// Analytic-bound pruning + successive halving + repair
+    /// ([`guided_search`]).
+    Guided,
+}
+
+impl SearchStrategy {
+    /// Parse a `--search` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "exhaustive" => Some(SearchStrategy::Exhaustive),
+            "guided" => Some(SearchStrategy::Guided),
+            _ => None,
+        }
+    }
+
+    /// Stable name (CLI value and artifact tag).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::Exhaustive => "exhaustive",
+            SearchStrategy::Guided => "guided",
+        }
+    }
+}
+
+/// Guided-search knobs (`--rungs`, `--eta`, reusing the sweep `--seed`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GuidedOpts {
+    /// Successive-halving rungs, counting the final full evaluation.
+    /// `rungs = 3` with a 128-input eval set scores prefixes of 32 and
+    /// 64 before promoting to all 128.
+    pub rungs: usize,
+    /// Halving factor: the top `1/eta` of each rung promotes.
+    pub eta: usize,
+    /// Seed for the rung-promotion tie-break stride.
+    pub seed: u64,
+}
+
+impl Default for GuidedOpts {
+    fn default() -> Self {
+        GuidedOpts { rungs: 3, eta: 2, seed: 0 }
+    }
+}
+
+/// Spaces smaller than this skip the rung machinery entirely: the
+/// partial evaluations would cost more than they save, so the guided
+/// driver degenerates to a full sweep (bit-identical to exhaustive).
+pub const RUNG_THRESHOLD: usize = 9;
+
+/// Analytic cost triple of one configuration — every axis a sweep
+/// consumer ranks by (Fig. 6 uses `mac`, Fig. 8 `cycles`, the memory
+/// view `mem`). Pruning requires dominance on **all** of them so the
+/// front on any single axis survives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostVec {
+    /// End-to-end cycles from the per-layer cycle model.
+    pub cycles: u64,
+    /// Total MAC instructions.
+    pub mac: u64,
+    /// Memory accesses from the cycle model.
+    pub mem: u64,
+}
+
+impl CostVec {
+    /// `self` at most `other` on every axis.
+    fn le(&self, other: &CostVec) -> bool {
+        self.cycles <= other.cycles && self.mac <= other.mac && self.mem <= other.mem
+    }
+
+    /// `self` strictly under `other` on every axis.
+    fn lt(&self, other: &CostVec) -> bool {
+        self.cycles < other.cycles && self.mac < other.mac && self.mem < other.mem
+    }
+}
+
+/// Per-rung accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RungReport {
+    /// Rung number (0-based).
+    pub rung: usize,
+    /// Prefix length the rung scored.
+    pub prefix: usize,
+    /// Configurations alive at rung entry.
+    pub entered: usize,
+    /// Dropped by the interval prune at this rung.
+    pub pruned: usize,
+    /// Alive after the seeded promotion (what the next rung sees).
+    pub promoted: usize,
+}
+
+/// What a guided run did — the savings ledger the harness logs and the
+/// property tests account against.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GuidedStats {
+    /// Size of the searched configuration space.
+    pub space: usize,
+    /// Per-rung entry/prune/promotion counts.
+    pub rung_reports: Vec<RungReport>,
+    /// Total configurations dropped by the interval prune.
+    pub pruned: usize,
+    /// Total configurations demoted by rung promotion quotas.
+    pub halved: usize,
+    /// Dropped configurations the repair pass re-admitted to full
+    /// evaluation because the measured points could not prove them
+    /// dominated.
+    pub repaired: usize,
+    /// Prefix (partial) evaluations performed across all rungs.
+    pub partial_evals: usize,
+    /// Configurations evaluated on the full eval set. `space -
+    /// full_evals` is what the guided driver saved over exhaustive.
+    pub full_evals: usize,
+    /// True when the space/opts were too small for rungs and the driver
+    /// fell back to a plain full sweep.
+    pub degenerate: bool,
+}
+
+/// A guided sweep's result: the fully-evaluated points, tagged with
+/// their index into the original configuration slice (ascending), plus
+/// the accounting. The Pareto front of `points` equals the exhaustive
+/// front on any cost axis (see the module docs for the argument).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuidedSweep {
+    /// `(index into the searched configs, fully-evaluated point)`,
+    /// ascending by index.
+    pub points: Vec<(usize, EvalPoint)>,
+    /// Savings/accounting ledger.
+    pub stats: GuidedStats,
+}
+
+/// Rung prefix lengths for an eval set of `n`: `n / eta^k` for the
+/// non-final rungs, deduplicated, strictly below `n`. Empty means the
+/// driver should degenerate to a plain full sweep.
+fn rung_prefixes(space: usize, n: usize, opts: &GuidedOpts) -> Vec<usize> {
+    if space < RUNG_THRESHOLD || opts.rungs <= 1 || opts.eta < 2 || n < opts.eta {
+        return Vec::new();
+    }
+    let mut out: Vec<usize> = Vec::new();
+    for r in 0..opts.rungs - 1 {
+        let exp = (opts.rungs - 1 - r) as u32;
+        let m = match (opts.eta as u64).checked_pow(exp) {
+            Some(div) => ((n as u64 / div) as usize).max(1),
+            None => 1, // eta^exp overflowed u64: the prefix floor is 1
+        };
+        if m >= n || out.last() == Some(&m) {
+            continue;
+        }
+        out.push(m);
+    }
+    out
+}
+
+/// Accuracy upper bound after `correct` of a `prefix`-input partial
+/// evaluation, on the full-eval scale of `n` inputs: even if every
+/// remaining input scores, accuracy is at most `(correct + n -
+/// prefix) / n`. IEEE f32 division is monotone in the integer
+/// numerator, so the bound is sound against the evaluator's own
+/// `correct / n` arithmetic.
+fn upper_bound(correct: u32, prefix: usize, n: usize) -> f32 {
+    (correct as usize + (n - prefix)) as f32 / n as f32
+}
+
+/// Matching lower bound: the prefix hits are already banked.
+fn lower_bound(correct: u32, n: usize) -> f32 {
+    correct as f32 / n as f32
+}
+
+/// Interval prune: drop every alive configuration whose accuracy upper
+/// bound sits at/under another alive configuration's lower bound at no
+/// more analytic cost — with strictness on the accuracy bound or on
+/// every cost axis, so an exact tie is never pruned (the front's
+/// stable-representative contract needs the lowest index alive).
+/// Returns the dropped indices (ascending).
+fn interval_prune(
+    alive: &mut Vec<usize>,
+    costs: &[CostVec],
+    partial: &[Option<(u32, usize)>],
+    n: usize,
+) -> Vec<usize> {
+    let bounds: Vec<(f32, f32)> = alive
+        .iter()
+        .map(|&i| {
+            let (c, m) = partial[i].expect("alive config has a rung result");
+            (lower_bound(c, n), upper_bound(c, m, n))
+        })
+        .collect();
+    let keep: Vec<bool> = alive
+        .iter()
+        .enumerate()
+        .map(|(a, &i)| {
+            !alive.iter().enumerate().any(|(b, &j)| {
+                a != b
+                    && costs[j].le(&costs[i])
+                    && bounds[b].0 >= bounds[a].1
+                    && (bounds[b].0 > bounds[a].1 || costs[j].lt(&costs[i]))
+            })
+        })
+        .collect();
+    let dropped: Vec<usize> =
+        alive.iter().zip(&keep).filter(|(_, &k)| !k).map(|(&i, _)| i).collect();
+    let mut it = keep.iter();
+    alive.retain(|_| *it.next().unwrap());
+    dropped
+}
+
+/// Seeded rung promotion: keep the rung-level Pareto fronts (prefix
+/// hits vs. each analytic cost axis — those are the configurations the
+/// final front can still come from) and fill the `1/eta` quota in
+/// (hits desc, cycles asc, index asc) order. When the quota boundary
+/// falls inside a run of equal `(hits, cycles)` candidates, the subset
+/// is chosen by the shared seeded stride — deterministic per seed, and
+/// the same FNV-phase logic as the analytic audit sampler. Returns the
+/// demoted indices.
+fn promote(
+    alive: &mut Vec<usize>,
+    costs: &[CostVec],
+    partial: &[Option<(u32, usize)>],
+    quota: usize,
+    seed: u64,
+) -> Vec<usize> {
+    if alive.len() <= quota {
+        return Vec::new();
+    }
+    let hits = |i: usize| partial[i].expect("alive config has a rung result").0;
+    // Rung-level fronts on each cost axis, over temporary points whose
+    // "accuracy" is the prefix hit count.
+    let tmp: Vec<EvalPoint> = alive
+        .iter()
+        .map(|&i| EvalPoint {
+            config: Vec::new(),
+            accuracy: hits(i) as f32,
+            mac_instructions: costs[i].mac,
+            cycles: costs[i].cycles,
+            mem_accesses: costs[i].mem,
+            iss_cycles: None,
+            divergence: None,
+        })
+        .collect();
+    let mut keep = vec![false; alive.len()];
+    let mut kept = 0usize;
+    let axes: [fn(&EvalPoint) -> u64; 3] =
+        [|p| p.cycles, |p| p.mac_instructions, |p| p.mem_accesses];
+    for axis in axes {
+        for pos in pareto_front(&tmp, axis) {
+            if !keep[pos] {
+                keep[pos] = true;
+                kept += 1;
+            }
+        }
+    }
+    let target = quota.max(kept);
+    // Fill the remaining quota in (hits desc, cycles asc, index asc)
+    // order, walking maximal runs of equal (hits, cycles).
+    let mut order: Vec<usize> = (0..alive.len()).collect();
+    let key = |pos: usize| (u32::MAX - hits(alive[pos]), costs[alive[pos]].cycles, alive[pos]);
+    order.sort_by_key(|&pos| key(pos));
+    let run_key = |pos: usize| (hits(alive[pos]), costs[alive[pos]].cycles);
+    let mut w = 0;
+    while w < order.len() && kept < target {
+        let mut e = w + 1;
+        while e < order.len() && run_key(order[e]) == run_key(order[w]) {
+            e += 1;
+        }
+        let candidates: Vec<usize> =
+            order[w..e].iter().copied().filter(|&pos| !keep[pos]).collect();
+        let free = target - kept;
+        if candidates.len() <= free {
+            for pos in candidates {
+                keep[pos] = true;
+                kept += 1;
+            }
+        } else {
+            // Seeded stride over the tied run, padded from the front
+            // (lowest index) when the stride lands short of the quota.
+            let k = candidates.len();
+            let mut pick = crate::rng::seeded_stride(seed, k, k.div_ceil(free));
+            pick.truncate(free);
+            let mut chosen = vec![false; k];
+            for &c in &pick {
+                chosen[c] = true;
+            }
+            let mut need = free - pick.len();
+            for slot in chosen.iter_mut() {
+                if need == 0 {
+                    break;
+                }
+                if !*slot {
+                    *slot = true;
+                    need -= 1;
+                }
+            }
+            for (c, &sel) in chosen.iter().enumerate() {
+                if sel {
+                    keep[candidates[c]] = true;
+                    kept += 1;
+                }
+            }
+        }
+        w = e;
+    }
+    let demoted: Vec<usize> =
+        alive.iter().zip(&keep).filter(|(_, &k)| !k).map(|(&i, _)| i).collect();
+    let mut it = keep.iter();
+    alive.retain(|_| *it.next().unwrap());
+    demoted
+}
+
+/// Is dropped configuration `c` provably dominated by a
+/// fully-evaluated point? "Provably" means: some measured point is at
+/// least as accurate as `c` could *possibly* be (its accuracy upper
+/// bound) at no more cost on **every** analytic axis, with strictness
+/// on accuracy or on every cost axis. A configuration this cannot
+/// certify gets repaired (fully evaluated) instead of guessed about.
+fn dominated_at_optimism(
+    c: usize,
+    costs: &[CostVec],
+    partial: &[Option<(u32, usize)>],
+    full: &[Option<EvalPoint>],
+    n: usize,
+) -> bool {
+    let (cor, m) = partial[c].expect("dropped config has a rung result");
+    let hi = upper_bound(cor, m, n);
+    full.iter().enumerate().any(|(d, p)| match p {
+        Some(p) => {
+            costs[d].le(&costs[c])
+                && p.accuracy >= hi
+                && (p.accuracy > hi || costs[d].lt(&costs[c]))
+        }
+        None => false,
+    })
+}
+
+/// Run the guided search over `costs.len()` configurations.
+///
+/// * `costs` — analytic cost triple per configuration (index-aligned
+///   with whatever slice the caller is searching);
+/// * `n` — full evaluation length (the caller should clamp to the
+///   evaluator's set size first — prefix bounds are computed against
+///   this `n`);
+/// * `eval_partial(indices, m)` — score each configuration on the
+///   first `m` eval inputs, returning the per-configuration *hit
+///   counts* (index-aligned with `indices`);
+/// * `eval_full(indices)` — fully evaluate, returning index-aligned
+///   [`EvalPoint`]s. Must be the same path the exhaustive sweep uses so
+///   surviving points are bit-identical to the oracle's.
+///
+/// The returned points carry every configuration that was fully
+/// evaluated, ascending by index; their Pareto front equals the
+/// exhaustive front on any cost axis.
+pub fn guided_search(
+    costs: &[CostVec],
+    n: usize,
+    opts: &GuidedOpts,
+    eval_partial: &(dyn Fn(&[usize], usize) -> Result<Vec<u32>> + Sync),
+    eval_full: &(dyn Fn(&[usize]) -> Result<Vec<EvalPoint>> + Sync),
+) -> Result<GuidedSweep> {
+    ensure!(n > 0, "guided search needs a non-empty eval set");
+    let space = costs.len();
+    let mut stats = GuidedStats { space, ..GuidedStats::default() };
+
+    let full_sweep = |indices: Vec<usize>, mut stats: GuidedStats| -> Result<GuidedSweep> {
+        let pts = eval_full(&indices)?;
+        ensure!(pts.len() == indices.len(), "full evaluation returned a short batch");
+        stats.full_evals += indices.len();
+        Ok(GuidedSweep { points: indices.into_iter().zip(pts).collect(), stats })
+    };
+
+    let prefixes = rung_prefixes(space, n, opts);
+    if prefixes.is_empty() {
+        // Space or eval set too small for rungs: plain full sweep,
+        // bit-identical to exhaustive.
+        stats.degenerate = true;
+        return full_sweep((0..space).collect(), stats);
+    }
+
+    let mut alive: Vec<usize> = (0..space).collect();
+    let mut dropped: Vec<usize> = Vec::new();
+    // Latest partial result per configuration: (hits, prefix length).
+    let mut partial: Vec<Option<(u32, usize)>> = vec![None; space];
+
+    for (r, &m) in prefixes.iter().enumerate() {
+        let entered = alive.len();
+        let counts = eval_partial(&alive, m)?;
+        ensure!(counts.len() == alive.len(), "rung {r} returned a short batch");
+        stats.partial_evals += alive.len();
+        for (&i, &c) in alive.iter().zip(&counts) {
+            if c as usize > m {
+                bail!("rung {r}: {c} hits out of a {m}-input prefix");
+            }
+            partial[i] = Some((c, m));
+        }
+        let pruned_now = interval_prune(&mut alive, costs, &partial, n);
+        let quota = alive.len().div_ceil(opts.eta);
+        let demoted = promote(
+            &mut alive,
+            costs,
+            &partial,
+            quota,
+            opts.seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        stats.pruned += pruned_now.len();
+        stats.halved += demoted.len();
+        stats.rung_reports.push(RungReport {
+            rung: r,
+            prefix: m,
+            entered,
+            pruned: pruned_now.len(),
+            promoted: alive.len(),
+        });
+        dropped.extend(pruned_now);
+        dropped.extend(demoted);
+    }
+
+    // Full evaluation of the survivors, through the same cached path
+    // the exhaustive sweep uses.
+    alive.sort_unstable();
+    let mut full: Vec<Option<EvalPoint>> = vec![None; space];
+    let pts = eval_full(&alive)?;
+    ensure!(pts.len() == alive.len(), "full evaluation returned a short batch");
+    stats.full_evals += alive.len();
+    for (&i, p) in alive.iter().zip(pts) {
+        full[i] = Some(p);
+    }
+
+    // Repair to the zero-regret fixpoint: fully evaluate every dropped
+    // configuration the measured points cannot prove dominated, until
+    // none remain. Each round strictly shrinks `dropped`, so this
+    // terminates in at most `space` rounds.
+    loop {
+        let mut need: Vec<usize> = dropped
+            .iter()
+            .copied()
+            .filter(|&c| !dominated_at_optimism(c, costs, &partial, &full, n))
+            .collect();
+        if need.is_empty() {
+            break;
+        }
+        need.sort_unstable();
+        let pts = eval_full(&need)?;
+        ensure!(pts.len() == need.len(), "repair evaluation returned a short batch");
+        stats.full_evals += need.len();
+        stats.repaired += need.len();
+        for (&i, p) in need.iter().zip(pts) {
+            full[i] = Some(p);
+        }
+        dropped.retain(|&i| full[i].is_none());
+    }
+
+    let points: Vec<(usize, EvalPoint)> =
+        full.into_iter().enumerate().filter_map(|(i, p)| p.map(|p| (i, p))).collect();
+    Ok(GuidedSweep { points, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Synthetic landscape: analytic costs plus a per-(config, input)
+    /// correctness table — the closed-form stand-in for an
+    /// `AccuracyEval` backend (prefix evaluation is exactly a row
+    /// prefix of the table).
+    struct Landscape {
+        costs: Vec<CostVec>,
+        n: usize,
+        correct: Vec<Vec<bool>>,
+    }
+
+    impl Landscape {
+        fn point(&self, i: usize) -> EvalPoint {
+            let hits = self.correct[i].iter().filter(|&&b| b).count();
+            EvalPoint {
+                config: vec![i as u32],
+                accuracy: hits as f32 / self.n as f32,
+                mac_instructions: self.costs[i].mac,
+                cycles: self.costs[i].cycles,
+                mem_accesses: self.costs[i].mem,
+                iss_cycles: None,
+                divergence: None,
+            }
+        }
+
+        fn exhaustive(&self) -> Vec<EvalPoint> {
+            (0..self.costs.len()).map(|i| self.point(i)).collect()
+        }
+
+        fn random(seed: u64, space: usize, n: usize) -> Landscape {
+            let mut rng = Rng::new(seed);
+            let costs = (0..space)
+                .map(|_| CostVec {
+                    cycles: rng.below(40) * 10,
+                    mac: rng.below(40) * 10,
+                    mem: rng.below(40) * 10,
+                })
+                .collect();
+            let correct = (0..space)
+                .map(|_| {
+                    let p = rng.below(100);
+                    (0..n).map(|_| rng.below(100) < p).collect()
+                })
+                .collect();
+            Landscape { costs, n, correct }
+        }
+    }
+
+    fn run(land: &Landscape, opts: &GuidedOpts) -> GuidedSweep {
+        let ep = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+            Ok(idxs
+                .iter()
+                .map(|&i| land.correct[i][..m].iter().filter(|&&b| b).count() as u32)
+                .collect())
+        };
+        let ef = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+            Ok(idxs.iter().map(|&i| land.point(i)).collect())
+        };
+        guided_search(&land.costs, land.n, opts, &ep, &ef).expect("guided search")
+    }
+
+    const AXES: [fn(&EvalPoint) -> u64; 3] =
+        [|p| p.cycles, |p| p.mac_instructions, |p| p.mem_accesses];
+
+    /// Assert the guided sweep's front equals the exhaustive front on
+    /// every cost axis — same global indices, same point values.
+    fn assert_zero_regret(land: &Landscape, g: &GuidedSweep, ctx: &str) {
+        let all = land.exhaustive();
+        let gpts: Vec<EvalPoint> = g.points.iter().map(|(_, p)| p.clone()).collect();
+        for (ax, axis) in AXES.iter().enumerate() {
+            let ex: Vec<usize> = pareto_front(&all, axis);
+            let gd: Vec<usize> = pareto_front(&gpts, axis)
+                .into_iter()
+                .map(|pos| g.points[pos].0)
+                .collect();
+            assert_eq!(gd, ex, "{ctx}: guided front != exhaustive front on axis {ax}");
+            for &i in &ex {
+                let found = g.points.iter().find(|(gi, _)| *gi == i);
+                let (_, gp) = found.unwrap_or_else(|| {
+                    panic!("{ctx}: true Pareto point {i} (axis {ax}) was pruned")
+                });
+                assert_eq!(*gp, all[i], "{ctx}: point {i} value drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn rung_prefix_schedule() {
+        let o = |rungs, eta| GuidedOpts { rungs, eta, seed: 0 };
+        assert_eq!(rung_prefixes(100, 128, &o(3, 2)), vec![32, 64]);
+        assert_eq!(rung_prefixes(100, 8, &o(4, 2)), vec![1, 2, 4]);
+        assert_eq!(rung_prefixes(100, 9, &o(2, 3)), vec![3]);
+        // Too small on any dimension → degenerate (no rungs).
+        assert!(rung_prefixes(RUNG_THRESHOLD - 1, 128, &o(3, 2)).is_empty());
+        assert!(rung_prefixes(100, 1, &o(3, 2)).is_empty());
+        assert!(rung_prefixes(100, 128, &o(1, 2)).is_empty());
+        // Tiny n collapses duplicate prefixes instead of repeating them.
+        assert_eq!(rung_prefixes(100, 2, &o(5, 2)), vec![1]);
+    }
+
+    #[test]
+    fn degenerate_small_space_is_a_full_sweep() {
+        let land = Landscape::random(3, RUNG_THRESHOLD - 1, 16);
+        let g = run(&land, &GuidedOpts::default());
+        assert!(g.stats.degenerate);
+        assert_eq!(g.stats.full_evals, land.costs.len());
+        assert_eq!(g.stats.partial_evals, 0);
+        let all = land.exhaustive();
+        assert_eq!(g.points.len(), all.len());
+        for (i, p) in &g.points {
+            assert_eq!(p, &all[*i]);
+        }
+    }
+
+    #[test]
+    fn zero_regret_on_random_landscapes() {
+        for seed in 0..12u64 {
+            let space = 9 + (seed as usize * 7) % 30;
+            let n = 8 + (seed as usize % 3) * 12;
+            let land = Landscape::random(seed, space, n);
+            let opts = GuidedOpts { rungs: 2 + (seed as usize % 3), eta: 2 + (seed as usize % 2), seed };
+            let g = run(&land, &opts);
+            assert_zero_regret(&land, &g, &format!("seed {seed}"));
+            assert_eq!(g.stats.full_evals, g.points.len(), "seed {seed}: eval ledger");
+            assert!(g.stats.full_evals <= space, "seed {seed}: more full evals than configs");
+        }
+    }
+
+    #[test]
+    fn deterministic_under_a_fixed_seed() {
+        let land = Landscape::random(99, 24, 16);
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed: 0xD5E };
+        let a = run(&land, &opts);
+        let b = run(&land, &opts);
+        assert_eq!(a, b, "two guided runs with one seed diverged");
+    }
+
+    #[test]
+    fn strict_savings_when_a_cheap_config_dominates() {
+        // Config 0: strictly cheapest on every axis and correct on the
+        // whole eval set. Every other config costs strictly more and is
+        // wrong on the entire first half, so after the half-set rung
+        // its accuracy upper bound is ≤ 0.5 < 1.0 and the repair pass
+        // can certify dominance without full-evaluating it.
+        let space = 24;
+        let n = 16;
+        let costs: Vec<CostVec> = (0..space as u64)
+            .map(|i| CostVec { cycles: 10 + i * 5, mac: 20 + i * 3, mem: 30 + i * 7 })
+            .collect();
+        let correct: Vec<Vec<bool>> = (0..space)
+            .map(|i| (0..n).map(|j| i == 0 || (j >= n / 2 && (i + j) % 3 == 0)).collect())
+            .collect();
+        let land = Landscape { costs, n, correct };
+        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 7 });
+        assert_zero_regret(&land, &g, "designed landscape");
+        assert!(
+            g.stats.full_evals < space,
+            "no savings: {} full evals over a {space}-config space",
+            g.stats.full_evals
+        );
+        assert!(g.stats.pruned + g.stats.halved > 0, "nothing was ever dropped");
+    }
+
+    #[test]
+    fn exact_ties_keep_the_lowest_index_representative() {
+        // Two configs with identical costs and identical rows: the
+        // front must keep index 1 (the lower of the pair after the
+        // cheap distinct point), exactly as the exhaustive front does.
+        let costs = vec![
+            CostVec { cycles: 5, mac: 5, mem: 5 },
+            CostVec { cycles: 9, mac: 9, mem: 9 },
+            CostVec { cycles: 9, mac: 9, mem: 9 },
+            CostVec { cycles: 12, mac: 12, mem: 12 },
+            CostVec { cycles: 13, mac: 13, mem: 13 },
+            CostVec { cycles: 14, mac: 14, mem: 14 },
+            CostVec { cycles: 15, mac: 15, mem: 15 },
+            CostVec { cycles: 16, mac: 16, mem: 16 },
+            CostVec { cycles: 17, mac: 17, mem: 17 },
+            CostVec { cycles: 18, mac: 18, mem: 18 },
+        ];
+        let n = 16;
+        let row = |hits: usize| -> Vec<bool> { (0..n).map(|j| j < hits).collect() };
+        let correct = vec![
+            row(4),
+            row(12),
+            row(12),
+            row(6),
+            row(5),
+            row(4),
+            row(3),
+            row(2),
+            row(1),
+            row(16),
+        ];
+        let land = Landscape { costs, n, correct };
+        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 1 });
+        assert_zero_regret(&land, &g, "tie landscape");
+        let gpts: Vec<EvalPoint> = g.points.iter().map(|(_, p)| p.clone()).collect();
+        let front: Vec<usize> =
+            pareto_front(&gpts, |p| p.cycles).into_iter().map(|pos| g.points[pos].0).collect();
+        assert!(front.contains(&1), "tie representative lost: front {front:?}");
+        assert!(!front.contains(&2), "duplicate value pair double-counted: {front:?}");
+    }
+}

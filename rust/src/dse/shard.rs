@@ -31,6 +31,7 @@
 //! the determinism contract end to end.
 
 use super::pareto::pareto_front;
+use super::search::SearchStrategy;
 use super::{Config, EvalPoint};
 use crate::json::{Json, ParseError, SchemaError};
 use crate::sim::session::SessionSnapshot;
@@ -295,8 +296,19 @@ pub struct ShardArtifact {
     pub float_acc: f32,
     /// Baseline MAC-instruction count.
     pub baseline_instrs: u64,
+    /// Search strategy that produced the points. Part of the sweep
+    /// identity: an `exhaustive` shard carries every config it owns, a
+    /// `guided` shard only the subset its search fully evaluated, so
+    /// the two kinds never merge together.
+    pub search: SearchStrategy,
+    /// Successive-halving rung count of a guided sweep (0 when
+    /// exhaustive — the knob has no meaning there).
+    pub rungs: u64,
+    /// Halving factor of a guided sweep (0 when exhaustive).
+    pub eta: u64,
     /// `(global enumeration index, evaluated point)` — exactly the
-    /// configs this shard owns, in enumeration order.
+    /// configs this shard owns (exhaustive) or the owned configs its
+    /// guided search fully evaluated, in enumeration order.
     pub points: Vec<(usize, EvalPoint)>,
     /// Session/engine activity attributed to this sweep (before/after
     /// delta on the global [`SimSession`](crate::sim::session::SimSession)).
@@ -380,13 +392,23 @@ fn stats_from_json(j: &Json) -> Result<SessionSnapshot, SchemaError> {
 }
 
 impl ShardArtifact {
-    /// Serialise to the versioned JSON schema.
+    /// Serialise to the versioned JSON schema. The `search` tag is
+    /// always emitted; the guided knobs (`rungs`/`eta`) only under
+    /// `search: guided` — readers default all three, so pre-guided
+    /// version-1 artifacts keep parsing as exhaustive sweeps.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema_version", Json::i(SHARD_SCHEMA_VERSION as i64)),
             ("kind", Json::s("mpnn_shard_sweep")),
             ("model", Json::s(&self.model)),
             ("evaluator", Json::s(&self.evaluator)),
+            ("search", Json::s(self.search.name())),
+        ];
+        if self.search == SearchStrategy::Guided {
+            fields.push(("rungs", Json::i(self.rungs as i64)));
+            fields.push(("eta", Json::i(self.eta as i64)));
+        }
+        fields.extend(vec![
             ("strategy", Json::s(self.spec.strategy.name())),
             ("shard_index", Json::i(self.spec.index as i64)),
             ("shard_count", Json::i(self.spec.count as i64)),
@@ -414,7 +436,8 @@ impl ShardArtifact {
                 ),
             ),
             ("stats", stats_json(&self.stats)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     /// Deserialise from a parsed document, rejecting unknown schema
@@ -436,6 +459,27 @@ impl ShardArtifact {
         })?;
         let spec =
             ShardSpec::new(j.req_u64("shard_index")? as usize, j.req_u64("shard_count")? as usize, strategy)?;
+        // Optional with defaults: version-1 artifacts written before
+        // guided search carry no `search`/`rungs`/`eta` fields and are
+        // exhaustive sweeps by definition.
+        let search = j
+            .opt("search", |v| {
+                v.as_str().and_then(SearchStrategy::parse).ok_or_else(|| SchemaError {
+                    field: "search".to_string(),
+                    msg: "expected `exhaustive` or `guided`".to_string(),
+                })
+            })?
+            .unwrap_or_default();
+        let guided_knob = |field: &'static str| -> Result<u64, ShardError> {
+            Ok(j.opt(field, |v| match v.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 && x == x.trunc() => Ok(x as u64),
+                _ => Err(SchemaError {
+                    field: field.to_string(),
+                    msg: "expected a non-negative integer".to_string(),
+                }),
+            })?
+            .unwrap_or(0))
+        };
         let mut points = Vec::new();
         for pj in j.req_arr("points")? {
             let idx = pj.req_u64("index")? as usize;
@@ -455,6 +499,9 @@ impl ShardArtifact {
             eval_n: j.req_u64("eval_n")? as usize,
             float_acc: j.req_f64("float_acc")? as f32,
             baseline_instrs: j.req_u64("baseline_mac_instrs")?,
+            search,
+            rungs: guided_knob("rungs")?,
+            eta: guided_knob("eta")?,
             points,
             stats: stats_from_json(j.req("stats")?)?,
         })
@@ -506,6 +553,12 @@ pub struct MergedSweep {
     pub float_acc: f32,
     /// Baseline MAC-instruction count.
     pub baseline_instrs: u64,
+    /// Search strategy the shards ran under ([`merge`] refuses to mix).
+    pub search: SearchStrategy,
+    /// Global enumeration index of each entry in `points` (same order).
+    /// Exhaustive merges always cover `0..total_configs`; guided merges
+    /// carry only the configs the search fully evaluated.
+    pub indices: Vec<usize>,
     /// Every evaluated point, restored to global enumeration order —
     /// bit-identical to what a single-instance sweep returns.
     pub points: Vec<EvalPoint>,
@@ -565,6 +618,9 @@ fn same_run(a: &ShardArtifact, b: &ShardArtifact) -> bool {
     a.spec == b.spec
         && a.model == b.model
         && a.evaluator == b.evaluator
+        && a.search == b.search
+        && a.rungs == b.rungs
+        && a.eta == b.eta
         && a.total_configs == b.total_configs
         && a.seed == b.seed
         && a.eval_n == b.eval_n
@@ -639,6 +695,20 @@ pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
         if a.evaluator != first.evaluator {
             return Err(incompatible("evaluator", &first.evaluator, &a.evaluator));
         }
+        // Guided and exhaustive artifacts never mix, and neither do
+        // guided runs with different rung schedules: a guided shard
+        // carries only a subset of its slice, so treating it as part of
+        // an exhaustive sweep (or of a differently-scheduled guided
+        // one) would silently change what the merge means.
+        if (a.search, a.rungs, a.eta) != (first.search, first.rungs, first.eta) {
+            let show = |x: &ShardArtifact| match x.search {
+                SearchStrategy::Exhaustive => x.search.name().to_string(),
+                SearchStrategy::Guided => {
+                    format!("{} (rungs {}, eta {})", x.search.name(), x.rungs, x.eta)
+                }
+            };
+            return Err(incompatible("search", show(first), show(a)));
+        }
         if a.seed != first.seed {
             return Err(incompatible("seed", first.seed, a.seed));
         }
@@ -684,16 +754,30 @@ pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
 
     let expected = first.total_configs;
     let covered = by_index.len();
-    let contiguous = match by_index.keys().next_back() {
-        None => true,
-        Some(&last) => last + 1 == covered,
-    };
-    if covered != expected || !contiguous {
-        let first_missing = (0..expected).find(|i| !by_index.contains_key(i));
-        return Err(ShardError::Coverage { expected, got: covered, first_missing });
+    match first.search {
+        SearchStrategy::Exhaustive => {
+            // An exhaustive merge must restore the whole space, gap-free.
+            let contiguous = match by_index.keys().next_back() {
+                None => true,
+                Some(&last) => last + 1 == covered,
+            };
+            if covered != expected || !contiguous {
+                let first_missing = (0..expected).find(|i| !by_index.contains_key(i));
+                return Err(ShardError::Coverage { expected, got: covered, first_missing });
+            }
+        }
+        SearchStrategy::Guided => {
+            // Guided shards legitimately carry only the configs their
+            // search fully evaluated — no coverage requirement, but
+            // every index must still fit the declared space.
+            if by_index.keys().next_back().is_some_and(|&last| last >= expected) {
+                return Err(ShardError::Coverage { expected, got: covered, first_missing: None });
+            }
+        }
     }
 
-    let points: Vec<EvalPoint> = by_index.into_values().cloned().collect();
+    let (indices, points): (Vec<usize>, Vec<EvalPoint>) =
+        by_index.into_iter().map(|(i, p)| (i, p.clone())).unzip();
     let front = pareto_front(&points, |p| p.mac_instructions);
     Ok(MergedSweep {
         model: first.model.clone(),
@@ -702,6 +786,8 @@ pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
         eval_n: first.eval_n,
         float_acc: first.float_acc,
         baseline_instrs: first.baseline_instrs,
+        search: first.search,
+        indices,
         points,
         front,
         stats,
@@ -740,6 +826,9 @@ mod tests {
             eval_n: 16,
             float_acc: 0.875,
             baseline_instrs: 1234,
+            search: SearchStrategy::Exhaustive,
+            rungs: 0,
+            eta: 0,
             points,
             stats: SessionSnapshot { mem_reuses: 1, mem_allocs: 2, runs: 3, ..Default::default() },
         }

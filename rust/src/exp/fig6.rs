@@ -11,10 +11,20 @@
 //! merged `results/fig6.json` is byte-for-byte what an unsharded run
 //! writes. The CI smoke job and `tests/sweep_sharding.rs` hold that
 //! equality.
+//!
+//! With `--search guided` the sweep goes through the predictor-guided
+//! driver ([`crate::dse::search`]): analytic-bound pruning plus
+//! successive halving cut the number of full evaluations while the
+//! Pareto front stays exactly the exhaustive one (zero regret by
+//! construction — `tests/search_oracle.rs` property-checks this
+//! against the exhaustive oracle). Guided sweeps shard and merge too;
+//! their artifacts are tagged with the strategy and the merge refuses
+//! to mix guided and exhaustive shards.
 
 use super::ExpOpts;
 use crate::coordinator::Coordinator;
 use crate::dse::pareto::pareto_front;
+use crate::dse::search::SearchStrategy;
 use crate::dse::shard::{merge, ShardArtifact, ShardSpec};
 use crate::dse::{default_pinned, enumerate, EvalPoint};
 use crate::json::Json;
@@ -31,10 +41,17 @@ pub struct Sweep {
     pub baseline_instrs: u64,
     /// Every evaluated point.
     pub points: Vec<EvalPoint>,
-    /// Indices of the Pareto front (by MAC instructions).
+    /// Global enumeration index of each entry in `points` (same order).
+    /// Exhaustive sweeps carry `0..points.len()`; guided sweeps carry
+    /// only the fully-evaluated subset's indices.
+    pub indices: Vec<usize>,
+    /// Indices **into `points`** of the Pareto front (by MAC
+    /// instructions).
     pub front: Vec<usize>,
     /// Accuracy backend that scored the points (`host`/`iss`/`pjrt`).
     pub evaluator: &'static str,
+    /// Search strategy that produced the points.
+    pub search: SearchStrategy,
     /// The coordinator (kept for downstream reuse, e.g. Fig. 8).
     pub coordinator: Coordinator,
 }
@@ -47,13 +64,36 @@ impl Sweep {
     }
 }
 
-/// Run the DSE sweep for one model.
+/// Run the DSE sweep for one model — exhaustive, or through the guided
+/// driver ([`crate::dse::search::guided_search`]) under `--search
+/// guided`. The guided sweep's Pareto front is identical to the
+/// exhaustive one (zero regret by construction); only the set of
+/// evaluated points shrinks, which the stderr ledger line reports.
 pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
     let coordinator = opts.coordinator(name)?;
     let analysis = crate::models::analyze(&coordinator.model.spec);
     let n = analysis.layers.len();
     let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
-    let points = coordinator.run_sweep(&configs, opts.eval_n)?;
+    let (indices, points): (Vec<usize>, Vec<EvalPoint>) = match opts.search {
+        SearchStrategy::Exhaustive => {
+            let points = coordinator.run_sweep(&configs, opts.eval_n)?;
+            ((0..points.len()).collect(), points)
+        }
+        SearchStrategy::Guided => {
+            let g = coordinator.sweep_guided(&configs, opts.eval_n, &opts.guided_opts())?;
+            eprintln!(
+                "[fig6] guided search ({name}): {}/{} configs fully evaluated \
+                 ({} partial evals, {} pruned, {} halved, {} repaired)",
+                g.stats.full_evals,
+                g.stats.space,
+                g.stats.partial_evals,
+                g.stats.pruned,
+                g.stats.halved,
+                g.stats.repaired,
+            );
+            g.points.into_iter().unzip()
+        }
+    };
     let front = pareto_front(&points, |p| p.mac_instructions);
     let baseline_instrs =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
@@ -62,8 +102,10 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
         float_acc: coordinator.model.float_acc,
         baseline_instrs,
         points,
+        indices,
         front,
         evaluator: coordinator.evaluator_name(),
+        search: opts.search,
         coordinator,
     })
 }
@@ -72,12 +114,13 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
 /// `all` command, which reuses the sweeps).
 pub fn print_summary(s: &Sweep) {
     println!(
-        "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front [{} evaluator]",
+        "Fig. 6 — {}: float acc {:.1}%, {} configs, {} on the Pareto front [{} evaluator{}]",
         s.model,
         s.float_acc * 100.0,
         s.points.len(),
         s.front.len(),
         s.evaluator,
+        if s.search == SearchStrategy::Guided { ", guided search" } else { "" },
     );
     if let Some(d) = s.max_divergence() {
         println!("         host-vs-ISS top-1 divergence: max {:.2}% across configs", d * 100.0);
@@ -85,15 +128,28 @@ pub fn print_summary(s: &Sweep) {
 }
 
 /// JSON encoding of one sweep (shared by `fig6` and the CLI's `all`).
+/// The `search` tag is always present; `indices` (global enumeration
+/// index per point) only under guided search, where the point list is
+/// a subset of the space.
 pub fn sweep_json(s: &Sweep) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("model", Json::s(&s.model)),
         ("evaluator", Json::s(s.evaluator)),
+        ("search", Json::s(s.search.name())),
+    ];
+    if s.search == SearchStrategy::Guided {
+        fields.push((
+            "indices",
+            Json::Arr(s.indices.iter().map(|&i| Json::i(i as i64)).collect()),
+        ));
+    }
+    fields.extend(vec![
         ("float_acc", Json::Num(s.float_acc as f64)),
         ("baseline_mac_instrs", Json::i(s.baseline_instrs as i64)),
         ("points", Json::Arr(s.points.iter().map(point_json).collect())),
         ("front", Json::Arr(s.front.iter().map(|&i| Json::i(i as i64)).collect())),
-    ])
+    ]);
+    Json::obj(fields)
 }
 
 fn point_json(p: &EvalPoint) -> Json {
@@ -162,6 +218,13 @@ pub fn sweep_shard_resume(
     let baseline_instrs: u64 =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
 
+    // Guided artifacts are tagged with their rung knobs; exhaustive
+    // ones carry zeros (the knobs don't apply).
+    let (rungs_tag, eta_tag) = match opts.search {
+        SearchStrategy::Guided => (opts.rungs as u64, opts.eta as u64),
+        SearchStrategy::Exhaustive => (0, 0),
+    };
+
     let mut done: std::collections::HashSet<usize> = std::collections::HashSet::new();
     if let Some(p) = prior {
         // The artifact must describe exactly this shard of exactly this
@@ -174,10 +237,13 @@ pub fn sweep_shard_resume(
                 && p.eval_n == opts.eval_n
                 && p.evaluator == coordinator.evaluator_name()
                 && p.baseline_instrs == baseline_instrs
-                && p.float_acc.to_bits() == coordinator.model.float_acc.to_bits(),
+                && p.float_acc.to_bits() == coordinator.model.float_acc.to_bits()
+                && p.search == opts.search
+                && p.rungs == rungs_tag
+                && p.eta == eta_tag,
             "existing shard artifact for `{name}` was produced by a different sweep \
-             (model/shard/seed/budget/eval/evaluator mismatch); delete it or change --shard-out \
-             to start a fresh shard run"
+             (model/shard/seed/budget/eval/evaluator/search mismatch); delete it or change \
+             --shard-out to start a fresh shard run"
         );
         for (i, pt) in &p.points {
             crate::ensure!(
@@ -205,9 +271,43 @@ pub fn sweep_shard_resume(
         eval_n: opts.eval_n,
         float_acc: coordinator.model.float_acc,
         baseline_instrs,
+        search: opts.search,
+        rungs: rungs_tag,
+        eta: eta_tag,
         points,
         stats,
     };
+
+    if opts.search == SearchStrategy::Guided {
+        // Guided shards are written complete-in-one-shot: the search is
+        // holistic over the shard's slice (rung promotion compares the
+        // slice's configs against each other), so there is no per-config
+        // checkpoint — a cleanly-parsing prior artifact of the same run
+        // *is* the finished shard and is returned unchanged.
+        if let Some(p) = prior {
+            return Ok(p.clone());
+        }
+        let mine: Vec<crate::dse::Config> = owned.iter().map(|&i| configs[i].clone()).collect();
+        let before = crate::sim::SimSession::global().stats.snapshot();
+        let g = coordinator.sweep_guided(&mine, opts.eval_n, &opts.guided_opts())?;
+        let delta = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
+        stats.add(&delta);
+        eprintln!(
+            "[fig6] guided search ({name} shard {shard}): {}/{} configs fully evaluated \
+             ({} partial evals, {} pruned, {} halved, {} repaired)",
+            g.stats.full_evals,
+            g.stats.space,
+            g.stats.partial_evals,
+            g.stats.pruned,
+            g.stats.halved,
+            g.stats.repaired,
+        );
+        // Map the search's slice-local indices back to global
+        // enumeration indices.
+        let points: Vec<(usize, crate::dse::EvalPoint)> =
+            g.points.into_iter().map(|(local, p)| (owned[local], p)).collect();
+        return Ok(mk_art(points, stats));
+    }
 
     for chunk in missing.chunks(SHARD_CHECKPOINT_EVERY) {
         let mine: Vec<crate::dse::Config> = chunk.iter().map(|&i| configs[i].clone()).collect();
@@ -263,30 +363,42 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
         coordinator.model.float_acc,
     );
     // Cross-check the merged points against a local re-enumeration:
-    // the coverage check inside `merge` proves the *indices* are all
-    // present, but only the enumeration itself can prove each index
-    // carries the right *config* — a mistagged artifact (hand-edited,
-    // bit-flipped, buggy writer) must fail here, not merge silently
-    // into a reordered sweep.
+    // the coverage check inside `merge` proves the *indices* are sane,
+    // but only the enumeration itself can prove each index carries the
+    // right *config* — a mistagged artifact (hand-edited, bit-flipped,
+    // buggy writer) must fail here, not merge silently into a reordered
+    // sweep. Exhaustive merges must additionally cover the whole space;
+    // guided merges legitimately carry a subset.
     let n = crate::models::analyze(&coordinator.model.spec).layers.len();
     let configs = enumerate(n, &default_pinned(), opts.budget, merged.seed);
-    crate::ensure!(
-        configs.len() == merged.points.len(),
-        "merged artifacts for `{}` carry {} configs but --budget {} with seed {} \
-         enumerates {}; rerun the merge with the shard run's --budget",
-        merged.model,
-        merged.points.len(),
-        opts.budget,
-        merged.seed,
-        configs.len(),
-    );
-    for (i, (cfg, p)) in configs.iter().zip(&merged.points).enumerate() {
+    if merged.search == SearchStrategy::Exhaustive {
         crate::ensure!(
-            *cfg == p.config,
+            configs.len() == merged.points.len(),
+            "merged artifacts for `{}` carry {} configs but --budget {} with seed {} \
+             enumerates {}; rerun the merge with the shard run's --budget",
+            merged.model,
+            merged.points.len(),
+            opts.budget,
+            merged.seed,
+            configs.len(),
+        );
+    }
+    for (&i, p) in merged.indices.iter().zip(&merged.points) {
+        crate::ensure!(
+            i < configs.len(),
+            "merged artifacts for `{}` reference config #{i} but --budget {} with seed {} \
+             enumerates only {}; rerun the merge with the shard run's --budget",
+            merged.model,
+            opts.budget,
+            merged.seed,
+            configs.len(),
+        );
+        crate::ensure!(
+            configs[i] == p.config,
             "shard artifacts for `{}` are mistagged: config #{i} should be {:?} \
              but the merged point carries {:?}",
             merged.model,
-            cfg,
+            configs[i],
             p.config,
         );
     }
@@ -303,8 +415,10 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
         float_acc: merged.float_acc,
         baseline_instrs: merged.baseline_instrs,
         points: merged.points,
+        indices: merged.indices,
         front: merged.front,
         evaluator: evaluator_static(&merged.evaluator),
+        search: merged.search,
         coordinator,
     })
 }

@@ -1,6 +1,15 @@
 //! Fig. 8 — end-to-end speedup over the baseline Ibex for the DSE
 //! configurations selected under 1% / 2% / 5% accuracy-loss thresholds,
 //! with the per-layer bit-widths of each selection.
+//!
+//! Under `--search guided` the selection runs on the guided sweep's
+//! fully-evaluated subset. The selected *speedup* is never worse than
+//! the exhaustive selection's — the threshold rule minimises cycles,
+//! the guided subset contains the exhaustive cycle front, and every
+//! config missing from the subset is dominated on cycles at no less
+//! accuracy — but when several configs tie on cycles within the
+//! threshold, the guided run may report a different (equal-cycles)
+//! representative than exhaustive does.
 
 use super::fig6::{sweep_model, Sweep};
 use super::ExpOpts;

@@ -118,6 +118,14 @@ pub struct ExpOpts {
     /// 0 (the default) disables auditing; 1 degenerates to a full ISS
     /// check of every element.
     pub audit_every: usize,
+    /// Sweep search strategy (`--search exhaustive|guided`). Exhaustive
+    /// (the default) evaluates every enumerated configuration and is
+    /// the oracle the guided search is property-checked against.
+    pub search: crate::dse::search::SearchStrategy,
+    /// Successive-halving rung count for `--search guided` (`--rungs`).
+    pub rungs: usize,
+    /// Halving factor for `--search guided` (`--eta`).
+    pub eta: usize,
 }
 
 impl Default for ExpOpts {
@@ -136,6 +144,9 @@ impl Default for ExpOpts {
             models: None,
             trace_steps: None,
             audit_every: 0,
+            search: crate::dse::search::SearchStrategy::Exhaustive,
+            rungs: 3,
+            eta: 2,
         }
     }
 }
@@ -158,6 +169,12 @@ impl ExpOpts {
     /// Load a model artifact (or the random-init fallback).
     pub fn load_model(&self, name: &str) -> Result<LoadedModel> {
         load_or_fallback(&self.artifacts, name, self.seed)
+    }
+
+    /// The guided-search knobs as a [`GuidedOpts`](crate::dse::search::GuidedOpts)
+    /// (rung promotion reuses the sweep seed).
+    pub fn guided_opts(&self) -> crate::dse::search::GuidedOpts {
+        crate::dse::search::GuidedOpts { rungs: self.rungs, eta: self.eta, seed: self.seed }
     }
 
     /// Build the accuracy evaluator selected by [`ExpOpts::backend`].

@@ -75,11 +75,27 @@ Sharded sweeps (fig6/fig8; see docs/ARCHITECTURE.md § Sharded sweeps):
   --merge-dir <dir>   Merge every *.s<i>of<n>.json shard artifact found
                       in <dir> (convenience form of repeating --merge;
                       combinable with explicit --merge files)
+
+Guided search (fig6/fig8; see docs/ARCHITECTURE.md § Guided search):
+  --search <s>        exhaustive | guided (default exhaustive). Guided
+                      prunes configs whose analytic cycle lower bound is
+                      dominated, then successive-halves the survivors on
+                      growing input prefixes before full evaluation. The
+                      Pareto front matches the exhaustive sweep exactly
+                      (zero regret by construction); only the evaluation
+                      count shrinks. Composes with --shard/--merge, but
+                      artifacts from the two strategies never mix.
+  --rungs <n>         (guided) successive-halving rung count, >= 1
+                      (default 3)
+  --eta <n>           (guided) halving factor, >= 2 (default 2)
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOpts> {
+    use mpnn::dse::search::SearchStrategy;
     let mut opts = ExpOpts::default();
     let mut shard_strategy = None;
+    let mut rungs = None;
+    let mut eta = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -147,6 +163,22 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
                 opts.models =
                     Some(v.split(',').map(|m| m.trim().to_string()).filter(|m| !m.is_empty()).collect());
             }
+            "--search" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| mpnn::anyhow!("--search needs a value (exhaustive|guided)"))?;
+                opts.search = SearchStrategy::parse(v).ok_or_else(|| {
+                    mpnn::anyhow!("unknown search strategy `{v}` (exhaustive|guided)")
+                })?;
+            }
+            "--rungs" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--rungs needs a count"))?;
+                rungs = Some(v.parse().map_err(|_| mpnn::anyhow!("--rungs: bad count `{v}`"))?);
+            }
+            "--eta" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--eta needs a factor"))?;
+                eta = Some(v.parse().map_err(|_| mpnn::anyhow!("--eta: bad factor `{v}`"))?);
+            }
             other => bail!("unknown option `{other}`\n{USAGE}"),
         }
     }
@@ -155,6 +187,18 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
         (Some(spec), Some(s)) => spec.strategy = s,
         (None, Some(_)) => bail!("--shard-strategy requires --shard i/n"),
         _ => {}
+    }
+    // Same for the guided-search knobs.
+    if opts.search == SearchStrategy::Exhaustive && (rungs.is_some() || eta.is_some()) {
+        bail!("--rungs/--eta require --search guided");
+    }
+    if let Some(r) = rungs {
+        mpnn::ensure!(r >= 1, "--rungs must be >= 1");
+        opts.rungs = r;
+    }
+    if let Some(e) = eta {
+        mpnn::ensure!(e >= 2, "--eta must be >= 2");
+        opts.eta = e;
     }
     // Validate --models early so typos fail before a sweep starts.
     opts.model_names()?;

@@ -384,16 +384,10 @@ pub fn run_plan_batch(
 /// whole batch (the degenerate full-ISS check CI's byte-identity smoke
 /// relies on).
 pub fn audit_indices(seed: u64, n: usize, every: usize) -> Vec<usize> {
-    if every == 0 || n == 0 {
-        return Vec::new();
-    }
-    // FNV-1a over the seed bytes → phase in [0, every).
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in seed.to_le_bytes() {
-        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    let phase = (h % every as u64) as usize;
-    (phase..n).step_by(every).collect()
+    // One shared FNV-phase stride (`rng::seeded_stride`) serves both
+    // this audit sampler and the guided-search rung tie-break; the pin
+    // test in `rng` keeps the historical audit sequences unchanged.
+    crate::rng::seeded_stride(seed, n, every)
 }
 
 /// Differential audit of one analytic execution: replay `input` on the

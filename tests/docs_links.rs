@@ -87,6 +87,10 @@ fn docs_mention_live_symbols() {
         "--shard",
         "--audit-every",
         "CostCache",
+        // Every backend doubles as the rung evaluator of the guided
+        // search — the guide must say so.
+        "--search",
+        "eval_len",
     ] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
@@ -130,6 +134,17 @@ fn docs_mention_live_symbols() {
         "analytic_hits",
         "audit_mismatches",
         "--audit-every",
+        // The guided-search section must keep naming the driver, its
+        // knobs and the shared seeded-subsampling helper.
+        "guided_search",
+        "sweep_guided",
+        "SearchStrategy",
+        "GuidedOpts",
+        "RUNG_THRESHOLD",
+        "seeded_stride",
+        "--search",
+        "--rungs",
+        "--eta",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
     }
@@ -180,6 +195,21 @@ fn docs_mention_live_symbols() {
     ] {
         assert!(shard.contains(sym), "dse/shard.rs lost `{sym}` — update the docs");
     }
+    // The guided-search symbols the docs name must still exist.
+    let search = fs::read_to_string("rust/src/dse/search.rs").unwrap();
+    for sym in [
+        "pub fn guided_search",
+        "pub enum SearchStrategy",
+        "pub struct GuidedOpts",
+        "pub const RUNG_THRESHOLD",
+    ] {
+        assert!(search.contains(sym), "dse/search.rs lost `{sym}` — update the docs");
+    }
+    let rng = fs::read_to_string("rust/src/rng.rs").unwrap();
+    assert!(
+        rng.contains("pub fn seeded_stride"),
+        "rng.rs lost `seeded_stride` — update the docs"
+    );
     // The engine symbols the catalog documents must still exist.
     let engine = fs::read_to_string("rust/src/sim/engine.rs").unwrap();
     for sym in ["Requant", "CountedLoop", "pub struct EngineStats", "fusion_census"] {
@@ -193,6 +223,7 @@ fn docs_mention_live_symbols() {
         "pub struct IssEval",
         "pub struct AnalyticEval",
         "pub struct PjrtEval",
+        "pub fn sweep_guided",
     ] {
         assert!(coord.contains(sym), "coordinator lost `{sym}` — update docs/EVALUATORS.md");
     }

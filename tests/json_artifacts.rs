@@ -36,6 +36,9 @@ fn rich_artifact() -> ShardArtifact {
         // print a shortest round-trippable form.
         float_acc: 0.8374999,
         baseline_instrs: 987_654_321,
+        search: mpnn::dse::search::SearchStrategy::Exhaustive,
+        rungs: 0,
+        eta: 0,
         points: vec![
             (48, mk(&[8, 4, 2, 4], 0.75, 1_000_001, Some(123_456_789), Some(0.0))),
             (49, mk(&[8, 2, 2, 2], 0.015625, 7, None, None)),

@@ -1,0 +1,265 @@
+//! Guided-search artifacts through the sharding subsystem:
+//!
+//! (a) guided [`ShardArtifact`]s round-trip their JSON byte-identically
+//!     (strategy + rung knobs included), and legacy artifacts written
+//!     before guided search existed still parse (as exhaustive);
+//! (b) `--merge` refuses to mix guided and exhaustive artifacts — and
+//!     guided artifacts with different rung schedules — with a typed
+//!     [`ShardError::Incompatible`] on the `search` identity field;
+//! (c) guided merges skip the exhaustive coverage requirement (a guided
+//!     shard legitimately carries only its fully-evaluated subset) but
+//!     still bound indices to the declared space and still catch
+//!     point-level conflicts;
+//! (d) end to end through the fig6 entry points: a guided sweep's
+//!     Pareto front is bit-identical to the exhaustive sweep's, both
+//!     unsharded and recombined from guided shard artifacts.
+
+use mpnn::dse::search::SearchStrategy;
+use mpnn::dse::shard::{
+    merge, point_divergence, ShardArtifact, ShardError, ShardSpec, ShardStrategy,
+};
+use mpnn::dse::EvalPoint;
+use mpnn::exp::fig6;
+use mpnn::exp::{EvalBackend, ExpOpts};
+use mpnn::sim::session::SessionSnapshot;
+
+fn mk_point(ws: &[u32], acc: f32, cycles: u64) -> EvalPoint {
+    EvalPoint {
+        config: ws.to_vec(),
+        accuracy: acc,
+        mac_instructions: cycles / 2,
+        cycles,
+        mem_accesses: cycles / 3,
+        iss_cycles: None,
+        divergence: None,
+    }
+}
+
+fn guided_artifact(
+    spec: ShardSpec,
+    total: usize,
+    points: Vec<(usize, EvalPoint)>,
+) -> ShardArtifact {
+    ShardArtifact {
+        model: "lenet5".to_string(),
+        evaluator: "host".to_string(),
+        spec,
+        total_configs: total,
+        seed: 7,
+        eval_n: 16,
+        float_acc: 0.875,
+        baseline_instrs: 1234,
+        search: SearchStrategy::Guided,
+        rungs: 3,
+        eta: 2,
+        points,
+        stats: SessionSnapshot::default(),
+    }
+}
+
+// ------------------------------------------------ (a) schema round trip ---
+
+#[test]
+fn guided_artifact_round_trips_byte_identically() {
+    let spec = ShardSpec::new(1, 3, ShardStrategy::Range).unwrap();
+    let art = guided_artifact(
+        spec,
+        40,
+        vec![(3, mk_point(&[8, 4, 2], 0.75, 1_000)), (17, mk_point(&[8, 2, 2], 0.5, 600))],
+    );
+    let text = art.to_json().to_string();
+    assert!(text.contains("\"search\":\"guided\""), "{text}");
+    assert!(text.contains("\"rungs\":3"), "{text}");
+    assert!(text.contains("\"eta\":2"), "{text}");
+
+    let back = ShardArtifact::from_str(&text).unwrap();
+    assert_eq!(back, art);
+    // Fixed point: parse → re-emit compares equal.
+    assert_eq!(back.to_json().to_string(), text);
+}
+
+#[test]
+fn exhaustive_artifacts_stay_lean_and_legacy_files_still_parse() {
+    let spec = ShardSpec::new(0, 1, ShardStrategy::Hash).unwrap();
+    let mut art = guided_artifact(spec, 4, vec![(0, mk_point(&[8, 8], 1.0, 9))]);
+    art.search = SearchStrategy::Exhaustive;
+    art.rungs = 0;
+    art.eta = 0;
+    let text = art.to_json().to_string();
+    // The strategy tag is always present; the rung knobs only under
+    // guided search (exhaustive files don't grow).
+    assert!(text.contains("\"search\":\"exhaustive\""), "{text}");
+    assert!(!text.contains("\"rungs\""), "{text}");
+    assert!(!text.contains("\"eta\""), "{text}");
+    assert_eq!(ShardArtifact::from_str(&text).unwrap(), art);
+
+    // A version-1 artifact written before guided search existed has no
+    // `search` field at all: it parses as an exhaustive sweep.
+    let legacy = text.replace("\"search\":\"exhaustive\",", "");
+    assert!(!legacy.contains("search"), "{legacy}");
+    let back = ShardArtifact::from_str(&legacy).unwrap();
+    assert_eq!(back.search, SearchStrategy::Exhaustive);
+    assert_eq!((back.rungs, back.eta), (0, 0));
+    assert_eq!(back, art);
+
+    // A corrupted strategy tag is a typed schema error, not a default.
+    let bad = text.replace("\"search\":\"exhaustive\"", "\"search\":\"psychic\"");
+    match ShardArtifact::from_str(&bad) {
+        Err(ShardError::Schema(e)) => assert_eq!(e.field, "search"),
+        other => panic!("expected Schema(search), got {other:?}"),
+    }
+}
+
+// ------------------------------------------- (b) strategies never mix ---
+
+#[test]
+fn merge_refuses_to_mix_guided_and_exhaustive_artifacts() {
+    let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+    let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+    let guided = guided_artifact(s0, 8, vec![(0, mk_point(&[8, 2], 0.5, 10))]);
+    let mut exhaustive = guided_artifact(s1, 8, vec![(4, mk_point(&[8, 4], 0.75, 20))]);
+    exhaustive.search = SearchStrategy::Exhaustive;
+    exhaustive.rungs = 0;
+    exhaustive.eta = 0;
+    match merge(&[guided.clone(), exhaustive]) {
+        Err(ShardError::Incompatible { field: "search", a, b }) => {
+            let both = format!("{a} / {b}");
+            assert!(both.contains("guided") && both.contains("exhaustive"), "{both}");
+        }
+        other => panic!("expected Incompatible(search), got {other:?}"),
+    }
+
+    // Two guided runs with different rung schedules are different
+    // sweeps too — their promotion decisions differ.
+    let mut other_schedule = guided_artifact(s1, 8, vec![(4, mk_point(&[8, 4], 0.75, 20))]);
+    other_schedule.rungs = 4;
+    match merge(&[guided, other_schedule]) {
+        Err(ShardError::Incompatible { field: "search", a, b }) => {
+            assert!(a.contains("rungs 3") && b.contains("rungs 4"), "{a} / {b}");
+        }
+        other => panic!("expected Incompatible(search), got {other:?}"),
+    }
+}
+
+// ------------------------------------------------ (c) guided coverage ---
+
+#[test]
+fn guided_merge_accepts_subsets_but_bounds_and_conflict_checks_them() {
+    let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+    let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+    let a = guided_artifact(
+        s0,
+        10,
+        vec![(0, mk_point(&[8, 2], 0.5, 10)), (2, mk_point(&[8, 4], 0.75, 20))],
+    );
+    let b = guided_artifact(
+        s1,
+        10,
+        vec![(5, mk_point(&[8, 8], 0.875, 40)), (7, mk_point(&[4, 4], 0.25, 8))],
+    );
+
+    // 4 of 10 configs present: an exhaustive merge would be a Coverage
+    // error; a guided merge is exactly this shape.
+    let m = merge(&[a.clone(), b.clone()]).unwrap();
+    assert_eq!(m.search, SearchStrategy::Guided);
+    assert_eq!(m.indices, vec![0, 2, 5, 7]);
+    assert_eq!(m.points.len(), 4);
+    for (pos, &i) in m.indices.iter().enumerate() {
+        let src = if i < 5 { &a } else { &b };
+        let (_, original) = src.points.iter().find(|(pi, _)| *pi == i).unwrap();
+        assert!(point_divergence(&m.points[pos], original).is_none(), "index {i}");
+    }
+
+    // An index outside the declared space is still refused.
+    let oob = guided_artifact(s1, 10, vec![(12, mk_point(&[2, 2], 0.125, 4))]);
+    match merge(&[a.clone(), oob]) {
+        Err(ShardError::Coverage { expected: 10, first_missing: None, .. }) => {}
+        other => panic!("expected Coverage, got {other:?}"),
+    }
+
+    // Disagreeing duplicates stay conflicts under guided merges.
+    let mut clash = b.clone();
+    clash.spec = s0;
+    clash.points = vec![(2, mk_point(&[8, 4], 0.8125, 20))];
+    match merge(&[a, clash]) {
+        Err(ShardError::Conflict { global_index: 2, field: "accuracy", .. }) => {}
+        other => panic!("expected Conflict at #2, got {other:?}"),
+    }
+}
+
+// ------------------------------------------------- (d) fig6 end to end ---
+
+#[test]
+fn guided_fig6_front_is_bit_identical_to_exhaustive_sharded_or_not() {
+    let exhaustive_opts = ExpOpts {
+        artifacts: "/nonexistent".into(),
+        eval_n: 8,
+        budget: 27,
+        backend: EvalBackend::Host,
+        seed: 41,
+        ..ExpOpts::default()
+    };
+    let guided_opts = ExpOpts {
+        search: SearchStrategy::Guided,
+        rungs: 3,
+        eta: 2,
+        ..exhaustive_opts.clone()
+    };
+
+    let ex = fig6::sweep_model(&exhaustive_opts, "lenet5").unwrap();
+    assert_eq!(ex.search, SearchStrategy::Exhaustive);
+    assert_eq!(ex.indices, (0..ex.points.len()).collect::<Vec<_>>());
+
+    // Unsharded guided sweep: every retained point and the whole front
+    // must be bit-identical to the oracle's.
+    let gd = fig6::sweep_model(&guided_opts, "lenet5").unwrap();
+    assert_eq!(gd.search, SearchStrategy::Guided);
+    assert!(gd.points.len() <= ex.points.len());
+    for (pos, &gi) in gd.indices.iter().enumerate() {
+        if let Some((f, va, vb)) = point_divergence(&gd.points[pos], &ex.points[gi]) {
+            panic!("guided point #{gi} differs on `{f}`: {va} vs {vb}");
+        }
+    }
+    let gd_front_global: Vec<usize> = gd.front.iter().map(|&pos| gd.indices[pos]).collect();
+    assert_eq!(gd_front_global, ex.front, "guided front != exhaustive front");
+
+    // Bit-reproducible: a second guided run serialises identically.
+    let gd2 = fig6::sweep_model(&guided_opts, "lenet5").unwrap();
+    assert_eq!(fig6::sweep_json(&gd2).to_string(), fig6::sweep_json(&gd).to_string());
+
+    // Sharded guided sweep: two hash shards, each searched on its own
+    // slice, recombined through the same merge path — the front still
+    // equals the exhaustive one (a global front point is non-dominated
+    // in any subset containing it, so each shard's repair keeps it).
+    let arts: Vec<ShardArtifact> = (0..2)
+        .map(|i| {
+            let spec = ShardSpec::new(i, 2, ShardStrategy::Hash).unwrap();
+            let art = fig6::sweep_shard(&guided_opts, "lenet5", &spec).unwrap();
+            // Cross the process boundary: round-trip the JSON schema.
+            ShardArtifact::from_str(&art.to_json().to_string()).unwrap()
+        })
+        .collect();
+    for a in &arts {
+        assert_eq!(a.search, SearchStrategy::Guided);
+        assert_eq!((a.rungs, a.eta), (3, 2));
+    }
+    let merged = fig6::sweep_from_artifacts(&guided_opts, &arts).unwrap();
+    assert_eq!(merged.search, SearchStrategy::Guided);
+    let merged_front_global: Vec<usize> =
+        merged.front.iter().map(|&pos| merged.indices[pos]).collect();
+    assert_eq!(merged_front_global, ex.front, "sharded-guided front != exhaustive front");
+    for (&pos, &gi) in merged.front.iter().zip(&merged_front_global) {
+        if let Some((f, va, vb)) = point_divergence(&merged.points[pos], &ex.points[gi]) {
+            panic!("sharded-guided front point #{gi} differs on `{f}`: {va} vs {vb}");
+        }
+    }
+
+    // And mixing one of those guided shards with an exhaustive shard of
+    // the same sweep is refused at the merge layer.
+    let spec0 = ShardSpec::new(0, 2, ShardStrategy::Hash).unwrap();
+    let ex_shard = fig6::sweep_shard(&exhaustive_opts, "lenet5", &spec0).unwrap();
+    match merge(&[arts[0].clone(), ex_shard]) {
+        Err(ShardError::Incompatible { field: "search", .. }) => {}
+        other => panic!("expected Incompatible(search), got {other:?}"),
+    }
+}

@@ -15,6 +15,7 @@
 
 use mpnn::coordinator::{Coordinator, HostEval, IssEval};
 use mpnn::dse::pareto::pareto_front;
+use mpnn::dse::search::SearchStrategy;
 use mpnn::dse::shard::{
     config_hash, merge, point_divergence, ShardArtifact, ShardError, ShardSpec, ShardStrategy,
 };
@@ -53,6 +54,9 @@ fn shard_artifact(
         eval_n,
         float_acc: c.model.float_acc,
         baseline_instrs: 1234, // sweep identity only; constant across shards
+        search: SearchStrategy::Exhaustive,
+        rungs: 0,
+        eta: 0,
         points,
         stats: SessionSnapshot::default(),
     }
