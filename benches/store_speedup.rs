@@ -1,0 +1,121 @@
+//! Bench: content-addressed result store — warm (store-served) vs cold
+//! (backend-run) sweep evaluation, the §Perf metric of `--store`.
+//!
+//! Cold passes wipe the store and the RAM report cache before scoring a
+//! small lenet5 configuration set, so every evaluation pays the host
+//! backend and persists its report; warm passes run a fresh coordinator
+//! over the populated store with the RAM cache cleared each iteration,
+//! so every evaluation is a keyed file read. The ledger is asserted
+//! deterministically before any timing claim: warm passes run the
+//! backend **zero** times and miss the store **zero** times.
+//!
+//! `BENCH_ITERS` overrides the measured iteration count (CI smoke runs
+//! set 2); `STORE_BENCH_ASSERT` gates the worst-case warm-vs-cold
+//! speedup (a conservative floor — store reads beat host evaluation by
+//! orders of magnitude, so a violation means the read path regressed,
+//! not that the runner was noisy). Single-sample runs skip the floor: a
+//! ratio of two single timings is meaningless. Results land in
+//! `BENCH_store_speedup.json` with the hit/miss counters.
+
+use mpnn::bench::{bench, iters_from_env, JsonReport};
+use mpnn::coordinator::{Coordinator, HostEval};
+use mpnn::models::format::load_or_fallback;
+use mpnn::store::ResultStore;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+
+fn env_floor(var: &str) -> Option<f64> {
+    std::env::var(var).ok().and_then(|v| v.parse::<f64>().ok())
+}
+
+/// Host-evaluator coordinator over the synthetic lenet5 fallback,
+/// attached to the shared bench store.
+fn coordinator(seed: u64, store_dir: &Path) -> Coordinator {
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", seed).unwrap();
+    let test = model.test.clone();
+    let mut c = Coordinator::new(model, Box::new(HostEval { test }), 2).unwrap();
+    c.attach_store(ResultStore::open(store_dir).unwrap()).unwrap();
+    c
+}
+
+fn main() {
+    let iters = iters_from_env(3);
+    let n_eval = 16usize;
+    let mut report = JsonReport::new("store_speedup");
+
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("mpnn_store_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let cold_c = coordinator(0xD5E, &dir);
+    let n = cold_c.analysis.layers.len();
+    let mut configs = vec![vec![8u32; n], vec![4u32; n], vec![2u32; n]];
+    let mut mixed = vec![4u32; n];
+    mixed[0] = 8;
+    configs.push(mixed);
+
+    println!("result store: cold (backend runs + persists) vs warm (store-served) evaluation");
+    println!(
+        "  lenet5 (synthetic fallback), {} configs, {n_eval} images, host evaluator",
+        configs.len()
+    );
+
+    let cold = bench("store/lenet5-4cfg/cold", iters, || {
+        let _ = std::fs::remove_dir_all(&dir);
+        cold_c.clear_report_cache();
+        for cfg in &configs {
+            cold_c.evaluate(cfg, n_eval).unwrap();
+        }
+    });
+    // Every cold pass (warm-up + timed) must have run the backend for
+    // every configuration — the store was wiped each time.
+    let passes = (iters + 1) as u64;
+    let cold_runs = cold_c.metrics.acc_evals.load(Ordering::Relaxed);
+    assert_eq!(cold_runs, configs.len() as u64 * passes, "cold passes must run the backend");
+
+    // The last cold pass left the store populated; a fresh coordinator
+    // (empty RAM cache per iteration) measures the pure store path.
+    let warm_c = coordinator(0xD5E, &dir);
+    let warm = bench("store/lenet5-4cfg/warm", iters, || {
+        warm_c.clear_report_cache();
+        for cfg in &configs {
+            warm_c.evaluate(cfg, n_eval).unwrap();
+        }
+    });
+    assert_eq!(
+        warm_c.metrics.acc_evals.load(Ordering::Relaxed),
+        0,
+        "warm passes must not run the backend"
+    );
+    let (hits, misses) = warm_c.store_counters().unwrap();
+    assert_eq!(misses, 0, "warm passes must not miss the store");
+    assert_eq!(hits, configs.len() as u64 * passes);
+
+    let speedup = cold.median().as_secs_f64() / warm.median().as_secs_f64();
+    println!(
+        "  => warm store-served evaluation speedup: {speedup:.1}x \
+         ({hits} store hits, {misses} misses, {cold_runs} cold backend runs)"
+    );
+
+    report.record(&cold, &[("configs", configs.len() as f64), ("n_eval", n_eval as f64)]);
+    report.record(&warm, &[("store_hits", hits as f64), ("store_misses", misses as f64)]);
+    report.summary("store_speedup_warm_vs_cold", speedup);
+    report.summary("store_hits", hits as f64);
+    report.summary("store_misses", misses as f64);
+    report.summary("cold_backend_runs", cold_runs as f64);
+
+    // Regression gate, opt-in via env (same contract as the other
+    // benches: floors only apply with >= 2 iterations).
+    if iters < 2 {
+        println!("single-sample run: regression floor not enforced");
+    } else if let Some(min) = env_floor("STORE_BENCH_ASSERT") {
+        assert!(
+            speedup >= min,
+            "store read-path regression: warm-vs-cold speedup {speedup:.2}x < {min}x"
+        );
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("bench json: {}", path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -65,6 +65,7 @@ use crate::models::sim_exec::{
 use crate::models::synthetic::Dataset;
 use crate::nn::tensor::Tensor;
 use crate::sim::MacUnitConfig;
+use crate::store::{ResultStore, StoreKey};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
@@ -115,6 +116,14 @@ pub trait AccuracyEval: Send + Sync {
     /// prefixes so the accuracy interval bounds are computed against
     /// the true full-evaluation denominator.
     fn eval_len(&self) -> usize;
+    /// MAC-unit features of the simulated core the backend runs on — a
+    /// component of the content-addressed result-store key
+    /// ([`crate::store::StoreKey`]). Backends that never touch the core
+    /// (host/PJRT: their reports carry no ISS-measured fields) keep the
+    /// default full unit.
+    fn mac_config(&self) -> MacUnitConfig {
+        MacUnitConfig::full()
+    }
 }
 
 /// Host-reference evaluator: the Rust integer forward pass. Always
@@ -274,6 +283,9 @@ impl AccuracyEval for IssEval {
     fn eval_len(&self) -> usize {
         self.test.images.len()
     }
+    fn mac_config(&self) -> MacUnitConfig {
+        self.mac
+    }
 }
 
 /// Analytic evaluator: [`IssEval`]'s fast sibling. The batch runs under
@@ -370,6 +382,9 @@ impl AccuracyEval for AnalyticEval {
     fn eval_len(&self) -> usize {
         self.test.images.len()
     }
+    fn mac_config(&self) -> MacUnitConfig {
+        self.mac
+    }
 }
 
 /// PJRT evaluator: batched inference through the AOT model artifact.
@@ -438,6 +453,13 @@ pub struct Metrics {
     /// report cache — the cache is keyed by configuration alone and
     /// must only ever hold full-length reports.
     pub partial_evals: AtomicU64,
+    /// Evaluations served from the attached content-addressed result
+    /// store ([`Coordinator::attach_store`]) instead of running the
+    /// backend.
+    pub store_hits: AtomicU64,
+    /// Evaluations that consulted the attached store and missed (the
+    /// backend ran, and the fresh report was persisted).
+    pub store_misses: AtomicU64,
 }
 
 /// The evaluation coordinator.
@@ -457,12 +479,25 @@ pub struct Coordinator {
     /// lock — the dominant per-config cost overlaps across the pool).
     evaluator: Box<dyn AccuracyEval>,
     cache: Mutex<HashMap<Config, EvalReport>>,
+    /// Persistent content-addressed result store
+    /// ([`Coordinator::attach_store`]); `None` = RAM-cache only.
+    store: Option<StoreBinding>,
     /// Worker threads for the sweep.
     pub workers: usize,
     /// Bounded-queue capacity (backpressure).
     pub queue_cap: usize,
     /// Metrics.
     pub metrics: Metrics,
+}
+
+/// An attached [`ResultStore`] plus the per-coordinator key components
+/// computed once at attach time (dataset digest, resolved backend tag,
+/// MAC-unit features).
+struct StoreBinding {
+    store: ResultStore,
+    dataset_digest: u64,
+    backend: &'static str,
+    mac: MacUnitConfig,
 }
 
 impl Coordinator {
@@ -504,10 +539,82 @@ impl Coordinator {
             qcache,
             evaluator,
             cache: Mutex::new(HashMap::new()),
+            store: None,
             workers,
             queue_cap: 64,
             metrics: Metrics::default(),
         })
+    }
+
+    /// Attach a persistent content-addressed result store: every
+    /// subsequent full evaluation consults it before running the
+    /// backend and persists fresh reports into it. The dataset digest
+    /// and backend tag are pinned here, once — the evaluator's
+    /// *resolved* label goes into the keys (never `auto`; the
+    /// [`StoreKey`] constructor enforces it). Guided-search rung
+    /// partials never touch the store: they call the backend directly,
+    /// the same bypass that keeps them out of the RAM report cache.
+    pub fn attach_store(&mut self, store: ResultStore) -> Result<()> {
+        let backend = self.evaluator.name();
+        // Validate the tag eagerly (a dummy fingerprint is fine — only
+        // the backend string is checked) so a misconfigured attach
+        // fails at setup, not mid-sweep.
+        StoreKey::new(0, 0, 1, backend, self.evaluator.mac_config())?;
+        self.store = Some(StoreBinding {
+            store,
+            dataset_digest: crate::store::dataset_digest(&self.model.test),
+            backend,
+            mac: self.evaluator.mac_config(),
+        });
+        Ok(())
+    }
+
+    /// `(store_hits, store_misses)` when a store is attached.
+    pub fn store_counters(&self) -> Option<(u64, u64)> {
+        self.store.as_ref().map(|_| {
+            (
+                self.metrics.store_hits.load(Ordering::Relaxed),
+                self.metrics.store_misses.load(Ordering::Relaxed),
+            )
+        })
+    }
+
+    /// The store key for evaluating `qm` at `n_eval` samples. `n` is
+    /// clamped to the backend's eval-set length exactly as the backends
+    /// themselves clamp, so an oversized request maps to the same key
+    /// as the computation it actually performs.
+    fn store_key(&self, b: &StoreBinding, qm: &QModel, n_eval: usize) -> Result<StoreKey> {
+        let n = n_eval.min(self.evaluator.eval_len());
+        let fp = crate::models::plan::content_fingerprint(qm, &modes_for(qm));
+        Ok(StoreKey::new(fp, b.dataset_digest, n, b.backend, b.mac)?)
+    }
+
+    fn store_lookup(&self, qm: &QModel, n_eval: usize) -> Result<Option<EvalReport>> {
+        let Some(b) = &self.store else { return Ok(None) };
+        let key = self.store_key(b, qm, n_eval)?;
+        match b.store.get(&key) {
+            Some(r) => {
+                self.metrics.store_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(r))
+            }
+            None => {
+                self.metrics.store_misses.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    fn store_insert(&self, qm: &QModel, n_eval: usize, r: &EvalReport) -> Result<()> {
+        let Some(b) = &self.store else { return Ok(()) };
+        let key = self.store_key(b, qm, n_eval)?;
+        Ok(b.store.put(&key, qm.spec.name, &qm.bits, r)?)
+    }
+
+    /// Drop the in-process report cache (benches use this to measure
+    /// the store path without the RAM cache masking it). The attached
+    /// store, the metrics and the cycle model are untouched.
+    pub fn clear_report_cache(&self) {
+        self.cache.lock().unwrap().clear();
     }
 
     /// Assemble a quantized model from the per-(layer, width) cache.
@@ -545,8 +652,18 @@ impl Coordinator {
             }
             None => {
                 let qm = self.quantized(cfg);
-                self.metrics.acc_evals.fetch_add(1, Ordering::Relaxed);
-                let r = self.evaluator.evaluate(&qm, n_eval)?;
+                // Consult the attached result store before paying for
+                // the backend: a hit restores the persisted report (and
+                // a fully-warm sweep runs zero evaluations).
+                let r = match self.store_lookup(&qm, n_eval)? {
+                    Some(r) => r,
+                    None => {
+                        self.metrics.acc_evals.fetch_add(1, Ordering::Relaxed);
+                        let r = self.evaluator.evaluate(&qm, n_eval)?;
+                        self.store_insert(&qm, n_eval, &r)?;
+                        r
+                    }
+                };
                 // Count divergent configs only on the fresh insert so a
                 // racing duplicate evaluation can't double-count.
                 let fresh = self.cache.lock().unwrap().insert(cfg.clone(), r).is_none();
@@ -556,8 +673,18 @@ impl Coordinator {
                 r
             }
         };
+        Ok(self.compose_point(cfg, &report))
+    }
+
+    /// Compose the sweep-level [`EvalPoint`] for `cfg` from a (possibly
+    /// store-restored) report: accuracy fields from the report, cost
+    /// fields recomputed from the local [`CycleModel`] — the exact
+    /// composition [`Coordinator::evaluate`] performs, exposed for
+    /// consumers that read reports straight out of the result store
+    /// (`mpnn serve`'s Pareto queries).
+    pub fn compose_point(&self, cfg: &Config, report: &EvalReport) -> EvalPoint {
         let cost = self.cycle_model.config_total(cfg);
-        Ok(EvalPoint {
+        EvalPoint {
             config: cfg.clone(),
             accuracy: report.accuracy,
             mac_instructions: total_mac_instructions(&self.analysis, cfg),
@@ -565,7 +692,7 @@ impl Coordinator {
             mem_accesses: cost.mem_accesses,
             iss_cycles: report.iss_cycles,
             divergence: report.divergence,
-        })
+        }
     }
 
     /// Label of the evaluator backend in use.

@@ -94,6 +94,12 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
             g.points.into_iter().unzip()
         }
     };
+    if let Some((hits, misses)) = coordinator.store_counters() {
+        eprintln!(
+            "[fig6] result store ({name}): {hits} hits, {misses} misses, {} evaluator runs",
+            coordinator.metrics.acc_evals.load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
     let front = pareto_front(&points, |p| p.mac_instructions);
     let baseline_instrs =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();

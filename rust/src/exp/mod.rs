@@ -126,6 +126,15 @@ pub struct ExpOpts {
     pub rungs: usize,
     /// Halving factor for `--search guided` (`--eta`).
     pub eta: usize,
+    /// Root of the persistent content-addressed result store
+    /// (`--store <dir>`): evaluation reports are looked up before the
+    /// backend runs and written back after, so repeated sweeps — and
+    /// concurrent shard workers pointed at a shared directory — pay
+    /// each unique configuration once. Requires a pinned `--evaluator`
+    /// (`auto` would key the store inconsistently across machines).
+    pub store: Option<PathBuf>,
+    /// Listen address for `mpnn serve` (`--addr`).
+    pub addr: String,
 }
 
 impl Default for ExpOpts {
@@ -147,6 +156,8 @@ impl Default for ExpOpts {
             search: crate::dse::search::SearchStrategy::Exhaustive,
             rungs: 3,
             eta: 2,
+            store: None,
+            addr: "127.0.0.1:7979".to_string(),
         }
     }
 }
@@ -222,11 +233,24 @@ impl ExpOpts {
         }
     }
 
-    /// Build a coordinator for a model.
+    /// Build a coordinator for a model, attaching the persistent
+    /// result store when `--store` is set. The store keys include the
+    /// resolved backend tag, so a pinned `--evaluator` is required —
+    /// `auto` resolves differently per machine and would silently
+    /// split (or worse, mix) the shared store.
     pub fn coordinator(&self, name: &str) -> Result<Coordinator> {
         let model = self.load_model(name)?;
         let eval = self.evaluator(&model, 64)?;
-        Coordinator::new(model, eval, 2)
+        let mut c = Coordinator::new(model, eval, 2)?;
+        if let Some(dir) = &self.store {
+            crate::ensure!(
+                self.backend != EvalBackend::Auto,
+                "--store requires a pinned --evaluator (host|iss|analytic|pjrt); `auto` \
+                 resolves per machine and would key the store inconsistently"
+            );
+            c.attach_store(crate::store::ResultStore::open(dir)?)?;
+        }
+        Ok(c)
     }
 
     /// The models the sweep harnesses (fig6/fig8) iterate: the

@@ -425,6 +425,24 @@ impl Json {
         Ok(v as u64)
     }
 
+    /// Required integer field, sign allowed (rejects fractional
+    /// values).
+    pub fn req_i64(&self, field: &str) -> Result<i64, SchemaError> {
+        let v = self.req_f64(field)?;
+        if v != v.trunc() {
+            return schema_err(field, "expected an integer");
+        }
+        Ok(v as i64)
+    }
+
+    /// Required boolean field.
+    pub fn req_bool(&self, field: &str) -> Result<bool, SchemaError> {
+        match self.req(field)?.as_bool() {
+            Some(b) => Ok(b),
+            None => schema_err(field, "expected a boolean"),
+        }
+    }
+
     /// Required string field.
     pub fn req_str(&self, field: &str) -> Result<&str, SchemaError> {
         match self.req(field)?.as_str() {
@@ -461,9 +479,15 @@ mod schema_tests {
 
     #[test]
     fn typed_accessors_and_errors() {
-        let j = Json::parse(r#"{"n": 3, "s": "x", "a": [1], "f": 1.5, "neg": -1, "z": null}"#)
-            .unwrap();
+        let j = Json::parse(
+            r#"{"n": 3, "s": "x", "a": [1], "f": 1.5, "neg": -1, "z": null, "t": true}"#,
+        )
+        .unwrap();
         assert_eq!(j.req_u64("n").unwrap(), 3);
+        assert_eq!(j.req_i64("neg").unwrap(), -1);
+        assert!(j.req_bool("t").unwrap());
+        assert_eq!(j.req_i64("f").unwrap_err().field, "f");
+        assert!(j.req_bool("n").unwrap_err().msg.contains("boolean"));
         assert_eq!(j.req_str("s").unwrap(), "x");
         assert_eq!(j.req_arr("a").unwrap().len(), 1);
         assert_eq!(j.req_f64("f").unwrap(), 1.5);

@@ -54,6 +54,16 @@
 //!   produced by `python/compile/aot.py`.
 //! * [`exp`] — the experiment harnesses regenerating every table and figure
 //!   of the paper's evaluation section.
+//! * [`store`] — persistent content-addressed result store: evaluation
+//!   reports keyed by plan content fingerprint + dataset digest +
+//!   sample count + MAC config + pinned backend, written atomically
+//!   with quarantine-on-corruption, so results are computed once per
+//!   unique subject anywhere and served from disk everywhere
+//!   (`--store <dir>` on the sweep harnesses).
+//! * [`serve`] — `mpnn serve`: a zero-dependency HTTP/JSON daemon
+//!   holding warm simulator sessions, the plan cache and the cost
+//!   cache across requests, answering `/eval`, `/pareto` and `/stats`
+//!   over the shared result store.
 //!
 //! ## Repo-level documentation
 //!
@@ -80,7 +90,9 @@ pub mod nn;
 pub mod par;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
+pub mod store;
 
 pub use error::{Context, Error};
 

@@ -32,6 +32,12 @@ Utility commands:
                             trace (requires --trace-steps; first --models
                             entry, default lenet5)
   xcheck                    Verify Rust arithmetic vs python xcheck.json
+  serve                     Warm-evaluator daemon over the result store:
+                            answers POST /eval, GET /pareto?model=..,
+                            GET /stats and /shutdown as HTTP/JSON while
+                            keeping simulator sessions, plan cache and
+                            cost cache resident (requires --store and a
+                            pinned --evaluator)
 
 OPTIONS:
   --artifacts <dir>   Artifacts directory (default: auto-discover)
@@ -75,6 +81,19 @@ Sharded sweeps (fig6/fig8; see docs/ARCHITECTURE.md § Sharded sweeps):
   --merge-dir <dir>   Merge every *.s<i>of<n>.json shard artifact found
                       in <dir> (convenience form of repeating --merge;
                       combinable with explicit --merge files)
+
+Result store & serve (see docs/ARCHITECTURE.md § Result store & serve):
+  --store <dir>       fig6/fig8/all/serve: persistent content-addressed
+                      result store. Evaluation reports are keyed by plan
+                      content fingerprint + dataset digest + sample
+                      count + MAC config + backend tag and written
+                      atomically; sweeps consult the store before
+                      running the backend, so a re-run (or another
+                      process sharing <dir>) re-evaluates nothing and
+                      reproduces byte-identical results. Requires a
+                      pinned --evaluator (not auto). Corrupt entries are
+                      quarantined to `<entry>.bad` and recomputed.
+  --addr <host:port>  (serve) listen address (default 127.0.0.1:7979)
 
 Guided search (fig6/fig8; see docs/ARCHITECTURE.md § Guided search):
   --search <s>        exhaustive | guided (default exhaustive). Guided
@@ -171,6 +190,17 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
                     mpnn::anyhow!("unknown search strategy `{v}` (exhaustive|guided)")
                 })?;
             }
+            "--store" => {
+                opts.store = Some(
+                    it.next().ok_or_else(|| mpnn::anyhow!("--store needs a directory"))?.into(),
+                )
+            }
+            "--addr" => {
+                opts.addr = it
+                    .next()
+                    .ok_or_else(|| mpnn::anyhow!("--addr needs host:port"))?
+                    .to_string()
+            }
             "--rungs" => {
                 let v = it.next().ok_or_else(|| mpnn::anyhow!("--rungs needs a count"))?;
                 rungs = Some(v.parse().map_err(|_| mpnn::anyhow!("--rungs: bad count `{v}`"))?);
@@ -199,6 +229,14 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
     if let Some(e) = eta {
         mpnn::ensure!(e >= 2, "--eta must be >= 2");
         opts.eta = e;
+    }
+    // The store keys embed the resolved backend tag — fail the
+    // ambiguous combination up front, not mid-sweep.
+    if opts.store.is_some() && opts.backend == EvalBackend::Auto {
+        bail!(
+            "--store requires a pinned --evaluator (host|iss|analytic|pjrt); `auto` \
+             resolves per machine and would key the store inconsistently"
+        );
     }
     // Validate --models early so typos fail before a sweep starts.
     opts.model_names()?;
@@ -352,16 +390,15 @@ fn cmd_xcheck(opts: &ExpOpts) -> Result<()> {
     let v = Json::parse(&text).map_err(|e| mpnn::anyhow!("{e}"))?;
     let mut n = 0;
     for case in v.get("requantize").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+        // Schema-checked field access: a malformed vector file names
+        // the offending field instead of panicking mid-loop.
         let rq = mpnn::nn::quant::Requant {
-            m: case.get("m").unwrap().as_i64().unwrap() as i32,
-            shift: case.get("shift").unwrap().as_i64().unwrap() as i32,
+            m: case.req_i64("m")? as i32,
+            shift: case.req_i64("shift")? as i32,
         };
-        let got = mpnn::nn::quant::requantize(
-            case.get("acc").unwrap().as_i64().unwrap() as i32,
-            rq,
-            case.get("relu").unwrap().as_bool().unwrap(),
-        );
-        let want = case.get("out").unwrap().as_i64().unwrap() as i8;
+        let got =
+            mpnn::nn::quant::requantize(case.req_i64("acc")? as i32, rq, case.req_bool("relu")?);
+        let want = case.req_i64("out")? as i8;
         mpnn::ensure!(got == want, "requantize mismatch: {case:?} got {got}");
         n += 1;
     }
@@ -396,6 +433,10 @@ fn main() -> Result<()> {
         "demo" => cmd_demo(),
         "trace" => cmd_trace(&parse_opts(rest)?),
         "xcheck" => cmd_xcheck(&parse_opts(rest)?),
+        "serve" => {
+            let opts = parse_opts(rest)?;
+            mpnn::serve::run(&opts, &opts.addr)
+        }
         "--help" | "-h" | "help" => {
             print!("{USAGE}");
             Ok(())

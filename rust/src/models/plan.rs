@@ -585,6 +585,40 @@ fn spec_structure(spec: &ModelSpec) -> String {
     format!("{:?}|{:?}|{}", spec.input, spec.nodes, spec.num_classes)
 }
 
+/// Public FNV-1a content key of one evaluation *subject*: everything
+/// the plan lowering reads (spec structure, site scales, quantized
+/// weights/bias/requant, per-layer widths) folded together with the
+/// model name, the configuration's bit vector and the per-layer kernel
+/// modes. Two models that differ anywhere the lowering can see — or
+/// the same model lowered under different modes — never share a
+/// fingerprint, which is exactly the property the content-addressed
+/// result store ([`crate::store::StoreKey`]) keys on.
+pub fn content_fingerprint(qm: &QModel, modes: &[Option<MacMode>]) -> u64 {
+    let mut h = fingerprint(qm, &spec_structure(&qm.spec));
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    for b in qm.spec.name.bytes() {
+        eat(b);
+    }
+    eat(0xff); // name / bits separator
+    for &w in &qm.bits {
+        for b in w.to_le_bytes() {
+            eat(b);
+        }
+    }
+    // One byte per layer mode: 0 = baseline (no nn_mac), else the
+    // mode's weight width (8/4/2) — distinct for every MacMode.
+    for m in modes {
+        eat(match m {
+            None => 0,
+            Some(mm) => mm.weight_bits() as u8,
+        });
+    }
+    h
+}
+
 #[derive(Default)]
 struct PlanCache {
     map: HashMap<PlanKey, Arc<ExecutionPlan>>,

@@ -1,0 +1,393 @@
+//! `mpnn serve` — a zero-dependency warm-evaluator daemon over the
+//! content-addressed result store ([`crate::store`]).
+//!
+//! The sweep harnesses pay their warm-up (cycle-model measurement,
+//! plan compilation, kernel translation, simulator memory pools) per
+//! *process*; the ROADMAP's "sweep-as-a-service" story is to pay it
+//! once and keep it resident. `Server` holds one [`Coordinator`] per
+//! requested model — each wired to the shared [`ResultStore`] — plus
+//! the process-global `SimSession` (plan cache, kernel cache,
+//! `CostCache`), and answers a minimal HTTP/1.1 + JSON protocol on
+//! `std::net::TcpListener` alone:
+//!
+//! * `POST /eval` `{"model": "lenet5", "bits": [8,4,4,2,8],
+//!   "n_eval": 64}` → the sweep-level point for that configuration
+//!   (store-backed: a repeat request from any client is a cache read,
+//!   `"cached": true`).
+//! * `GET /pareto?model=lenet5` → every stored point for the model
+//!   plus the Pareto-front indices over them
+//!   ([`pareto_front`](crate::dse::pareto::pareto_front), by MAC
+//!   instructions — the Fig. 6 objective).
+//! * `GET /stats` → request/store/coordinator/session counters.
+//! * `POST /shutdown` → graceful stop: workers drain and `run`
+//!   returns (no signal handling required — the protocol is the
+//!   control surface).
+//!
+//! Concurrency: the listener is nonblocking and shared by a
+//! [`crate::par::parallel_map`] worker pool (`--eval-workers`
+//! threads); each worker loops accept → handle, so up to that many
+//! clients are served in parallel and shutdown needs no thread
+//! interruption, just the flag.
+
+use crate::coordinator::Coordinator;
+use crate::dse::pareto::pareto_front;
+use crate::dse::EvalPoint;
+use crate::error::{Context, Result};
+use crate::exp::{EvalBackend, ExpOpts, MODEL_NAMES};
+use crate::json::Json;
+use crate::store::ResultStore;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Largest accepted request (headers + body). Far above any legitimate
+/// eval/pareto request; a cap, not a tuning knob.
+const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// How long an idle accept loop sleeps between polls of the
+/// nonblocking listener (also the shutdown-latency bound per worker).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// The daemon: a bound listener plus per-model warm coordinators.
+pub struct Server {
+    listener: TcpListener,
+    opts: ExpOpts,
+    store: ResultStore,
+    coords: Mutex<HashMap<String, Arc<Coordinator>>>,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+}
+
+impl Server {
+    /// Bind the daemon. Requires `--store` (the whole point is serving
+    /// store-deduped results) and a pinned evaluator (`auto` would key
+    /// the shared store inconsistently — same rule as sharded sweeps,
+    /// see `docs/EVALUATORS.md`).
+    pub fn bind(opts: &ExpOpts, addr: &str) -> Result<Server> {
+        let dir = opts
+            .store
+            .clone()
+            .ok_or_else(|| crate::anyhow!("serve needs --store <dir> (the shared result store)"))?;
+        crate::ensure!(
+            opts.backend != EvalBackend::Auto,
+            "serve needs a pinned --evaluator (host|iss|analytic|pjrt): `auto` resolves per \
+             machine and would key the shared store inconsistently (see docs/EVALUATORS.md)"
+        );
+        let store = ResultStore::open(&dir)?;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve address {addr}"))?;
+        // Nonblocking accept + poll: workers can observe the shutdown
+        // flag without a self-connect trick or per-thread signals.
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            opts: opts.clone(),
+            store,
+            coords: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+        })
+    }
+
+    /// The bound address (ephemeral-port friendly: bind to `:0`, then
+    /// read the port back).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Fetch (or build + cache) the warm coordinator for `model`. The
+    /// build runs outside the map lock — it measures the cycle model on
+    /// the ISS, and other models' requests shouldn't serialise behind
+    /// it; a racing builder of the same model loses its work.
+    fn coordinator(&self, model: &str) -> Result<Arc<Coordinator>> {
+        if let Some(c) = self.coords.lock().unwrap().get(model) {
+            return Ok(Arc::clone(c));
+        }
+        crate::ensure!(
+            MODEL_NAMES.contains(&model),
+            "unknown model `{model}` (known: {})",
+            MODEL_NAMES.join(", ")
+        );
+        let built = Arc::new(self.opts.coordinator(model)?);
+        let mut map = self.coords.lock().unwrap();
+        let c = map.entry(model.to_string()).or_insert(built);
+        Ok(Arc::clone(c))
+    }
+
+    /// Serve until `/shutdown`: each pool worker loops accept → handle
+    /// over the shared nonblocking listener. Per-connection failures
+    /// (malformed requests, dropped sockets) are logged and served as
+    /// HTTP errors where possible — only listener-level failures abort.
+    pub fn run(&self) -> Result<()> {
+        let workers = self.opts.eval_workers.max(1);
+        crate::par::parallel_map(workers, workers, |_| {
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        if let Err(e) = self.handle(stream) {
+                            eprintln!("[serve] connection error: {e}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) => return Err(crate::error::Error::from(e)),
+                }
+            }
+        })?;
+        Ok(())
+    }
+
+    fn handle(&self, mut stream: TcpStream) -> Result<()> {
+        // Linux does not propagate the listener's nonblocking flag to
+        // accepted sockets, but that is platform behaviour — pin it.
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let (method, path, body) = read_request(&mut stream)?;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (route, query) = match path.split_once('?') {
+            Some((r, q)) => (r, q),
+            None => (path.as_str(), ""),
+        };
+        let outcome = match (method.as_str(), route) {
+            ("POST", "/eval") => self.eval(&body).map(|j| (200, j)),
+            ("GET", "/pareto") => self.pareto(query).map(|j| (200, j)),
+            ("GET", "/stats") => Ok((200, self.stats())),
+            (_, "/shutdown") => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok((200, Json::obj(vec![("ok", Json::Bool(true))])))
+            }
+            _ => Ok((404, Json::obj(vec![("error", Json::s("no such endpoint"))]))),
+        };
+        let (status, json) = match outcome {
+            Ok(r) => r,
+            Err(e) => (400, Json::obj(vec![("error", Json::s(&e.to_string()))])),
+        };
+        write_response(&mut stream, status, &json)
+    }
+
+    /// `POST /eval`: score one configuration through the warm
+    /// coordinator (store-consulting evaluate path). `cached` reports
+    /// whether the backend actually ran for this request — false only
+    /// on a genuine store+RAM miss.
+    fn eval(&self, body: &str) -> Result<Json> {
+        let j = Json::parse(body).map_err(|e| crate::anyhow!("bad /eval JSON: {e}"))?;
+        let model = j.req_str("model")?.to_string();
+        let bits: Vec<u32> = j
+            .req_arr("bits")?
+            .iter()
+            .map(|b| match b.as_f64() {
+                Some(v) if v == v.trunc() && [2.0, 4.0, 8.0].contains(&v) => Ok(v as u32),
+                _ => Err(crate::anyhow!("bits entries must be 2, 4 or 8")),
+            })
+            .collect::<Result<_>>()?;
+        let n_eval = match j.get("n_eval") {
+            None | Some(Json::Null) => self.opts.eval_n,
+            Some(v) => match v.as_f64() {
+                Some(x) if x >= 1.0 && x == x.trunc() => x as usize,
+                _ => crate::bail!("n_eval must be a positive integer"),
+            },
+        };
+        let c = self.coordinator(&model)?;
+        crate::ensure!(
+            bits.len() == c.analysis.layers.len(),
+            "model `{model}` has {} quantizable layers, got {} bits entries",
+            c.analysis.layers.len(),
+            bits.len()
+        );
+        let evals_before = c.metrics.acc_evals.load(Ordering::Relaxed);
+        let point = c.evaluate(&bits, n_eval)?;
+        let cached = c.metrics.acc_evals.load(Ordering::Relaxed) == evals_before;
+        Ok(Json::obj(vec![
+            ("model", Json::s(&model)),
+            ("n_eval", Json::i(n_eval.min(c.model.test.images.len()) as i64)),
+            ("cached", Json::Bool(cached)),
+            ("point", point_json(&point)),
+        ]))
+    }
+
+    /// `GET /pareto?model=..`: every stored point for the model, plus
+    /// the Pareto-front indices over them (by MAC instructions — the
+    /// Fig. 6 objective). Cost fields are recomposed from the local
+    /// cycle model exactly as the sweep harnesses do.
+    fn pareto(&self, query: &str) -> Result<Json> {
+        let model = query
+            .split('&')
+            .find_map(|kv| kv.strip_prefix("model="))
+            .ok_or_else(|| crate::anyhow!("/pareto needs ?model=<name>"))?
+            .to_string();
+        let c = self.coordinator(&model)?;
+        let n_layers = c.analysis.layers.len();
+        let points: Vec<EvalPoint> = self
+            .store
+            .scan()?
+            .into_iter()
+            .filter(|e| {
+                e.model == model
+                    && e.bits.len() == n_layers
+                    && e.bits.iter().all(|b| [2, 4, 8].contains(b))
+            })
+            .map(|e| c.compose_point(&e.bits, &e.report))
+            .collect();
+        let front = pareto_front(&points, |p| p.mac_instructions);
+        Ok(Json::obj(vec![
+            ("model", Json::s(&model)),
+            ("points", Json::Arr(points.iter().map(point_json).collect())),
+            ("front", Json::Arr(front.iter().map(|&i| Json::i(i as i64)).collect())),
+        ]))
+    }
+
+    /// `GET /stats`: request count, store contents/traffic (aggregated
+    /// over the warm coordinators), and the process-global session
+    /// counters the daemon exists to keep warm.
+    fn stats(&self) -> Json {
+        let entries = self.store.scan().map(|v| v.len()).unwrap_or(0);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let (mut submitted, mut cache_hits, mut acc_evals) = (0u64, 0u64, 0u64);
+        let coords = self.coords.lock().unwrap();
+        let warm: Vec<Json> = coords.keys().map(|k| Json::s(k)).collect();
+        for c in coords.values() {
+            if let Some((h, m)) = c.store_counters() {
+                hits += h;
+                misses += m;
+            }
+            submitted += c.metrics.submitted.load(Ordering::Relaxed);
+            cache_hits += c.metrics.cache_hits.load(Ordering::Relaxed);
+            acc_evals += c.metrics.acc_evals.load(Ordering::Relaxed);
+        }
+        drop(coords);
+        let st = &crate::sim::session::SimSession::global().stats;
+        Json::obj(vec![
+            ("requests", Json::i(self.requests.load(Ordering::Relaxed) as i64)),
+            ("evaluator", Json::s(self.opts.backend.name())),
+            ("models_warm", Json::Arr(warm)),
+            (
+                "store",
+                Json::obj(vec![
+                    ("entries", Json::i(entries as i64)),
+                    ("hits", Json::i(hits as i64)),
+                    ("misses", Json::i(misses as i64)),
+                ]),
+            ),
+            (
+                "coordinator",
+                Json::obj(vec![
+                    ("submitted", Json::i(submitted as i64)),
+                    ("cache_hits", Json::i(cache_hits as i64)),
+                    ("acc_evals", Json::i(acc_evals as i64)),
+                ]),
+            ),
+            (
+                "session",
+                Json::obj(vec![
+                    ("runs", Json::i(st.runs.load(Ordering::Relaxed) as i64)),
+                    (
+                        "plan_compiles",
+                        Json::i(st.plan_compiles.load(Ordering::Relaxed) as i64),
+                    ),
+                    ("plan_hits", Json::i(st.plan_hits.load(Ordering::Relaxed) as i64)),
+                    (
+                        "analytic_hits",
+                        Json::i(st.analytic_hits.load(Ordering::Relaxed) as i64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// The `/eval` and `/pareto` point payload — same field set as the
+/// shard artifacts (bits + accuracy + cost fields).
+fn point_json(p: &EvalPoint) -> Json {
+    Json::obj(vec![
+        ("bits", Json::Arr(p.config.iter().map(|&b| Json::i(b as i64)).collect())),
+        ("acc", Json::Num(p.accuracy as f64)),
+        ("mac_instrs", Json::i(p.mac_instructions as i64)),
+        ("cycles", Json::i(p.cycles as i64)),
+        ("mem_accesses", Json::i(p.mem_accesses as i64)),
+        ("iss_cycles", p.iss_cycles.map_or(Json::Null, |c| Json::i(c as i64))),
+        ("divergence", p.divergence.map_or(Json::Null, |d| Json::Num(d as f64))),
+    ])
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Minimal HTTP/1.1 request reader: request line, headers (only
+/// `Content-Length` is honoured), then exactly the declared body.
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        crate::ensure!(buf.len() < MAX_REQUEST_BYTES, "request headers too large");
+        let n = stream.read(&mut tmp)?;
+        crate::ensure!(n > 0, "connection closed mid-request");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    crate::ensure!(!method.is_empty() && path.starts_with('/'), "malformed request line");
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    crate::ensure!(content_length <= MAX_REQUEST_BYTES, "request body too large");
+    let mut body = buf[header_end..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        crate::ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, json: &Json) -> Result<()> {
+    let body = json.to_string();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// CLI entry point for `mpnn serve`: bind, announce, serve until
+/// `/shutdown`.
+pub fn run(opts: &ExpOpts, addr: &str) -> Result<()> {
+    let server = Server::bind(opts, addr)?;
+    println!(
+        "[serve] listening on {} (store {}, evaluator {}, {} workers)",
+        server.local_addr()?,
+        opts.store.as_ref().expect("bind checked --store").display(),
+        opts.backend.name(),
+        opts.eval_workers.max(1),
+    );
+    server.run()?;
+    println!("[serve] shut down cleanly");
+    Ok(())
+}

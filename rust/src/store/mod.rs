@@ -1,0 +1,585 @@
+//! Content-addressed persistent result store for evaluation reports.
+//!
+//! A DSE sweep's dominant cost is the accuracy evaluation; everything
+//! an evaluation produces is a pure function of *what was evaluated*:
+//! the model content + configuration + kernel modes (the plan content
+//! fingerprint, [`crate::models::plan::content_fingerprint`]), the
+//! evaluation dataset, the sample count, the MAC-unit features of the
+//! simulated core, and the backend that ran it. [`StoreKey`] is
+//! exactly that tuple; [`ResultStore`] maps it to the backend's
+//! [`EvalReport`] on disk, so a result computed once — by any process,
+//! on any host sharing the directory — is served everywhere else as a
+//! file read.
+//!
+//! Only the `EvalReport` is persisted. The cycle/MAC-cost fields of an
+//! [`EvalPoint`](crate::dse::EvalPoint) are recomputed locally by the
+//! coordinator from its `CycleModel` (deterministic), so a warm
+//! store-backed sweep writes byte-identical figure JSON by
+//! construction — the same mechanism that makes shard merges bit-exact.
+//!
+//! Durability contract:
+//!
+//! * **Atomic writes** — entries are written to a temp file in the
+//!   fan-out directory and `rename`d into place; readers never observe
+//!   a half-written entry, and a crash leaves only an ignorable
+//!   `.tmp.*` file.
+//! * **Quarantine, never garbage** — a corrupt/truncated/mistagged
+//!   entry surfaces as a typed [`StoreError`] on the strict
+//!   [`ResultStore::load`] path; the lenient [`ResultStore::get`] path
+//!   renames it aside to `<entry>.json.bad`, counts a miss, and lets
+//!   the caller recompute. The store never panics and never silently
+//!   serves a wrong report.
+//! * **Pinned backends only** — `auto` resolves per machine (see
+//!   `docs/EVALUATORS.md` § backend choice under sharded sweeps), so a
+//!   key carrying it would alias results from different backends
+//!   across hosts. [`StoreKey::new`] rejects it.
+//!
+//! Layout: `<root>/<hh>/<key16>.json` where `hh` is the first two hex
+//! digits of the 16-hex-digit key hash (256-way fan-out keeps
+//! directories small under large sweeps).
+
+use crate::coordinator::EvalReport;
+use crate::json::{Json, SchemaError};
+use crate::models::synthetic::Dataset;
+use crate::sim::MacUnitConfig;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Schema version of on-disk entries. Bump on any incompatible change
+/// to the record shape; readers treat other versions as typed errors
+/// (quarantined on the lenient path), never as silently-parsed data.
+pub const STORE_SCHEMA_VERSION: u64 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// FNV-1a digest of an evaluation dataset: image shapes + pixel bit
+/// patterns, labels, and the class count. Two datasets that differ in
+/// any sample (or sample order — evaluations take prefixes) never
+/// share a digest, so results from different eval sets never alias in
+/// the store.
+pub fn dataset_digest(ds: &Dataset) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    };
+    for b in (ds.num_classes as u64).to_le_bytes() {
+        eat(b);
+    }
+    for b in (ds.images.len() as u64).to_le_bytes() {
+        eat(b);
+    }
+    for img in &ds.images {
+        for &d in &img.shape {
+            for b in (d as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
+        for &v in &img.data {
+            for b in v.to_bits().to_le_bytes() {
+                eat(b);
+            }
+        }
+    }
+    for &l in &ds.labels {
+        for b in (l as u64).to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
+}
+
+/// The content-addressed identity of one evaluation result. Every
+/// component participates in the key hash — flipping any of model
+/// content, bits, modes, dataset, sample count, backend, or MAC-unit
+/// features produces a different key (`tests/store.rs` pins the
+/// sensitivity matrix).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreKey {
+    /// Plan content fingerprint
+    /// ([`crate::models::plan::content_fingerprint`]): model content +
+    /// bit vector + per-layer kernel modes.
+    pub plan_fingerprint: u64,
+    /// Evaluation-dataset digest ([`dataset_digest`]).
+    pub dataset_digest: u64,
+    /// Samples the evaluation scored (after clamping to the backend's
+    /// eval-set length — the *effective* n, so requesting more samples
+    /// than exist doesn't mint a second key for the same computation).
+    pub n_eval: usize,
+    /// Resolved backend label (`host`/`iss`/`analytic`/`pjrt`). Never
+    /// `auto` — [`StoreKey::new`] rejects unpinned tags.
+    pub backend: String,
+    /// MAC-unit features of the simulated core the backend ran.
+    pub mac: MacUnitConfig,
+}
+
+impl StoreKey {
+    /// Build a key; rejects an unpinned (`auto`) or empty backend tag
+    /// with [`StoreError::UnpinnedBackend`] — `auto` resolves per
+    /// machine, so it would key the same logical result inconsistently
+    /// across hosts sharing the store.
+    pub fn new(
+        plan_fingerprint: u64,
+        dataset_digest: u64,
+        n_eval: usize,
+        backend: &str,
+        mac: MacUnitConfig,
+    ) -> Result<StoreKey, StoreError> {
+        if backend == "auto" || backend.is_empty() {
+            return Err(StoreError::UnpinnedBackend { tag: backend.to_string() });
+        }
+        Ok(StoreKey {
+            plan_fingerprint,
+            dataset_digest,
+            n_eval,
+            backend: backend.to_string(),
+            mac,
+        })
+    }
+
+    /// FNV-1a hash over every key component.
+    pub fn hash(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        for b in self.plan_fingerprint.to_le_bytes() {
+            eat(b);
+        }
+        for b in self.dataset_digest.to_le_bytes() {
+            eat(b);
+        }
+        for b in (self.n_eval as u64).to_le_bytes() {
+            eat(b);
+        }
+        for b in self.backend.bytes() {
+            eat(b);
+        }
+        eat(0xff); // backend / mac separator
+        eat(self.mac.multipump as u8);
+        eat(self.mac.soft_simd as u8);
+        h
+    }
+
+    /// 16-hex-digit entry name.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.hash())
+    }
+}
+
+/// Typed store failure. The strict read path ([`ResultStore::load`])
+/// returns these; the lenient path ([`ResultStore::get`]) converts
+/// everything except `Missing` into quarantine + miss.
+#[derive(Debug)]
+pub enum StoreError {
+    /// No entry for the key (a plain miss, not a fault).
+    Missing {
+        /// Entry path probed.
+        path: PathBuf,
+    },
+    /// Filesystem failure reading or writing an entry.
+    Io {
+        /// Path involved.
+        path: PathBuf,
+        /// Underlying error text.
+        err: String,
+    },
+    /// Entry is not parseable JSON (truncated write, bit rot).
+    Parse {
+        /// Entry path.
+        path: PathBuf,
+        /// Parser diagnosis.
+        msg: String,
+    },
+    /// Entry parses but violates the record schema.
+    Schema {
+        /// Entry path.
+        path: PathBuf,
+        /// Field-level diagnosis.
+        err: SchemaError,
+    },
+    /// Entry was written under a different schema version.
+    Version {
+        /// Entry path.
+        path: PathBuf,
+        /// Version found in the file.
+        found: u64,
+    },
+    /// Entry's stored key components disagree with the requested key
+    /// (hash collision or a mistagged/hand-edited file) — served as a
+    /// typed error, never as a wrong report.
+    KeyMismatch {
+        /// Entry path.
+        path: PathBuf,
+    },
+    /// Key construction refused an unpinned backend tag.
+    UnpinnedBackend {
+        /// The offending tag (`auto` or empty).
+        tag: String,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Missing { path } => write!(f, "no store entry at {}", path.display()),
+            StoreError::Io { path, err } => {
+                write!(f, "store I/O error at {}: {err}", path.display())
+            }
+            StoreError::Parse { path, msg } => {
+                write!(f, "corrupt store entry {}: {msg}", path.display())
+            }
+            StoreError::Schema { path, err } => {
+                write!(f, "malformed store entry {}: {err}", path.display())
+            }
+            StoreError::Version { path, found } => write!(
+                f,
+                "store entry {} has schema version {found} (this build reads {})",
+                path.display(),
+                STORE_SCHEMA_VERSION
+            ),
+            StoreError::KeyMismatch { path } => write!(
+                f,
+                "store entry {} does not match the requested key (collision or mistagged file)",
+                path.display()
+            ),
+            StoreError::UnpinnedBackend { tag } => write!(
+                f,
+                "store keys need a pinned backend, got `{tag}`: `auto` resolves per machine \
+                 (pass --evaluator host|iss|analytic|pjrt; see docs/EVALUATORS.md)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// One entry as returned by [`ResultStore::scan`]: the informational
+/// fields recorded alongside the report (enough to recompose
+/// [`EvalPoint`](crate::dse::EvalPoint)s for Pareto queries without
+/// re-deriving any key).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredEntry {
+    /// 16-hex entry name (the key hash).
+    pub key: String,
+    /// Model name the result was computed for.
+    pub model: String,
+    /// Per-layer bit-width configuration.
+    pub bits: Vec<u32>,
+    /// Backend that produced the report.
+    pub backend: String,
+    /// Effective evaluation sample count.
+    pub n_eval: usize,
+    /// The stored report.
+    pub report: EvalReport,
+}
+
+/// The on-disk content-addressed store. Counters are process-local
+/// observability (the coordinator's `Metrics` mirror them per sweep).
+pub struct ResultStore {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> StoreError {
+    StoreError::Io { path: path.to_path_buf(), err: e.to_string() }
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<ResultStore, StoreError> {
+        std::fs::create_dir_all(root).map_err(|e| io_err(root, e))?;
+        Ok(ResultStore {
+            root: root.to_path_buf(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+        })
+    }
+
+    /// Store root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Entry path for a key: `<root>/<hh>/<key16>.json`.
+    pub fn path_for(&self, key: &StoreKey) -> PathBuf {
+        let hex = key.hex();
+        self.root.join(&hex[..2]).join(format!("{hex}.json"))
+    }
+
+    /// `(hits, misses, quarantined)` since this handle opened.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.quarantined.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Strict read: the report for `key`, or a typed error saying
+    /// exactly what is wrong with the entry ([`StoreError::Missing`]
+    /// for a plain absence). Does not touch the counters.
+    pub fn load(&self, key: &StoreKey) -> Result<EvalReport, StoreError> {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(StoreError::Missing { path })
+            }
+            Err(e) => return Err(io_err(&path, e)),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| StoreError::Parse { path: path.clone(), msg: e.to_string() })?;
+        let schema = |err| StoreError::Schema { path: path.clone(), err };
+        let version = j.req_u64("schema").map_err(schema)?;
+        if version != STORE_SCHEMA_VERSION {
+            return Err(StoreError::Version { path: path.clone(), found: version });
+        }
+        // Cross-check every stored key component against the request: a
+        // hash collision or a mistagged file must fail typed, never
+        // serve someone else's report.
+        let fp = parse_u64_str(&j, "plan_fingerprint").map_err(schema)?;
+        let dd = parse_u64_str(&j, "dataset_digest").map_err(schema)?;
+        let matches = j.req_str("key").map_err(schema)? == key.hex()
+            && j.req_str("backend").map_err(schema)? == key.backend
+            && j.req_u64("n_eval").map_err(schema)? as usize == key.n_eval
+            && fp == key.plan_fingerprint
+            && dd == key.dataset_digest
+            && j.req_bool("multipump").map_err(schema)? == key.mac.multipump
+            && j.req_bool("soft_simd").map_err(schema)? == key.mac.soft_simd;
+        if !matches {
+            return Err(StoreError::KeyMismatch { path: path.clone() });
+        }
+        report_from_json(&j).map_err(schema)
+    }
+
+    /// Lenient read for the evaluation hot path: `Some(report)` on a
+    /// hit, `None` on a miss. Any fault (corrupt, truncated, wrong
+    /// schema, mistagged) quarantines the entry to `<entry>.json.bad`,
+    /// logs it, and counts as a miss — the caller recomputes and the
+    /// next `put` re-creates a clean entry.
+    pub fn get(&self, key: &StoreKey) -> Option<EvalReport> {
+        match self.load(key) {
+            Ok(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            Err(StoreError::Missing { .. }) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(e) => {
+                let path = self.path_for(key);
+                let bad = PathBuf::from(format!("{}.bad", path.display()));
+                if std::fs::rename(&path, &bad).is_ok() {
+                    self.quarantined.fetch_add(1, Ordering::Relaxed);
+                }
+                eprintln!("[store] quarantined {} -> .bad ({e})", path.display());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Write (or overwrite) the entry for `key` atomically: the record
+    /// is serialized to a `.tmp.*` file in the fan-out directory and
+    /// renamed into place, so concurrent readers (and crash leftovers)
+    /// never see a partial entry. `model`/`bits` are informational
+    /// fields for [`ResultStore::scan`] consumers.
+    pub fn put(
+        &self,
+        key: &StoreKey,
+        model: &str,
+        bits: &[u32],
+        report: &EvalReport,
+    ) -> Result<(), StoreError> {
+        let path = self.path_for(key);
+        let dir = path.parent().expect("entry path has a fan-out parent");
+        std::fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+        let tmp = dir.join(format!(".tmp.{}.{}", key.hex(), std::process::id()));
+        std::fs::write(&tmp, entry_json(key, model, bits, report).to_string())
+            .map_err(|e| io_err(&tmp, e))?;
+        std::fs::rename(&tmp, &path).map_err(|e| io_err(&path, e))?;
+        Ok(())
+    }
+
+    /// Walk every well-formed entry in the store, sorted by key for
+    /// deterministic output. Temp files, quarantined `.bad` files and
+    /// unparseable entries are skipped (a scan is a query, not an
+    /// integrity pass — keyed `get` owns the quarantine policy).
+    pub fn scan(&self) -> Result<Vec<StoredEntry>, StoreError> {
+        let mut out = Vec::new();
+        let fans = std::fs::read_dir(&self.root).map_err(|e| io_err(&self.root, e))?;
+        for fan in fans.filter_map(|e| e.ok()) {
+            if !fan.path().is_dir() {
+                continue;
+            }
+            let files = match std::fs::read_dir(fan.path()) {
+                Ok(f) => f,
+                Err(_) => continue,
+            };
+            for f in files.filter_map(|e| e.ok()) {
+                let path = f.path();
+                let name = match path.file_name().and_then(|n| n.to_str()) {
+                    Some(n) => n,
+                    None => continue,
+                };
+                if !name.ends_with(".json") || name.starts_with(".tmp.") {
+                    continue;
+                }
+                let Ok(text) = std::fs::read_to_string(&path) else { continue };
+                let Ok(j) = Json::parse(&text) else { continue };
+                if j.req_u64("schema").ok() != Some(STORE_SCHEMA_VERSION) {
+                    continue;
+                }
+                let entry = (|| -> Result<StoredEntry, SchemaError> {
+                    Ok(StoredEntry {
+                        key: j.req_str("key")?.to_string(),
+                        model: j.req_str("model")?.to_string(),
+                        bits: parse_bits(&j)?,
+                        backend: j.req_str("backend")?.to_string(),
+                        n_eval: j.req_u64("n_eval")? as usize,
+                        report: report_from_json(&j)?,
+                    })
+                })();
+                if let Ok(e) = entry {
+                    out.push(e);
+                }
+            }
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+}
+
+/// u64 stored as a decimal string (the shard-artifact convention:
+/// fingerprints do not survive the JSON number path, which is f64).
+fn parse_u64_str(j: &Json, field: &str) -> Result<u64, SchemaError> {
+    j.req_str(field)?.parse::<u64>().map_err(|_| SchemaError {
+        field: field.to_string(),
+        msg: "expected a decimal u64 string".to_string(),
+    })
+}
+
+fn parse_bits(j: &Json) -> Result<Vec<u32>, SchemaError> {
+    j.req_arr("bits")?
+        .iter()
+        .map(|b| match b.as_f64() {
+            Some(v) if v >= 0.0 && v == v.trunc() => Ok(v as u32),
+            _ => Err(SchemaError {
+                field: "bits".to_string(),
+                msg: "expected non-negative integers".to_string(),
+            }),
+        })
+        .collect()
+}
+
+fn entry_json(key: &StoreKey, model: &str, bits: &[u32], r: &EvalReport) -> Json {
+    Json::obj(vec![
+        ("schema", Json::i(STORE_SCHEMA_VERSION as i64)),
+        ("key", Json::s(&key.hex())),
+        ("model", Json::s(model)),
+        ("bits", Json::Arr(bits.iter().map(|&b| Json::i(b as i64)).collect())),
+        ("backend", Json::s(&key.backend)),
+        ("n_eval", Json::i(key.n_eval as i64)),
+        ("plan_fingerprint", Json::s(&key.plan_fingerprint.to_string())),
+        ("dataset_digest", Json::s(&key.dataset_digest.to_string())),
+        ("multipump", Json::Bool(key.mac.multipump)),
+        ("soft_simd", Json::Bool(key.mac.soft_simd)),
+        // f32 -> f64 -> JSON -> f64 -> f32 round-trips exactly (Rust's
+        // shortest-round-trip float printing), so warm reads restore
+        // bit-identical accuracy/divergence values.
+        ("accuracy", Json::Num(r.accuracy as f64)),
+        ("iss_cycles", r.iss_cycles.map_or(Json::Null, |c| Json::i(c as i64))),
+        ("iss_mem_accesses", r.iss_mem_accesses.map_or(Json::Null, |c| Json::i(c as i64))),
+        ("divergence", r.divergence.map_or(Json::Null, |d| Json::Num(d as f64))),
+        ("audited", r.audited.map_or(Json::Null, |a| Json::i(a as i64))),
+    ])
+}
+
+fn report_from_json(j: &Json) -> Result<EvalReport, SchemaError> {
+    let opt_u64 = |field: &str| {
+        j.opt(field, |v| match v.as_f64() {
+            Some(x) if x >= 0.0 && x.is_finite() && x == x.trunc() => Ok(x as u64),
+            _ => Err(SchemaError {
+                field: field.to_string(),
+                msg: "expected a non-negative integer".to_string(),
+            }),
+        })
+    };
+    Ok(EvalReport {
+        accuracy: j.req_f64("accuracy")? as f32,
+        iss_cycles: opt_u64("iss_cycles")?,
+        iss_mem_accesses: opt_u64("iss_mem_accesses")?,
+        divergence: j.opt("divergence", |v| match v.as_f64() {
+            Some(x) if x.is_finite() => Ok(x as f32),
+            _ => Err(SchemaError {
+                field: "divergence".to_string(),
+                msg: "expected a finite number".to_string(),
+            }),
+        })?,
+        audited: opt_u64("audited")?.map(|a| a as u32),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize, backend: &str) -> StoreKey {
+        StoreKey::new(0x1111, 0x2222, n, backend, MacUnitConfig::full()).unwrap()
+    }
+
+    #[test]
+    fn unpinned_backend_is_rejected() {
+        for tag in ["auto", ""] {
+            match StoreKey::new(1, 2, 3, tag, MacUnitConfig::full()) {
+                Err(StoreError::UnpinnedBackend { tag: t }) => assert_eq!(t, tag),
+                other => panic!("expected UnpinnedBackend, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn key_hash_is_component_sensitive() {
+        let base = key(8, "host");
+        assert_ne!(base.hash(), key(9, "host").hash());
+        assert_ne!(base.hash(), key(8, "iss").hash());
+        let mut mac = base.clone();
+        mac.mac = MacUnitConfig::packing_only();
+        assert_ne!(base.hash(), mac.hash());
+        // Stable across calls (the fan-out layout depends on it).
+        assert_eq!(base.hex(), key(8, "host").hex());
+        assert_eq!(base.hex().len(), 16);
+    }
+
+    #[test]
+    fn put_get_round_trips_and_counts() {
+        let dir = std::env::temp_dir().join(format!("mpnn_store_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let k = key(8, "iss");
+        assert!(store.get(&k).is_none());
+        let r = EvalReport {
+            accuracy: 0.8125,
+            iss_cycles: Some(1234),
+            iss_mem_accesses: Some(567),
+            divergence: Some(0.0),
+            audited: None,
+        };
+        store.put(&k, "lenet5", &[8, 4, 4, 2, 8], &r).unwrap();
+        assert_eq!(store.get(&k), Some(r));
+        let entries = store.scan().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].model, "lenet5");
+        assert_eq!(entries[0].bits, vec![8, 4, 4, 2, 8]);
+        assert_eq!(entries[0].report, r);
+        assert_eq!(store.counters(), (1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

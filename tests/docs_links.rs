@@ -91,6 +91,10 @@ fn docs_mention_live_symbols() {
         // search — the guide must say so.
         "--search",
         "eval_len",
+        // The backend-pinning rule extends to the result store: the
+        // guide must keep saying `--store` keys embed the backend tag.
+        "--store",
+        "StoreKey",
     ] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
@@ -145,6 +149,20 @@ fn docs_mention_live_symbols() {
         "--search",
         "--rungs",
         "--eta",
+        // The result-store section must keep naming the key
+        // derivation, the durability policy and the daemon surface.
+        "ResultStore",
+        "StoreKey",
+        "content_fingerprint",
+        "dataset_digest",
+        "store_hits",
+        "quarantine",
+        "STORE_SCHEMA_VERSION",
+        "--store",
+        "mpnn serve",
+        "/eval",
+        "/pareto",
+        "/stats",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
     }
@@ -158,6 +176,7 @@ fn docs_mention_live_symbols() {
         "pub trait PlanObserver",
         "pub struct StepEvent",
         "pub enum Step",
+        "pub fn content_fingerprint",
     ] {
         assert!(plan.contains(sym), "models/plan.rs lost `{sym}` — update the docs");
     }
@@ -224,7 +243,23 @@ fn docs_mention_live_symbols() {
         "pub struct AnalyticEval",
         "pub struct PjrtEval",
         "pub fn sweep_guided",
+        "pub fn attach_store",
     ] {
         assert!(coord.contains(sym), "coordinator lost `{sym}` — update docs/EVALUATORS.md");
+    }
+    // The store/serve symbols the docs name must still exist.
+    let store = fs::read_to_string("rust/src/store/mod.rs").unwrap();
+    for sym in [
+        "pub struct ResultStore",
+        "pub struct StoreKey",
+        "pub enum StoreError",
+        "pub fn dataset_digest",
+        "STORE_SCHEMA_VERSION",
+    ] {
+        assert!(store.contains(sym), "store/mod.rs lost `{sym}` — update the docs");
+    }
+    let serve = fs::read_to_string("rust/src/serve.rs").unwrap();
+    for sym in ["pub struct Server", "/eval", "/pareto", "/stats", "/shutdown"] {
+        assert!(serve.contains(sym), "serve.rs lost `{sym}` — update the docs");
     }
 }

@@ -1,0 +1,308 @@
+//! Content-addressed result store integration tests.
+//!
+//! The store's contract has four load-bearing properties, each pinned
+//! here:
+//!
+//! 1. **Key sensitivity** — flipping any key component (model content,
+//!    bit vector, kernel modes, dataset, sample count, backend tag,
+//!    MAC-unit features) produces a distinct key; nothing aliases.
+//! 2. **Warm re-runs are free and identical** — a second coordinator
+//!    over the same store serves every configuration from disk (zero
+//!    evaluator runs) and reproduces the cold points *exactly*
+//!    (`EvalPoint` equality is field-exact, the same bar the shard
+//!    merger holds results to).
+//! 3. **Corruption is quarantined, never served** — a damaged entry
+//!    surfaces as a typed [`StoreError`] on the strict path, is moved
+//!    aside to `.bad` on the lenient path, and the recomputed result
+//!    matches the original.
+//! 4. **`mpnn serve` round-trips** — a daemon on an ephemeral port
+//!    answers `/eval` (store-deduped on repeat), `/pareto` (front
+//!    matching a local recomputation), `/stats`, and `/shutdown`.
+
+use mpnn::coordinator::{Coordinator, HostEval};
+use mpnn::dse::pareto::pareto_front;
+use mpnn::exp::{EvalBackend, ExpOpts};
+use mpnn::json::Json;
+use mpnn::models::analyze;
+use mpnn::models::format::load_or_fallback;
+use mpnn::models::infer::quantize_model;
+use mpnn::models::plan::content_fingerprint;
+use mpnn::models::sim_exec::modes_for;
+use mpnn::serve::Server;
+use mpnn::sim::MacUnitConfig;
+use mpnn::store::{dataset_digest, ResultStore, StoreError, StoreKey};
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Fresh per-test store directory (removed up front so reruns of a
+/// failed test start clean).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mpnn_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Host-evaluator coordinator over the synthetic lenet5 fallback.
+fn coordinator(seed: u64) -> Coordinator {
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", seed).unwrap();
+    let test = model.test.clone();
+    Coordinator::new(model, Box::new(HostEval { test }), 2).unwrap()
+}
+
+#[test]
+fn key_hash_is_sensitive_to_every_component() {
+    let m = load_or_fallback(Path::new("/nonexistent"), "lenet5", 11).unwrap();
+    let n = analyze(&m.spec).layers.len();
+    let bits = vec![8u32; n];
+    let qm = quantize_model(&m.spec, &m.params, &m.sites, &bits);
+    let fp = content_fingerprint(&qm, &modes_for(&qm));
+    let dd = dataset_digest(&m.test);
+    let full = MacUnitConfig::full();
+    let key = |fp, dd, n_eval, backend: &str, mac| {
+        StoreKey::new(fp, dd, n_eval, backend, mac).unwrap().hash()
+    };
+
+    let mut hashes = HashSet::new();
+    assert!(hashes.insert(key(fp, dd, 8, "host", full)), "baseline");
+
+    // Model content: same architecture and bits, different trained
+    // weights (seed) — must not alias.
+    let m2 = load_or_fallback(Path::new("/nonexistent"), "lenet5", 12).unwrap();
+    let qm2 = quantize_model(&m2.spec, &m2.params, &m2.sites, &bits);
+    let fp2 = content_fingerprint(&qm2, &modes_for(&qm2));
+    assert!(hashes.insert(key(fp2, dd, 8, "host", full)), "model content");
+
+    // Bit vector.
+    let mut bits_b = bits.clone();
+    bits_b[1] = 4;
+    let qmb = quantize_model(&m.spec, &m.params, &m.sites, &bits_b);
+    let fpb = content_fingerprint(&qmb, &modes_for(&qmb));
+    assert!(hashes.insert(key(fpb, dd, 8, "host", full)), "bit vector");
+
+    // Kernel modes: same quantized model, baseline (no custom MAC)
+    // modes instead of the canonical per-width ones.
+    let fpm = content_fingerprint(&qm, &vec![None; n]);
+    assert!(hashes.insert(key(fpm, dd, 8, "host", full)), "kernel modes");
+
+    // Evaluation dataset.
+    let dd2 = dataset_digest(&m2.test);
+    assert!(hashes.insert(key(fp, dd2, 8, "host", full)), "dataset");
+
+    // Sample count, backend tag, MAC-unit features.
+    assert!(hashes.insert(key(fp, dd, 9, "host", full)), "n_eval");
+    assert!(hashes.insert(key(fp, dd, 8, "iss", full)), "backend");
+    assert!(
+        hashes.insert(key(fp, dd, 8, "host", MacUnitConfig::packing_only())),
+        "mac config"
+    );
+    assert_eq!(hashes.len(), 8);
+}
+
+#[test]
+fn warm_rerun_serves_everything_from_the_store_identically() {
+    let dir = tmp_dir("warm");
+    let n = {
+        let m = load_or_fallback(Path::new("/nonexistent"), "lenet5", 21).unwrap();
+        analyze(&m.spec).layers.len()
+    };
+    let mut configs = vec![vec![8u32; n], vec![4u32; n]];
+    let mut mixed = vec![4u32; n];
+    mixed[0] = 8;
+    configs.push(mixed);
+
+    let mut cold = coordinator(21);
+    cold.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let cold_pts: Vec<_> = configs.iter().map(|c| cold.evaluate(c, 8).unwrap()).collect();
+    assert_eq!(cold.metrics.acc_evals.load(Ordering::Relaxed), configs.len() as u64);
+    assert_eq!(cold.store_counters(), Some((0, configs.len() as u64)));
+
+    // A fresh process (fresh coordinator, empty RAM cache) over the
+    // same store: zero evaluator runs, field-exact points.
+    let mut warm = coordinator(21);
+    warm.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let warm_pts: Vec<_> = configs.iter().map(|c| warm.evaluate(c, 8).unwrap()).collect();
+    assert_eq!(warm_pts, cold_pts);
+    assert_eq!(warm.metrics.acc_evals.load(Ordering::Relaxed), 0);
+    assert_eq!(warm.store_counters(), Some((configs.len() as u64, 0)));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_entry_fails_typed_quarantines_and_recomputes() {
+    let dir = tmp_dir("bad");
+    let mut c = coordinator(31);
+    c.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let cfg = vec![8u32; c.analysis.layers.len()];
+    let original = c.evaluate(&cfg, 8).unwrap();
+
+    // Re-derive the entry's key exactly as the coordinator does.
+    let qm = c.quantized(&cfg);
+    let key = StoreKey::new(
+        content_fingerprint(&qm, &modes_for(&qm)),
+        dataset_digest(&c.model.test),
+        8.min(c.model.test.images.len()),
+        "host",
+        MacUnitConfig::full(),
+    )
+    .unwrap();
+    let store = ResultStore::open(&dir).unwrap();
+    let path = store.path_for(&key);
+    assert!(path.exists(), "cold evaluation must have persisted {}", path.display());
+    assert!(store.load(&key).is_ok());
+
+    // Truncated garbage: typed Parse error on the strict path.
+    std::fs::write(&path, "{\"schema\": 1, trunca").unwrap();
+    match store.load(&key) {
+        Err(StoreError::Parse { .. }) => {}
+        other => panic!("expected StoreError::Parse, got {other:?}"),
+    }
+
+    // Wrong schema version: typed Version error (valid JSON, wrong era).
+    std::fs::write(&path, "{\"schema\": 999}").unwrap();
+    match store.load(&key) {
+        Err(StoreError::Version { found: 999, .. }) => {}
+        other => panic!("expected StoreError::Version, got {other:?}"),
+    }
+
+    // Lenient path: miss + quarantine to `.bad`, never a wrong report.
+    assert!(store.get(&key).is_none());
+    assert!(PathBuf::from(format!("{}.bad", path.display())).exists());
+    let (hits, misses, quarantined) = store.counters();
+    assert_eq!((hits, quarantined), (0, 1));
+    assert!(misses >= 1);
+
+    // A fresh coordinator recomputes, repairs the entry, and matches.
+    let mut c2 = coordinator(31);
+    c2.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let recomputed = c2.evaluate(&cfg, 8).unwrap();
+    assert_eq!(recomputed, original);
+    assert_eq!(c2.metrics.acc_evals.load(Ordering::Relaxed), 1);
+    assert!(store.load(&key).is_ok(), "recompute must rewrite a clean entry");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_leftover_tmp_files_are_invisible() {
+    let dir = tmp_dir("tmp");
+    let store = ResultStore::open(&dir).unwrap();
+    // Simulate an interrupted atomic write: temp files (both the real
+    // naming shape and a json-suffixed cousin) in a fan-out directory.
+    let fan = dir.join("ab");
+    std::fs::create_dir_all(&fan).unwrap();
+    std::fs::write(fan.join(".tmp.abcd1234abcd1234.9999"), "{\"schema\": 1, trunc").unwrap();
+    std::fs::write(fan.join(".tmp.abcd1234abcd1234.json"), "{\"schema\": 1}").unwrap();
+    assert_eq!(store.scan().unwrap().len(), 0, "scan must skip temp files");
+
+    // Keyed reads are equally unaffected: a plain miss, no quarantine.
+    let k = StoreKey::new(1, 2, 3, "host", MacUnitConfig::full()).unwrap();
+    assert!(store.get(&k).is_none());
+    assert_eq!(store.counters(), (0, 1, 0));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Minimal blocking HTTP/1.1 client for the serve tests.
+fn http(addr: &SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let payload = resp.split("\r\n\r\n").nth(1).unwrap();
+    (status, Json::parse(payload).unwrap())
+}
+
+#[test]
+fn serve_round_trips_eval_pareto_stats_shutdown() {
+    let dir = tmp_dir("serve");
+    let mut opts = ExpOpts::default();
+    opts.artifacts = PathBuf::from("/nonexistent");
+    opts.backend = EvalBackend::Host;
+    opts.eval_n = 8;
+    opts.eval_workers = 2;
+    opts.seed = 41;
+    opts.store = Some(dir.clone());
+
+    let server = Arc::new(Server::bind(&opts, "127.0.0.1:0").unwrap());
+    let addr = server.local_addr().unwrap();
+    let s2 = Arc::clone(&server);
+    let daemon = std::thread::spawn(move || s2.run().unwrap());
+
+    let m = load_or_fallback(Path::new("/nonexistent"), "lenet5", opts.seed).unwrap();
+    let n = analyze(&m.spec).layers.len();
+    let mut mixed = vec![4u32; n];
+    mixed[0] = 8;
+    let arr = |b: &[u32]| {
+        format!("[{}]", b.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","))
+    };
+
+    // First /eval runs the backend; the identical repeat is served warm.
+    let req = format!(r#"{{"model":"lenet5","bits":{},"n_eval":8}}"#, arr(&mixed));
+    let (st, first) = http(&addr, "POST", "/eval", &req);
+    assert_eq!(st, 200, "{first:?}");
+    assert_eq!(first.req_bool("cached").unwrap(), false);
+    let (st, second) = http(&addr, "POST", "/eval", &req);
+    assert_eq!(st, 200);
+    assert!(second.req_bool("cached").unwrap(), "repeat must be cache/store-served");
+    assert_eq!(second.get("point"), first.get("point"));
+
+    // A second configuration so the front is over two points.
+    let all8 = vec![8u32; n];
+    let req8 = format!(r#"{{"model":"lenet5","bits":{},"n_eval":8}}"#, arr(&all8));
+    assert_eq!(http(&addr, "POST", "/eval", &req8).0, 200);
+
+    // Malformed requests are 400s, not daemon deaths.
+    let (st, err) = http(&addr, "POST", "/eval", r#"{"model":"nope","bits":[8]}"#);
+    assert_eq!(st, 400);
+    assert!(err.req_str("error").unwrap().contains("unknown model"));
+    assert_eq!(http(&addr, "GET", "/nowhere", "").0, 404);
+
+    // /pareto: points from the store, front matching a local
+    // recomputation over the same reports.
+    let (st, pj) = http(&addr, "GET", "/pareto?model=lenet5", "");
+    assert_eq!(st, 200, "{pj:?}");
+    let points = pj.req_arr("points").unwrap();
+    assert_eq!(points.len(), 2);
+    let mut local = coordinator(opts.seed);
+    local.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let local_pts: Vec<_> = points
+        .iter()
+        .map(|p| {
+            let bits: Vec<u32> =
+                p.req_arr("bits").unwrap().iter().map(|b| b.as_f64().unwrap() as u32).collect();
+            local.evaluate(&bits, 8).unwrap()
+        })
+        .collect();
+    assert_eq!(local.metrics.acc_evals.load(Ordering::Relaxed), 0, "store must be warm");
+    let want: Vec<i64> =
+        pareto_front(&local_pts, |p| p.mac_instructions).iter().map(|&i| i as i64).collect();
+    let got: Vec<i64> =
+        pj.req_arr("front").unwrap().iter().map(|f| f.as_i64().unwrap()).collect();
+    assert_eq!(got, want);
+
+    // /stats reflects the traffic; /shutdown drains the workers.
+    let (st, stats) = http(&addr, "GET", "/stats", "");
+    assert_eq!(st, 200);
+    assert!(stats.req_u64("requests").unwrap() >= 6);
+    assert_eq!(stats.get("store").unwrap().req_u64("entries").unwrap(), 2);
+    assert_eq!(stats.req_str("evaluator").unwrap(), "host");
+
+    let (st, bye) = http(&addr, "POST", "/shutdown", "");
+    assert_eq!(st, 200);
+    assert!(bye.req_bool("ok").unwrap());
+    daemon.join().unwrap();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
