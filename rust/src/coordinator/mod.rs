@@ -52,8 +52,9 @@
 //! dominated — same points, fewer evaluations (see
 //! [`crate::dse::search`]).
 
-use crate::dse::cycles::CycleModel;
+use crate::dse::cycles::{ClusterCost, CycleModel};
 use crate::dse::{total_mac_instructions, Config, EvalPoint};
+use crate::sim::cluster::ClusterConfig;
 use crate::ensure;
 use crate::error::{Error, Result};
 use crate::models::format::LoadedModel;
@@ -482,6 +483,10 @@ pub struct Coordinator {
     /// Persistent content-addressed result store
     /// ([`Coordinator::attach_store`]); `None` = RAM-cache only.
     store: Option<StoreBinding>,
+    /// Cluster the cost composition schedules over
+    /// ([`Coordinator::set_cluster`]; single-core by default — the
+    /// degenerate cluster leaves every cost path untouched).
+    cluster: ClusterConfig,
     /// Worker threads for the sweep.
     pub workers: usize,
     /// Bounded-queue capacity (backpressure).
@@ -540,10 +545,40 @@ impl Coordinator {
             evaluator,
             cache: Mutex::new(HashMap::new()),
             store: None,
+            cluster: ClusterConfig::single(),
             workers,
             queue_cap: 64,
             metrics: Metrics::default(),
         })
+    }
+
+    /// Schedule all cost composition over an N-core cluster
+    /// ([`crate::sim::cluster`]): [`Coordinator::compose_point`] and
+    /// the guided-search pricing switch to the cluster critical path,
+    /// and the store keys carry the cores axis. Must be called before
+    /// [`Coordinator::attach_store`] — the binding pins the MAC/cluster
+    /// identity at attach time, and re-keying a live store binding
+    /// would silently alias entries across machine shapes. `cores = 1`
+    /// is the exact pre-cluster behaviour.
+    pub fn set_cluster(&mut self, cores: usize) -> Result<()> {
+        ensure!(
+            self.store.is_none(),
+            "set_cluster must run before attach_store (store keys pin the cores axis)"
+        );
+        self.cluster = ClusterConfig::new(cores);
+        Ok(())
+    }
+
+    /// The cluster the cost composition is scheduled over.
+    pub fn cluster(&self) -> ClusterConfig {
+        self.cluster
+    }
+
+    /// Cluster-scheduled cost of one configuration — the per-core
+    /// busy/stall/utilization accounting behind the sweep summaries.
+    /// Well-defined for any cluster, including the single-core one.
+    pub fn cluster_cost(&self, cfg: &Config) -> ClusterCost {
+        self.cycle_model.cluster_config_total(cfg, &self.cluster)
     }
 
     /// Attach a persistent content-addressed result store: every
@@ -556,15 +591,19 @@ impl Coordinator {
     /// the same bypass that keeps them out of the RAM report cache.
     pub fn attach_store(&mut self, store: ResultStore) -> Result<()> {
         let backend = self.evaluator.name();
+        // The pinned machine identity: the backend's MAC features plus
+        // the coordinator's cluster axis — a cores=4 sweep must never
+        // alias a cores=1 entry (the composed cost fields differ).
+        let mac = self.evaluator.mac_config().with_cores(self.cluster.cores);
         // Validate the tag eagerly (a dummy fingerprint is fine — only
         // the backend string is checked) so a misconfigured attach
         // fails at setup, not mid-sweep.
-        StoreKey::new(0, 0, 1, backend, self.evaluator.mac_config())?;
+        StoreKey::new(0, 0, 1, backend, mac)?;
         self.store = Some(StoreBinding {
             store,
             dataset_digest: crate::store::dataset_digest(&self.model.test),
             backend,
-            mac: self.evaluator.mac_config(),
+            mac,
         });
         Ok(())
     }
@@ -683,7 +722,16 @@ impl Coordinator {
     /// consumers that read reports straight out of the result store
     /// (`mpnn serve`'s Pareto queries).
     pub fn compose_point(&self, cfg: &Config, report: &EvalReport) -> EvalPoint {
-        let cost = self.cycle_model.config_total(cfg);
+        // The single-core branch goes through the original flat
+        // composition, not the degenerate cluster schedule — same
+        // integers either way (tested), but the byte-identity contract
+        // for `--cores 1` rests on the structural guarantee, not the
+        // arithmetic one.
+        let cost = if self.cluster.is_single() {
+            self.cycle_model.config_total(cfg)
+        } else {
+            self.cycle_model.cluster_config_total(cfg, &self.cluster).cost
+        };
         EvalPoint {
             config: cfg.clone(),
             accuracy: report.accuracy,
@@ -713,7 +761,23 @@ impl Coordinator {
                 s.spawn(|| loop {
                     let job = job_rx.lock().unwrap().recv();
                     let Ok((i, cfg)) = job else { break };
-                    match self.evaluate(&cfg, n_eval) {
+                    // A panicking evaluator must become a typed error on
+                    // the first-error channel, not a scope-level abort:
+                    // an uncaught worker panic would re-raise at scope
+                    // exit and take the whole sweep (and, under `serve`,
+                    // the daemon) down with it.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || self.evaluate(&cfg, n_eval),
+                    ))
+                    .unwrap_or_else(|payload| {
+                        let what = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        Err(Error::msg(format!("evaluator worker panicked: {what}")))
+                    });
+                    match outcome {
                         Ok(p) => results.lock().unwrap()[i] = Some(p),
                         Err(e) => {
                             let mut fe = first_err.lock().unwrap();
@@ -725,12 +789,16 @@ impl Coordinator {
                 });
             }
             // Producer: the bounded send blocks when workers fall behind
-            // (the backpressure the architecture calls for).
+            // (the backpressure the architecture calls for). A closed
+            // channel (all workers gone) just ends production — the
+            // first-error channel reports what killed them.
             for (i, cfg) in configs.iter().enumerate() {
                 if first_err.lock().unwrap().is_some() {
                     break;
                 }
-                job_tx.send((i, cfg.clone())).expect("workers alive");
+                if job_tx.send((i, cfg.clone())).is_err() {
+                    break;
+                }
             }
             drop(job_tx);
         });
@@ -738,7 +806,19 @@ impl Coordinator {
         if let Some(e) = first_err.into_inner().unwrap() {
             return Err(e);
         }
-        Ok(results.into_inner().unwrap().into_iter().map(|p| p.unwrap()).collect())
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                p.ok_or_else(|| {
+                    Error::msg(format!(
+                        "sweep config {i} produced no result (evaluator worker died)"
+                    ))
+                })
+            })
+            .collect()
     }
 
     /// Cache size (distinct configurations evaluated).
@@ -792,7 +872,15 @@ impl Coordinator {
         let costs: Vec<crate::dse::search::CostVec> = configs
             .iter()
             .map(|cfg| {
-                let c = self.cycle_model.config_total(cfg);
+                // Price with the same composition `compose_point` uses:
+                // under a cluster the pruning bounds must rank by the
+                // cluster critical path, or the search would prune
+                // against costs the returned points don't carry.
+                let c = if self.cluster.is_single() {
+                    self.cycle_model.config_total(cfg)
+                } else {
+                    self.cycle_model.cluster_config_total(cfg, &self.cluster).cost
+                };
                 crate::dse::search::CostVec {
                     cycles: c.cycles,
                     mac: total_mac_instructions(&self.analysis, cfg),
@@ -848,6 +936,44 @@ mod tests {
         // Cost ordering: 2-bit config must be cheapest.
         assert!(pts[2].cycles < pts[0].cycles);
         assert!(pts[2].mac_instructions < pts[0].mac_instructions);
+    }
+
+    /// Backend that panics on every evaluation — the regression fixture
+    /// for the worker-pool panic path.
+    struct PanickingEval {
+        test: Dataset,
+    }
+
+    impl AccuracyEval for PanickingEval {
+        fn evaluate(&self, _qm: &QModel, _n: usize) -> Result<EvalReport> {
+            panic!("deliberate test panic");
+        }
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+        fn eval_len(&self) -> usize {
+            self.test.images.len()
+        }
+    }
+
+    #[test]
+    fn panicking_evaluator_yields_typed_error_not_abort() {
+        // Regression: a panic inside an evaluator worker used to
+        // re-raise at thread-scope exit (or leave a `None` slot for the
+        // final `unwrap()`), aborting the whole sweep. It must surface
+        // as an ordinary first-error-channel `Err` instead.
+        let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", 11).unwrap();
+        let test = model.test.clone();
+        let c = Coordinator::new(model, Box::new(PanickingEval { test }), 2).unwrap();
+        let n = crate::models::analyze(&c.model.spec).layers.len();
+        let err = c.run_sweep(&[vec![8; n], vec![4; n], vec![2; n]], 8).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("panicked"), "unexpected error text: {msg}");
+        assert!(msg.contains("deliberate test panic"), "panic payload lost: {msg}");
+        // The coordinator instance survives: the next sweep fails the
+        // same typed way instead of tripping over poisoned state.
+        let err2 = c.run_sweep(&[vec![8; n]], 8).unwrap_err();
+        assert!(format!("{err2}").contains("panicked"), "{err2}");
     }
 
     #[test]

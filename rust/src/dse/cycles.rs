@@ -33,6 +33,7 @@ use crate::models::{ModelAnalysis, QKind, QLayerInfo};
 use crate::nn::pack::{pack_conv, pack_dense, pack_depthwise};
 use crate::nn::quant::Requant;
 use crate::rng::Rng;
+use crate::sim::cluster::{split_layer, ClusterConfig, ClusterPerf};
 use crate::sim::session::{CostKey, SimSession};
 use crate::sim::{MacUnitConfig, PerfCounters};
 use std::sync::atomic::Ordering;
@@ -275,6 +276,17 @@ pub fn measure_layer_backend(
     Ok(LayerCost::from_perf(&measure_spec_perf(&spec, mode, mac, seed, backend)?))
 }
 
+/// Parallel units of a layer — the outermost dependence-free kernel
+/// loop the cluster scheduler ([`crate::sim::cluster`]) splits across
+/// cores: output channels for conv/dense layers, channels for
+/// depthwise (each channel's spatial filter is independent).
+pub fn layer_units(info: &QLayerInfo) -> usize {
+    match info.kind {
+        QKind::Conv | QKind::Dense => info.out_shape[2].max(1),
+        QKind::Depthwise => info.in_shape[2].max(1),
+    }
+}
+
 /// The per-model cycle table: baseline + one entry per mode per layer.
 #[derive(Debug, Clone)]
 pub struct CycleModel {
@@ -282,6 +294,23 @@ pub struct CycleModel {
     pub baseline: Vec<LayerCost>,
     /// Extended-kernel cost per layer for widths 8 / 4 / 2.
     pub modes: Vec<[LayerCost; 3]>,
+    /// Parallel units per layer ([`layer_units`]) — recorded at build
+    /// so cluster totals compose from the measured table without
+    /// re-touching the model analysis.
+    pub units: Vec<usize>,
+}
+
+/// Cluster-scheduled total of a configuration
+/// ([`CycleModel::cluster_config_total`]).
+#[derive(Debug, Clone)]
+pub struct ClusterCost {
+    /// Composed cost: `cycles` is the cluster critical path (per-layer
+    /// barrier sum, contention stalls included);
+    /// `mem_accesses`/`instret`/`macs` are the total work, which the
+    /// split conserves.
+    pub cost: LayerCost,
+    /// Per-core busy/stall accounting for the whole run.
+    pub perf: ClusterPerf,
 }
 
 fn width_index(bits: u32) -> usize {
@@ -330,7 +359,8 @@ impl CycleModel {
             baseline.push(measured[i * 4]);
             modes.push([measured[i * 4 + 1], measured[i * 4 + 2], measured[i * 4 + 3]]);
         }
-        Ok(CycleModel { baseline, modes })
+        let units = analysis.layers.iter().map(layer_units).collect();
+        Ok(CycleModel { baseline, modes, units })
     }
 
     /// Total baseline cost.
@@ -355,6 +385,44 @@ impl CycleModel {
     /// End-to-end speedup of a configuration over the baseline.
     pub fn speedup(&self, cfg: &[u32]) -> f64 {
         self.baseline_total().cycles as f64 / self.config_total(cfg).cycles as f64
+    }
+
+    /// Total cost of a configuration scheduled over an N-core cluster:
+    /// every layer's measured single-core cost splits along its
+    /// parallel units ([`layer_units`]), each active core is charged
+    /// banked-TCDM contention stalls, and layers synchronise at
+    /// barriers (see [`crate::sim::cluster`]). On the single-core
+    /// cluster the composed `cost` equals [`CycleModel::config_total`]
+    /// **exactly** — same integers, no approximation — which is what
+    /// keeps `--cores 1` sweep outputs byte-identical.
+    pub fn cluster_config_total(&self, cfg: &[u32], cluster: &ClusterConfig) -> ClusterCost {
+        assert_eq!(cfg.len(), self.modes.len());
+        let mut perf = ClusterPerf::new(*cluster);
+        let mut total = LayerCost::default();
+        for (i, &b) in cfg.iter().enumerate() {
+            let c = self.modes[i][width_index(b)];
+            perf.add_layer(&split_layer(c.cycles, c.mem_accesses, self.units[i], cluster));
+            total.mem_accesses += c.mem_accesses;
+            total.instret += c.instret;
+            total.macs += c.macs;
+        }
+        total.cycles = perf.cycles;
+        ClusterCost { cost: total, perf }
+    }
+
+    /// [`CycleModel::cluster_config_total`] for the scalar baseline
+    /// kernels (the Fig.-8 denominators under cluster scaling).
+    pub fn cluster_baseline_total(&self, cluster: &ClusterConfig) -> ClusterCost {
+        let mut perf = ClusterPerf::new(*cluster);
+        let mut total = LayerCost::default();
+        for (i, c) in self.baseline.iter().enumerate() {
+            perf.add_layer(&split_layer(c.cycles, c.mem_accesses, self.units[i], cluster));
+            total.mem_accesses += c.mem_accesses;
+            total.instret += c.instret;
+            total.macs += c.macs;
+        }
+        total.cycles = perf.cycles;
+        ClusterCost { cost: total, perf }
     }
 }
 
@@ -383,6 +451,64 @@ mod tests {
         // so the packed lanes over-count (bounded by the padding factor).
         assert!(all2.macs >= base.macs);
         assert!(all2.macs < 4 * base.macs, "{} vs {}", all2.macs, base.macs);
+    }
+
+    #[test]
+    fn cluster_single_core_total_is_bit_identical() {
+        // The cores=1 schedule must be the *same integers* as the flat
+        // composition — the invariant behind byte-identical `--cores 1`
+        // sweep outputs.
+        let a = analyze(&zoo::lenet5());
+        let cm = CycleModel::build(&a, MacUnitConfig::full(), 42).unwrap();
+        let n = a.layers.len();
+        let single = ClusterConfig::single();
+        for cfg in [vec![8; n], vec![4; n], vec![2; n]] {
+            let flat = cm.config_total(&cfg);
+            let clu = cm.cluster_config_total(&cfg, &single);
+            assert_eq!(clu.cost.cycles, flat.cycles);
+            assert_eq!(clu.cost.mem_accesses, flat.mem_accesses);
+            assert_eq!(clu.cost.instret, flat.instret);
+            assert_eq!(clu.cost.macs, flat.macs);
+            assert_eq!(clu.perf.total_bank_stalls(), 0);
+            assert_eq!(clu.perf.utilization(), vec![1.0]);
+        }
+        let base = cm.baseline_total();
+        let cbase = cm.cluster_baseline_total(&single);
+        assert_eq!(cbase.cost.cycles, base.cycles);
+        assert_eq!(cbase.cost.mem_accesses, base.mem_accesses);
+    }
+
+    #[test]
+    fn cluster_scaling_shrinks_cycles_and_conserves_work() {
+        let a = analyze(&zoo::lenet5());
+        let cm = CycleModel::build(&a, MacUnitConfig::full(), 42).unwrap();
+        let n = a.layers.len();
+        for cfg in [vec![8; n], vec![2; n]] {
+            let flat = cm.config_total(&cfg);
+            for cores in [2usize, 4, 8] {
+                let clu = cm.cluster_config_total(&cfg, &ClusterConfig::new(cores));
+                // Cycles never regress vs the single core, even with
+                // contention charged.
+                assert!(
+                    clu.cost.cycles <= flat.cycles,
+                    "cores {cores}: {} > {}",
+                    clu.cost.cycles,
+                    flat.cycles
+                );
+                // The split conserves work: accesses/instret/macs are
+                // totals, not critical-path quantities.
+                assert_eq!(clu.cost.mem_accesses, flat.mem_accesses);
+                assert_eq!(clu.cost.instret, flat.instret);
+                assert_eq!(clu.cost.macs, flat.macs);
+                // Contention is being accounted (lenet5 layers have
+                // enough channels to keep ≥ 2 cores active).
+                assert!(clu.perf.total_bank_stalls() > 0, "cores {cores}");
+                let u = clu.perf.utilization();
+                assert_eq!(u.len(), cores);
+                assert!(u.iter().all(|&x| (0.0..=1.0 + 1e-12).contains(&x)));
+                assert!(u[0] > 0.0, "core 0 always owns the largest share");
+            }
+        }
     }
 
     #[test]

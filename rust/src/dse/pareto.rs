@@ -26,11 +26,16 @@ use super::EvalPoint;
 ///   appear (the others are dominated).
 pub fn pareto_front(points: &[EvalPoint], cost: impl Fn(&EvalPoint) -> u64) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
-    // Sort by cost ascending, accuracy descending.
+    // Sort by cost ascending, accuracy descending. `total_cmp`, not
+    // `partial_cmp(..).unwrap()`: a NaN accuracy (e.g. a 0-image eval
+    // dividing 0/0) must not panic the whole sweep. Under the IEEE
+    // total order NaN sorts above every real, so NaN points land first
+    // within their cost bucket — and the selection loop below drops
+    // them anyway, since `NaN > best_acc` is always false.
     idx.sort_by(|&a, &b| {
         cost(&points[a])
             .cmp(&cost(&points[b]))
-            .then(points[b].accuracy.partial_cmp(&points[a].accuracy).unwrap())
+            .then(points[b].accuracy.total_cmp(&points[a].accuracy))
     });
     let mut front = Vec::new();
     let mut best_acc = f32::NEG_INFINITY;
@@ -173,6 +178,25 @@ mod tests {
         assert_eq!(pareto_front(&pts, |e| e.cycles), vec![0, 2]);
         assert_eq!(pareto_front(&pts, |e| e.mem_accesses), vec![1, 2]);
         assert_eq!(oracle(&pts, |e| e.mem_accesses), vec![1, 2]);
+    }
+
+    #[test]
+    fn nan_accuracy_does_not_panic_and_never_joins_the_front() {
+        // Regression: the sort comparator used to be
+        // `partial_cmp(..).unwrap()`, which panics the moment a NaN
+        // accuracy enters the space (e.g. an evaluator fed 0 images
+        // reporting 0/0). NaN points must be ignored, not fatal.
+        let pts = vec![p(0.9, 100), p(f32::NAN, 50), p(0.8, 50), p(f32::NAN, 10)];
+        let front = pareto_front(&pts, |e| e.cycles);
+        assert_eq!(front, vec![2, 0], "NaN points must not appear on the front");
+
+        // All-NaN space: empty front, still no panic.
+        let pts = vec![p(f32::NAN, 1), p(f32::NAN, 2)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), Vec::<usize>::new());
+
+        // NaN tied on cost with a real point must not shadow it.
+        let pts = vec![p(f32::NAN, 100), p(0.5, 100)];
+        assert_eq!(pareto_front(&pts, |e| e.cycles), vec![1]);
     }
 
     #[test]

@@ -306,6 +306,11 @@ pub struct ShardArtifact {
     pub rungs: u64,
     /// Halving factor of a guided sweep (0 when exhaustive).
     pub eta: u64,
+    /// Cluster core count the points were priced for (1 = single-core,
+    /// the default machine). Part of the sweep identity: cycle totals
+    /// from different cluster geometries are not comparable, so shards
+    /// priced for different `--cores` never merge.
+    pub cores: u64,
     /// `(global enumeration index, evaluated point)` — exactly the
     /// configs this shard owns (exhaustive) or the owned configs its
     /// guided search fully evaluated, in enumeration order.
@@ -408,6 +413,11 @@ impl ShardArtifact {
             fields.push(("rungs", Json::i(self.rungs as i64)));
             fields.push(("eta", Json::i(self.eta as i64)));
         }
+        // Like the guided knobs: emitted only off the default, so
+        // single-core artifacts stay byte-identical to pre-cluster ones.
+        if self.cores > 1 {
+            fields.push(("cores", Json::i(self.cores as i64)));
+        }
         fields.extend(vec![
             ("strategy", Json::s(self.spec.strategy.name())),
             ("shard_index", Json::i(self.spec.index as i64)),
@@ -502,6 +512,17 @@ impl ShardArtifact {
             search,
             rungs: guided_knob("rungs")?,
             eta: guided_knob("eta")?,
+            // Absent in pre-cluster (and all single-core) artifacts:
+            // those were priced for one core by definition.
+            cores: j
+                .opt("cores", |v| match v.as_f64() {
+                    Some(x) if x.is_finite() && x >= 1.0 && x == x.trunc() => Ok(x as u64),
+                    _ => Err(SchemaError {
+                        field: "cores".to_string(),
+                        msg: "expected a positive integer".to_string(),
+                    }),
+                })?
+                .unwrap_or(1),
             points,
             stats: stats_from_json(j.req("stats")?)?,
         })
@@ -555,6 +576,9 @@ pub struct MergedSweep {
     pub baseline_instrs: u64,
     /// Search strategy the shards ran under ([`merge`] refuses to mix).
     pub search: SearchStrategy,
+    /// Cluster core count the shards priced cycles for (1 =
+    /// single-core; [`merge`] refuses to mix geometries).
+    pub cores: u64,
     /// Global enumeration index of each entry in `points` (same order).
     /// Exhaustive merges always cover `0..total_configs`; guided merges
     /// carry only the configs the search fully evaluated.
@@ -621,6 +645,7 @@ fn same_run(a: &ShardArtifact, b: &ShardArtifact) -> bool {
         && a.search == b.search
         && a.rungs == b.rungs
         && a.eta == b.eta
+        && a.cores == b.cores
         && a.total_configs == b.total_configs
         && a.seed == b.seed
         && a.eval_n == b.eval_n
@@ -709,6 +734,11 @@ pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
             };
             return Err(incompatible("search", show(first), show(a)));
         }
+        // Cycle totals priced for different cluster geometries are not
+        // comparable — a mixed merge would silently blend machines.
+        if a.cores != first.cores {
+            return Err(incompatible("cores", first.cores, a.cores));
+        }
         if a.seed != first.seed {
             return Err(incompatible("seed", first.seed, a.seed));
         }
@@ -787,6 +817,7 @@ pub fn merge(artifacts: &[ShardArtifact]) -> Result<MergedSweep, ShardError> {
         float_acc: first.float_acc,
         baseline_instrs: first.baseline_instrs,
         search: first.search,
+        cores: first.cores,
         indices,
         points,
         front,
@@ -829,6 +860,7 @@ mod tests {
             search: SearchStrategy::Exhaustive,
             rungs: 0,
             eta: 0,
+            cores: 1,
             points,
             stats: SessionSnapshot { mem_reuses: 1, mem_allocs: 2, runs: 3, ..Default::default() },
         }
@@ -984,6 +1016,38 @@ mod tests {
             merge(&[a0, a1, evil]),
             Err(ShardError::Conflict { field: "cycles", .. })
         ));
+    }
+
+    #[test]
+    fn cores_joins_the_sweep_identity() {
+        // Single-core artifacts serialise without the field (byte
+        // compatibility with pre-cluster files) and read back as 1.
+        let spec = ShardSpec::whole();
+        let single = artifact(spec, 1, vec![(0, point(&[8], 0.5, 100))]);
+        let text = single.to_json().to_string();
+        assert!(!text.contains("\"cores\""));
+        assert_eq!(ShardArtifact::from_str(&text).unwrap().cores, 1);
+
+        // A cluster artifact round-trips its core count bit-exactly.
+        let mut clustered = single.clone();
+        clustered.cores = 4;
+        let text4 = clustered.to_json().to_string();
+        assert!(text4.contains("\"cores\":4"));
+        assert_eq!(ShardArtifact::from_str(&text4).unwrap(), clustered);
+
+        // Shards priced for different cluster geometries refuse to
+        // merge: their cycle totals describe different machines.
+        let s0 = ShardSpec::new(0, 2, ShardStrategy::Range).unwrap();
+        let s1 = ShardSpec::new(1, 2, ShardStrategy::Range).unwrap();
+        let a0 = artifact(s0, 2, vec![(0, point(&[8, 8], 0.9, 100))]);
+        let mut a1 = artifact(s1, 2, vec![(1, point(&[8, 4], 0.8, 50))]);
+        a1.cores = 4;
+        match merge(&[a0, a1]) {
+            Err(ShardError::Incompatible { field: "cores", a, b }) => {
+                assert_eq!((a.as_str(), b.as_str()), ("1", "4"));
+            }
+            other => panic!("expected Incompatible(cores), got {other:?}"),
+        }
     }
 
     #[test]

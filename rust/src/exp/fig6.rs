@@ -52,8 +52,65 @@ pub struct Sweep {
     pub evaluator: &'static str,
     /// Search strategy that produced the points.
     pub search: SearchStrategy,
+    /// Cluster-execution summary when the sweep priced for a multi-core
+    /// cluster (`--cores` > 1); `None` on the single-core machine, which
+    /// keeps the serialised sweep byte-identical to pre-cluster output.
+    pub cluster: Option<ClusterReport>,
     /// The coordinator (kept for downstream reuse, e.g. Fig. 8).
     pub coordinator: Coordinator,
+}
+
+/// How the cluster executed the sweep's baseline (all-8-bit)
+/// configuration: the headline scaling numbers the `cluster` JSON block
+/// and the stderr ledger report.
+pub struct ClusterReport {
+    /// Cores the sweep priced for.
+    pub cores: usize,
+    /// Shared TCDM banks.
+    pub banks: usize,
+    /// Single-core baseline cycles (the denominator of the scaling).
+    pub cycles_single: u64,
+    /// Cluster baseline cycles (sum of per-layer barriers).
+    pub cycles: u64,
+    /// Per-core utilization over the critical path, in `[0, 1]`.
+    pub utilization: Vec<f64>,
+    /// Bank-conflict stall cycles summed over cores and layers.
+    pub bank_stalls: u64,
+}
+
+/// The sweep's cluster summary: the baseline (all-8-bit) model priced
+/// through the cluster overlay. `None` on the single-core machine.
+fn cluster_report(coordinator: &Coordinator) -> Option<ClusterReport> {
+    let cluster = coordinator.cluster();
+    if cluster.is_single() {
+        return None;
+    }
+    let clustered = coordinator.cycle_model.cluster_baseline_total(&cluster);
+    Some(ClusterReport {
+        cores: cluster.cores,
+        banks: cluster.banks,
+        cycles_single: coordinator.cycle_model.baseline_total().cycles,
+        cycles: clustered.cost.cycles,
+        utilization: clustered.perf.utilization(),
+        bank_stalls: clustered.perf.total_bank_stalls(),
+    })
+}
+
+/// The stderr cluster ledger (one line per model, grepped by the CI
+/// cluster-smoke job): core count, baseline scaling, stalls and the
+/// per-core utilization vector.
+fn print_cluster_ledger(model: &str, r: &ClusterReport) {
+    eprintln!(
+        "[fig6] cluster ({model}): {} cores / {} banks, baseline {} -> {} cycles \
+         ({:.2}x), {} bank-conflict stalls, utilization [{}]",
+        r.cores,
+        r.banks,
+        r.cycles_single,
+        r.cycles,
+        r.cycles_single as f64 / r.cycles.max(1) as f64,
+        r.bank_stalls,
+        r.utilization.iter().map(|u| format!("{u:.3}")).collect::<Vec<_>>().join(", "),
+    );
 }
 
 impl Sweep {
@@ -103,6 +160,10 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
     let front = pareto_front(&points, |p| p.mac_instructions);
     let baseline_instrs =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
+    let cluster = cluster_report(&coordinator);
+    if let Some(r) = &cluster {
+        print_cluster_ledger(name, r);
+    }
     Ok(Sweep {
         model: name.to_string(),
         float_acc: coordinator.model.float_acc,
@@ -112,6 +173,7 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
         front,
         evaluator: coordinator.evaluator_name(),
         search: opts.search,
+        cluster,
         coordinator,
     })
 }
@@ -147,6 +209,25 @@ pub fn sweep_json(s: &Sweep) -> Json {
         fields.push((
             "indices",
             Json::Arr(s.indices.iter().map(|&i| Json::i(i as i64)).collect()),
+        ));
+    }
+    // Emitted only off the single-core default, like the guided knobs:
+    // a `--cores 1` run writes byte-identical pre-cluster JSON.
+    if let Some(r) = &s.cluster {
+        fields.push(("cores", Json::i(r.cores as i64)));
+        fields.push((
+            "cluster",
+            Json::obj(vec![
+                ("cores", Json::i(r.cores as i64)),
+                ("banks", Json::i(r.banks as i64)),
+                ("baseline_cycles_single", Json::i(r.cycles_single as i64)),
+                ("baseline_cycles", Json::i(r.cycles as i64)),
+                ("bank_conflict_stalls", Json::i(r.bank_stalls as i64)),
+                (
+                    "utilization",
+                    Json::Arr(r.utilization.iter().map(|&u| Json::Num(u)).collect()),
+                ),
+            ]),
         ));
     }
     fields.extend(vec![
@@ -230,6 +311,10 @@ pub fn sweep_shard_resume(
         SearchStrategy::Guided => (opts.rungs as u64, opts.eta as u64),
         SearchStrategy::Exhaustive => (0, 0),
     };
+    // The cluster geometry the points are priced for — part of the
+    // artifact's sweep identity (shards from different `--cores` never
+    // merge or resume into each other).
+    let cores_tag = coordinator.cluster().cores as u64;
 
     let mut done: std::collections::HashSet<usize> = std::collections::HashSet::new();
     if let Some(p) = prior {
@@ -246,10 +331,11 @@ pub fn sweep_shard_resume(
                 && p.float_acc.to_bits() == coordinator.model.float_acc.to_bits()
                 && p.search == opts.search
                 && p.rungs == rungs_tag
-                && p.eta == eta_tag,
+                && p.eta == eta_tag
+                && p.cores == cores_tag,
             "existing shard artifact for `{name}` was produced by a different sweep \
-             (model/shard/seed/budget/eval/evaluator/search mismatch); delete it or change \
-             --shard-out to start a fresh shard run"
+             (model/shard/seed/budget/eval/evaluator/search/cores mismatch); delete it or \
+             change --shard-out to start a fresh shard run"
         );
         for (i, pt) in &p.points {
             crate::ensure!(
@@ -280,6 +366,7 @@ pub fn sweep_shard_resume(
         search: opts.search,
         rungs: rungs_tag,
         eta: eta_tag,
+        cores: cores_tag,
         points,
         stats,
     };
@@ -361,6 +448,14 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
     let merged = merge(arts)?;
     let coordinator = opts.coordinator(&merged.model)?;
     crate::ensure!(
+        coordinator.cluster().cores as u64 == merged.cores,
+        "shard artifacts for `{}` were priced for a {}-core cluster but this merge runs \
+         with --cores {}; pass the shard run's --cores",
+        merged.model,
+        merged.cores,
+        coordinator.cluster().cores,
+    );
+    crate::ensure!(
         coordinator.model.float_acc.to_bits() == merged.float_acc.to_bits(),
         "shard artifacts for `{}` were produced from a different model state \
          (float acc {} vs local {}); check --seed/--artifacts",
@@ -416,6 +511,10 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
         merged.duplicate_points,
         merged.stats.runs,
     );
+    let cluster = cluster_report(&coordinator);
+    if let Some(r) = &cluster {
+        print_cluster_ledger(&merged.model, r);
+    }
     Ok(Sweep {
         model: merged.model,
         float_acc: merged.float_acc,
@@ -425,6 +524,7 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
         front: merged.front,
         evaluator: evaluator_static(&merged.evaluator),
         search: merged.search,
+        cluster,
         coordinator,
     })
 }

@@ -61,9 +61,20 @@ pub struct ModelSelections {
     pub sweep: Sweep,
 }
 
-/// Select under thresholds from an existing sweep.
+/// Select under thresholds from an existing sweep. On a multi-core
+/// sweep (`--cores` > 1) the points' cycle totals were priced through
+/// the cluster overlay, so the baseline is priced the same way — e2e
+/// speedups always compare like machine against like machine. The
+/// per-layer average stays a single-core kernel metric (the paper's
+/// Fig.-8 per-layer claim); cluster scaling applies to both sides of
+/// that ratio and would only add partition-rounding noise.
 pub fn select(sweep: Sweep) -> ModelSelections {
-    let base = sweep.coordinator.cycle_model.baseline_total();
+    let cluster = sweep.coordinator.cluster();
+    let base = if cluster.is_single() {
+        sweep.coordinator.cycle_model.baseline_total()
+    } else {
+        sweep.coordinator.cycle_model.cluster_baseline_total(&cluster).cost
+    };
     let cm = &sweep.coordinator.cycle_model;
     let selections = THRESHOLDS
         .iter()
@@ -167,11 +178,17 @@ pub fn to_json(out: &[ModelSelections]) -> Json {
     Json::Arr(
         out.iter()
             .map(|m| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("model", Json::s(&m.model)),
                     ("float_acc", Json::Num(m.float_acc as f64)),
                     ("baseline_cycles", Json::i(m.baseline_cycles as i64)),
-                    (
+                ];
+                // Conditional like fig6's sweep JSON: single-core
+                // output stays byte-identical to pre-cluster builds.
+                if let Some(r) = &m.sweep.cluster {
+                    fields.push(("cores", Json::i(r.cores as i64)));
+                }
+                fields.push((
                         "selections",
                         Json::Arr(
                             m.selections
@@ -203,8 +220,8 @@ pub fn to_json(out: &[ModelSelections]) -> Json {
                                 })
                                 .collect(),
                         ),
-                    ),
-                ])
+                    ));
+                Json::obj(fields)
             })
             .collect(),
     )

@@ -126,6 +126,13 @@ pub struct ExpOpts {
     pub rungs: usize,
     /// Halving factor for `--search guided` (`--eta`).
     pub eta: usize,
+    /// Cluster core count for the multi-core cost overlay (`--cores`).
+    /// 1 (the default) is the single-core paper configuration and
+    /// reproduces the existing outputs byte-for-byte; N>1 prices every
+    /// configuration through the banked-TCDM cluster model
+    /// (`sim::cluster`) and adds per-core utilization / bank-conflict
+    /// stall reporting to the sweep harnesses.
+    pub cores: usize,
     /// Root of the persistent content-addressed result store
     /// (`--store <dir>`): evaluation reports are looked up before the
     /// backend runs and written back after, so repeated sweeps — and
@@ -156,6 +163,7 @@ impl Default for ExpOpts {
             search: crate::dse::search::SearchStrategy::Exhaustive,
             rungs: 3,
             eta: 2,
+            cores: 1,
             store: None,
             addr: "127.0.0.1:7979".to_string(),
         }
@@ -242,6 +250,9 @@ impl ExpOpts {
         let model = self.load_model(name)?;
         let eval = self.evaluator(&model, 64)?;
         let mut c = Coordinator::new(model, eval, 2)?;
+        // Cluster geometry must be pinned before the store attaches:
+        // the store key carries the cores axis.
+        c.set_cluster(self.cores)?;
         if let Some(dir) = &self.store {
             crate::ensure!(
                 self.backend != EvalBackend::Auto,

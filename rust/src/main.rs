@@ -95,6 +95,18 @@ Result store & serve (see docs/ARCHITECTURE.md § Result store & serve):
                       quarantined to `<entry>.bad` and recomputed.
   --addr <host:port>  (serve) listen address (default 127.0.0.1:7979)
 
+Cluster execution (fig6/fig8; see docs/ARCHITECTURE.md § Cluster
+execution):
+  --cores <n>         Price every configuration through an n-core
+                      cluster with banked-TCDM contention: each layer's
+                      output channels split across cores, per-layer
+                      barrier = slowest core, plus bank-conflict stall
+                      cycles. 1 (the default) is the single-core paper
+                      machine and reproduces existing outputs
+                      byte-for-byte; n>1 adds a `cluster` block
+                      (per-core utilization, bank stalls) to fig6 and
+                      joins the store/shard identity key.
+
 Guided search (fig6/fig8; see docs/ARCHITECTURE.md § Guided search):
   --search <s>        exhaustive | guided (default exhaustive). Guided
                       prunes configs whose analytic cycle lower bound is
@@ -200,6 +212,16 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
                     .next()
                     .ok_or_else(|| mpnn::anyhow!("--addr needs host:port"))?
                     .to_string()
+            }
+            "--cores" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--cores needs a count"))?;
+                let n: usize =
+                    v.parse().map_err(|_| mpnn::anyhow!("--cores: bad count `{v}`"))?;
+                mpnn::ensure!(
+                    (1..=64).contains(&n),
+                    "--cores must be in 1..=64 (got {n})"
+                );
+                opts.cores = n;
             }
             "--rungs" => {
                 let v = it.next().ok_or_else(|| mpnn::anyhow!("--rungs needs a count"))?;

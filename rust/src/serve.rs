@@ -98,12 +98,23 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
+    /// Poison-tolerant lock on the coordinator map. A panicking request
+    /// handler (served as HTTP 500, see [`Server::handle`]) may die
+    /// while holding this mutex; no handler ever leaves the map
+    /// mid-mutation (lookups and whole-entry inserts only), so
+    /// recovering the guard is sound — and the alternative is a
+    /// poisoned `unwrap()` bricking every request for the rest of the
+    /// daemon's lifetime.
+    fn coords_lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Arc<Coordinator>>> {
+        self.coords.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Fetch (or build + cache) the warm coordinator for `model`. The
     /// build runs outside the map lock — it measures the cycle model on
     /// the ISS, and other models' requests shouldn't serialise behind
     /// it; a racing builder of the same model loses its work.
     fn coordinator(&self, model: &str) -> Result<Arc<Coordinator>> {
-        if let Some(c) = self.coords.lock().unwrap().get(model) {
+        if let Some(c) = self.coords_lock().get(model) {
             return Ok(Arc::clone(c));
         }
         crate::ensure!(
@@ -112,7 +123,7 @@ impl Server {
             MODEL_NAMES.join(", ")
         );
         let built = Arc::new(self.opts.coordinator(model)?);
-        let mut map = self.coords.lock().unwrap();
+        let mut map = self.coords_lock();
         let c = map.entry(model.to_string()).or_insert(built);
         Ok(Arc::clone(c))
     }
@@ -130,8 +141,18 @@ impl Server {
                 }
                 match self.listener.accept() {
                     Ok((stream, _)) => {
-                        if let Err(e) = self.handle(stream) {
-                            eprintln!("[serve] connection error: {e}");
+                        // Belt and braces around the per-request
+                        // catch in `handle`: a panic escaping here
+                        // would kill this pool worker and, at scope
+                        // exit, the daemon.
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            self.handle(stream)
+                        })) {
+                            Ok(Ok(())) => {}
+                            Ok(Err(e)) => eprintln!("[serve] connection error: {e}"),
+                            Err(_) => {
+                                eprintln!("[serve] connection handler panicked (recovered)")
+                            }
                         }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -155,19 +176,42 @@ impl Server {
             Some((r, q)) => (r, q),
             None => (path.as_str(), ""),
         };
-        let outcome = match (method.as_str(), route) {
-            ("POST", "/eval") => self.eval(&body).map(|j| (200, j)),
-            ("GET", "/pareto") => self.pareto(query).map(|j| (200, j)),
-            ("GET", "/stats") => Ok((200, self.stats())),
-            (_, "/shutdown") => {
-                self.shutdown.store(true, Ordering::SeqCst);
-                Ok((200, Json::obj(vec![("ok", Json::Bool(true))])))
+        // A panic anywhere in a handler must stay inside this request:
+        // answer a typed HTTP 500 and keep the worker alive. Without
+        // the catch a single panicking request killed the daemon (and,
+        // if it died holding `coords`, poisoned the map for good —
+        // see [`Server::coords_lock`]).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match (method.as_str(), route) {
+                ("POST", "/eval") => self.eval(&body).map(|j| (200, j)),
+                ("GET", "/pareto") => self.pareto(query).map(|j| (200, j)),
+                ("GET", "/stats") => Ok((200, self.stats())),
+                (_, "/shutdown") => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    Ok((200, Json::obj(vec![("ok", Json::Bool(true))])))
+                }
+                // Test-only route: dies while *holding* the coords
+                // lock — the worst-case request the hardening tests
+                // exercise end-to-end (panic + poisoned mutex).
+                #[cfg(test)]
+                ("POST", "/panic") => {
+                    let _guard = self.coords_lock();
+                    panic!("deliberate test panic while holding the coords lock");
+                }
+                _ => Ok((404, Json::obj(vec![("error", Json::s("no such endpoint"))]))),
             }
-            _ => Ok((404, Json::obj(vec![("error", Json::s("no such endpoint"))]))),
-        };
+        }));
         let (status, json) = match outcome {
-            Ok(r) => r,
-            Err(e) => (400, Json::obj(vec![("error", Json::s(&e.to_string()))])),
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => (400, Json::obj(vec![("error", Json::s(&e.to_string()))])),
+            Err(payload) => {
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                (500, Json::obj(vec![("error", Json::s(&format!("internal panic: {what}")))]))
+            }
         };
         write_response(&mut stream, status, &json)
     }
@@ -250,7 +294,7 @@ impl Server {
         let entries = self.store.scan().map(|v| v.len()).unwrap_or(0);
         let (mut hits, mut misses) = (0u64, 0u64);
         let (mut submitted, mut cache_hits, mut acc_evals) = (0u64, 0u64, 0u64);
-        let coords = self.coords.lock().unwrap();
+        let coords = self.coords_lock();
         let warm: Vec<Json> = coords.keys().map(|k| Json::s(k)).collect();
         for c in coords.values() {
             if let Some((h, m)) = c.store_counters() {
@@ -363,6 +407,7 @@ fn write_response(stream: &mut TcpStream, status: u16, json: &Json) -> Result<()
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        500 => "Internal Server Error",
         _ => "Error",
     };
     let head = format!(
@@ -374,6 +419,95 @@ fn write_response(stream: &mut TcpStream, status: u16, json: &Json) -> Result<()
     stream.write_all(body.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// Minimal blocking HTTP/1.1 client (mirrors the integration-test
+    /// client in `tests/store.rs`).
+    fn http(addr: &SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let payload = resp.split("\r\n\r\n").nth(1).unwrap();
+        (status, Json::parse(payload).unwrap())
+    }
+
+    #[test]
+    fn daemon_survives_handler_panic_and_poisoned_lock() {
+        // Regression for the mutex-poisoning brick: a panic inside one
+        // request handler used to (a) kill the accept worker — taking
+        // the whole `parallel_map` pool down at scope exit — and
+        // (b) poison the `coords` lock so even a surviving worker died
+        // on the next `.unwrap()`. The daemon must instead answer a
+        // typed 500 and keep serving.
+        let dir =
+            std::env::temp_dir().join(format!("mpnn_serve_panic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut opts = ExpOpts::default();
+        opts.artifacts = PathBuf::from("/nonexistent");
+        opts.backend = EvalBackend::Host;
+        opts.eval_n = 8;
+        opts.eval_workers = 2;
+        opts.seed = 43;
+        opts.store = Some(dir.clone());
+
+        let server = Arc::new(Server::bind(&opts, "127.0.0.1:0").unwrap());
+        let addr = server.local_addr().unwrap();
+        let s2 = Arc::clone(&server);
+        let daemon = std::thread::spawn(move || s2.run().unwrap());
+
+        // The test-only route dies while *holding* the coords lock —
+        // the worst case: panic and poisoned mutex in one request.
+        let (st, err) = http(&addr, "POST", "/panic", "");
+        assert_eq!(st, 500, "{err:?}");
+        assert!(err.req_str("error").unwrap().contains("internal panic"), "{err:?}");
+
+        // Every endpoint class still answers afterwards: stats (reads
+        // the poisoned map), a real evaluation (builds a coordinator
+        // and inserts into it), and malformed input (400, not death).
+        let (st, stats) = http(&addr, "GET", "/stats", "");
+        assert_eq!(st, 200, "{stats:?}");
+        assert!(stats.req_u64("requests").unwrap() >= 2);
+
+        let n = {
+            let m = crate::models::format::load_or_fallback(
+                std::path::Path::new("/nonexistent"),
+                "lenet5",
+                opts.seed,
+            )
+            .unwrap();
+            crate::models::analyze(&m.spec).layers.len()
+        };
+        let bits = format!("[{}]", vec!["8"; n].join(","));
+        let req = format!(r#"{{"model":"lenet5","bits":{bits},"n_eval":8}}"#);
+        let (st, ev) = http(&addr, "POST", "/eval", &req);
+        assert_eq!(st, 200, "{ev:?}");
+        assert_eq!(http(&addr, "POST", "/eval", "not json").0, 400);
+
+        // A second poisoned request after the map is populated must not
+        // unsettle the warm coordinator either.
+        assert_eq!(http(&addr, "POST", "/panic", "").0, 500);
+        let (st, ev2) = http(&addr, "POST", "/eval", &req);
+        assert_eq!(st, 200, "{ev2:?}");
+        assert!(ev2.req_bool("cached").unwrap(), "warm repeat must be cache-served");
+
+        let (st, bye) = http(&addr, "POST", "/shutdown", "");
+        assert_eq!(st, 200);
+        assert!(bye.req_bool("ok").unwrap());
+        daemon.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 /// CLI entry point for `mpnn serve`: bind, announce, serve until

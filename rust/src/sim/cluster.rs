@@ -1,0 +1,325 @@
+//! Analytic N-core cluster timing model with banked-TCDM contention.
+//!
+//! The paper evaluates its multi-pumped MAC unit on a single in-order
+//! core; the parallel-cluster line of work it cites (3 TOPS/W
+//! PULP-style clusters, PAPERS.md arxiv 2307.01056) runs the same
+//! fine-grain mixed-precision kernels across N cores sharing a
+//! word-interleaved multi-banked TCDM. This module models that scaling
+//! *analytically*, the same trade the crate's analytic execution
+//! backend makes: kernels are measured **once** on the single-core ISS
+//! (the measurement and its [`CostKey`](crate::sim::session::CostKey)
+//! are cluster-independent), and the cluster overlay composes the
+//! measured per-layer cost into an N-core schedule:
+//!
+//! * the **scheduler** ([`partition`]) splits a layer's parallel units
+//!   (output channels for conv/dense, channels for depthwise — the
+//!   outermost, dependence-free kernel loop) contiguously across cores;
+//!   the first `units % cores` cores take one extra unit. The partition
+//!   is a pure function of `(units, cores)` — deterministic across
+//!   worker counts, machines and runs;
+//! * each core's **work share** scales the measured layer cost by its
+//!   unit fraction (floor arithmetic — integers end to end);
+//! * **banked contention** charges each active core a stall penalty for
+//!   its TCDM traffic ([`bank_conflict_stalls`]): with `A` active cores
+//!   on `B` banks, a word-interleaved access collides with one of the
+//!   `A-1` rivals with probability `(A-1)/B`, so `accesses·(A-1)/B`
+//!   cycles are lost re-arbitrating. `banks = 2·cores` (the PULP
+//!   banking factor [`BANKING_FACTOR`]) keeps that well under the
+//!   parallel win;
+//! * layers synchronise at a **barrier**: a layer costs the slowest
+//!   core's busy time (work + stalls), and the model run is the sum of
+//!   layer barriers ([`ClusterPerf::add_layer`]).
+//!
+//! With `cores = 1` every path degenerates structurally: one part
+//! holding all units, a work share of exactly the measured cost, zero
+//! stalls (`active ≤ 1`), and a barrier equal to the single-core
+//! cycles — which is what lets the `--cores 1` sweep outputs stay
+//! byte-identical to the pre-cluster pipeline.
+//!
+//! Contention stalls deliberately live here, in [`CoreSlice`] /
+//! [`ClusterPerf`], and **not** in
+//! [`PerfCounters`](crate::sim::perf::PerfCounters): the per-core
+//! counters are produced identically by the ISS and the analytic
+//! replay path and are bit-compared by the audit machinery — a
+//! cluster-level penalty has no single-core ground truth to audit
+//! against, so it stays in the cluster layer's own accounting.
+
+use std::ops::Range;
+
+/// TCDM banks per core — the PULP-cluster banking factor (2× banking
+/// keeps the uniform-traffic collision probability below 1/2 at full
+/// occupancy).
+pub const BANKING_FACTOR: usize = 2;
+
+/// Cluster shape: core count and shared-TCDM bank count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ClusterConfig {
+    /// Replicated cores (≥ 1; 1 = the plain single-core pipeline).
+    pub cores: usize,
+    /// Word-interleaved TCDM banks shared by the cores.
+    pub banks: usize,
+}
+
+impl ClusterConfig {
+    /// Cluster of `cores` with the default [`BANKING_FACTOR`]× banks.
+    pub fn new(cores: usize) -> Self {
+        let cores = cores.max(1);
+        ClusterConfig { cores, banks: cores * BANKING_FACTOR }
+    }
+
+    /// The single-core degenerate cluster.
+    pub fn single() -> Self {
+        Self::new(1)
+    }
+
+    /// Whether this is the single-core degenerate configuration (the
+    /// cluster overlay must stay entirely out of the cost path then).
+    pub fn is_single(&self) -> bool {
+        self.cores <= 1
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// Deterministic contiguous partition of `items` work units over
+/// `cores` parts: part `i` is a `Range` into `0..items`, the first
+/// `items % cores` parts take one extra unit, and the parts cover the
+/// item space exactly, in order, without overlap. A pure function of
+/// `(items, cores)` — the scheduler contract the shard/merge machinery
+/// relies on (same split on every machine, worker count and run).
+pub fn partition(items: usize, cores: usize) -> Vec<Range<usize>> {
+    let cores = cores.max(1);
+    let base = items / cores;
+    let extra = items % cores;
+    let mut start = 0;
+    (0..cores)
+        .map(|i| {
+            let len = base + usize::from(i < extra);
+            let r = start..start + len;
+            start += len;
+            r
+        })
+        .collect()
+}
+
+/// Stall cycles charged to one active core issuing `accesses` TCDM
+/// accesses while `active_cores` cores contend for `banks` banks: each
+/// access collides with one of the `active_cores - 1` rivals with
+/// probability `(active_cores - 1) / banks` under word-interleaved
+/// addressing, losing one re-arbitration cycle. Zero when the core has
+/// the TCDM to itself — which is what keeps the single-core path exact.
+pub fn bank_conflict_stalls(accesses: u64, active_cores: usize, banks: usize) -> u64 {
+    if active_cores <= 1 || banks == 0 {
+        return 0;
+    }
+    accesses * (active_cores as u64 - 1) / banks as u64
+}
+
+/// One core's share of a split layer: its unit count, the work-share
+/// cycles and TCDM accesses scaled from the measured single-core cost,
+/// and the contention stalls charged on that traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreSlice {
+    /// Parallel units (output channels / channels) this core owns.
+    pub units: usize,
+    /// Work cycles (excluding stalls).
+    pub cycles: u64,
+    /// TCDM accesses this core issues.
+    pub mem_accesses: u64,
+    /// Bank-conflict stall cycles charged on those accesses.
+    pub stalls: u64,
+}
+
+impl CoreSlice {
+    /// Busy time: work plus contention stalls.
+    pub fn busy(&self) -> u64 {
+        self.cycles + self.stalls
+    }
+}
+
+/// Split one layer's measured single-core cost (`cycles`,
+/// `mem_accesses`) over the cluster along its `units` parallel units.
+/// Returns one [`CoreSlice`] per core (idle cores get all-zero slices
+/// and are never charged stalls — `active_cores` counts only cores
+/// with work). `cores = 1` returns the measured cost verbatim.
+pub fn split_layer(
+    cycles: u64,
+    mem_accesses: u64,
+    units: usize,
+    cfg: &ClusterConfig,
+) -> Vec<CoreSlice> {
+    let units = units.max(1);
+    let parts = partition(units, cfg.cores);
+    let active = parts.iter().filter(|r| !r.is_empty()).count();
+    parts
+        .iter()
+        .map(|r| {
+            let len = r.len();
+            if len == 0 {
+                return CoreSlice::default();
+            }
+            // Exact when len == units (the single-core / fewer-units-
+            // than-cores cases); proportional floor split otherwise.
+            let c = cycles * len as u64 / units as u64;
+            let a = mem_accesses * len as u64 / units as u64;
+            CoreSlice {
+                units: len,
+                cycles: c,
+                mem_accesses: a,
+                stalls: bank_conflict_stalls(a, active, cfg.banks),
+            }
+        })
+        .collect()
+}
+
+/// Whole-run cluster performance, accumulated layer by layer with a
+/// barrier between layers — the cluster-level extension of the
+/// single-core [`PerfCounters`](crate::sim::perf::PerfCounters).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterPerf {
+    /// Cluster shape the run was scheduled for.
+    pub config: ClusterConfig,
+    /// Per-core busy cycles (work + stalls) summed over layers.
+    pub busy: Vec<u64>,
+    /// Critical-path cycles: the sum over layers of the slowest core's
+    /// busy time (the barrier cost the run actually pays).
+    pub cycles: u64,
+    /// Bank-conflict stall cycles summed over cores and layers.
+    pub bank_stalls: u64,
+}
+
+impl ClusterPerf {
+    /// Empty accumulator for `cfg`.
+    pub fn new(cfg: ClusterConfig) -> Self {
+        ClusterPerf { config: cfg, busy: vec![0; cfg.cores], cycles: 0, bank_stalls: 0 }
+    }
+
+    /// Fold one layer's split into the run: the barrier advances by the
+    /// slowest slice, every core logs its own busy time, stalls sum.
+    pub fn add_layer(&mut self, slices: &[CoreSlice]) {
+        debug_assert_eq!(slices.len(), self.config.cores);
+        let barrier = slices.iter().map(CoreSlice::busy).max().unwrap_or(0);
+        self.cycles += barrier;
+        for (b, s) in self.busy.iter_mut().zip(slices) {
+            *b += s.busy();
+        }
+        self.bank_stalls += slices.iter().map(|s| s.stalls).sum::<u64>();
+    }
+
+    /// Per-core utilization: busy time over critical-path time, in
+    /// `[0, 1]` per core (the slowest core of every layer is busy for
+    /// the whole barrier by construction).
+    pub fn utilization(&self) -> Vec<f64> {
+        if self.cycles == 0 {
+            return vec![0.0; self.busy.len()];
+        }
+        self.busy.iter().map(|&b| b as f64 / self.cycles as f64).collect()
+    }
+
+    /// Total stall cycles across the cluster.
+    pub fn total_bank_stalls(&self) -> u64 {
+        self.bank_stalls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly_and_balances() {
+        for items in 0..40 {
+            for cores in 1..9 {
+                let parts = partition(items, cores);
+                assert_eq!(parts.len(), cores);
+                // Exact, ordered, gap-free coverage.
+                let mut next = 0;
+                for r in &parts {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, items, "items {items} cores {cores}");
+                // Balance: part sizes differ by at most one, larger
+                // parts first.
+                let lens: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+                let (min, max) =
+                    (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(max - min <= 1, "items {items} cores {cores}: {lens:?}");
+                let mut sorted = lens.clone();
+                sorted.sort_unstable_by(|a, b| b.cmp(a));
+                assert_eq!(lens, sorted, "larger parts must come first");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        assert_eq!(partition(10, 4), partition(10, 4));
+        assert_eq!(partition(7, 3), vec![0..3, 3..5, 5..7]);
+        assert_eq!(partition(2, 4), vec![0..1, 1..2, 2..2, 2..2]);
+    }
+
+    #[test]
+    fn stalls_vanish_without_contention() {
+        assert_eq!(bank_conflict_stalls(1_000_000, 1, 8), 0);
+        assert_eq!(bank_conflict_stalls(1_000_000, 0, 8), 0);
+        assert_eq!(bank_conflict_stalls(0, 4, 8), 0);
+        // 4 active cores on 8 banks: 3/8 of accesses collide.
+        assert_eq!(bank_conflict_stalls(800, 4, 8), 300);
+    }
+
+    #[test]
+    fn single_core_split_is_the_identity() {
+        let cfg = ClusterConfig::single();
+        let s = split_layer(12_345, 678, 17, &cfg);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0], CoreSlice { units: 17, cycles: 12_345, mem_accesses: 678, stalls: 0 });
+        // One unit on a big cluster: one active core, full cost, no
+        // stalls — also exactly the single-core cost.
+        let s = split_layer(12_345, 678, 1, &ClusterConfig::new(8));
+        assert_eq!(s[0], CoreSlice { units: 1, cycles: 12_345, mem_accesses: 678, stalls: 0 });
+        assert!(s[1..].iter().all(|x| *x == CoreSlice::default()));
+    }
+
+    #[test]
+    fn layer_barrier_never_exceeds_single_core_cost() {
+        // The core guarantee behind "cycles non-increasing": for any
+        // realistic accesses ≤ cycles/2 (every access costs ≥ 2 cycles
+        // on this core), the slowest slice (work + stalls) is bounded
+        // by the measured single-core cycles.
+        for cores in [1usize, 2, 4, 8] {
+            let cfg = ClusterConfig::new(cores);
+            for units in 1..50 {
+                for (cycles, accesses) in [(1000u64, 400u64), (7919, 3959), (64, 8)] {
+                    let slices = split_layer(cycles, accesses, units, &cfg);
+                    let barrier = slices.iter().map(CoreSlice::busy).max().unwrap();
+                    assert!(
+                        barrier <= cycles,
+                        "cores {cores} units {units}: barrier {barrier} > {cycles}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_perf_accumulates_barriers_and_stalls() {
+        let cfg = ClusterConfig::new(2);
+        let mut perf = ClusterPerf::new(cfg);
+        // Layer 1: 10 units → split 5/5.
+        perf.add_layer(&split_layer(1000, 400, 10, &cfg));
+        // Layer 2: 1 unit → core 0 does everything.
+        perf.add_layer(&split_layer(300, 60, 1, &cfg));
+        // Layer 1 slice: 500 cycles + 200·1/4 = 50 stalls each.
+        assert_eq!(perf.cycles, 550 + 300);
+        assert_eq!(perf.bank_stalls, 100);
+        assert_eq!(perf.busy, vec![550 + 300, 550]);
+        let u = perf.utilization();
+        assert!((u[0] - 1.0).abs() < 1e-12);
+        assert!(u[1] < 1.0 && u[1] > 0.0);
+    }
+}

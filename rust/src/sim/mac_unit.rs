@@ -39,28 +39,44 @@ fn unpack_lanes(mode: MacMode, word: u32, out: &mut [i8; 16]) -> usize {
 /// `Hash` because the analytic [`crate::sim::session::CostCache`] keys
 /// on it: the kernel *program* is identical across ablations, but its
 /// cycle counters are not.
+///
+/// `cores` rides along as the cluster axis of the simulated machine
+/// (`--cores`, [`crate::sim::cluster`]): it never touches the MAC
+/// datapath below — `issue`/`cycles_for` model one core's unit — but it
+/// is part of the machine identity the content-addressed result store
+/// and the shard artifacts key on, so it lives here with the other
+/// machine-configuration knobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MacUnitConfig {
     /// 2× clock domain for the MAC block (Mode-2 optimisation).
     pub multipump: bool,
     /// Guard-bit dual products for 2-bit weights (Mode-3 optimisation).
     pub soft_simd: bool,
+    /// Cluster cores the model run is scheduled over (1 = the plain
+    /// single-core machine; purely a scheduling/keying axis).
+    pub cores: usize,
 }
 
 impl MacUnitConfig {
     /// Full paper configuration: multi-pumping + soft SIMD.
     pub fn full() -> Self {
-        MacUnitConfig { multipump: true, soft_simd: true }
+        MacUnitConfig { multipump: true, soft_simd: true, cores: 1 }
     }
 
     /// Packing/parallelisation only (the paper's standalone Mode-1 study).
     pub fn packing_only() -> Self {
-        MacUnitConfig { multipump: false, soft_simd: false }
+        MacUnitConfig { multipump: false, soft_simd: false, cores: 1 }
     }
 
     /// Packing + multi-pumping, no soft SIMD (standalone Mode-2 study).
     pub fn multipump_only() -> Self {
-        MacUnitConfig { multipump: true, soft_simd: false }
+        MacUnitConfig { multipump: true, soft_simd: false, cores: 1 }
+    }
+
+    /// The same datapath features on an N-core cluster (`--cores`).
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        self
     }
 }
 

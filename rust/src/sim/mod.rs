@@ -42,6 +42,7 @@
 //! images by kernel spec so DSE sweeps and whole-model measurement
 //! assemble + translate each kernel exactly once.
 
+pub mod cluster;
 pub mod engine;
 pub mod mac_unit;
 pub mod memory;
@@ -51,6 +52,7 @@ pub mod session;
 use crate::isa::decode::decode;
 use crate::isa::*;
 use std::sync::Arc;
+pub use cluster::{ClusterConfig, ClusterPerf, CoreSlice};
 pub use engine::{CompiledProgram, EngineStats, TranslateOpts};
 pub use mac_unit::{MacUnit, MacUnitConfig};
 pub use memory::{MemFault, Memory};

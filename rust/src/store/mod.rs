@@ -110,7 +110,9 @@ pub struct StoreKey {
     /// Resolved backend label (`host`/`iss`/`analytic`/`pjrt`). Never
     /// `auto` — [`StoreKey::new`] rejects unpinned tags.
     pub backend: String,
-    /// MAC-unit features of the simulated core the backend ran.
+    /// MAC-unit features of the simulated core the backend ran,
+    /// including the cluster `cores` axis (machine identity — results
+    /// priced for different cluster geometries never alias).
     pub mac: MacUnitConfig,
 }
 
@@ -160,6 +162,15 @@ impl StoreKey {
         eat(0xff); // backend / mac separator
         eat(self.mac.multipump as u8);
         eat(self.mac.soft_simd as u8);
+        // The cluster axis joins the key only when it departs from the
+        // single-core default: cores=1 keys (and on-disk entries) stay
+        // byte-identical to stores written before the axis existed.
+        if self.mac.cores > 1 {
+            eat(0xfe); // mac / cluster separator
+            for b in (self.mac.cores as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
         h
     }
 
@@ -351,7 +362,8 @@ impl ResultStore {
             && fp == key.plan_fingerprint
             && dd == key.dataset_digest
             && j.req_bool("multipump").map_err(schema)? == key.mac.multipump
-            && j.req_bool("soft_simd").map_err(schema)? == key.mac.soft_simd;
+            && j.req_bool("soft_simd").map_err(schema)? == key.mac.soft_simd
+            && parse_cores(&j).map_err(schema)? == key.mac.cores;
         if !matches {
             return Err(StoreError::KeyMismatch { path: path.clone() });
         }
@@ -479,8 +491,23 @@ fn parse_bits(j: &Json) -> Result<Vec<u32>, SchemaError> {
         .collect()
 }
 
+/// The stored cluster-cores component: emitted only when it departs
+/// from the single-core default, so pre-cluster entries (no `cores`
+/// field) parse as cores=1 and cores=1 entries stay byte-identical to
+/// what older builds wrote.
+fn parse_cores(j: &Json) -> Result<usize, SchemaError> {
+    Ok(j.opt("cores", |v| match v.as_f64() {
+        Some(x) if x.is_finite() && x >= 1.0 && x == x.trunc() => Ok(x as usize),
+        _ => Err(SchemaError {
+            field: "cores".to_string(),
+            msg: "expected a positive integer".to_string(),
+        }),
+    })?
+    .unwrap_or(1))
+}
+
 fn entry_json(key: &StoreKey, model: &str, bits: &[u32], r: &EvalReport) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("schema", Json::i(STORE_SCHEMA_VERSION as i64)),
         ("key", Json::s(&key.hex())),
         ("model", Json::s(model)),
@@ -491,6 +518,13 @@ fn entry_json(key: &StoreKey, model: &str, bits: &[u32], r: &EvalReport) -> Json
         ("dataset_digest", Json::s(&key.dataset_digest.to_string())),
         ("multipump", Json::Bool(key.mac.multipump)),
         ("soft_simd", Json::Bool(key.mac.soft_simd)),
+    ];
+    // Conditional like the key hash: cores=1 entries match pre-cluster
+    // builds byte-for-byte (see `parse_cores`).
+    if key.mac.cores > 1 {
+        fields.push(("cores", Json::i(key.mac.cores as i64)));
+    }
+    fields.extend([
         // f32 -> f64 -> JSON -> f64 -> f32 round-trips exactly (Rust's
         // shortest-round-trip float printing), so warm reads restore
         // bit-identical accuracy/divergence values.
@@ -499,7 +533,8 @@ fn entry_json(key: &StoreKey, model: &str, bits: &[u32], r: &EvalReport) -> Json
         ("iss_mem_accesses", r.iss_mem_accesses.map_or(Json::Null, |c| Json::i(c as i64))),
         ("divergence", r.divergence.map_or(Json::Null, |d| Json::Num(d as f64))),
         ("audited", r.audited.map_or(Json::Null, |a| Json::i(a as i64))),
-    ])
+    ]);
+    Json::obj(fields)
 }
 
 fn report_from_json(j: &Json) -> Result<EvalReport, SchemaError> {
@@ -553,6 +588,17 @@ mod tests {
         let mut mac = base.clone();
         mac.mac = MacUnitConfig::packing_only();
         assert_ne!(base.hash(), mac.hash());
+        // The cluster axis: cores=1 is the pre-cluster key (explicit
+        // with_cores(1) must not mint a new hash), any other count must.
+        let mut one = base.clone();
+        one.mac = MacUnitConfig::full().with_cores(1);
+        assert_eq!(base.hash(), one.hash());
+        let mut four = base.clone();
+        four.mac = MacUnitConfig::full().with_cores(4);
+        assert_ne!(base.hash(), four.hash());
+        let mut two = base.clone();
+        two.mac = MacUnitConfig::full().with_cores(2);
+        assert_ne!(four.hash(), two.hash());
         // Stable across calls (the fan-out layout depends on it).
         assert_eq!(base.hex(), key(8, "host").hex());
         assert_eq!(base.hex().len(), 16);

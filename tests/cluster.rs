@@ -1,0 +1,171 @@
+//! Multi-core cluster integration tests — the determinism contract of
+//! the banked-TCDM cluster overlay (`sim::cluster`, ISSUE 9):
+//!
+//! 1. **`--cores 1` is the existing pipeline, byte for byte** — a
+//!    coordinator pinned to the single-core cluster produces sweep
+//!    points bit-identical to an untouched coordinator, and the fig6
+//!    sweep JSON is byte-identical string-for-string.
+//! 2. **The scheduler partition is deterministic** — cluster pricing is
+//!    a pure function of the measured cycle table and `(units, cores)`,
+//!    so independently built coordinators (different measurement worker
+//!    counts included) agree on every composed cluster cost.
+//! 3. **Cluster scaling behaves** — with cores > 1 the sweep reports
+//!    per-core utilization and bank-conflict stalls, cycles never
+//!    exceed the single-core totals, and accuracy is untouched (the
+//!    cluster overlay prices, it does not re-evaluate).
+//! 4. **Shards from different geometries never mix** — artifacts carry
+//!    the cores axis and the merge refuses a mismatch typed.
+
+use mpnn::coordinator::{Coordinator, HostEval};
+use mpnn::dse::shard::{merge, point_divergence, ShardError, ShardSpec};
+use mpnn::dse::{default_pinned, enumerate};
+use mpnn::exp::{fig6, EvalBackend, ExpOpts};
+use mpnn::models::analyze;
+use mpnn::models::format::load_or_fallback;
+use std::path::Path;
+
+/// Host-evaluator coordinator over the synthetic lenet5 fallback,
+/// built with an explicit measurement worker count.
+fn coordinator(seed: u64, workers: usize) -> Coordinator {
+    let model = load_or_fallback(Path::new("/nonexistent"), "lenet5", seed).unwrap();
+    let test = model.test.clone();
+    Coordinator::new(model, Box::new(HostEval { test }), workers).unwrap()
+}
+
+fn opts(seed: u64, cores: usize) -> ExpOpts {
+    ExpOpts {
+        artifacts: "/nonexistent".into(),
+        eval_n: 8,
+        budget: 9,
+        backend: EvalBackend::Host,
+        seed,
+        cores,
+        ..ExpOpts::default()
+    }
+}
+
+#[test]
+fn cores_one_is_bit_identical_to_the_untouched_pipeline() {
+    let untouched = coordinator(19, 2);
+    let mut pinned = coordinator(19, 2);
+    pinned.set_cluster(1).unwrap();
+    assert!(pinned.cluster().is_single());
+
+    let n = analyze(&untouched.model.spec).layers.len();
+    let configs = enumerate(n, &default_pinned(), 9, 19);
+    let a = untouched.run_sweep(&configs, 8).unwrap();
+    let b = pinned.run_sweep(&configs, 8).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        if let Some((field, va, vb)) = point_divergence(pa, pb) {
+            panic!("cores=1 point #{i} differs on `{field}`: {va} vs {vb}");
+        }
+    }
+}
+
+#[test]
+fn cores_one_fig6_json_is_byte_identical() {
+    // The harness-level form of the identity: `--cores 1` must write
+    // exactly the pre-cluster fig6 document (the CI cluster-smoke job
+    // `cmp`s the files; this is the in-process pin of the same bar).
+    // cores: 0 exercises the ClusterConfig::new clamp to single-core.
+    let default_sweep = fig6::sweep_model(&ExpOpts { cores: 0, ..opts(23, 1) }, "lenet5").unwrap();
+    let pinned_sweep = fig6::sweep_model(&opts(23, 1), "lenet5").unwrap();
+    let dj = fig6::sweep_json(&default_sweep).to_string();
+    let pj = fig6::sweep_json(&pinned_sweep).to_string();
+    assert_eq!(dj, pj, "--cores 1 fig6 JSON must match the default byte-for-byte");
+    assert!(!dj.contains("\"cluster\""), "single-core JSON must not grow a cluster block");
+    assert!(default_sweep.cluster.is_none() && pinned_sweep.cluster.is_none());
+}
+
+#[test]
+fn cluster_pricing_is_deterministic_across_builds_and_workers() {
+    // Two independently built coordinators — different measurement
+    // fan-out widths — must agree on every composed cluster cost: the
+    // measurement is seeded per (layer, variant) and the partition is a
+    // pure function of (units, cores).
+    let mut narrow = coordinator(29, 1);
+    let mut wide = coordinator(29, 4);
+    narrow.set_cluster(4).unwrap();
+    wide.set_cluster(4).unwrap();
+
+    let n = analyze(&narrow.model.spec).layers.len();
+    for cfg in enumerate(n, &default_pinned(), 9, 29) {
+        let a = narrow.cluster_cost(&cfg);
+        let b = wide.cluster_cost(&cfg);
+        assert_eq!(a.cost.cycles, b.cost.cycles, "cycles for {cfg:?}");
+        assert_eq!(a.cost.mem_accesses, b.cost.mem_accesses);
+        assert_eq!(a.perf, b.perf, "per-core accounting for {cfg:?}");
+    }
+}
+
+#[test]
+fn multi_core_sweep_reports_scaling_and_never_costs_more_cycles() {
+    let single = fig6::sweep_model(&opts(37, 1), "lenet5").unwrap();
+    let clustered = fig6::sweep_model(&opts(37, 4), "lenet5").unwrap();
+
+    // The cluster report: right shape, visible contention, real win.
+    let r = clustered.cluster.as_ref().expect("cores=4 sweep must carry a cluster report");
+    assert_eq!(r.cores, 4);
+    assert_eq!(r.utilization.len(), 4);
+    assert!(r.utilization.iter().all(|&u| (0.0..=1.0).contains(&u)));
+    assert!(r.utilization[0] > 0.0);
+    assert!(r.bank_stalls > 0, "a real model's TCDM traffic must show contention");
+    assert!(r.cycles <= r.cycles_single, "cluster baseline may never cost extra cycles");
+
+    // Point-by-point against the single-core sweep: same configs in
+    // the same order, identical accuracy (pricing never re-evaluates),
+    // cycles non-increasing, total work conserved.
+    assert_eq!(single.points.len(), clustered.points.len());
+    for (s, c) in single.points.iter().zip(&clustered.points) {
+        assert_eq!(s.config, c.config);
+        assert_eq!(s.accuracy.to_bits(), c.accuracy.to_bits());
+        assert_eq!(s.mem_accesses, c.mem_accesses);
+        assert!(c.cycles <= s.cycles, "config {:?}: {} > {}", c.config, c.cycles, s.cycles);
+    }
+
+    // And the serialised sweep carries the cluster block.
+    let j = fig6::sweep_json(&clustered).to_string();
+    assert!(j.contains("\"cores\":4"));
+    assert!(j.contains("\"cluster\""));
+    assert!(j.contains("\"bank_conflict_stalls\""));
+    assert!(j.contains("\"utilization\""));
+}
+
+#[test]
+fn shards_from_different_cluster_geometries_refuse_to_merge() {
+    // End to end through the fig6 shard writer: artifacts record the
+    // cores axis, same-geometry shards merge cleanly, and a mixed
+    // merge fails typed on `cores` — never silently blends machines.
+    let o = ExpOpts { cores: 2, ..opts(43, 2) };
+    let s0 = ShardSpec::parse("0/2").unwrap();
+    let s1 = ShardSpec::parse("1/2").unwrap();
+    let a0 = fig6::sweep_shard(&o, "lenet5", &s0).unwrap();
+    let a1 = fig6::sweep_shard(&o, "lenet5", &s1).unwrap();
+    assert_eq!(a0.cores, 2);
+
+    let merged = merge(&[a0.clone(), a1.clone()]).unwrap();
+    assert_eq!(merged.cores, 2);
+    assert_eq!(merged.points.len(), merged.indices.len());
+
+    // Re-run shard 1 on a different geometry: its artifact must carry
+    // the new axis and poison the mixed merge.
+    let a1_single = fig6::sweep_shard(&opts(43, 1), "lenet5", &s1).unwrap();
+    assert_eq!(a1_single.cores, 1);
+    match merge(&[a0, a1_single]) {
+        Err(ShardError::Incompatible { field: "cores", .. }) => {}
+        other => panic!("expected Incompatible(cores), got {other:?}"),
+    }
+}
+
+#[test]
+fn set_cluster_must_precede_attach_store() {
+    use mpnn::store::ResultStore;
+    let dir = std::env::temp_dir().join(format!("mpnn_cluster_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = coordinator(47, 2);
+    c.attach_store(ResultStore::open(&dir).unwrap()).unwrap();
+    let err = c.set_cluster(4).expect_err("store keys pin the cores axis");
+    assert!(err.to_string().contains("attach_store"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -95,6 +95,10 @@ fn docs_mention_live_symbols() {
         // guide must keep saying `--store` keys embed the backend tag.
         "--store",
         "StoreKey",
+        // And to the cluster axis: shards of one sweep must agree on
+        // `--cores`, pinned before the store attaches.
+        "--cores",
+        "set_cluster",
     ] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
@@ -163,6 +167,16 @@ fn docs_mention_live_symbols() {
         "/eval",
         "/pareto",
         "/stats",
+        // The cluster-execution section must keep naming the overlay's
+        // geometry, scheduler and contention-accounting pieces.
+        "ClusterConfig",
+        "ClusterPerf",
+        "cluster_config_total",
+        "partition",
+        "bank_conflict_stalls",
+        "BANKING_FACTOR",
+        "set_cluster",
+        "--cores",
     ] {
         assert!(arch.contains(sym), "docs/ARCHITECTURE.md no longer mentions `{sym}`");
     }
@@ -246,6 +260,18 @@ fn docs_mention_live_symbols() {
         "pub fn attach_store",
     ] {
         assert!(coord.contains(sym), "coordinator lost `{sym}` — update docs/EVALUATORS.md");
+    }
+    // The cluster-overlay symbols the docs name must still exist.
+    let cluster = fs::read_to_string("rust/src/sim/cluster.rs").unwrap();
+    for sym in [
+        "pub struct ClusterConfig",
+        "pub struct ClusterPerf",
+        "pub fn partition",
+        "pub fn bank_conflict_stalls",
+        "pub fn split_layer",
+        "pub const BANKING_FACTOR",
+    ] {
+        assert!(cluster.contains(sym), "sim/cluster.rs lost `{sym}` — update the docs");
     }
     // The store/serve symbols the docs name must still exist.
     let store = fs::read_to_string("rust/src/store/mod.rs").unwrap();

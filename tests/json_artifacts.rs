@@ -39,6 +39,7 @@ fn rich_artifact() -> ShardArtifact {
         search: mpnn::dse::search::SearchStrategy::Exhaustive,
         rungs: 0,
         eta: 0,
+        cores: 1,
         points: vec![
             (48, mk(&[8, 4, 2, 4], 0.75, 1_000_001, Some(123_456_789), Some(0.0))),
             (49, mk(&[8, 2, 2, 2], 0.015625, 7, None, None)),

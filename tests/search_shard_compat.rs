@@ -52,6 +52,7 @@ fn guided_artifact(
         search: SearchStrategy::Guided,
         rungs: 3,
         eta: 2,
+        cores: 1,
         points,
         stats: SessionSnapshot::default(),
     }

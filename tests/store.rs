@@ -100,7 +100,13 @@ fn key_hash_is_sensitive_to_every_component() {
         hashes.insert(key(fp, dd, 8, "host", MacUnitConfig::packing_only())),
         "mac config"
     );
-    assert_eq!(hashes.len(), 8);
+
+    // Cluster cores: a multi-core geometry keys separately, but the
+    // explicit single-core form must alias the implicit default (the
+    // byte-compatibility contract with pre-cluster stores).
+    assert!(hashes.insert(key(fp, dd, 8, "host", full.with_cores(4))), "cores");
+    assert!(!hashes.insert(key(fp, dd, 8, "host", full.with_cores(1))), "cores=1 aliases");
+    assert_eq!(hashes.len(), 9);
 }
 
 #[test]

@@ -57,6 +57,7 @@ fn shard_artifact(
         search: SearchStrategy::Exhaustive,
         rungs: 0,
         eta: 0,
+        cores: 1,
         points,
         stats: SessionSnapshot::default(),
     }
