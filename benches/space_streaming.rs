@@ -1,0 +1,106 @@
+//! Bench: lazy config-space enumeration — streamed (index-decoded, one
+//! config materialized at a time) vs materialized (`enumerate`, the
+//! whole space collected) over the 3^13-configuration synthetic space
+//! (1,594,323 configs), the §Perf metric of the streaming sweep stack.
+//!
+//! Both passes fold every decoded width into a checksum, asserted equal
+//! across passes before any timing claim, so neither loop can be
+//! optimized away and both demonstrably visit the identical sequence.
+//! The headline numbers are configs/sec per pass plus the peak
+//! alive-set size — 1 config for the streamed pass, the full space for
+//! the materialized one; that gap, not the throughput, is what lets
+//! guided sweeps run at 10^6+ configurations.
+//!
+//! `BENCH_ITERS` overrides the measured iteration count (CI smoke runs
+//! set 2); `SPACE_BENCH_ASSERT` gates the minimum streamed-pass
+//! throughput in configs/sec (a conservative floor — decode is a few
+//! dozen integer ops, so a violation means the decode path regressed).
+//! Single-sample runs skip the floor. Results land in
+//! `BENCH_space_streaming.json`.
+
+use mpnn::bench::{bench, iters_from_env, JsonReport};
+use mpnn::dse::{default_pinned, enumerate, ConfigSpace};
+
+fn env_floor(var: &str) -> Option<f64> {
+    std::env::var(var).ok().and_then(|v| v.parse::<f64>().ok())
+}
+
+/// Fold a config's widths into a running FNV-style checksum — cheap
+/// enough not to dominate the decode, strong enough that a drifted
+/// sequence cannot collide by accident.
+fn fold(mut acc: u64, cfg: &[u32]) -> u64 {
+    for &b in cfg {
+        acc = (acc ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    acc
+}
+
+fn main() {
+    let iters = iters_from_env(3);
+    let free = 13u32; // 3^13 = 1,594,323 configs, past the 10^6 mark
+    let n_layers = free as usize + 1; // layer 0 pinned at 8-bit
+    let budget = 3usize.pow(free);
+    let seed = 0u64;
+    let space = ConfigSpace::new(n_layers, &default_pinned(), budget, seed);
+    assert!(space.is_exhaustive(), "the bench space must be index-decoded");
+    let total = space.len();
+    let mut report = JsonReport::new("space_streaming");
+
+    println!("config-space enumeration: streamed (lazy decode) vs materialized (full Vec)");
+    println!("  {n_layers} layers, layer 0 pinned, 3^{free} = {total} configs");
+
+    let mut streamed_sum = 0u64;
+    let streamed = bench("space/3p13/streamed", iters, || {
+        let mut acc = 0xcbf2_9ce4_8422_2325u64;
+        for cfg in space.iter() {
+            acc = fold(acc, &cfg);
+        }
+        streamed_sum = acc;
+    });
+
+    let mut materialized_sum = 0u64;
+    let mut materialized_len = 0usize;
+    let materialized = bench("space/3p13/materialized", iters, || {
+        let all = enumerate(n_layers, &default_pinned(), budget, seed);
+        let mut acc = 0xcbf2_9ce4_8422_2325u64;
+        for cfg in &all {
+            acc = fold(acc, cfg);
+        }
+        materialized_sum = acc;
+        materialized_len = all.len();
+    });
+
+    // Identity before any timing claim: both passes visited the same
+    // sequence, and the materialized pass really held the whole space.
+    assert_eq!(streamed_sum, materialized_sum, "streamed sequence drifted from enumerate");
+    assert_eq!(materialized_len, total);
+
+    let streamed_cps = total as f64 / streamed.median().as_secs_f64();
+    let materialized_cps = total as f64 / materialized.median().as_secs_f64();
+    println!(
+        "  => streamed {streamed_cps:.0} configs/sec (peak alive 1 config), \
+         materialized {materialized_cps:.0} configs/sec (peak alive {total} configs)"
+    );
+
+    report.record(&streamed, &[("configs", total as f64), ("peak_alive", 1.0)]);
+    report.record(&materialized, &[("configs", total as f64), ("peak_alive", total as f64)]);
+    report.summary("configs", total as f64);
+    report.summary("streamed_configs_per_sec", streamed_cps);
+    report.summary("materialized_configs_per_sec", materialized_cps);
+    report.summary("peak_alive_streamed", 1.0);
+    report.summary("peak_alive_materialized", total as f64);
+
+    // Regression gate, opt-in via env (same contract as the other
+    // benches: floors only apply with >= 2 iterations).
+    if iters < 2 {
+        println!("single-sample run: regression floor not enforced");
+    } else if let Some(min) = env_floor("SPACE_BENCH_ASSERT") {
+        assert!(
+            streamed_cps >= min,
+            "streamed decode regression: {streamed_cps:.0} configs/sec < {min} floor"
+        );
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("bench json: {}", path.display());
+}

@@ -53,7 +53,7 @@
 //! [`crate::dse::search`]).
 
 use crate::dse::cycles::{ClusterCost, CycleModel};
-use crate::dse::{total_mac_instructions, Config, EvalPoint};
+use crate::dse::{total_mac_instructions, Config, ConfigSpace, EvalPoint};
 use crate::sim::cluster::ClusterConfig;
 use crate::ensure;
 use crate::error::{Error, Result};
@@ -751,9 +751,43 @@ impl Coordinator {
     /// Evaluate a sweep of configurations through the worker pool
     /// (bounded queue → workers → ordered result collection).
     pub fn run_sweep(&self, configs: &[Config], n_eval: usize) -> Result<Vec<EvalPoint>> {
+        self.sweep_stream(configs.len(), configs.iter().cloned(), n_eval)
+    }
+
+    /// Streaming exhaustive sweep: every configuration of a lazy
+    /// [`ConfigSpace`], decoded by the producer one at a time into the
+    /// bounded queue — configs in flight never exceed `queue_cap +
+    /// workers`, whatever the space size. Output is bit-identical to
+    /// `run_sweep(&space.iter().collect::<Vec<_>>(), ..)`.
+    pub fn run_sweep_space(&self, space: &ConfigSpace, n_eval: usize) -> Result<Vec<EvalPoint>> {
+        self.sweep_stream(space.len(), space.iter(), n_eval)
+    }
+
+    /// Streaming sweep of selected global `indices` of a lazy space
+    /// (a shard's members, a guided driver's survivors, a resume
+    /// chunk). Returns points index-aligned with `indices`.
+    pub fn sweep_space_indices(
+        &self,
+        space: &ConfigSpace,
+        indices: &[usize],
+        n_eval: usize,
+    ) -> Result<Vec<EvalPoint>> {
+        self.sweep_stream(indices.len(), indices.iter().map(|&i| space.get(i)), n_eval)
+    }
+
+    /// The producer/worker core behind every sweep entry point: `jobs`
+    /// yields exactly `count` configurations which the bounded send
+    /// feeds to the workers (backpressure caps decoded configs in
+    /// flight); results come back in job order.
+    fn sweep_stream(
+        &self,
+        count: usize,
+        jobs: impl Iterator<Item = Config>,
+        n_eval: usize,
+    ) -> Result<Vec<EvalPoint>> {
         let (job_tx, job_rx) = sync_channel::<(usize, Config)>(self.queue_cap);
         let job_rx = Mutex::new(job_rx);
-        let results: Mutex<Vec<Option<EvalPoint>>> = Mutex::new(vec![None; configs.len()]);
+        let results: Mutex<Vec<Option<EvalPoint>>> = Mutex::new(vec![None; count]);
         let first_err: Mutex<Option<Error>> = Mutex::new(None);
 
         std::thread::scope(|s| {
@@ -792,11 +826,11 @@ impl Coordinator {
             // (the backpressure the architecture calls for). A closed
             // channel (all workers gone) just ends production — the
             // first-error channel reports what killed them.
-            for (i, cfg) in configs.iter().enumerate() {
+            for (i, cfg) in jobs.enumerate() {
                 if first_err.lock().unwrap().is_some() {
                     break;
                 }
-                if job_tx.send((i, cfg.clone())).is_err() {
+                if job_tx.send((i, cfg)).is_err() {
                     break;
                 }
             }
@@ -845,6 +879,40 @@ impl Coordinator {
         Ok(indices.into_iter().zip(points).collect())
     }
 
+    /// Sharded sweep over a lazy [`ConfigSpace`]: the shard's members
+    /// come from [`ShardSpec::member_indices_in`](crate::dse::shard::ShardSpec::member_indices_in)
+    /// (O(shard) memory) and stream through the worker pool — the
+    /// complement of the shard is never materialized. Bit-identical to
+    /// [`Coordinator::sweep_sharded`] over the enumerated space.
+    pub fn sweep_sharded_space(
+        &self,
+        space: &ConfigSpace,
+        n_eval: usize,
+        shard: &crate::dse::shard::ShardSpec,
+    ) -> Result<Vec<(usize, EvalPoint)>> {
+        let indices = shard.member_indices_in(space);
+        let points = self.sweep_space_indices(space, &indices, n_eval)?;
+        Ok(indices.into_iter().zip(points).collect())
+    }
+
+    /// Analytic cost triple of one configuration, composed exactly as
+    /// [`Coordinator::compose_point`] prices points: under a cluster
+    /// the pruning bounds must rank by the cluster critical path, or
+    /// the guided search would prune against costs the returned points
+    /// don't carry.
+    fn price(&self, cfg: &Config) -> crate::dse::search::CostVec {
+        let c = if self.cluster.is_single() {
+            self.cycle_model.config_total(cfg)
+        } else {
+            self.cycle_model.cluster_config_total(cfg, &self.cluster).cost
+        };
+        crate::dse::search::CostVec {
+            cycles: c.cycles,
+            mac: total_mac_instructions(&self.analysis, cfg),
+            mem: c.mem_accesses,
+        }
+    }
+
     /// Guided sweep
     /// ([`guided_search`](crate::dse::search::guided_search)): analytic
     /// cost bounds prune the space, successive halving on growing
@@ -869,25 +937,8 @@ impl Coordinator {
         opts: &crate::dse::search::GuidedOpts,
     ) -> Result<crate::dse::search::GuidedSweep> {
         let n = n_eval.min(self.evaluator.eval_len()).max(1);
-        let costs: Vec<crate::dse::search::CostVec> = configs
-            .iter()
-            .map(|cfg| {
-                // Price with the same composition `compose_point` uses:
-                // under a cluster the pruning bounds must rank by the
-                // cluster critical path, or the search would prune
-                // against costs the returned points don't carry.
-                let c = if self.cluster.is_single() {
-                    self.cycle_model.config_total(cfg)
-                } else {
-                    self.cycle_model.cluster_config_total(cfg, &self.cluster).cost
-                };
-                crate::dse::search::CostVec {
-                    cycles: c.cycles,
-                    mac: total_mac_instructions(&self.analysis, cfg),
-                    mem: c.mem_accesses,
-                }
-            })
-            .collect();
+        let costs: Vec<crate::dse::search::CostVec> =
+            configs.iter().map(|cfg| self.price(cfg)).collect();
         let eval_partial = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
             self.metrics.partial_evals.fetch_add(idxs.len() as u64, Ordering::Relaxed);
             crate::par::parallel_map(idxs.len(), self.workers, |j| {
@@ -903,6 +954,81 @@ impl Coordinator {
             self.run_sweep(&mine, n_eval)
         };
         crate::dse::search::guided_search(&costs, n, opts, &eval_partial, &eval_full)
+    }
+
+    /// Guided sweep over a lazy [`ConfigSpace`] — the streaming
+    /// counterpart of [`Coordinator::sweep_guided`], bit-identical to
+    /// it on the materialized space. No cost table is built: the
+    /// [`guided_search_stream`](crate::dse::search::guided_search_stream)
+    /// engine prices configurations on demand (decode + price, then
+    /// drop), rung scoring decodes each scored config transiently
+    /// inside the worker, and full evaluations stream their batch
+    /// through [`Coordinator::sweep_space_indices`] — so peak config
+    /// storage is the driver's alive set plus the points it returns,
+    /// never the space ([`GuidedStats::peak_alive`](crate::dse::search::GuidedStats)
+    /// is the ledger).
+    pub fn sweep_guided_space(
+        &self,
+        space: &ConfigSpace,
+        n_eval: usize,
+        opts: &crate::dse::search::GuidedOpts,
+    ) -> Result<crate::dse::search::GuidedSweep> {
+        let n = n_eval.min(self.evaluator.eval_len()).max(1);
+        let cost_of = |i: usize| self.price(&space.get(i));
+        let eval_partial = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+            self.metrics.partial_evals.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+            crate::par::parallel_map(idxs.len(), self.workers, |j| {
+                let qm = self.quantized(&space.get(idxs[j]));
+                let r = self.evaluator.evaluate(&qm, m)?;
+                Ok((r.accuracy * m as f32).round() as u32)
+            })
+        };
+        let eval_full =
+            |idxs: &[usize]| -> Result<Vec<EvalPoint>> { self.sweep_space_indices(space, idxs, n_eval) };
+        crate::dse::search::guided_search_stream(
+            space.len(),
+            &cost_of,
+            n,
+            opts,
+            &eval_partial,
+            &eval_full,
+        )
+    }
+
+    /// Guided sweep over selected global `indices` of a lazy space —
+    /// what a guided *shard* runs over its members. The returned
+    /// `GuidedSweep` indices are positions into `indices` (the caller
+    /// maps them back to global enumeration indices), matching the
+    /// slice-based contract of `sweep_guided` over the gathered
+    /// configs.
+    pub fn sweep_guided_indices(
+        &self,
+        space: &ConfigSpace,
+        indices: &[usize],
+        n_eval: usize,
+        opts: &crate::dse::search::GuidedOpts,
+    ) -> Result<crate::dse::search::GuidedSweep> {
+        let n = n_eval.min(self.evaluator.eval_len()).max(1);
+        let cost_of = |j: usize| self.price(&space.get(indices[j]));
+        let eval_partial = |js: &[usize], m: usize| -> Result<Vec<u32>> {
+            self.metrics.partial_evals.fetch_add(js.len() as u64, Ordering::Relaxed);
+            crate::par::parallel_map(js.len(), self.workers, |k| {
+                let qm = self.quantized(&space.get(indices[js[k]]));
+                let r = self.evaluator.evaluate(&qm, m)?;
+                Ok((r.accuracy * m as f32).round() as u32)
+            })
+        };
+        let eval_full = |js: &[usize]| -> Result<Vec<EvalPoint>> {
+            self.sweep_stream(js.len(), js.iter().map(|&j| space.get(indices[j])), n_eval)
+        };
+        crate::dse::search::guided_search_stream(
+            indices.len(),
+            &cost_of,
+            n,
+            opts,
+            &eval_partial,
+            &eval_full,
+        )
     }
 }
 

@@ -16,6 +16,7 @@ pub mod shard;
 use crate::models::infer::{quantize_model, ModelParams, QModel};
 use crate::models::ModelSpec;
 use crate::rng::Rng;
+use std::collections::HashSet;
 
 /// A mixed-precision configuration: one weight bit-width per
 /// quantizable layer.
@@ -24,73 +25,184 @@ pub type Config = Vec<u32>;
 /// The candidate widths, most to least precise.
 pub const WIDTHS: [u32; 3] = [8, 4, 2];
 
-/// Enumerate configurations with the paper's pruning strategy.
+/// A lazily enumerable configuration space with the paper's pruning
+/// strategy — the streaming counterpart of [`enumerate`], bit-identical
+/// to it in content and order for every regime.
 ///
 /// * layers in `pinned` (the sensitive initial layer(s)) stay at 8-bit,
-/// * if the pruned space `3^(L-|pinned|)` fits in `budget`, enumerate it
-///   exhaustively (the paper's small-model regime),
-/// * otherwise emit the structured families the paper's large-model
-///   exploration concentrates on — uniform configs, precision
-///   staircases (early layers high precision, later layers low) — and
-///   fill the remaining budget with seeded random configs.
-pub fn enumerate(n_layers: usize, pinned: &[usize], budget: usize, seed: u64) -> Vec<Config> {
-    let free: Vec<usize> = (0..n_layers).filter(|i| !pinned.contains(i)).collect();
-    let exhaustive_count = 3usize.checked_pow(free.len() as u32);
-    let mut out: Vec<Config> = Vec::new();
+/// * if the pruned space `3^(L-|pinned|)` fits in `budget`, the space
+///   is **exhaustive**: configuration `i` is the mixed-radix base-3
+///   decode of `i` over the free layers (ascending), so [`get`] is
+///   O(L) with O(1) state and nothing is ever materialized — a 10^6+
+///   space costs as much memory as one config,
+/// * otherwise the space holds the **structured families** the paper's
+///   large-model exploration concentrates on (uniforms, precision
+///   staircases) plus a seeded random fill — at most `budget` configs
+///   (never `3^L`), materialized because the random fill is
+///   dedup-dependent and has no independent index decode.
+///
+/// Index decode contract: `space.get(i)` equals `enumerate(..)[i]` for
+/// every `i < space.len()`, and [`iter`](ConfigSpace::iter) yields
+/// exactly `get(0), get(1), …` — the global enumeration indices that
+/// [`ShardSpec`](shard::ShardSpec) partitions and the sweep artifacts
+/// record.
+///
+/// [`get`]: ConfigSpace::get
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    n_layers: usize,
+    free: Vec<usize>,
+    kind: SpaceKind,
+}
 
-    if let Some(total) = exhaustive_count {
-        if total <= budget {
-            for mut idx in 0..total {
-                let mut cfg = vec![8u32; n_layers];
-                for &l in &free {
-                    cfg[l] = WIDTHS[idx % 3];
-                    idx /= 3;
-                }
+#[derive(Debug, Clone)]
+enum SpaceKind {
+    /// `3^free` fits the budget: pure mixed-radix decode, no storage.
+    Exhaustive { total: usize },
+    /// Structured families + seeded random fill, budget-bounded.
+    Sampled { configs: Vec<Config> },
+}
+
+impl ConfigSpace {
+    /// Build the space for `(n_layers, pinned, budget, seed)` — the
+    /// same parameters (and the same output) as [`enumerate`].
+    pub fn new(n_layers: usize, pinned: &[usize], budget: usize, seed: u64) -> ConfigSpace {
+        let free: Vec<usize> = (0..n_layers).filter(|i| !pinned.contains(i)).collect();
+        if let Some(total) = 3usize.checked_pow(free.len() as u32) {
+            if total <= budget {
+                return ConfigSpace { n_layers, free, kind: SpaceKind::Exhaustive { total } };
+            }
+        }
+
+        // Structured regime. Dedup is hash-set keyed (the families
+        // overlap; `contains` on the output vector would be O(n²) over
+        // the budget) and keeps the first occurrence, so content and
+        // order match the historical scan exactly.
+        let mut seen: HashSet<Config> = HashSet::new();
+        let mut out: Vec<Config> = Vec::new();
+        let mut push_unique = |cfg: Config, out: &mut Vec<Config>| {
+            if seen.insert(cfg.clone()) {
                 out.push(cfg);
             }
-            return out;
-        }
-    }
+        };
 
-    let push_unique = |cfg: Config, out: &mut Vec<Config>| {
-        if !out.contains(&cfg) {
-            out.push(cfg);
-        }
-    };
-
-    // Uniform configurations.
-    for w in WIDTHS {
-        let mut cfg = vec![w; n_layers];
-        for &p in pinned {
-            cfg[p] = 8;
-        }
-        push_unique(cfg, &mut out);
-    }
-    // Staircases: layers < split stay high, the tail drops to `low`
-    // (monotone-precision families, O(L²) of them).
-    for split in 0..=free.len() {
-        for (high, low) in [(8u32, 4u32), (8, 2), (4, 2)] {
-            let mut cfg = vec![8u32; n_layers];
-            for (j, &l) in free.iter().enumerate() {
-                cfg[l] = if j < split { high } else { low };
-            }
+        // Uniform configurations.
+        for w in WIDTHS {
+            let mut cfg = vec![w; n_layers];
             for &p in pinned {
                 cfg[p] = 8;
             }
             push_unique(cfg, &mut out);
         }
-    }
-    // Random fill to budget.
-    let mut rng = Rng::new(seed);
-    while out.len() < budget {
-        let mut cfg = vec![8u32; n_layers];
-        for &l in &free {
-            cfg[l] = WIDTHS[rng.below(3) as usize];
+        // Staircases: layers < split stay high, the tail drops to `low`
+        // (monotone-precision families, O(L²) of them).
+        for split in 0..=free.len() {
+            for (high, low) in [(8u32, 4u32), (8, 2), (4, 2)] {
+                let mut cfg = vec![8u32; n_layers];
+                for (j, &l) in free.iter().enumerate() {
+                    cfg[l] = if j < split { high } else { low };
+                }
+                for &p in pinned {
+                    cfg[p] = 8;
+                }
+                push_unique(cfg, &mut out);
+            }
         }
-        push_unique(cfg, &mut out);
+        // Random fill to budget.
+        let mut rng = Rng::new(seed);
+        while out.len() < budget {
+            let mut cfg = vec![8u32; n_layers];
+            for &l in &free {
+                cfg[l] = WIDTHS[rng.below(3) as usize];
+            }
+            push_unique(cfg, &mut out);
+        }
+        out.truncate(budget);
+        ConfigSpace { n_layers, free, kind: SpaceKind::Sampled { configs: out } }
     }
-    out.truncate(budget);
-    out
+
+    /// Number of configurations in the space.
+    pub fn len(&self) -> usize {
+        match &self.kind {
+            SpaceKind::Exhaustive { total } => *total,
+            SpaceKind::Sampled { configs } => configs.len(),
+        }
+    }
+
+    /// True when the space holds no configurations (a zero budget).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True in the exhaustive (index-decoded) regime — the regime a
+    /// merged artifact needs for the coverage check, and the one where
+    /// streaming beats materializing by the full `3^free` factor.
+    pub fn is_exhaustive(&self) -> bool {
+        matches!(self.kind, SpaceKind::Exhaustive { .. })
+    }
+
+    /// Decode the configuration at global enumeration index `i`.
+    ///
+    /// Exhaustive regime: mixed-radix base-3 decode over the free
+    /// layers ascending, pinned layers at 8 — O(L), no lookup.
+    /// Structured regime: the stored sequence. Panics when `i` is out
+    /// of range (callers hold `i < len()` by construction).
+    pub fn get(&self, i: usize) -> Config {
+        match &self.kind {
+            SpaceKind::Exhaustive { total } => {
+                assert!(i < *total, "config index {i} out of a {total}-config space");
+                let mut cfg = vec![8u32; self.n_layers];
+                let mut rest = i;
+                for &l in &self.free {
+                    cfg[l] = WIDTHS[rest % 3];
+                    rest /= 3;
+                }
+                cfg
+            }
+            SpaceKind::Sampled { configs } => configs[i].clone(),
+        }
+    }
+
+    /// Stream the space in enumeration order: yields `get(0), get(1),
+    /// …` — one configuration materialized at a time.
+    pub fn iter(&self) -> ConfigSpaceIter<'_> {
+        ConfigSpaceIter { space: self, next: 0 }
+    }
+}
+
+/// Streaming iterator over a [`ConfigSpace`] (see
+/// [`ConfigSpace::iter`]).
+pub struct ConfigSpaceIter<'a> {
+    space: &'a ConfigSpace,
+    next: usize,
+}
+
+impl Iterator for ConfigSpaceIter<'_> {
+    type Item = Config;
+
+    fn next(&mut self) -> Option<Config> {
+        if self.next >= self.space.len() {
+            return None;
+        }
+        let cfg = self.space.get(self.next);
+        self.next += 1;
+        Some(cfg)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.space.len() - self.next;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for ConfigSpaceIter<'_> {}
+
+/// Enumerate configurations with the paper's pruning strategy — the
+/// materialized view of [`ConfigSpace`] (see there for the regimes).
+/// Prefer streaming the space for anything sized by `3^L`; this is the
+/// small-space convenience the harness tests and examples use.
+pub fn enumerate(n_layers: usize, pinned: &[usize], budget: usize, seed: u64) -> Vec<Config> {
+    ConfigSpace::new(n_layers, pinned, budget, seed).iter().collect()
 }
 
 /// Default pinning: the first quantizable layer (the paper pins the
@@ -214,6 +326,66 @@ mod tests {
         assert!(cfgs.iter().any(|c| c[1..].iter().all(|&b| b == 4)));
         // Deterministic.
         assert_eq!(cfgs, enumerate(28, &[0], 200, 7));
+    }
+
+    #[test]
+    fn space_streams_bit_identical_to_enumerate() {
+        for (n_layers, pinned, budget, seed) in [
+            (4usize, vec![0usize], 100usize, 1u64), // exhaustive
+            (6, vec![0, 3], 100, 9),                // structured (3^4 > 100)
+            (28, vec![0], 200, 7),                  // structured + random fill
+            (3, vec![], 27, 0),                     // exhaustive, nothing pinned
+        ] {
+            let space = ConfigSpace::new(n_layers, &pinned, budget, seed);
+            let materialized = enumerate(n_layers, &pinned, budget, seed);
+            assert_eq!(space.len(), materialized.len());
+            let streamed: Vec<Config> = space.iter().collect();
+            assert_eq!(streamed, materialized, "stream != enumerate for n={n_layers}");
+            for (i, cfg) in materialized.iter().enumerate() {
+                assert_eq!(&space.get(i), cfg, "get({i}) drifted for n={n_layers}");
+            }
+        }
+    }
+
+    #[test]
+    fn hash_dedup_matches_the_quadratic_scan() {
+        // The structured regime's dedup moved from `Vec::contains` to a
+        // first-occurrence hash set; this re-runs the historical O(n²)
+        // scan as the oracle so structured+random output provably did
+        // not change.
+        let (n_layers, pinned, budget, seed) = (28usize, vec![0usize], 200usize, 7u64);
+        let free: Vec<usize> = (0..n_layers).filter(|i| !pinned.contains(i)).collect();
+        let mut out: Vec<Config> = Vec::new();
+        let push_unique = |cfg: Config, out: &mut Vec<Config>| {
+            if !out.contains(&cfg) {
+                out.push(cfg);
+            }
+        };
+        for w in WIDTHS {
+            let mut cfg = vec![w; n_layers];
+            cfg[0] = 8;
+            push_unique(cfg, &mut out);
+        }
+        for split in 0..=free.len() {
+            for (high, low) in [(8u32, 4u32), (8, 2), (4, 2)] {
+                let mut cfg = vec![8u32; n_layers];
+                for (j, &l) in free.iter().enumerate() {
+                    cfg[l] = if j < split { high } else { low };
+                }
+                cfg[0] = 8;
+                push_unique(cfg, &mut out);
+            }
+        }
+        let mut rng = Rng::new(seed);
+        while out.len() < budget {
+            let mut cfg = vec![8u32; n_layers];
+            for &l in &free {
+                cfg[l] = WIDTHS[rng.below(3) as usize];
+            }
+            push_unique(cfg, &mut out);
+        }
+        out.truncate(budget);
+        assert_eq!(enumerate(n_layers, &pinned, budget, seed), out);
     }
 
     #[test]

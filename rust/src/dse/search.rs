@@ -68,7 +68,8 @@ impl SearchStrategy {
     }
 }
 
-/// Guided-search knobs (`--rungs`, `--eta`, reusing the sweep `--seed`).
+/// Guided-search knobs (`--rungs`, `--eta`, `--max-alive`, reusing the
+/// sweep `--seed`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GuidedOpts {
     /// Successive-halving rungs, counting the final full evaluation.
@@ -79,11 +80,18 @@ pub struct GuidedOpts {
     pub eta: usize,
     /// Seed for the rung-promotion tie-break stride.
     pub seed: u64,
+    /// Cap on the configurations the driver may materialize for full
+    /// evaluation (rung survivors plus repair re-admissions). Rung
+    /// bookkeeping is index-only, so this cap is the driver's config
+    /// storage bound; exceeding it is a typed error (`--max-alive`) —
+    /// a sweep that cannot stay within memory fails loudly up front
+    /// instead of OOMing. `None` is unbounded.
+    pub max_alive: Option<usize>,
 }
 
 impl Default for GuidedOpts {
     fn default() -> Self {
-        GuidedOpts { rungs: 3, eta: 2, seed: 0 }
+        GuidedOpts { rungs: 3, eta: 2, seed: 0, max_alive: None }
     }
 }
 
@@ -154,6 +162,13 @@ pub struct GuidedStats {
     /// Configurations evaluated on the full eval set. `space -
     /// full_evals` is what the guided driver saved over exhaustive.
     pub full_evals: usize,
+    /// High-water mark of configurations the driver held *materialized*
+    /// at once: fully-evaluated points retained plus the batch in
+    /// flight. Rung scoring streams configs index-by-index (the
+    /// evaluator decodes and drops each one), so this — not the space
+    /// size — is the driver's config-storage footprint: O(alive set +
+    /// front), never O(space). [`GuidedOpts::max_alive`] caps it.
+    pub peak_alive: usize,
     /// True when the space/opts were too small for rungs and the driver
     /// fell back to a plain full sweep.
     pub degenerate: bool,
@@ -215,28 +230,62 @@ fn lower_bound(correct: u32, n: usize) -> f32 {
 /// every cost axis, so an exact tie is never pruned (the front's
 /// stable-representative contract needs the lowest index alive).
 /// Returns the dropped indices (ascending).
+///
+/// The scan streams the rung entries twice against an **incremental
+/// dominator frontier**: the Pareto-minimal entries under (every cost
+/// axis ascending, accuracy lower bound descending). Whenever some
+/// entry prunes `i`, its frontier cover prunes `i` too — weak cover
+/// composes with the strictness requirement — so the verdicts are
+/// identical to the historical all-pairs scan while the state held is
+/// O(|front|) cost triples, not O(alive), and the work O(alive ·
+/// |front|), not O(alive²): the property that lets rung 0 of a 10^6
+/// -config space finish at all.
 fn interval_prune(
     alive: &mut Vec<usize>,
-    costs: &[CostVec],
+    cost_of: &dyn Fn(usize) -> CostVec,
     partial: &[Option<(u32, usize)>],
     n: usize,
 ) -> Vec<usize> {
-    let bounds: Vec<(f32, f32)> = alive
-        .iter()
-        .map(|&i| {
-            let (c, m) = partial[i].expect("alive config has a rung result");
-            (lower_bound(c, n), upper_bound(c, m, n))
-        })
-        .collect();
+    let bound = |i: usize| {
+        let (c, m) = partial[i].expect("alive config has a rung result");
+        (lower_bound(c, n), upper_bound(c, m, n))
+    };
+    // Pass 1: build the dominator frontier over all rung entries (a
+    // pruned entry may still prune others, exactly as in the all-pairs
+    // scan). `(position in alive, cost, lower bound)`; ties keep the
+    // first entry seen — either member of a tie pair prunes the same
+    // set, so one representative suffices.
+    let mut front: Vec<(usize, CostVec, f32)> = Vec::new();
+    for (a, &i) in alive.iter().enumerate() {
+        let c = cost_of(i);
+        let lb = bound(i).0;
+        let mut covered = false;
+        let mut q = 0;
+        while q < front.len() {
+            let (_, fc, flb) = &front[q];
+            if fc.le(&c) && *flb >= lb {
+                covered = true;
+                break;
+            }
+            if c.le(fc) && lb >= *flb {
+                front.swap_remove(q);
+                continue;
+            }
+            q += 1;
+        }
+        if !covered {
+            front.push((a, c, lb));
+        }
+    }
+    // Pass 2: keep whatever no frontier member provably prunes.
     let keep: Vec<bool> = alive
         .iter()
         .enumerate()
         .map(|(a, &i)| {
-            !alive.iter().enumerate().any(|(b, &j)| {
-                a != b
-                    && costs[j].le(&costs[i])
-                    && bounds[b].0 >= bounds[a].1
-                    && (bounds[b].0 > bounds[a].1 || costs[j].lt(&costs[i]))
+            let c = cost_of(i);
+            let ub = bound(i).1;
+            !front.iter().any(|&(b, ref fc, flb)| {
+                a != b && fc.le(&c) && flb >= ub && (flb > ub || fc.lt(&c))
             })
         })
         .collect();
@@ -257,7 +306,7 @@ fn interval_prune(
 /// demoted indices.
 fn promote(
     alive: &mut Vec<usize>,
-    costs: &[CostVec],
+    cost_of: &dyn Fn(usize) -> CostVec,
     partial: &[Option<(u32, usize)>],
     quota: usize,
     seed: u64,
@@ -266,16 +315,20 @@ fn promote(
         return Vec::new();
     }
     let hits = |i: usize| partial[i].expect("alive config has a rung result").0;
+    // Price the survivors once, aligned with `alive` — transient
+    // O(alive) cost triples, freed when the rung ends.
+    let costs: Vec<CostVec> = alive.iter().map(|&i| cost_of(i)).collect();
     // Rung-level fronts on each cost axis, over temporary points whose
     // "accuracy" is the prefix hit count.
     let tmp: Vec<EvalPoint> = alive
         .iter()
-        .map(|&i| EvalPoint {
+        .enumerate()
+        .map(|(pos, &i)| EvalPoint {
             config: Vec::new(),
             accuracy: hits(i) as f32,
-            mac_instructions: costs[i].mac,
-            cycles: costs[i].cycles,
-            mem_accesses: costs[i].mem,
+            mac_instructions: costs[pos].mac,
+            cycles: costs[pos].cycles,
+            mem_accesses: costs[pos].mem,
             iss_cycles: None,
             divergence: None,
         })
@@ -296,9 +349,9 @@ fn promote(
     // Fill the remaining quota in (hits desc, cycles asc, index asc)
     // order, walking maximal runs of equal (hits, cycles).
     let mut order: Vec<usize> = (0..alive.len()).collect();
-    let key = |pos: usize| (u32::MAX - hits(alive[pos]), costs[alive[pos]].cycles, alive[pos]);
+    let key = |pos: usize| (u32::MAX - hits(alive[pos]), costs[pos].cycles, alive[pos]);
     order.sort_by_key(|&pos| key(pos));
-    let run_key = |pos: usize| (hits(alive[pos]), costs[alive[pos]].cycles);
+    let run_key = |pos: usize| (hits(alive[pos]), costs[pos].cycles);
     let mut w = 0;
     while w < order.len() && kept < target {
         let mut e = w + 1;
@@ -352,29 +405,19 @@ fn promote(
 /// Is dropped configuration `c` provably dominated by a
 /// fully-evaluated point? "Provably" means: some measured point is at
 /// least as accurate as `c` could *possibly* be (its accuracy upper
-/// bound) at no more cost on **every** analytic axis, with strictness
-/// on accuracy or on every cost axis. A configuration this cannot
-/// certify gets repaired (fully evaluated) instead of guessed about.
-fn dominated_at_optimism(
-    c: usize,
-    costs: &[CostVec],
-    partial: &[Option<(u32, usize)>],
-    full: &[Option<EvalPoint>],
-    n: usize,
-) -> bool {
-    let (cor, m) = partial[c].expect("dropped config has a rung result");
-    let hi = upper_bound(cor, m, n);
-    full.iter().enumerate().any(|(d, p)| match p {
-        Some(p) => {
-            costs[d].le(&costs[c])
-                && p.accuracy >= hi
-                && (p.accuracy > hi || costs[d].lt(&costs[c]))
-        }
-        None => false,
-    })
+/// bound, `hi`) at no more cost on **every** analytic axis, with
+/// strictness on accuracy or on every cost axis. A configuration this
+/// cannot certify gets repaired (fully evaluated) instead of guessed
+/// about. `full_costs` is the measured points' `(cost, accuracy)`
+/// table, priced once per repair round.
+fn dominated_at_optimism(hi: f32, cc: &CostVec, full_costs: &[(CostVec, f32)]) -> bool {
+    full_costs.iter().any(|(dc, acc)| dc.le(cc) && *acc >= hi && (*acc > hi || dc.lt(cc)))
 }
 
-/// Run the guided search over `costs.len()` configurations.
+/// Run the guided search over `costs.len()` configurations — the
+/// slice-priced convenience wrapper over [`guided_search_stream`],
+/// for callers that already hold the cost table (small spaces, the
+/// property tests).
 ///
 /// * `costs` — analytic cost triple per configuration (index-aligned
 ///   with whatever slice the caller is searching);
@@ -398,21 +441,58 @@ pub fn guided_search(
     eval_partial: &(dyn Fn(&[usize], usize) -> Result<Vec<u32>> + Sync),
     eval_full: &(dyn Fn(&[usize]) -> Result<Vec<EvalPoint>> + Sync),
 ) -> Result<GuidedSweep> {
+    guided_search_stream(costs.len(), &|i| costs[i], n, opts, eval_partial, eval_full)
+}
+
+/// Run the guided search over a `space`-sized configuration stream —
+/// the engine behind [`guided_search`] and the streaming sweep stack.
+///
+/// Nothing here ever holds the space: `cost_of(i)` prices
+/// configuration `i` on demand (for a lazy
+/// [`ConfigSpace`](super::ConfigSpace) that is decode + price, O(L)
+/// and allocation-transient), the interval prune runs against an
+/// incremental dominator frontier (O(|front|) state), and the only
+/// O(space) structures are scalar ledgers (per-index rung results and
+/// the dropped-index list). Configurations are materialized solely for
+/// full evaluation — rung survivors plus repair re-admissions — so
+/// peak config storage is O(alive set + front), reported in
+/// [`GuidedStats::peak_alive`] and capped by
+/// [`GuidedOpts::max_alive`].
+pub fn guided_search_stream(
+    space: usize,
+    cost_of: &(dyn Fn(usize) -> CostVec + Sync),
+    n: usize,
+    opts: &GuidedOpts,
+    eval_partial: &(dyn Fn(&[usize], usize) -> Result<Vec<u32>> + Sync),
+    eval_full: &(dyn Fn(&[usize]) -> Result<Vec<EvalPoint>> + Sync),
+) -> Result<GuidedSweep> {
     ensure!(n > 0, "guided search needs a non-empty eval set");
-    let space = costs.len();
     let mut stats = GuidedStats { space, ..GuidedStats::default() };
+    let check_alive = |want: usize| -> Result<()> {
+        if let Some(cap) = opts.max_alive {
+            ensure!(
+                want <= cap,
+                "guided search: alive set of {want} configurations exceeds --max-alive {cap}; \
+                 raise the bound, add rungs/eta so pruning bites earlier, or shard the space"
+            );
+        }
+        Ok(())
+    };
 
     let full_sweep = |indices: Vec<usize>, mut stats: GuidedStats| -> Result<GuidedSweep> {
         let pts = eval_full(&indices)?;
         ensure!(pts.len() == indices.len(), "full evaluation returned a short batch");
         stats.full_evals += indices.len();
+        stats.peak_alive = stats.peak_alive.max(indices.len());
         Ok(GuidedSweep { points: indices.into_iter().zip(pts).collect(), stats })
     };
 
     let prefixes = rung_prefixes(space, n, opts);
     if prefixes.is_empty() {
         // Space or eval set too small for rungs: plain full sweep,
-        // bit-identical to exhaustive.
+        // bit-identical to exhaustive. Still a materialization of the
+        // whole space, so the alive cap applies.
+        check_alive(space)?;
         stats.degenerate = true;
         return full_sweep((0..space).collect(), stats);
     }
@@ -420,6 +500,7 @@ pub fn guided_search(
     let mut alive: Vec<usize> = (0..space).collect();
     let mut dropped: Vec<usize> = Vec::new();
     // Latest partial result per configuration: (hits, prefix length).
+    // Scalar ledger — O(space) small integers, never configs.
     let mut partial: Vec<Option<(u32, usize)>> = vec![None; space];
 
     for (r, &m) in prefixes.iter().enumerate() {
@@ -433,11 +514,11 @@ pub fn guided_search(
             }
             partial[i] = Some((c, m));
         }
-        let pruned_now = interval_prune(&mut alive, costs, &partial, n);
+        let pruned_now = interval_prune(&mut alive, &cost_of, &partial, n);
         let quota = alive.len().div_ceil(opts.eta);
         let demoted = promote(
             &mut alive,
-            costs,
+            &cost_of,
             &partial,
             quota,
             opts.seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -456,42 +537,59 @@ pub fn guided_search(
     }
 
     // Full evaluation of the survivors, through the same cached path
-    // the exhaustive sweep uses.
+    // the exhaustive sweep uses. `live` tracks the materialized-config
+    // high-water mark (points held + batch entering evaluation); this
+    // is the counter the bounded-memory contract is asserted against.
     alive.sort_unstable();
-    let mut full: Vec<Option<EvalPoint>> = vec![None; space];
+    let mut live = 0usize;
+    let mut full: std::collections::BTreeMap<usize, EvalPoint> = std::collections::BTreeMap::new();
+    check_alive(live + alive.len())?;
     let pts = eval_full(&alive)?;
     ensure!(pts.len() == alive.len(), "full evaluation returned a short batch");
     stats.full_evals += alive.len();
+    live += alive.len();
+    stats.peak_alive = stats.peak_alive.max(live);
     for (&i, p) in alive.iter().zip(pts) {
-        full[i] = Some(p);
+        full.insert(i, p);
     }
 
     // Repair to the zero-regret fixpoint: fully evaluate every dropped
     // configuration the measured points cannot prove dominated, until
     // none remain. Each round strictly shrinks `dropped`, so this
-    // terminates in at most `space` rounds.
+    // terminates in at most `space` rounds. The measured points are
+    // priced once per round — the dominance scan is |dropped| × |full|
+    // and must not re-decode the space per pair.
     loop {
+        let full_costs: Vec<(CostVec, f32)> =
+            full.iter().map(|(&d, p)| (cost_of(d), p.accuracy)).collect();
         let mut need: Vec<usize> = dropped
             .iter()
             .copied()
-            .filter(|&c| !dominated_at_optimism(c, costs, &partial, &full, n))
+            .filter(|&c| {
+                let (cor, m) = partial[c].expect("dropped config has a rung result");
+                !dominated_at_optimism(upper_bound(cor, m, n), &cost_of(c), &full_costs)
+            })
             .collect();
         if need.is_empty() {
             break;
         }
         need.sort_unstable();
+        check_alive(live + need.len())?;
         let pts = eval_full(&need)?;
         ensure!(pts.len() == need.len(), "repair evaluation returned a short batch");
         stats.full_evals += need.len();
         stats.repaired += need.len();
+        live += need.len();
+        stats.peak_alive = stats.peak_alive.max(live);
         for (&i, p) in need.iter().zip(pts) {
-            full[i] = Some(p);
+            full.insert(i, p);
         }
-        dropped.retain(|&i| full[i].is_none());
+        dropped.retain(|&i| !full.contains_key(&i));
     }
 
-    let points: Vec<(usize, EvalPoint)> =
-        full.into_iter().enumerate().filter_map(|(i, p)| p.map(|p| (i, p))).collect();
+    // BTreeMap iteration is ascending by key — the same order the
+    // historical dense table produced.
+    let points: Vec<(usize, EvalPoint)> = full.into_iter().collect();
     Ok(GuidedSweep { points, stats })
 }
 
@@ -587,7 +685,7 @@ mod tests {
 
     #[test]
     fn rung_prefix_schedule() {
-        let o = |rungs, eta| GuidedOpts { rungs, eta, seed: 0 };
+        let o = |rungs, eta| GuidedOpts { rungs, eta, seed: 0, max_alive: None };
         assert_eq!(rung_prefixes(100, 128, &o(3, 2)), vec![32, 64]);
         assert_eq!(rung_prefixes(100, 8, &o(4, 2)), vec![1, 2, 4]);
         assert_eq!(rung_prefixes(100, 9, &o(2, 3)), vec![3]);
@@ -619,7 +717,8 @@ mod tests {
             let space = 9 + (seed as usize * 7) % 30;
             let n = 8 + (seed as usize % 3) * 12;
             let land = Landscape::random(seed, space, n);
-            let opts = GuidedOpts { rungs: 2 + (seed as usize % 3), eta: 2 + (seed as usize % 2), seed };
+            let opts =
+                GuidedOpts { rungs: 2 + (seed as usize % 3), eta: 2 + (seed as usize % 2), seed, max_alive: None };
             let g = run(&land, &opts);
             assert_zero_regret(&land, &g, &format!("seed {seed}"));
             assert_eq!(g.stats.full_evals, g.points.len(), "seed {seed}: eval ledger");
@@ -630,7 +729,7 @@ mod tests {
     #[test]
     fn deterministic_under_a_fixed_seed() {
         let land = Landscape::random(99, 24, 16);
-        let opts = GuidedOpts { rungs: 3, eta: 2, seed: 0xD5E };
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed: 0xD5E, max_alive: None };
         let a = run(&land, &opts);
         let b = run(&land, &opts);
         assert_eq!(a, b, "two guided runs with one seed diverged");
@@ -652,7 +751,7 @@ mod tests {
             .map(|i| (0..n).map(|j| i == 0 || (j >= n / 2 && (i + j) % 3 == 0)).collect())
             .collect();
         let land = Landscape { costs, n, correct };
-        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 7 });
+        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 7, max_alive: None });
         assert_zero_regret(&land, &g, "designed landscape");
         assert!(
             g.stats.full_evals < space,
@@ -694,12 +793,116 @@ mod tests {
             row(16),
         ];
         let land = Landscape { costs, n, correct };
-        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 1 });
+        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 1, max_alive: None });
         assert_zero_regret(&land, &g, "tie landscape");
         let gpts: Vec<EvalPoint> = g.points.iter().map(|(_, p)| p.clone()).collect();
         let front: Vec<usize> =
             pareto_front(&gpts, |p| p.cycles).into_iter().map(|pos| g.points[pos].0).collect();
         assert!(front.contains(&1), "tie representative lost: front {front:?}");
         assert!(!front.contains(&2), "duplicate value pair double-counted: {front:?}");
+    }
+
+    #[test]
+    fn stream_engine_is_byte_identical_to_the_slice_wrapper() {
+        // `guided_search` is a wrapper over `guided_search_stream`;
+        // pricing by closure must change nothing, including the stats.
+        for seed in [0u64, 5, 17, 0xD5E] {
+            let land = Landscape::random(seed, 9 + (seed as usize * 11) % 35, 16);
+            let opts = GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None };
+            let ep = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+                Ok(idxs
+                    .iter()
+                    .map(|&i| land.correct[i][..m].iter().filter(|&&b| b).count() as u32)
+                    .collect())
+            };
+            let ef = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+                Ok(idxs.iter().map(|&i| land.point(i)).collect())
+            };
+            let a = guided_search(&land.costs, land.n, &opts, &ep, &ef).unwrap();
+            let b = guided_search_stream(
+                land.costs.len(),
+                &|i| land.costs[i],
+                land.n,
+                &opts,
+                &ep,
+                &ef,
+            )
+            .unwrap();
+            assert_eq!(a, b, "seed {seed}: stream engine diverged from the slice wrapper");
+        }
+    }
+
+    #[test]
+    fn peak_alive_ledger_tracks_materialized_configs_only() {
+        // Designed landscape (cheap dominant config): the driver must
+        // report a peak far below the space — the bounded-memory
+        // contract is this counter, not wall-clock.
+        let space = 24;
+        let n = 16;
+        let costs: Vec<CostVec> = (0..space as u64)
+            .map(|i| CostVec { cycles: 10 + i * 5, mac: 20 + i * 3, mem: 30 + i * 7 })
+            .collect();
+        let correct: Vec<Vec<bool>> = (0..space)
+            .map(|i| (0..n).map(|j| i == 0 || (j >= n / 2 && (i + j) % 3 == 0)).collect())
+            .collect();
+        let land = Landscape { costs, n, correct };
+        let g = run(&land, &GuidedOpts { rungs: 3, eta: 2, seed: 7, max_alive: None });
+        assert_eq!(g.stats.peak_alive, g.stats.full_evals, "peak != cumulative materialized");
+        assert!(
+            g.stats.peak_alive < space,
+            "peak alive {} not bounded below the {space}-config space",
+            g.stats.peak_alive
+        );
+    }
+
+    #[test]
+    fn max_alive_overflow_is_a_typed_error() {
+        // Flat landscape: everything ties, nothing prunes, so the
+        // survivor set is ~space/eta^rungs and overflows a small cap —
+        // the sweep must fail loudly, naming the knob.
+        let space = 64;
+        let n = 16;
+        let costs = vec![CostVec { cycles: 10, mac: 10, mem: 10 }; space];
+        let correct: Vec<Vec<bool>> = (0..space).map(|_| vec![true; n]).collect();
+        let land = Landscape { costs, n, correct };
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed: 3, max_alive: Some(4) };
+        let ep = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+            Ok(idxs
+                .iter()
+                .map(|&i| land.correct[i][..m].iter().filter(|&&b| b).count() as u32)
+                .collect())
+        };
+        let ef = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+            Ok(idxs.iter().map(|&i| land.point(i)).collect())
+        };
+        let err = guided_search(&land.costs, land.n, &opts, &ep, &ef).unwrap_err();
+        assert!(err.to_string().contains("--max-alive"), "untyped overflow error: {err}");
+        // A generous cap changes nothing about the result.
+        let loose = GuidedOpts { max_alive: Some(space), ..opts };
+        let strict = GuidedOpts { max_alive: None, ..opts };
+        let a = guided_search(&land.costs, land.n, &loose, &ep, &ef).unwrap();
+        let b = guided_search(&land.costs, land.n, &strict, &ep, &ef).unwrap();
+        assert_eq!(a.points, b.points, "a non-binding cap changed the sweep");
+    }
+
+    #[test]
+    fn degenerate_sweep_respects_the_alive_cap() {
+        let land = Landscape::random(4, RUNG_THRESHOLD - 1, 16);
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed: 0, max_alive: Some(2) };
+        let err = run_result(&land, &opts).unwrap_err();
+        assert!(err.to_string().contains("--max-alive"), "untyped overflow error: {err}");
+    }
+
+    fn run_result(land: &Landscape, opts: &GuidedOpts) -> Result<GuidedSweep> {
+        let ep = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+            Ok(idxs
+                .iter()
+                .map(|&i| land.correct[i][..m].iter().filter(|&&b| b).count() as u32)
+                .collect())
+        };
+        let ef = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+            Ok(idxs.iter().map(|&i| land.point(i)).collect())
+        };
+        guided_search(&land.costs, land.n, opts, &ep, &ef)
     }
 }

@@ -131,6 +131,25 @@ impl ShardSpec {
     pub fn member_indices(&self, configs: &[Config]) -> Vec<usize> {
         (0..configs.len()).filter(|&i| self.owns(i, &configs[i], configs.len())).collect()
     }
+
+    /// The global enumeration indices this shard owns of a lazily
+    /// enumerated space, in order — the streaming counterpart of
+    /// [`ShardSpec::member_indices`], identical in output. Range shards
+    /// are pure index arithmetic (no config is ever decoded); hash
+    /// shards decode each config transiently for its key. Either way
+    /// only the owned indices are collected, so partitioning a
+    /// 10^6-config space costs O(shard), never the complement.
+    pub fn member_indices_in(&self, space: &super::ConfigSpace) -> Vec<usize> {
+        match self.strategy {
+            ShardStrategy::Hash => (0..space.len())
+                .filter(|&i| config_hash(&space.get(i)) as usize % self.count == self.index)
+                .collect(),
+            ShardStrategy::Range => {
+                let (lo, hi) = range_bounds(space.len(), self.count, self.index);
+                (lo..hi).collect()
+            }
+        }
+    }
 }
 
 impl fmt::Display for ShardSpec {
@@ -895,6 +914,29 @@ mod tests {
                     seen.iter().all(|&c| c == 1),
                     "{strategy:?} x{count}: ownership counts {seen:?}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_partition_matches_the_materialized_one() {
+        // `member_indices_in` over a lazy space must agree exactly with
+        // `member_indices` over the materialized enumeration, in both
+        // regimes and under both strategies.
+        for (n_layers, budget, seed) in [(4usize, 100usize, 1u64), (28, 120, 7)] {
+            let space = crate::dse::ConfigSpace::new(n_layers, &[0], budget, seed);
+            let configs = crate::dse::enumerate(n_layers, &[0], budget, seed);
+            for strategy in [ShardStrategy::Hash, ShardStrategy::Range] {
+                for count in 1..=5 {
+                    for index in 0..count {
+                        let spec = ShardSpec::new(index, count, strategy).unwrap();
+                        assert_eq!(
+                            spec.member_indices_in(&space),
+                            spec.member_indices(&configs),
+                            "{strategy:?} {index}/{count} over n={n_layers}"
+                        );
+                    }
+                }
             }
         }
     }

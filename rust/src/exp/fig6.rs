@@ -26,7 +26,7 @@ use crate::coordinator::Coordinator;
 use crate::dse::pareto::pareto_front;
 use crate::dse::search::SearchStrategy;
 use crate::dse::shard::{merge, ShardArtifact, ShardSpec};
-use crate::dse::{default_pinned, enumerate, EvalPoint};
+use crate::dse::{default_pinned, ConfigSpace, EvalPoint};
 use crate::json::Json;
 use crate::error::Result;
 use std::path::{Path, PathBuf};
@@ -130,23 +130,27 @@ pub fn sweep_model(opts: &ExpOpts, name: &str) -> Result<Sweep> {
     let coordinator = opts.coordinator(name)?;
     let analysis = crate::models::analyze(&coordinator.model.spec);
     let n = analysis.layers.len();
-    let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
+    // The space stays lazy: both drivers stream configs by global
+    // enumeration index and decode one at a time.
+    let space = ConfigSpace::new(n, &default_pinned(), opts.budget, opts.seed);
+    opts.check_space(&space)?;
     let (indices, points): (Vec<usize>, Vec<EvalPoint>) = match opts.search {
         SearchStrategy::Exhaustive => {
-            let points = coordinator.run_sweep(&configs, opts.eval_n)?;
+            let points = coordinator.run_sweep_space(&space, opts.eval_n)?;
             ((0..points.len()).collect(), points)
         }
         SearchStrategy::Guided => {
-            let g = coordinator.sweep_guided(&configs, opts.eval_n, &opts.guided_opts())?;
+            let g = coordinator.sweep_guided_space(&space, opts.eval_n, &opts.guided_opts())?;
             eprintln!(
                 "[fig6] guided search ({name}): {}/{} configs fully evaluated \
-                 ({} partial evals, {} pruned, {} halved, {} repaired)",
+                 ({} partial evals, {} pruned, {} halved, {} repaired, peak alive {})",
                 g.stats.full_evals,
                 g.stats.space,
                 g.stats.partial_evals,
                 g.stats.pruned,
                 g.stats.halved,
                 g.stats.repaired,
+                g.stats.peak_alive,
             );
             g.points.into_iter().unzip()
         }
@@ -250,7 +254,7 @@ fn point_json(p: &EvalPoint) -> Json {
     ])
 }
 
-/// Run one shard of a model's sweep: enumerate the full space (the
+/// Run one shard of a model's sweep: open the full space lazily (the
 /// enumeration is deterministic, so every shard sees the same order),
 /// evaluate only the configs the shard owns, and package the points —
 /// tagged with their global enumeration indices — plus the session/
@@ -301,7 +305,8 @@ pub fn sweep_shard_resume(
     let coordinator = opts.coordinator(name)?;
     let analysis = crate::models::analyze(&coordinator.model.spec);
     let n = analysis.layers.len();
-    let configs = enumerate(n, &default_pinned(), opts.budget, opts.seed);
+    let space = ConfigSpace::new(n, &default_pinned(), opts.budget, opts.seed);
+    opts.check_space(&space)?;
     let baseline_instrs: u64 =
         analysis.layers.iter().map(|l| crate::dse::mac_instructions(l, None)).sum();
 
@@ -323,7 +328,7 @@ pub fn sweep_shard_resume(
         crate::ensure!(
             p.model == name
                 && p.spec == *shard
-                && p.total_configs == configs.len()
+                && p.total_configs == space.len()
                 && p.seed == opts.seed
                 && p.eval_n == opts.eval_n
                 && p.evaluator == coordinator.evaluator_name()
@@ -339,7 +344,7 @@ pub fn sweep_shard_resume(
         );
         for (i, pt) in &p.points {
             crate::ensure!(
-                configs.get(*i).is_some_and(|c| *c == pt.config),
+                *i < space.len() && space.get(*i) == pt.config,
                 "existing shard artifact for `{name}` is mistagged at config #{i}; \
                  delete it to re-evaluate the shard"
             );
@@ -347,7 +352,7 @@ pub fn sweep_shard_resume(
         }
     }
 
-    let owned = shard.member_indices(&configs);
+    let owned = shard.member_indices_in(&space);
     let missing: Vec<usize> = owned.iter().copied().filter(|i| !done.contains(i)).collect();
 
     let mut points: Vec<(usize, crate::dse::EvalPoint)> =
@@ -358,7 +363,7 @@ pub fn sweep_shard_resume(
         model: name.to_string(),
         evaluator: coordinator.evaluator_name().to_string(),
         spec: *shard,
-        total_configs: configs.len(),
+        total_configs: space.len(),
         seed: opts.seed,
         eval_n: opts.eval_n,
         float_acc: coordinator.model.float_acc,
@@ -380,20 +385,20 @@ pub fn sweep_shard_resume(
         if let Some(p) = prior {
             return Ok(p.clone());
         }
-        let mine: Vec<crate::dse::Config> = owned.iter().map(|&i| configs[i].clone()).collect();
         let before = crate::sim::SimSession::global().stats.snapshot();
-        let g = coordinator.sweep_guided(&mine, opts.eval_n, &opts.guided_opts())?;
+        let g = coordinator.sweep_guided_indices(&space, &owned, opts.eval_n, &opts.guided_opts())?;
         let delta = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
         stats.add(&delta);
         eprintln!(
             "[fig6] guided search ({name} shard {shard}): {}/{} configs fully evaluated \
-             ({} partial evals, {} pruned, {} halved, {} repaired)",
+             ({} partial evals, {} pruned, {} halved, {} repaired, peak alive {})",
             g.stats.full_evals,
             g.stats.space,
             g.stats.partial_evals,
             g.stats.pruned,
             g.stats.halved,
             g.stats.repaired,
+            g.stats.peak_alive,
         );
         // Map the search's slice-local indices back to global
         // enumeration indices.
@@ -403,9 +408,8 @@ pub fn sweep_shard_resume(
     }
 
     for chunk in missing.chunks(SHARD_CHECKPOINT_EVERY) {
-        let mine: Vec<crate::dse::Config> = chunk.iter().map(|&i| configs[i].clone()).collect();
         let before = crate::sim::SimSession::global().stats.snapshot();
-        let new_points = coordinator.run_sweep(&mine, opts.eval_n)?;
+        let new_points = coordinator.sweep_space_indices(&space, chunk, opts.eval_n)?;
         let delta = crate::sim::SimSession::global().stats.snapshot().delta_since(&before);
         stats.add(&delta);
         points.extend(chunk.iter().copied().zip(new_points));
@@ -471,35 +475,36 @@ pub fn sweep_from_artifacts(opts: &ExpOpts, arts: &[ShardArtifact]) -> Result<Sw
     // sweep. Exhaustive merges must additionally cover the whole space;
     // guided merges legitimately carry a subset.
     let n = crate::models::analyze(&coordinator.model.spec).layers.len();
-    let configs = enumerate(n, &default_pinned(), opts.budget, merged.seed);
+    let space = ConfigSpace::new(n, &default_pinned(), opts.budget, merged.seed);
     if merged.search == SearchStrategy::Exhaustive {
         crate::ensure!(
-            configs.len() == merged.points.len(),
+            space.len() == merged.points.len(),
             "merged artifacts for `{}` carry {} configs but --budget {} with seed {} \
              enumerates {}; rerun the merge with the shard run's --budget",
             merged.model,
             merged.points.len(),
             opts.budget,
             merged.seed,
-            configs.len(),
+            space.len(),
         );
     }
     for (&i, p) in merged.indices.iter().zip(&merged.points) {
         crate::ensure!(
-            i < configs.len(),
+            i < space.len(),
             "merged artifacts for `{}` reference config #{i} but --budget {} with seed {} \
              enumerates only {}; rerun the merge with the shard run's --budget",
             merged.model,
             opts.budget,
             merged.seed,
-            configs.len(),
+            space.len(),
         );
+        let want = space.get(i);
         crate::ensure!(
-            configs[i] == p.config,
+            want == p.config,
             "shard artifacts for `{}` are mistagged: config #{i} should be {:?} \
              but the merged point carries {:?}",
             merged.model,
-            configs[i],
+            want,
             p.config,
         );
     }

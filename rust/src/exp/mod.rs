@@ -126,6 +126,18 @@ pub struct ExpOpts {
     pub rungs: usize,
     /// Halving factor for `--search guided` (`--eta`).
     pub eta: usize,
+    /// Hard cap on the enumerated space size a sweep harness will run
+    /// (`--space-budget`). The config space streams lazily, but an
+    /// exhaustive sweep still *evaluates* (and holds a point for)
+    /// every configuration — this knob makes an accidentally huge
+    /// sweep fail with a typed error up front, pointing at `--search
+    /// guided` / sharding, instead of grinding or OOMing. `None` (the
+    /// default) is unbounded.
+    pub space_budget: Option<usize>,
+    /// Cap on the configurations the guided driver may materialize for
+    /// full evaluation (`--max-alive`; see
+    /// [`GuidedOpts::max_alive`](crate::dse::search::GuidedOpts)).
+    pub max_alive: Option<usize>,
     /// Cluster core count for the multi-core cost overlay (`--cores`).
     /// 1 (the default) is the single-core paper configuration and
     /// reproduces the existing outputs byte-for-byte; N>1 prices every
@@ -163,6 +175,8 @@ impl Default for ExpOpts {
             search: crate::dse::search::SearchStrategy::Exhaustive,
             rungs: 3,
             eta: 2,
+            space_budget: None,
+            max_alive: None,
             cores: 1,
             store: None,
             addr: "127.0.0.1:7979".to_string(),
@@ -193,7 +207,28 @@ impl ExpOpts {
     /// The guided-search knobs as a [`GuidedOpts`](crate::dse::search::GuidedOpts)
     /// (rung promotion reuses the sweep seed).
     pub fn guided_opts(&self) -> crate::dse::search::GuidedOpts {
-        crate::dse::search::GuidedOpts { rungs: self.rungs, eta: self.eta, seed: self.seed }
+        crate::dse::search::GuidedOpts {
+            rungs: self.rungs,
+            eta: self.eta,
+            seed: self.seed,
+            max_alive: self.max_alive,
+        }
+    }
+
+    /// Enforce `--space-budget` against a lazily enumerated space —
+    /// every sweep harness calls this before streaming a single
+    /// config, so an over-budget sweep degrades loudly, never by OOM
+    /// or a surprise multi-hour run.
+    pub fn check_space(&self, space: &crate::dse::ConfigSpace) -> Result<()> {
+        if let Some(cap) = self.space_budget {
+            crate::ensure!(
+                space.len() <= cap,
+                "config space of {} exceeds --space-budget {cap}; raise the cap, lower \
+                 --budget, or split the sweep (--shard / --search guided)",
+                space.len()
+            );
+        }
+        Ok(())
     }
 
     /// Build the accuracy evaluator selected by [`ExpOpts::backend`].

@@ -119,6 +119,17 @@ Guided search (fig6/fig8; see docs/ARCHITECTURE.md § Guided search):
   --rungs <n>         (guided) successive-halving rung count, >= 1
                       (default 3)
   --eta <n>           (guided) halving factor, >= 2 (default 2)
+  --space-budget <n>  Refuse to sweep a config space larger than n
+                      configurations (typed error naming the flag).
+                      The space itself is streamed by enumeration
+                      index, never materialized — this caps *work*,
+                      not memory (default: unlimited)
+  --max-alive <n>     (guided) refuse to materialize more than n
+                      configurations for full evaluation at once
+                      (alive survivors + repair batches). Bounds the
+                      sweep's peak memory at O(alive + front); a
+                      typed error beats an OOM kill (default:
+                      unlimited)
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOpts> {
@@ -127,6 +138,7 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
     let mut shard_strategy = None;
     let mut rungs = None;
     let mut eta = None;
+    let mut max_alive = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -231,6 +243,20 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
                 let v = it.next().ok_or_else(|| mpnn::anyhow!("--eta needs a factor"))?;
                 eta = Some(v.parse().map_err(|_| mpnn::anyhow!("--eta: bad factor `{v}`"))?);
             }
+            "--space-budget" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--space-budget needs a count"))?;
+                let n: usize =
+                    v.parse().map_err(|_| mpnn::anyhow!("--space-budget: bad count `{v}`"))?;
+                mpnn::ensure!(n >= 1, "--space-budget must be >= 1 (got {n})");
+                opts.space_budget = Some(n);
+            }
+            "--max-alive" => {
+                let v = it.next().ok_or_else(|| mpnn::anyhow!("--max-alive needs a count"))?;
+                let n: usize =
+                    v.parse().map_err(|_| mpnn::anyhow!("--max-alive: bad count `{v}`"))?;
+                mpnn::ensure!(n >= 1, "--max-alive must be >= 1 (got {n})");
+                max_alive = Some(n);
+            }
             other => bail!("unknown option `{other}`\n{USAGE}"),
         }
     }
@@ -241,9 +267,12 @@ fn parse_opts(args: &[String]) -> Result<ExpOpts> {
         _ => {}
     }
     // Same for the guided-search knobs.
-    if opts.search == SearchStrategy::Exhaustive && (rungs.is_some() || eta.is_some()) {
-        bail!("--rungs/--eta require --search guided");
+    if opts.search == SearchStrategy::Exhaustive
+        && (rungs.is_some() || eta.is_some() || max_alive.is_some())
+    {
+        bail!("--rungs/--eta/--max-alive require --search guided");
     }
+    opts.max_alive = max_alive;
     if let Some(r) = rungs {
         mpnn::ensure!(r >= 1, "--rungs must be >= 1");
         opts.rungs = r;

@@ -99,6 +99,10 @@ fn docs_mention_live_symbols() {
         // `--cores`, pinned before the store attaches.
         "--cores",
         "set_cluster",
+        // The scale knobs are backend-independent — the guide must
+        // keep documenting both guards.
+        "--space-budget",
+        "--max-alive",
     ] {
         assert!(ev.contains(sym), "docs/EVALUATORS.md no longer mentions `{sym}`");
     }
@@ -153,6 +157,17 @@ fn docs_mention_live_symbols() {
         "--search",
         "--rungs",
         "--eta",
+        // The streaming-config-spaces section must keep naming the
+        // lazy space, the streaming engine, the memory ledger and the
+        // scale knobs.
+        "ConfigSpace",
+        "guided_search_stream",
+        "run_sweep_space",
+        "sweep_guided_space",
+        "member_indices_in",
+        "peak_alive",
+        "--space-budget",
+        "--max-alive",
         // The result-store section must keep naming the key
         // derivation, the durability policy and the daemon surface.
         "ResultStore",
@@ -224,6 +239,7 @@ fn docs_mention_live_symbols() {
         "pub struct ShardArtifact",
         "pub enum ShardError",
         "pub fn merge",
+        "pub fn member_indices_in",
         "SHARD_SCHEMA_VERSION",
     ] {
         assert!(shard.contains(sym), "dse/shard.rs lost `{sym}` — update the docs");
@@ -232,11 +248,19 @@ fn docs_mention_live_symbols() {
     let search = fs::read_to_string("rust/src/dse/search.rs").unwrap();
     for sym in [
         "pub fn guided_search",
+        "pub fn guided_search_stream",
         "pub enum SearchStrategy",
         "pub struct GuidedOpts",
         "pub const RUNG_THRESHOLD",
+        "pub peak_alive",
+        "pub max_alive",
     ] {
         assert!(search.contains(sym), "dse/search.rs lost `{sym}` — update the docs");
+    }
+    // The streaming-space symbols the docs name must still exist.
+    let dse = fs::read_to_string("rust/src/dse/mod.rs").unwrap();
+    for sym in ["pub struct ConfigSpace", "pub fn enumerate", "pub fn get", "pub fn iter"] {
+        assert!(dse.contains(sym), "dse/mod.rs lost `{sym}` — update the docs");
     }
     let rng = fs::read_to_string("rust/src/rng.rs").unwrap();
     assert!(
@@ -257,6 +281,8 @@ fn docs_mention_live_symbols() {
         "pub struct AnalyticEval",
         "pub struct PjrtEval",
         "pub fn sweep_guided",
+        "pub fn sweep_guided_space",
+        "pub fn run_sweep_space",
         "pub fn attach_store",
     ] {
         assert!(coord.contains(sym), "coordinator lost `{sym}` — update docs/EVALUATORS.md");

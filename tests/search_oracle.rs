@@ -16,7 +16,11 @@
 //!     accurate) the guided run performs strictly fewer full
 //!     evaluations than the exhaustive sweep;
 //! (e) the same holds end to end through `Coordinator::sweep_guided`
-//!     with a real `AccuracyEval` backend.
+//!     with a real `AccuracyEval` backend;
+//! (f) the streamed `ConfigSpace` paths (`run_sweep_space`,
+//!     `sweep_guided_space`) reproduce the materialized slice paths
+//!     byte-for-byte, so the lazily decoded guided front *is* the
+//!     materialized exhaustive front.
 //!
 //! Every randomized assertion message carries the generating seed so a
 //! failure reproduces directly.
@@ -24,7 +28,7 @@
 use mpnn::coordinator::{AccuracyEval, Coordinator, EvalReport, HostEval};
 use mpnn::dse::pareto::pareto_front;
 use mpnn::dse::search::{guided_search, CostVec, GuidedOpts, GuidedSweep, RUNG_THRESHOLD};
-use mpnn::dse::{default_pinned, enumerate, total_mac_instructions, EvalPoint};
+use mpnn::dse::{default_pinned, enumerate, total_mac_instructions, ConfigSpace, EvalPoint};
 use mpnn::error::Result;
 use mpnn::models::format::load_or_fallback;
 use mpnn::models::infer::QModel;
@@ -150,6 +154,7 @@ fn guided_matches_the_exhaustive_oracle_on_60_random_spaces() {
             rungs: 2 + (seed as usize % 3),
             eta: 2 + (seed as usize % 3),
             seed,
+            max_alive: None,
         };
         let g = land.run(&opts);
         let ctx = format!("seed {seed} (space {space}, n {n}, {opts:?})");
@@ -162,7 +167,7 @@ fn guided_matches_the_exhaustive_oracle_on_60_random_spaces() {
 fn guided_runs_are_byte_identical_under_a_fixed_seed() {
     for seed in [0u64, 9, 77, 0xD5E] {
         let land = Landscape::random(seed.wrapping_mul(31).wrapping_add(5), 30, 24);
-        let opts = GuidedOpts { rungs: 3, eta: 2, seed };
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None };
         let a = land.run(&opts);
         let b = land.run(&opts);
         assert_eq!(a, b, "seed {seed}: reruns diverged structurally");
@@ -179,7 +184,7 @@ fn tiny_spaces_degenerate_to_the_exact_exhaustive_sweep() {
     for seed in 100..110u64 {
         let space = 1 + (seed as usize % (RUNG_THRESHOLD - 1));
         let land = Landscape::random(seed, space, 12);
-        let g = land.run(&GuidedOpts { rungs: 3, eta: 2, seed });
+        let g = land.run(&GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None });
         let ctx = format!("seed {seed} (space {space})");
         assert!(g.stats.degenerate, "{ctx}: sub-threshold space must degenerate");
         let all = land.exhaustive();
@@ -218,7 +223,7 @@ fn strictly_fewer_full_evals_on_designed_landscapes() {
             })
             .collect();
         let land = Landscape { costs, n, correct };
-        let opts = GuidedOpts { rungs: 3, eta: 2, seed };
+        let opts = GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None };
         let g = land.run(&opts);
         let ctx = format!("seed {seed} (space {space})");
         assert_oracle_agreement(&land, &g, &ctx);
@@ -252,7 +257,7 @@ fn coordinator_guided_front_equals_the_exhaustive_front() {
     // A *separate* coordinator instance (fresh caches) for the guided
     // run: the equality must not lean on shared evaluation state.
     let c = host_coordinator(seed);
-    let opts = GuidedOpts { rungs: 3, eta: 2, seed };
+    let opts = GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None };
     let g = c.sweep_guided(&configs, eval_n, &opts).unwrap();
 
     assert!(g.stats.full_evals <= configs.len());
@@ -288,6 +293,54 @@ fn coordinator_guided_front_equals_the_exhaustive_front() {
     // The partial-eval metric counts the cache-bypassing rung scores.
     let partials = c.metrics.partial_evals.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(partials as usize, g.stats.partial_evals, "partial-eval metric ledger");
+}
+
+/// (f): the streamed `ConfigSpace` paths reproduce the materialized
+/// slice paths byte-for-byte, and the streamed guided front is the
+/// materialized exhaustive front on every cost axis.
+#[test]
+fn streamed_space_paths_are_byte_identical_to_the_slice_paths() {
+    let seed = 11;
+    let eval_n = 8;
+    let c = host_coordinator(seed);
+    let n_layers = c.analysis.layers.len();
+    let space = ConfigSpace::new(n_layers, &default_pinned(), 27, seed);
+    let configs = enumerate(n_layers, &default_pinned(), 27, seed);
+    assert_eq!(space.len(), configs.len(), "space/slice cardinality drifted");
+
+    // Exhaustive: streaming the space through the bounded pipeline
+    // must reproduce the slice sweep bit-for-bit. Fresh coordinator
+    // instances so the equality never leans on shared caches.
+    let by_slice = c.run_sweep(&configs, eval_n).unwrap();
+    let by_space = host_coordinator(seed).run_sweep_space(&space, eval_n).unwrap();
+    assert_eq!(by_slice.len(), by_space.len());
+    for (i, (a, b)) in by_slice.iter().zip(&by_space).enumerate() {
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "point {i}: streamed accuracy drifted"
+        );
+        assert_eq!(a, b, "point {i}: streamed exhaustive sweep drifted from the slice sweep");
+    }
+
+    // Guided: the index-streaming driver must reproduce the slice
+    // driver bit-for-bit — same indices, same points, same ledger.
+    let opts = GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None };
+    let gs = host_coordinator(seed).sweep_guided(&configs, eval_n, &opts).unwrap();
+    let gl = host_coordinator(seed).sweep_guided_space(&space, eval_n, &opts).unwrap();
+    assert_eq!(gl, gs, "streamed guided sweep drifted from the slice sweep");
+    assert_eq!(format!("{gl:?}"), format!("{gs:?}"));
+
+    // And the streamed guided front equals the materialized exhaustive
+    // front on every axis — the end-to-end zero-regret contract of the
+    // lazy space.
+    for (ax, axis) in AXES.iter().enumerate() {
+        let ofront: Vec<usize> = pareto_front(&by_slice, axis);
+        let gpts: Vec<EvalPoint> = gl.points.iter().map(|(_, p)| p.clone()).collect();
+        let gfront: Vec<usize> =
+            pareto_front(&gpts, axis).into_iter().map(|pos| gl.points[pos].0).collect();
+        assert_eq!(gfront, ofront, "axis {ax}: streamed guided front != exhaustive front");
+    }
 }
 
 /// A designed accuracy backend: the all-2-bit tail configuration is
@@ -350,7 +403,7 @@ fn coordinator_guided_saves_full_evals_on_a_designed_landscape() {
         );
     }
 
-    let g = c.sweep_guided(&configs, 16, &GuidedOpts { rungs: 3, eta: 2, seed }).unwrap();
+    let g = c.sweep_guided(&configs, 16, &GuidedOpts { rungs: 3, eta: 2, seed, max_alive: None }).unwrap();
     assert!(
         g.stats.full_evals < configs.len(),
         "no savings through the coordinator: {}/{} full evals",

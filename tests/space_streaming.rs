@@ -1,0 +1,292 @@
+//! Property harness for the lazy configuration space
+//! (`dse::ConfigSpace`) and the bounded-memory guided driver behind
+//! it:
+//!
+//! (a) **bit-identity** — for randomized `(n_layers, pinned, budget,
+//!     seed)` across both regimes (exhaustive mixed-radix decode,
+//!     structured families + seeded random fill), streaming the space
+//!     yields exactly the historical materialized enumeration, content
+//!     and order — checked against an inline copy of the original
+//!     O(n²)-dedup algorithm, not against `enumerate` (which now
+//!     delegates to the space and would make the check circular);
+//! (b) **index round-trip** — `space.get(i) == space.iter().nth(i)`
+//!     for every regime;
+//! (c) **shard composition** — `ShardSpec::member_indices_in` over the
+//!     lazy space equals `member_indices` over the materialized slice
+//!     for both partitioning strategies;
+//! (d) **bounded-memory guided sweep at 10^6+ scale** — a designed
+//!     3^13-configuration landscape (1,594,323 configs) runs through
+//!     `guided_search_stream` end to end with the peak-materialized
+//!     ledger (`GuidedStats::peak_alive`) staying O(alive + front) —
+//!     asserted via the counter, not wall-clock — while the front still
+//!     carries the designed optimum;
+//! (e) **typed overflow** — a landscape whose alive set cannot shrink
+//!     under the cap fails with the `--max-alive` error instead of
+//!     materializing the space.
+
+use mpnn::dse::search::{guided_search_stream, CostVec, GuidedOpts, RUNG_THRESHOLD};
+use mpnn::dse::shard::{ShardSpec, ShardStrategy};
+use mpnn::dse::{default_pinned, enumerate, Config, ConfigSpace, EvalPoint, WIDTHS};
+use mpnn::error::Result;
+use mpnn::rng::Rng;
+
+// ---------------------------------------------- (a) + (b): identity ---
+
+/// The historical `enumerate`, verbatim — mixed-radix loop for the
+/// exhaustive regime, `out.contains` (O(n²)) dedup for the structured
+/// one. The independent oracle the streaming space is compared against.
+fn reference_enumerate(n_layers: usize, pinned: &[usize], budget: usize, seed: u64) -> Vec<Config> {
+    let free: Vec<usize> = (0..n_layers).filter(|i| !pinned.contains(i)).collect();
+    if let Some(total) = 3usize.checked_pow(free.len() as u32) {
+        if total <= budget {
+            let mut out = Vec::with_capacity(total);
+            for i in 0..total {
+                let mut cfg = vec![8u32; n_layers];
+                let mut rest = i;
+                for &l in &free {
+                    cfg[l] = WIDTHS[rest % 3];
+                    rest /= 3;
+                }
+                out.push(cfg);
+            }
+            return out;
+        }
+    }
+    let mut out: Vec<Config> = Vec::new();
+    for w in WIDTHS {
+        let mut cfg = vec![w; n_layers];
+        for &p in pinned {
+            cfg[p] = 8;
+        }
+        if !out.contains(&cfg) {
+            out.push(cfg);
+        }
+    }
+    for split in 0..=free.len() {
+        for (high, low) in [(8u32, 4u32), (8, 2), (4, 2)] {
+            let mut cfg = vec![8u32; n_layers];
+            for (j, &l) in free.iter().enumerate() {
+                cfg[l] = if j < split { high } else { low };
+            }
+            for &p in pinned {
+                cfg[p] = 8;
+            }
+            if !out.contains(&cfg) {
+                out.push(cfg);
+            }
+        }
+    }
+    let mut rng = Rng::new(seed);
+    while out.len() < budget {
+        let mut cfg = vec![8u32; n_layers];
+        for &l in &free {
+            cfg[l] = WIDTHS[rng.below(3) as usize];
+        }
+        if !out.contains(&cfg) {
+            out.push(cfg);
+        }
+    }
+    out.truncate(budget);
+    out
+}
+
+#[test]
+fn streaming_matches_the_reference_enumeration_on_random_parameters() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xA11CE ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let n_layers = 2 + rng.below(8) as usize; // 2..=9 layers
+        let pinned: Vec<usize> = match rng.below(3) {
+            0 => vec![],
+            1 => vec![0],
+            _ => vec![0, n_layers - 1],
+        };
+        let free = n_layers - pinned.len();
+        // Half the draws force the exhaustive regime (budget == 3^free),
+        // half leave the regime to the budget roll (often structured).
+        let budget = if rng.below(2) == 0 {
+            3usize.pow(free as u32)
+        } else {
+            20 + rng.below(200) as usize
+        };
+        let space = ConfigSpace::new(n_layers, &pinned, budget, seed);
+        let reference = reference_enumerate(n_layers, &pinned, budget, seed);
+        let ctx = format!(
+            "seed {seed} (layers {n_layers}, pinned {pinned:?}, budget {budget}, \
+             exhaustive {})",
+            space.is_exhaustive()
+        );
+        assert_eq!(space.len(), reference.len(), "{ctx}: cardinality");
+        assert_eq!(
+            space.is_exhaustive(),
+            3usize.checked_pow(free as u32).is_some_and(|t| t <= budget),
+            "{ctx}: regime selection"
+        );
+        let streamed: Vec<Config> = space.iter().collect();
+        assert_eq!(streamed, reference, "{ctx}: streamed content/order drifted");
+        for (i, cfg) in reference.iter().enumerate() {
+            assert_eq!(&space.get(i), cfg, "{ctx}: get({i}) drifted");
+        }
+        // And the public materializer is the same thing.
+        assert_eq!(enumerate(n_layers, &pinned, budget, seed), reference, "{ctx}: enumerate");
+    }
+}
+
+#[test]
+fn get_round_trips_through_the_iterator_in_both_regimes() {
+    for (n_layers, budget, seed) in [(4usize, 100usize, 1u64), (28, 120, 7)] {
+        let space = ConfigSpace::new(n_layers, &default_pinned(), budget, seed);
+        assert!(!space.is_empty());
+        for i in [0, 1, space.len() / 2, space.len() - 1] {
+            assert_eq!(
+                Some(space.get(i)),
+                space.iter().nth(i),
+                "layers {n_layers}: get({i}) != iter().nth({i})"
+            );
+        }
+        // The iterator's length contract holds (the bounded producer
+        // sizes its result table off this).
+        assert_eq!(space.iter().len(), space.len());
+        assert_eq!(space.iter().count(), space.len());
+    }
+}
+
+// ------------------------------------------ (c): shard composition ---
+
+#[test]
+fn shard_membership_over_the_space_matches_the_materialized_slice() {
+    for (n_layers, budget, seed) in [(4usize, 100usize, 1u64), (28, 120, 7)] {
+        let space = ConfigSpace::new(n_layers, &default_pinned(), budget, seed);
+        let configs = enumerate(n_layers, &default_pinned(), budget, seed);
+        for strategy in [ShardStrategy::Hash, ShardStrategy::Range] {
+            for count in 1..=5 {
+                let mut union: Vec<usize> = Vec::new();
+                for index in 0..count {
+                    let spec = ShardSpec { index, count, strategy };
+                    let streamed = spec.member_indices_in(&space);
+                    assert_eq!(
+                        streamed,
+                        spec.member_indices(&configs),
+                        "layers {n_layers}, {strategy:?} {index}/{count}: membership drifted"
+                    );
+                    union.extend(streamed);
+                }
+                union.sort_unstable();
+                assert_eq!(
+                    union,
+                    (0..space.len()).collect::<Vec<_>>(),
+                    "layers {n_layers}, {strategy:?} /{count}: shards must partition the space"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------- (d): bounded memory at 10^6+ configs ---
+
+/// Free layers of the big designed space: 3^13 = 1,594,323
+/// configurations — comfortably past the 10^6 mark while a full
+/// materialization (13-word configs) would be ~160 MB of Vec traffic
+/// the streamed sweep never allocates.
+const BIG_FREE: u32 = 13;
+
+/// Designed landscape over the exhaustive big space, priced by total
+/// bit-sum so the all-2-bit configuration (global index `3^13 - 1`) is
+/// strictly cheapest on every axis, perfectly accurate, and everything
+/// else scores zero — rung 0 (prefix n/2) proves every other
+/// configuration dominated, so the driver fully evaluates exactly one
+/// config out of 1.59 M.
+fn bit_sum(space: &ConfigSpace, i: usize) -> u64 {
+    space.get(i).iter().map(|&b| b as u64).sum()
+}
+
+#[test]
+fn guided_sweep_over_1_59_million_configs_stays_memory_bounded() {
+    let n_layers = BIG_FREE as usize + 1; // layer 0 pinned at 8-bit
+    let budget = 3usize.pow(BIG_FREE);
+    let space = ConfigSpace::new(n_layers, &default_pinned(), budget, 0);
+    assert!(space.is_exhaustive(), "the big space must be index-decoded");
+    assert_eq!(space.len(), 1_594_323);
+    let star = space.len() - 1; // all free layers at 2-bit
+    assert!(space.get(star).iter().skip(1).all(|&b| b == 2));
+
+    let n = 16usize;
+    let is_star = |i: usize| i == star;
+    // Pricing decodes the config from the lazy space on every call —
+    // the streamed path the real coordinator takes.
+    let cost_of = |i: usize| {
+        let s = bit_sum(&space, i);
+        CostVec { cycles: s * 10, mac: s * 7, mem: s * 13 }
+    };
+    let eval_partial = |idxs: &[usize], m: usize| -> Result<Vec<u32>> {
+        Ok(idxs.iter().map(|&i| if is_star(i) { m as u32 } else { 0 }).collect())
+    };
+    let eval_full = |idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+        Ok(idxs
+            .iter()
+            .map(|&i| {
+                let c = cost_of(i);
+                EvalPoint {
+                    config: space.get(i),
+                    accuracy: if is_star(i) { 1.0 } else { 0.0 },
+                    mac_instructions: c.mac,
+                    cycles: c.cycles,
+                    mem_accesses: c.mem,
+                    iss_cycles: None,
+                    divergence: None,
+                }
+            })
+            .collect())
+    };
+
+    // rungs = 2 puts the single rung at prefix n/2, where the star's
+    // banked lower bound meets every other config's upper bound — with
+    // strictly lower cost, the whole rest of the space prunes at once.
+    let opts = GuidedOpts { rungs: 2, eta: 2, seed: 0, max_alive: Some(64) };
+    let g = guided_search_stream(space.len(), &cost_of, n, &opts, &eval_partial, &eval_full)
+        .expect("big-space guided sweep");
+
+    assert_eq!(g.stats.space, space.len());
+    assert!(!g.stats.degenerate);
+    // The bounded-memory contract, asserted via the ledger: the driver
+    // materialized exactly the configs it fully evaluated — never the
+    // space.
+    assert_eq!(g.stats.full_evals, 1, "designed landscape needs exactly one full eval");
+    assert_eq!(g.stats.peak_alive, g.stats.full_evals, "peak ledger != materialized configs");
+    assert!(
+        g.stats.peak_alive <= 64,
+        "peak alive {} blew the designed O(alive + front) bound",
+        g.stats.peak_alive
+    );
+    assert_eq!(g.stats.pruned, space.len() - 1, "everything but the star must prune");
+    assert_eq!(g.stats.repaired, 0, "the measured star proves every drop dominated");
+    assert_eq!(g.stats.partial_evals, space.len(), "one rung over the whole space");
+    // And the answer is right: the single surviving point is the star.
+    assert_eq!(g.points.len(), 1);
+    assert_eq!(g.points[0].0, star);
+    assert_eq!(g.points[0].1.accuracy.to_bits(), 1.0f32.to_bits());
+}
+
+// -------------------------------------------- (e): typed overflow ---
+
+#[test]
+fn flat_landscapes_overflow_the_alive_cap_with_a_typed_error() {
+    // Every config identical on every axis and every input: nothing can
+    // prune (exact ties are never pruned) and promotion can only halve,
+    // so the surviving alive set after the rungs is ~space/4 — far over
+    // the cap, which must fail with the flag-naming error instead of
+    // materializing the survivors.
+    let space = 3usize.pow(8); // 6561
+    assert!(space >= RUNG_THRESHOLD);
+    let n = 16usize;
+    let cost_of = |_i: usize| CostVec { cycles: 100, mac: 100, mem: 100 };
+    let eval_partial = |idxs: &[usize], _m: usize| -> Result<Vec<u32>> {
+        Ok(vec![0; idxs.len()])
+    };
+    let eval_full = |_idxs: &[usize]| -> Result<Vec<EvalPoint>> {
+        panic!("the alive cap must trip before any full evaluation")
+    };
+    let opts = GuidedOpts { rungs: 3, eta: 2, seed: 9, max_alive: Some(32) };
+    let err = guided_search_stream(space, &cost_of, n, &opts, &eval_partial, &eval_full)
+        .expect_err("a flat landscape cannot fit a 32-config alive cap");
+    assert!(err.to_string().contains("--max-alive"), "untyped overflow error: {err}");
+}
